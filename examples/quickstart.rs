@@ -1,0 +1,57 @@
+//! Quickstart: load the AOT artifacts, load (or initialise) a checkpoint,
+//! and decode one synthetic GSM8K-style prompt with the d3LLM multi-block
+//! strategy.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! With trained checkpoints (`repro train-all`) the answer is usually
+//! correct; with random init you still see the full decode pipeline run.
+
+use d3llm::data::{self, Family};
+use d3llm::decode::{self, DecodeCfg, Strategy};
+use d3llm::model::ParamStore;
+use d3llm::runtime::Engine;
+use d3llm::tokenizer::Tokenizer;
+use d3llm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. runtime: manifest + PJRT CPU client + lazy-compiled executables
+    let eng = Engine::load("artifacts")?;
+    let c = eng.manifest.constants.clone();
+    println!("platform: {}", eng.platform());
+
+    // 2. weights: trained checkpoint if present, random init otherwise
+    let spec = eng.manifest.model("main")?.clone();
+    let params = match ParamStore::load("checkpoints/d3llm-llada.ckpt") {
+        Ok(p) => {
+            println!("loaded checkpoints/d3llm-llada.ckpt");
+            p
+        }
+        Err(_) => {
+            println!("no checkpoint found — using random init \
+                      (run `repro train-all`)");
+            ParamStore::init(&spec, 7)
+        }
+    };
+
+    // 3. one synthetic task
+    let tk = Tokenizer::new(c.vocab)?;
+    let sample = data::generate(&tk, Family::Gsm8k, &mut Rng::new(99));
+    println!("prompt:   {}", tk.decode(&sample.prompt));
+    println!("expected: {}", tk.decode(&sample.response));
+
+    // 4. entropy-based multi-block decode with KV refresh (paper §3.2)
+    let cfg = DecodeCfg::preset(Strategy::D3llm);
+    let r = decode::generate(&eng, &cfg, &params.data, None, &sample.prompt,
+                             96)?;
+    println!("decoded:  {}", tk.decode(&r.tokens));
+    println!(
+        "tokens {}  forwards {}  TPF {:.2}  wall {:.0} ms  correct: {}",
+        r.tokens.len(),
+        r.forwards,
+        r.tpf(),
+        r.wall_secs * 1e3,
+        data::check(&tk, &sample, &r.tokens, false)
+    );
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! End-to-end serving driver (the DESIGN.md validation workload): starts
+//! the coordinator in-process, fires a batch of concurrent requests from
+//! client threads, and reports latency percentiles, throughput, TPF and
+//! accuracy — the serving-paper e2e check.
+//!
+//!   make artifacts && repro train-all      # once
+//!   cargo run --release --example serve_e2e -- --requests 24 --clients 4
+//!
+//! Works against `d3llm-llada` by default; pass --ckpt/--strategy to vary.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use d3llm::coordinator::{self, ServerCfg};
+use d3llm::data::{self, Family};
+use d3llm::decode::Strategy;
+use d3llm::tokenizer::Tokenizer;
+use d3llm::util::cli::Args;
+use d3llm::util::json;
+use d3llm::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.usize_or("requests", 24);
+    let n_clients = args.usize_or("clients", 4);
+    let port = args.usize_or("port", 7113) as u16;
+    let ckpt = args.str_or("ckpt", "d3llm-llada");
+    let strategy = Strategy::parse(&args.str_or("strategy", "d3llm"))
+        .ok_or_else(|| anyhow::anyhow!("bad strategy"))?;
+
+    // ---- server in a background thread
+    let cfg = ServerCfg {
+        host: "127.0.0.1".into(),
+        port,
+        ckpt,
+        strategy,
+        variant: args.str_or("variant", "xla"),
+        max_queue: 256,
+        decode: None,
+    };
+    std::thread::spawn(move || {
+        if let Err(e) = coordinator::serve(cfg) {
+            eprintln!("server: {e:#}");
+        }
+    });
+
+    let addr = format!("127.0.0.1:{port}");
+    wait_for_server(&addr)?;
+
+    // ---- workload: GSM8K-analog prompts
+    let tk = Tokenizer::new(128)?;
+    let samples = data::eval_set(&tk, Family::Gsm8k, n_requests, 7);
+    let prompts: Vec<(String, String, data::Sample)> = samples
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| (format!("r{i}"), tk.decode(&s.prompt), s))
+        .collect();
+
+    // ---- fire from client threads
+    let work = Arc::new(Mutex::new(prompts));
+    let results = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..n_clients {
+        let work = work.clone();
+        let results = results.clone();
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let item = work.lock().unwrap().pop();
+            let Some((id, prompt, sample)) = item else { break };
+            let t = Instant::now();
+            let line = format!(
+                r#"{{"id":"{id}","prompt":"{prompt}","gen_len":96}}"#
+            );
+            match request(&addr, &line) {
+                Ok(resp) => {
+                    let latency = t.elapsed().as_secs_f64();
+                    results.lock().unwrap().push((resp, latency, sample));
+                }
+                Err(e) => eprintln!("client error: {e:#}"),
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- report
+    let results = results.lock().unwrap();
+    let tk2 = Tokenizer::new(128)?;
+    let mut latencies = Vec::new();
+    let mut gen_tokens = 0usize;
+    let mut forwards = 0usize;
+    let mut correct = 0usize;
+    for (resp, latency, sample) in results.iter() {
+        latencies.push(*latency);
+        let j = json::parse(resp).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if j.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            eprintln!("request failed: {resp}");
+            continue;
+        }
+        gen_tokens +=
+            j.get("gen_tokens").and_then(|v| v.as_usize()).unwrap_or(0);
+        forwards += j.get("forwards").and_then(|v| v.as_usize()).unwrap_or(0);
+        let tokens: Vec<i32> = j
+            .get("tokens")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|x| x as i32)
+                 .collect())
+            .unwrap_or_default();
+        correct += data::check(&tk2, sample, &tokens, false) as usize;
+    }
+    let lat = Summary::of(&latencies);
+    println!("\n== serve_e2e report ==");
+    println!("requests      {}", results.len());
+    println!("clients       {n_clients}");
+    println!("wall          {wall:.2} s");
+    println!("throughput    {:.1} tok/s  ({:.2} req/s)",
+             gen_tokens as f64 / wall, results.len() as f64 / wall);
+    println!("TPF           {:.2}", gen_tokens as f64 / forwards.max(1) as f64);
+    println!("accuracy      {:.1}%",
+             100.0 * correct as f64 / results.len().max(1) as f64);
+    println!("latency p50   {:.0} ms   p95 {:.0} ms   max {:.0} ms",
+             lat.p50 * 1e3, lat.p95 * 1e3, lat.max * 1e3);
+
+    // shut the server down
+    let _ = request(&addr, r#"{"cmd":"shutdown"}"#);
+    Ok(())
+}
+
+fn request(addr: &str, line: &str) -> anyhow::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{line}")?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    Ok(resp.trim().to_string())
+}
+
+fn wait_for_server(addr: &str) -> anyhow::Result<()> {
+    for _ in 0..600 {
+        if TcpStream::connect(addr).is_ok() {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    anyhow::bail!("server did not come up on {addr}")
+}

@@ -1,0 +1,139 @@
+"""Render the paper's figures from results/*.csv (build-time only).
+
+Optional: requires matplotlib. The bench harnesses emit the CSV series;
+this script turns them into PNGs mirroring the paper's Figures 1 and 4-10
+(accuracy-parallelism curves, AUP histograms, radar charts).
+
+  python plots/plot_figures.py [--results results] [--out results/plots]
+"""
+
+import argparse
+import csv
+import math
+import os
+from collections import defaultdict
+
+
+def read_csv(path):
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def curves(results, out, plt):
+    for family in ("llada", "dream", "coder"):
+        path = os.path.join(results, f"curves_{family}.csv")
+        if not os.path.exists(path):
+            continue
+        rows = read_csv(path)
+        tasks = sorted({r["task"] for r in rows})
+        fig, axes = plt.subplots(1, len(tasks),
+                                 figsize=(4 * len(tasks), 3.4))
+        if len(tasks) == 1:
+            axes = [axes]
+        for ax, task in zip(axes, tasks):
+            series = defaultdict(list)
+            for r in rows:
+                if r["task"] == task:
+                    series[r["method"]].append(
+                        (float(r["tpf"]), float(r["acc"])))
+            for method, pts in series.items():
+                pts.sort()
+                ax.plot([p[0] for p in pts], [p[1] for p in pts],
+                        marker="o", label=method)
+            ax.set_title(task)
+            ax.set_xlabel("TPF (parallelism)")
+            ax.set_ylabel("accuracy (%)")
+            ax.grid(alpha=0.3)
+        axes[-1].legend(fontsize=7)
+        fig.suptitle(f"Accuracy-parallelism curves — {family} family")
+        fig.tight_layout()
+        fig.savefig(os.path.join(out, f"curves_{family}.png"), dpi=120)
+        print(f"wrote curves_{family}.png")
+
+
+def radar(results, out, plt):
+    for family in ("llada", "dream", "coder"):
+        path = os.path.join(results, f"radar_{family}.csv")
+        if not os.path.exists(path):
+            continue
+        rows = read_csv(path)
+        tasks = sorted({r["task"] for r in rows})
+        methods = sorted({r["method"] for r in rows})
+        aup = {(r["task"], r["method"]): float(r["aup"]) for r in rows}
+        # normalise per task so the radar is comparable
+        angles = [2 * math.pi * i / len(tasks) for i in range(len(tasks))]
+        fig = plt.figure(figsize=(5, 5))
+        ax = fig.add_subplot(111, polar=True)
+        for m in methods:
+            vals = []
+            for t in tasks:
+                best = max(aup.get((t, mm), 1e-9) for mm in methods)
+                vals.append(aup.get((t, m), 0.0) / best)
+            ax.plot(angles + angles[:1], vals + vals[:1], marker="o",
+                    label=m)
+            ax.fill(angles + angles[:1], vals + vals[:1], alpha=0.08)
+        ax.set_xticks(angles)
+        ax.set_xticklabels(tasks, fontsize=7)
+        ax.set_title(f"AUP radar — {family} family (normalised)")
+        ax.legend(fontsize=6, loc="lower right")
+        fig.savefig(os.path.join(out, f"radar_{family}.png"), dpi=120)
+        print(f"wrote radar_{family}.png")
+
+        # histogram variant (Figures 6/8/10 left panels)
+        fig, ax = plt.subplots(figsize=(6, 3.2))
+        width = 0.8 / len(methods)
+        for i, m in enumerate(methods):
+            xs = [j + i * width for j in range(len(tasks))]
+            ax.bar(xs, [aup.get((t, m), 0.0) for t in tasks], width,
+                   label=m)
+        ax.set_xticks([j + 0.4 for j in range(len(tasks))])
+        ax.set_xticklabels(tasks, fontsize=7)
+        ax.set_ylabel("AUP")
+        ax.legend(fontsize=6)
+        fig.tight_layout()
+        fig.savefig(os.path.join(out, f"aup_hist_{family}.png"), dpi=120)
+        print(f"wrote aup_hist_{family}.png")
+
+
+def figure1(results, out, plt):
+    path = os.path.join(results, "figure1_aup_illustration.csv")
+    if not os.path.exists(path):
+        return
+    rows = read_csv(path)
+    tpf = [float(r["tpf"]) for r in rows]
+    acc = [float(r["acc"]) for r in rows]
+    wacc = [float(r["weighted_acc"]) for r in rows]
+    fig, ax = plt.subplots(figsize=(5, 3.4))
+    ax.plot(tpf, acc, marker="o", label="accuracy")
+    ax.plot(tpf, wacc, marker="s", label="weighted accuracy (AUP integrand)")
+    ax.fill_between(tpf, wacc, alpha=0.2)
+    ax.set_xlabel("parallelism (TPF)")
+    ax.set_ylabel("accuracy (%)")
+    ax.set_title("AUP: weighted area under the accuracy-parallelism curve")
+    ax.legend(fontsize=8)
+    ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "figure1_aup.png"), dpi=120)
+    print("wrote figure1_aup.png")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--out", default="results/plots")
+    args = ap.parse_args()
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("matplotlib not available; CSVs in results/ are the figures")
+        return
+    os.makedirs(args.out, exist_ok=True)
+    figure1(args.results, args.out, plt)
+    curves(args.results, args.out, plt)
+    radar(args.results, args.out, plt)
+
+
+if __name__ == "__main__":
+    main()

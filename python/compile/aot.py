@@ -1,0 +1,223 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO text + write manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the runtime's XLA
+(xla_extension 0.5.1, via the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+The manifest is the ABI between this build step and the Rust coordinator:
+executable signatures (argument order, shapes, dtypes), the flat parameter
+layout of each model, and every compile-time constant. Rust refuses to run
+against a manifest whose constants disagree with its own config.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--only name,...]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _sig(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def build_specs():
+    """Return [(exec_name, model_name, fn, arg_specs, input_sig, output_sig)]."""
+    main, draft = C.MAIN, C.DRAFT
+    _, p_main = C.param_layout(main)
+    _, p_draft = C.param_layout(draft)
+    S, W, ST, B = C.S_MAX, C.WINDOW, C.S_TRAIN, C.B_TRAIN
+    L, DKV = main.n_layers, main.d_kv
+    LD, DKVD = draft.n_layers, draft.d_kv
+
+    specs = []
+
+    def add(name, model, fn, args, insig, outsig):
+        specs.append((name, model, fn, args, insig, outsig))
+
+    # ---- dLLM serving graphs (pallas + xla hot-path variants)
+    for variant in ("pallas", "xla"):
+        add(
+            f"prefill_{variant}", "main",
+            M.make_prefill(main, variant, S),
+            [_spec((p_main,), F32), _spec((S,), I32), _spec((S,), F32)],
+            [_sig("params", (p_main,), "f32"), _sig("tokens", (S,), "i32"),
+             _sig("valid", (S,), "f32")],
+            [_sig("kcache", (L, S, DKV), "f32"),
+             _sig("vcache", (L, S, DKV), "f32"),
+             _sig("argmax", (S,), "i32"), _sig("conf", (S,), "f32"),
+             _sig("entropy", (S,), "f32")],
+        )
+        add(
+            f"decode_{variant}", "main",
+            M.make_decode(main, variant, W, S),
+            [_spec((p_main,), F32), _spec((W,), I32), _spec((W,), I32),
+             _spec((W,), F32), _spec((L, S, DKV), F32),
+             _spec((L, S, DKV), F32), _spec((S,), F32)],
+            [_sig("params", (p_main,), "f32"),
+             _sig("win_tokens", (W,), "i32"), _sig("win_pos", (W,), "i32"),
+             _sig("win_valid", (W,), "f32"),
+             _sig("kcache", (L, S, DKV), "f32"),
+             _sig("vcache", (L, S, DKV), "f32"),
+             _sig("cache_valid", (S,), "f32")],
+            [_sig("argmax", (W,), "i32"), _sig("conf", (W,), "f32"),
+             _sig("entropy", (W,), "f32"),
+             _sig("k_win", (L, W, DKV), "f32"),
+             _sig("v_win", (L, W, DKV), "f32")],
+        )
+
+    # ---- AR graphs (baseline + spec-decode), for main and draft models
+    for mname, arch, ptot, ll, dkv in (
+            ("main", main, p_main, L, DKV),
+            ("draft", draft, p_draft, LD, DKVD)):
+        prefix = "" if mname == "main" else "draft_"
+        add(
+            f"{prefix}ar_prefill", mname,
+            M.make_ar_prefill(arch, S),
+            [_spec((ptot,), F32), _spec((S,), I32), _spec((S,), F32)],
+            [_sig("params", (ptot,), "f32"), _sig("tokens", (S,), "i32"),
+             _sig("valid", (S,), "f32")],
+            [_sig("kcache", (ll, S, dkv), "f32"),
+             _sig("vcache", (ll, S, dkv), "f32"),
+             _sig("argmax", (S,), "i32"), _sig("conf", (S,), "f32"),
+             _sig("entropy", (S,), "f32")],
+        )
+        for wname, w in (("ar_step", 1), ("ar_verify", C.VERIFY_W)):
+            if mname == "draft" and wname == "ar_verify":
+                continue  # the draft only proposes one token at a time
+            add(
+                f"{prefix}{wname}", mname,
+                M.make_ar_verify(arch, w, S),
+                [_spec((ptot,), F32), _spec((w,), I32), _spec((w,), I32),
+                 _spec((w,), F32), _spec((ll, S, dkv), F32),
+                 _spec((ll, S, dkv), F32), _spec((S,), F32)],
+                [_sig("params", (ptot,), "f32"),
+                 _sig("win_tokens", (w,), "i32"),
+                 _sig("win_pos", (w,), "i32"),
+                 _sig("win_valid", (w,), "f32"),
+                 _sig("kcache", (ll, S, dkv), "f32"),
+                 _sig("vcache", (ll, S, dkv), "f32"),
+                 _sig("cache_valid", (S,), "f32")],
+                [_sig("argmax", (w,), "i32"), _sig("conf", (w,), "f32"),
+                 _sig("entropy", (w,), "f32"),
+                 _sig("k_win", (ll, w, dkv), "f32"),
+                 _sig("v_win", (ll, w, dkv), "f32")],
+            )
+
+    # ---- training graphs
+    for tname, mname, arch, ptot, causal in (
+            ("train_diff", "main", main, p_main, False),
+            ("train_ar", "main", main, p_main, True),
+            ("draft_train_ar", "draft", draft, p_draft, True)):
+        add(
+            tname, mname,
+            M.make_train(arch, causal, B, ST),
+            [_spec((ptot,), F32), _spec((ptot,), F32), _spec((ptot,), F32),
+             _spec((), I32), _spec((B, ST), I32), _spec((B, ST), I32),
+             _spec((B, ST), F32), _spec((B, ST), F32), _spec((), F32),
+             _spec((), F32)],
+            [_sig("params", (ptot,), "f32"), _sig("m", (ptot,), "f32"),
+             _sig("v", (ptot,), "f32"), _sig("step", (), "i32"),
+             _sig("tokens", (B, ST), "i32"), _sig("labels", (B, ST), "i32"),
+             _sig("loss_mask", (B, ST), "f32"),
+             _sig("attn_valid", (B, ST), "f32"), _sig("lr", (), "f32"),
+             _sig("ent_weight", (), "f32")],
+            [_sig("params_out", (ptot,), "f32"), _sig("m_out", (ptot,), "f32"),
+             _sig("v_out", (ptot,), "f32"), _sig("loss", (), "f32")],
+        )
+
+    # ---- pseudo-trajectory extractor
+    BT = C.B_TRAJ
+    add(
+        "trajectory", "main",
+        M.make_trajectory(main, BT, ST, C.GEN_TRAIN),
+        [_spec((p_main,), F32), _spec((BT, ST), I32), _spec((BT, ST), F32),
+         _spec((BT, ST), F32)],
+        [_sig("params", (p_main,), "f32"), _sig("tokens", (BT, ST), "i32"),
+         _sig("attn_valid", (BT, ST), "f32"),
+         _sig("gen_mask", (BT, ST), "f32")],
+        [_sig("rank", (BT, ST), "i32"), _sig("final_tokens", (BT, ST), "i32")],
+    )
+    return specs
+
+
+def arch_dict(a: C.Arch):
+    layout, total = C.param_layout(a)
+    return {
+        "name": a.name, "d_model": a.d_model, "n_layers": a.n_layers,
+        "n_heads": a.n_heads, "d_head": a.d_head, "d_ff": a.d_ff,
+        "vocab": a.vocab, "s_max": a.s_max, "d_kv": a.d_kv,
+        "total_params": total, "param_layout": layout,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="",
+                    help="comma-separated executable names to (re)build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(filter(None, args.only.split(",")))
+
+    executables = []
+    for name, mname, fn, arg_specs, insig, outsig in build_specs():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        if (not only or name in only) or not os.path.exists(path):
+            lowered = jax.jit(fn).lower(*arg_specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  {name}: {len(text)} chars -> {fname}")
+        digest = hashlib.sha256(open(path, "rb").read()).hexdigest()[:16]
+        executables.append({
+            "name": name, "file": fname, "model": mname,
+            "inputs": insig, "outputs": outsig, "sha256_16": digest,
+        })
+
+    manifest = {
+        "format_version": 1,
+        "constants": {
+            "vocab": C.VOCAB, "pad_id": C.PAD_ID, "mask_id": C.MASK_ID,
+            "eos_id": C.EOS_ID, "bos_id": C.BOS_ID, "sep_id": C.SEP_ID,
+            "s_max": C.S_MAX, "s_train": C.S_TRAIN, "gen_max": C.GEN_MAX,
+            "gen_train": C.GEN_TRAIN, "window": C.WINDOW, "block": C.BLOCK,
+            "verify_w": C.VERIFY_W, "b_train": C.B_TRAIN,
+            "b_traj": C.B_TRAJ, "rank_never": M.RANK_NEVER,
+        },
+        "models": {"main": arch_dict(C.MAIN), "draft": arch_dict(C.DRAFT)},
+        "executables": executables,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(executables)} executables)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Shared architecture / constants for the d3LLM reproduction.
+
+Single source of truth for every compile-time constant: the AOT pipeline
+(aot.py) bakes these into the HLO executables and records them in
+artifacts/manifest.json, which the Rust coordinator treats as ABI.
+
+Scaled to the single-core PJRT-CPU testbed (see DESIGN.md §1): the paper's
+7-8B dLLMs become ~0.4M-param models with identical architecture class
+(bidirectional masked-diffusion transformer, block size 32, tied
+embeddings).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+# ---------------------------------------------------------------- vocabulary
+VOCAB = 128
+PAD_ID = 0
+MASK_ID = 1
+EOS_ID = 2
+BOS_ID = 3
+SEP_ID = 4
+
+# ---------------------------------------------------------------- sequence geometry
+S_MAX = 384      # serving sequence capacity (prompt + generation)
+S_TRAIN = 192    # training / trajectory sequence length
+GEN_MAX = 128    # serving generation region capacity (4 blocks)
+GEN_TRAIN = 96   # trajectory extraction unmask steps (3 blocks)
+WINDOW = 96      # decode window: up to 3 concurrently active blocks
+BLOCK = 32       # diffusion block size (paper: 32)
+VERIFY_W = 16    # speculative-decoding verification window
+B_TRAIN = 8      # training batch
+B_TRAJ = 8       # trajectory-extraction batch
+
+# ---------------------------------------------------------------- kernel tiling
+BQ = 48          # attention query tile
+BK = 48          # attention key tile
+BS_HEAD = 48     # fused-head sequence tile
+BV_HEAD = 64     # fused-head vocab tile
+
+
+@dataclass(frozen=True)
+class Arch:
+    """Transformer architecture hyperparameters."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int = VOCAB
+    s_max: int = S_MAX
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_heads * self.d_head
+
+
+MAIN = Arch(name="main", d_model=96, n_layers=3, n_heads=4, d_head=24, d_ff=384)
+DRAFT = Arch(name="draft", d_model=48, n_layers=1, n_heads=2, d_head=24, d_ff=192)
+
+
+def param_specs(arch: Arch) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Flat parameter layout: (name, shape, init) in canonical order.
+
+    init is one of "normal" (std=0.02), "zeros", "ones". The Rust side owns
+    actual initialisation and checkpointing; this layout is the contract.
+    """
+    specs: List[Tuple[str, Tuple[int, ...], str]] = [
+        ("embed", (arch.vocab, arch.d_model), "normal"),
+        ("pos", (arch.s_max, arch.d_model), "normal"),
+    ]
+    for l in range(arch.n_layers):
+        p = f"layer{l}."
+        specs += [
+            (p + "ln1", (arch.d_model,), "ones"),
+            (p + "wq", (arch.d_model, arch.d_kv), "normal"),
+            (p + "wk", (arch.d_model, arch.d_kv), "normal"),
+            (p + "wv", (arch.d_model, arch.d_kv), "normal"),
+            (p + "wo", (arch.d_kv, arch.d_model), "normal"),
+            (p + "ln2", (arch.d_model,), "ones"),
+            (p + "w1", (arch.d_model, arch.d_ff), "normal"),
+            (p + "w2", (arch.d_ff, arch.d_model), "normal"),
+        ]
+    specs.append(("lnf", (arch.d_model,), "ones"))
+    return specs
+
+
+def param_layout(arch: Arch):
+    """[(name, shape, offset, size, init)] plus total length."""
+    out = []
+    off = 0
+    for name, shape, init in param_specs(arch):
+        size = 1
+        for s in shape:
+            size *= s
+        out.append({"name": name, "shape": list(shape), "offset": off,
+                    "size": size, "init": init})
+        off += size
+    return out, off

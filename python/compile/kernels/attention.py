@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernel: bidirectional flash attention with additive bias.
+
+The paper's dLLM hot spot is full-sequence bidirectional attention executed
+once per decoding round. The paper's testbed implements it with CUDA
+thread-blocks over shared memory; here the same HBM<->scratchpad schedule is
+expressed TPU-style with `BlockSpec`s over VMEM tiles (see DESIGN.md
+§Hardware-Adaptation):
+
+  * grid = (heads, q_tiles, kv_tiles), kv innermost so the online-softmax
+    accumulator lives in scratch across the kv sweep of each (head, q_tile);
+  * QK^T and PV contractions are MXU-shaped matmuls over (BQ, Dh) x (Dh, BK)
+    and (BQ, BK) x (BK, Dh) tiles;
+  * masking (cache-validity / window-validity / causal) arrives as an
+    additive bias tile, so one kernel serves prefill, windowed multi-block
+    decode, and AR verification.
+
+Runs under interpret=True (CPU PJRT cannot execute Mosaic custom-calls);
+real-TPU VMEM/MXU estimates are in DESIGN.md §7.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, n_kv_tiles: int, scale: float):
+    """One (head, q_tile, kv_tile) grid step of online-softmax attention."""
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, :]  # [BQ, Dh]
+    k = k_ref[0, :, :]  # [BK, Dh]
+    v = v_ref[0, :, :]  # [BK, Dh]
+    bias = bias_ref[...]  # [BQ, BK]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale + bias
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    correction = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])  # [BQ, BK]
+
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * correction[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(kv_idx == n_kv_tiles - 1)
+    def _finalize():
+        # Fully-masked rows (l == 0) only occur for padding queries; emit 0.
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, :] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk"))
+def flash_attention(q, k, v, bias, bq: int = 48, bk: int = 48):
+    """Masked multi-head attention via the Pallas flash kernel.
+
+    q: [H, Sq, Dh], k/v: [H, Skv, Dh], bias: [Sq, Skv] additive.
+    Sq must divide by bq and Skv by bk. Returns [H, Sq, Dh] f32.
+    """
+    h, sq, dh = q.shape
+    skv = k.shape[1]
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    n_q, n_kv = sq // bq, skv // bk
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(_flash_kernel, n_kv_tiles=n_kv, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda hh, iq, ik: (hh, iq, 0)),
+            pl.BlockSpec((1, bk, dh), lambda hh, iq, ik: (hh, ik, 0)),
+            pl.BlockSpec((1, bk, dh), lambda hh, iq, ik: (hh, ik, 0)),
+            pl.BlockSpec((bq, bk), lambda hh, iq, ik: (iq, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda hh, iq, ik: (hh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, bias)

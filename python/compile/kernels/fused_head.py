@@ -1,0 +1,113 @@
+"""Layer-1 Pallas kernel: fused decode head (argmax / confidence / entropy).
+
+The entropy-based multi-block scheduler (paper §3.2) consumes only three
+per-position statistics of the output distribution: the argmax token id, its
+softmax probability ("confidence"), and the softmax entropy. Materialising
+the full [S, V] logits in HBM just to reduce them on the host would waste
+the bandwidth the paper's speedups come from, so this kernel fuses the tied
+head matmul with an online reduction over vocab tiles:
+
+  running state per query row: m (max logit), s = sum e^{l-m},
+  t = sum l*e^{l-m}, best logit + best id;
+  entropy = (log s + m) - t/s,   confidence = e^{best - m} / s.
+
+Logits never leave the kernel. Runs under interpret=True on CPU PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _head_kernel(h_ref, e_ref, vbias_ref, amax_ref, conf_ref, ent_ref,
+                 m_ref, s_ref, t_ref, best_ref, bid_ref,
+                 *, n_v_tiles: int, bv: int):
+    v_idx = pl.program_id(1)
+
+    @pl.when(v_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+        best_ref[...] = jnp.full_like(best_ref, NEG_INF)
+        bid_ref[...] = jnp.zeros_like(bid_ref)
+
+    h = h_ref[...]          # [BS, D]
+    e = e_ref[...]          # [BV, D]
+    logits = jnp.dot(h, e.T, preferred_element_type=jnp.float32)  # [BS, BV]
+    logits = logits + vbias_ref[...][None, :]  # special-token suppression
+
+    # --- running argmax over vocab tiles
+    tile_best = jnp.max(logits, axis=-1)
+    tile_arg = jnp.argmax(logits, axis=-1).astype(jnp.int32) + v_idx * bv
+    take = tile_best > best_ref[...]
+    bid_ref[...] = jnp.where(take, tile_arg, bid_ref[...])
+    best_ref[...] = jnp.maximum(best_ref[...], tile_best)
+
+    # --- running logsumexp + sum(l * e^l) with max-rescaling
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, tile_best)
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(logits - m_cur[:, None])
+    s_ref[...] = s_ref[...] * corr + jnp.sum(p, axis=-1)
+    t_ref[...] = t_ref[...] * corr + jnp.sum(logits * p, axis=-1)
+    m_ref[...] = m_cur
+
+    @pl.when(v_idx == n_v_tiles - 1)
+    def _finalize():
+        s = s_ref[...]
+        m = m_ref[...]
+        amax_ref[...] = bid_ref[...]
+        conf_ref[...] = jnp.exp(best_ref[...] - m) / s
+        ent_ref[...] = (jnp.log(s) + m) - t_ref[...] / s
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bv"))
+def fused_head(h, embed, vbias=None, bs: int = 48, bv: int = 64):
+    """Tied-head decode statistics via the Pallas fused kernel.
+
+    h: [S, D] (final-normed hidden states), embed: [V, D], vbias: [V]
+    additive logit bias (large negative entries suppress special tokens the
+    model must never emit — PAD/MASK/BOS/SEP).
+    Returns (argmax i32[S], confidence f32[S], entropy f32[S]).
+    """
+    s, d = h.shape
+    v = embed.shape[0]
+    assert s % bs == 0 and v % bv == 0, (s, v, bs, bv)
+    n_s, n_v = s // bs, v // bv
+    if vbias is None:
+        vbias = jnp.zeros((v,), jnp.float32)
+
+    kernel = functools.partial(_head_kernel, n_v_tiles=n_v, bv=bv)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_s, n_v),
+        in_specs=[
+            pl.BlockSpec((bs, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bv,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+            pl.BlockSpec((bs,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bs,), jnp.float32),
+            pltpu.VMEM((bs,), jnp.float32),
+            pltpu.VMEM((bs,), jnp.float32),
+            pltpu.VMEM((bs,), jnp.float32),
+            pltpu.VMEM((bs,), jnp.int32),
+        ],
+        interpret=True,
+    )(h, embed, vbias)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth (pytest compares the Pallas kernels
+against them) and also the bodies of the `--variant xla` executables, which
+let the Rust benches ablate Pallas-kernel vs XLA-fused hot paths.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, bias):
+    """Masked multi-head attention.
+
+    q: [H, Sq, Dh], k/v: [H, Skv, Dh], bias: [Sq, Skv] additive
+    (0 = allowed, large negative = disallowed). Returns [H, Sq, Dh].
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale + bias[None, :, :]
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def head_ref(h, embed, vbias=None):
+    """Tied-embedding decode head with fused statistics.
+
+    h: [S, D] (already final-normed), embed: [V, D], vbias: optional [V]
+    additive logit bias (special-token suppression).
+    Returns (argmax_id i32[S], confidence f32[S], entropy f32[S]) where
+    confidence is the softmax probability of the argmax token and entropy is
+    the softmax entropy in nats.
+    """
+    logits = h @ embed.T  # [S, V]
+    if vbias is not None:
+        logits = logits + vbias[None, :]
+    m = jnp.max(logits, axis=-1)
+    z = jnp.exp(logits - m[:, None])
+    s = jnp.sum(z, axis=-1)
+    p = z / s[:, None]
+    argmax = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    conf = jnp.max(p, axis=-1)
+    # H = logZ - E[logit] = (log s + m) - sum(l * e^{l-m}) / s
+    t = jnp.sum(logits * z, axis=-1)
+    entropy = (jnp.log(s) + m) - t / s
+    return argmax, conf, entropy

@@ -1,0 +1,364 @@
+"""Layer-2 JAX compute graphs for the d3LLM reproduction.
+
+A single bidirectional transformer architecture (tied embeddings, RMSNorm,
+GELU MLP) instantiated as several AOT graphs:
+
+  * prefill        — full-sequence forward: KV cache for every position +
+                     fused head stats. Doubles as the no-cache forward used
+                     by vanilla decoding and by the KV-refresh mechanism.
+  * decode         — windowed forward (<=3 active blocks) against the
+                     block-approximate KV cache: the multi-block hot path.
+  * ar_prefill     — causal forward (AR baseline / spec-decode target).
+  * ar_verify      — causal windowed forward with cache (W=16 for
+                     speculative verification, W=1 for plain AR decoding).
+  * train          — fused fwd + bwd + AdamW step, diffusion (bidirectional)
+                     or AR (causal) objective, with optional certainty-
+                     forcing entropy regularisation (dParallel-style).
+  * trajectory     — the paper's pseudo-trajectory extractor: a 96-step
+                     on-device lax.scan that unmasks exactly one token per
+                     step (restricted to the earliest incomplete block, i.e.
+                     a block-diffusion teacher) and records the unmask step
+                     of every position.
+
+Serving graphs (prefill/decode) call the Pallas kernels (variant="pallas")
+or the pure-jnp oracle (variant="xla") so the Rust benches can ablate the
+two hot-path implementations. Training/trajectory graphs use the jnp path
+(autodiff through the interpret-mode kernel is not exercised; the math is
+identical and ref-tested).
+
+Parameters are a single flat f32 vector; see config.param_layout.
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import (Arch, BLOCK, BOS_ID, GEN_TRAIN, MASK_ID, PAD_ID,
+                     SEP_ID, param_layout)
+from .kernels.attention import flash_attention
+from .kernels.ref import attention_ref, head_ref
+from .kernels.fused_head import fused_head
+
+NEG_INF = -1e30
+RANK_NEVER = 100_000  # rank sentinel: position never unmasked by teacher
+
+
+# --------------------------------------------------------------------------
+# parameter (un)flattening
+# --------------------------------------------------------------------------
+
+def unflatten(p: jnp.ndarray, arch: Arch) -> Dict[str, jnp.ndarray]:
+    layout, total = param_layout(arch)
+    assert p.shape == (total,), (p.shape, total)
+    out = {}
+    for spec in layout:
+        seg = jax.lax.dynamic_slice(p, (spec["offset"],), (spec["size"],))
+        out[spec["name"]] = seg.reshape(spec["shape"])
+    return out
+
+
+def rms(x, w, eps=1e-6):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _split_heads(x, arch: Arch):
+    """[S, H*Dh] -> [H, S, Dh]"""
+    s = x.shape[0]
+    return x.reshape(s, arch.n_heads, arch.d_head).transpose(1, 0, 2)
+
+
+def _merge_heads(x, arch: Arch):
+    """[H, S, Dh] -> [S, H*Dh]"""
+    return x.transpose(1, 0, 2).reshape(x.shape[1], arch.d_kv)
+
+
+def _attn(q, k, v, bias, variant: str):
+    if variant == "pallas":
+        return flash_attention(q, k, v, bias)
+    return attention_ref(q, k, v, bias)
+
+
+def vocab_bias(arch: Arch):
+    """Additive logit bias suppressing tokens the model must never emit
+    (PAD / MASK / BOS / SEP). Standard dLLM practice: without it an
+    untrained or off-distribution model can 'unmask' a position back to
+    MASK and stall the decoding loop."""
+    b = jnp.zeros((arch.vocab,), jnp.float32)
+    return b.at[jnp.array([PAD_ID, MASK_ID, BOS_ID, SEP_ID])].set(NEG_INF)
+
+
+def _head(h, embed, variant: str, arch: Arch):
+    vb = vocab_bias(arch)
+    if variant == "pallas":
+        return fused_head(h, embed, vb)
+    return head_ref(h, embed, vb)
+
+
+# --------------------------------------------------------------------------
+# single-sequence forward (serving graphs)
+# --------------------------------------------------------------------------
+
+def forward_single(params: Dict, tokens, pos_ids, bias, arch: Arch,
+                   variant: str):
+    """Forward one unbatched sequence; returns (h_final_normed, kv list).
+
+    tokens/pos_ids: i32[S]; bias: f32[S, S] additive attention bias.
+    kv list: per layer (k, v) of shape [S, H*Dh] — the cacheable states.
+    """
+    x = params["embed"][tokens] + params["pos"][pos_ids]
+    kvs = []
+    for l in range(arch.n_layers):
+        p = f"layer{l}."
+        hn = rms(x, params[p + "ln1"])
+        q = hn @ params[p + "wq"]
+        k = hn @ params[p + "wk"]
+        v = hn @ params[p + "wv"]
+        kvs.append((k, v))
+        o = _attn(_split_heads(q, arch), _split_heads(k, arch),
+                  _split_heads(v, arch), bias, variant)
+        x = x + _merge_heads(o, arch) @ params[p + "wo"]
+        hn2 = rms(x, params[p + "ln2"])
+        x = x + jax.nn.gelu(hn2 @ params[p + "w1"]) @ params[p + "w2"]
+    return rms(x, params["lnf"]), kvs
+
+
+def forward_window(params: Dict, win_tokens, win_pos, kcache, vcache,
+                   bias, arch: Arch, variant: str):
+    """Forward the active window against the KV cache.
+
+    win_tokens/win_pos: i32[W]; kcache/vcache: f32[L, S, H*Dh];
+    bias: f32[W, S+W]. Returns (h_final_normed [W, D], k_win, v_win
+    [L, W, H*Dh]).
+    """
+    x = params["embed"][win_tokens] + params["pos"][win_pos]
+    k_wins, v_wins = [], []
+    for l in range(arch.n_layers):
+        p = f"layer{l}."
+        hn = rms(x, params[p + "ln1"])
+        q = hn @ params[p + "wq"]
+        k_w = hn @ params[p + "wk"]
+        v_w = hn @ params[p + "wv"]
+        k_wins.append(k_w)
+        v_wins.append(v_w)
+        k_all = jnp.concatenate([kcache[l], k_w], axis=0)
+        v_all = jnp.concatenate([vcache[l], v_w], axis=0)
+        o = _attn(_split_heads(q, arch), _split_heads(k_all, arch),
+                  _split_heads(v_all, arch), bias, variant)
+        x = x + _merge_heads(o, arch) @ params[p + "wo"]
+        hn2 = rms(x, params[p + "ln2"])
+        x = x + jax.nn.gelu(hn2 @ params[p + "w1"]) @ params[p + "w2"]
+    return (rms(x, params["lnf"]),
+            jnp.stack(k_wins), jnp.stack(v_wins))
+
+
+# --------------------------------------------------------------------------
+# graph builders (each returns a jit-able fn over concrete shapes)
+# --------------------------------------------------------------------------
+
+def make_prefill(arch: Arch, variant: str, seq: int):
+    """tokens i32[S], valid f32[S] -> (kcache, vcache, argmax, conf, ent)."""
+
+    def fn(flat, tokens, valid):
+        params = unflatten(flat, arch)
+        pos_ids = jnp.arange(seq, dtype=jnp.int32)
+        bias = jnp.where(valid[None, :] > 0.0, 0.0, NEG_INF)
+        bias = jnp.broadcast_to(bias, (seq, seq))
+        h, kvs = forward_single(params, tokens, pos_ids, bias, arch, variant)
+        amax, conf, ent = _head(h, params["embed"], variant, arch)
+        kcache = jnp.stack([k for k, _ in kvs])
+        vcache = jnp.stack([v for _, v in kvs])
+        return kcache, vcache, amax, conf, ent
+
+    return fn
+
+
+def make_decode(arch: Arch, variant: str, window: int, seq: int):
+    """Windowed multi-block decode step against the approximate KV cache."""
+
+    def fn(flat, win_tokens, win_pos, win_valid, kcache, vcache, cache_valid):
+        params = unflatten(flat, arch)
+        allowed = jnp.concatenate([cache_valid, win_valid])  # [S+W]
+        bias = jnp.where(allowed[None, :] > 0.0, 0.0, NEG_INF)
+        bias = jnp.broadcast_to(bias, (window, seq + window))
+        h, k_win, v_win = forward_window(
+            params, win_tokens, win_pos, kcache, vcache, bias, arch, variant)
+        amax, conf, ent = _head(h, params["embed"], variant, arch)
+        return amax, conf, ent, k_win, v_win
+
+    return fn
+
+
+def make_ar_prefill(arch: Arch, seq: int):
+    """Causal full forward: caches + next-token stats at every position."""
+
+    def fn(flat, tokens, valid):
+        params = unflatten(flat, arch)
+        pos_ids = jnp.arange(seq, dtype=jnp.int32)
+        i = jnp.arange(seq)
+        causal = (i[None, :] <= i[:, None])
+        bias = jnp.where(causal & (valid[None, :] > 0.0), 0.0, NEG_INF)
+        h, kvs = forward_single(params, tokens, pos_ids, bias, arch, "xla")
+        amax, conf, ent = head_ref(h, params["embed"], vocab_bias(arch))
+        return (jnp.stack([k for k, _ in kvs]),
+                jnp.stack([v for _, v in kvs]), amax, conf, ent)
+
+    return fn
+
+
+def make_ar_verify(arch: Arch, window: int, seq: int):
+    """Causal windowed forward with cache: spec-decode verify / AR step.
+
+    Window position i attends to valid cache entries plus window positions
+    <= i. Output slot i carries next-token stats for window position i.
+    """
+
+    def fn(flat, win_tokens, win_pos, win_valid, kcache, vcache, cache_valid):
+        params = unflatten(flat, arch)
+        i = jnp.arange(window)
+        win_causal = (i[None, :] <= i[:, None]) & (win_valid[None, :] > 0.0)
+        cache_allowed = jnp.broadcast_to(cache_valid[None, :] > 0.0,
+                                         (window, seq))
+        allowed = jnp.concatenate([cache_allowed, win_causal], axis=1)
+        bias = jnp.where(allowed, 0.0, NEG_INF)
+        h, k_win, v_win = forward_window(
+            params, win_tokens, win_pos, kcache, vcache, bias, arch, "xla")
+        amax, conf, ent = head_ref(h, params["embed"], vocab_bias(arch))
+        return amax, conf, ent, k_win, v_win
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# batched forward + training
+# --------------------------------------------------------------------------
+
+def forward_batch_logits(params: Dict, tokens, bias, arch: Arch):
+    """tokens i32[B, S], bias f32[B, S, S] -> logits f32[B, S, V]."""
+    _, s = tokens.shape
+    pos_ids = jnp.arange(s, dtype=jnp.int32)
+    x = params["embed"][tokens] + params["pos"][pos_ids][None, :, :]
+
+    def batched_attn(q, k, v):
+        # q/k/v: [B, S, H*Dh]
+        def one(qi, ki, vi, bi):
+            return attention_ref(_split_heads(qi, arch),
+                                 _split_heads(ki, arch),
+                                 _split_heads(vi, arch), bi)
+        o = jax.vmap(one)(q, k, v, bias)  # [B, H, S, Dh]
+        return jax.vmap(lambda oi: _merge_heads(oi, arch))(o)
+
+    for l in range(arch.n_layers):
+        p = f"layer{l}."
+        hn = rms(x, params[p + "ln1"])
+        q = hn @ params[p + "wq"]
+        k = hn @ params[p + "wk"]
+        v = hn @ params[p + "wv"]
+        x = x + batched_attn(q, k, v) @ params[p + "wo"]
+        hn2 = rms(x, params[p + "ln2"])
+        x = x + jax.nn.gelu(hn2 @ params[p + "w1"]) @ params[p + "w2"]
+    h = rms(x, params["lnf"])
+    return h @ params["embed"].T
+
+
+def make_train(arch: Arch, causal: bool, batch: int, seq: int):
+    """Fused fwd + bwd + AdamW step.
+
+    Inputs: flat params/m/v f32[P], step i32[], tokens/labels i32[B,S],
+    loss_mask/attn_valid f32[B,S], lr f32[], ent_weight f32[].
+    Outputs: params', m', v', loss.
+
+    Loss: masked CE against labels + ent_weight * masked mean prediction
+    entropy (the certainty-forcing regulariser of dParallel, reused by the
+    paper's own recipe, §A.7).
+    """
+    b1, b2, eps, wd = 0.9, 0.999, 1e-8, 0.01
+
+    def loss_fn(flat, tokens, labels, loss_mask, attn_valid, ent_weight):
+        params = unflatten(flat, arch)
+        allowed = attn_valid[:, None, :] > 0.0  # keys must be valid
+        if causal:
+            i = jnp.arange(seq)
+            allowed = allowed & (i[None, :] <= i[:, None])[None, :, :]
+        bias = jnp.where(allowed, 0.0, NEG_INF)
+        logits = forward_batch_logits(params, tokens, bias, arch)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+        ce_loss = jnp.sum(ce * loss_mask) / denom
+        p = jnp.exp(logp)
+        ent = -jnp.sum(p * logp, axis=-1)
+        ent_loss = jnp.sum(ent * loss_mask) / denom
+        return ce_loss + ent_weight * ent_loss
+
+    def fn(flat, m, v, step, tokens, labels, loss_mask, attn_valid, lr,
+           ent_weight):
+        loss, g = jax.value_and_grad(loss_fn)(
+            flat, tokens, labels, loss_mask, attn_valid, ent_weight)
+        m2 = b1 * m + (1.0 - b1) * g
+        v2 = b2 * v + (1.0 - b2) * g * g
+        t = step.astype(jnp.float32)
+        mhat = m2 / (1.0 - b1 ** t)
+        vhat = v2 / (1.0 - b2 ** t)
+        new = flat - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * flat)
+        return new, m2, v2, loss
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# pseudo-trajectory extraction (paper §3.1)
+# --------------------------------------------------------------------------
+
+def make_trajectory(arch: Arch, batch: int, seq: int, steps: int = GEN_TRAIN):
+    """Teacher decoding-order extractor, fully on device.
+
+    Inputs: flat f32[P], tokens i32[B,S] (prompt + MASK gen region),
+    attn_valid f32[B,S], gen_mask f32[B,S].
+    Outputs: rank i32[B,S] (step at which the teacher unmasked the
+    position; RANK_NEVER for prompt/padding), final tokens i32[B,S].
+
+    Exactly one token is unmasked per step (paper: "we constrain the
+    teacher model to unmask exactly one token at each decoding step"),
+    restricted to the earliest incomplete block — the teacher is a block
+    diffusion model with block size 32 — selecting the highest-confidence
+    masked position. Generation continues past EOS so every gen position
+    receives a rank.
+    """
+
+    def fn(flat, tokens, attn_valid, gen_mask):
+        params = unflatten(flat, arch)
+        allowed = attn_valid[:, None, :] > 0.0
+        bias = jnp.where(allowed, 0.0, NEG_INF)
+        bias = jnp.broadcast_to(bias, (batch, seq, seq))
+        iota = jnp.arange(seq, dtype=jnp.int32)[None, :]
+        gen = gen_mask > 0.0
+        gen_start = jnp.argmax(gen_mask, axis=1).astype(jnp.int32)  # [B]
+        rel = iota - gen_start[:, None]
+        block_id = jnp.where(gen, rel // BLOCK, jnp.int32(10**6))
+
+        vb = vocab_bias(arch)[None, None, :]
+
+        def step_fn(carry, step):
+            toks, rank = carry
+            logits = forward_batch_logits(params, toks, bias, arch) + vb
+            pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            conf = jnp.max(jax.nn.softmax(logits, axis=-1), axis=-1)
+            masked = (toks == MASK_ID) & gen
+            cur_block = jnp.min(
+                jnp.where(masked, block_id, jnp.int32(10**6)), axis=1)  # [B]
+            selectable = masked & (block_id == cur_block[:, None])
+            score = jnp.where(selectable, conf, -1.0)
+            j = jnp.argmax(score, axis=1)  # [B]
+            any_m = jnp.any(selectable, axis=1)
+            hit = (iota == j[:, None]) & any_m[:, None]
+            toks = jnp.where(hit, pred, toks)
+            rank = jnp.where(hit & (rank == RANK_NEVER), step, rank)
+            return (toks, rank), None
+
+        rank0 = jnp.full((batch, seq), RANK_NEVER, dtype=jnp.int32)
+        (toks, rank), _ = jax.lax.scan(
+            step_fn, (tokens, rank0), jnp.arange(steps, dtype=jnp.int32))
+        return rank, toks
+
+    return fn

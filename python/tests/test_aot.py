@@ -1,0 +1,82 @@
+"""AOT manifest / artifact contract tests.
+
+The manifest is the ABI the Rust coordinator builds against; these tests
+pin the parts Rust assumes.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import config as C
+from compile.aot import build_specs
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+def test_build_specs_shapes_consistent():
+    for name, model, fn, args, insig, outsig in build_specs():
+        assert len(args) == len(insig), name
+        for a, s in zip(args, insig):
+            assert tuple(a.shape) == tuple(s["shape"]), (name, s["name"])
+            want = {"f32": np.float32, "i32": np.int32}[s["dtype"]]
+            assert a.dtype == want, (name, s["name"])
+
+
+def test_exec_names_unique():
+    names = [s[0] for s in build_specs()]
+    assert len(names) == len(set(names))
+    # the full planned set
+    for required in ("prefill_pallas", "prefill_xla", "decode_pallas",
+                     "decode_xla", "ar_prefill", "ar_step", "ar_verify",
+                     "train_diff", "train_ar", "trajectory",
+                     "draft_ar_prefill", "draft_ar_step", "draft_train_ar"):
+        assert required in names, required
+
+
+@needs_artifacts
+def test_manifest_matches_config():
+    m = json.load(open(MANIFEST))
+    c = m["constants"]
+    assert c["vocab"] == C.VOCAB
+    assert c["mask_id"] == C.MASK_ID
+    assert c["s_max"] == C.S_MAX
+    assert c["window"] == C.WINDOW
+    assert c["block"] == C.BLOCK
+    assert c["gen_max"] == C.GEN_MAX
+    for mname, arch in (("main", C.MAIN), ("draft", C.DRAFT)):
+        layout, total = C.param_layout(arch)
+        md = m["models"][mname]
+        assert md["total_params"] == total
+        assert md["param_layout"] == layout
+
+
+@needs_artifacts
+def test_manifest_files_exist_with_digests():
+    import hashlib
+    m = json.load(open(MANIFEST))
+    for e in m["executables"]:
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), e["name"]
+        digest = hashlib.sha256(open(path, "rb").read()).hexdigest()[:16]
+        assert digest == e["sha256_16"], e["name"]
+        # HLO text, parseable header
+        head = open(path).read(200)
+        assert "HloModule" in head, e["name"]
+
+
+@needs_artifacts
+def test_manifest_signatures_match_specs():
+    m = json.load(open(MANIFEST))
+    by_name = {e["name"]: e for e in m["executables"]}
+    for name, model, fn, args, insig, outsig in build_specs():
+        e = by_name[name]
+        assert e["model"] == model
+        assert e["inputs"] == insig, name
+        assert e["outputs"] == outsig, name

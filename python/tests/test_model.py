@@ -1,0 +1,168 @@
+"""L2 model invariants: serving-graph consistency, training, trajectory."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import config as C
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def flat():
+    _, total = C.param_layout(C.MAIN)
+    rng = np.random.default_rng(42)
+    return jnp.asarray(rng.normal(0.0, 0.02, total), jnp.float32)
+
+
+def _prefill(flat, tokens, valid, variant="xla", seq=C.S_MAX):
+    return jax.jit(M.make_prefill(C.MAIN, variant, seq))(flat, tokens, valid)
+
+
+def test_param_layout_contiguous():
+    for arch in (C.MAIN, C.DRAFT):
+        layout, total = C.param_layout(arch)
+        off = 0
+        for spec in layout:
+            assert spec["offset"] == off
+            assert spec["size"] == int(np.prod(spec["shape"]))
+            off += spec["size"]
+        assert off == total
+
+
+def test_unflatten_roundtrip(flat):
+    params = M.unflatten(flat, C.MAIN)
+    layout, _ = C.param_layout(C.MAIN)
+    for spec in layout:
+        seg = np.asarray(flat)[spec["offset"]:spec["offset"] + spec["size"]]
+        np.testing.assert_array_equal(
+            np.asarray(params[spec["name"]]).ravel(), seg)
+
+
+def test_prefill_pallas_equals_xla(flat):
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(2, C.VOCAB, C.S_MAX), jnp.int32)
+    valid = jnp.asarray((np.arange(C.S_MAX) < 200).astype(np.float32))
+    kp, vp, ap, cp, ep = _prefill(flat, tokens, valid, "pallas")
+    kx, vx, ax, cx, ex = _prefill(flat, tokens, valid, "xla")
+    n = 200  # only valid positions are defined
+    np.testing.assert_allclose(np.asarray(kp)[:, :n], np.asarray(kx)[:, :n],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(ap)[:n], np.asarray(ax)[:n])
+    np.testing.assert_allclose(np.asarray(cp)[:n], np.asarray(cx)[:n],
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ep)[:n], np.asarray(ex)[:n],
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_decode_window_only_matches_prefill(flat):
+    """With an empty cache, decoding window positions 0..W-1 must equal a
+    prefill over the same W tokens (bidirectional attention over the same
+    visible set)."""
+    rng = np.random.default_rng(1)
+    w = C.WINDOW
+    toks = rng.integers(2, C.VOCAB, w).astype(np.int32)
+
+    full_tokens = jnp.asarray(np.concatenate(
+        [toks, np.zeros(C.S_MAX - w, np.int32)]))
+    valid = jnp.asarray((np.arange(C.S_MAX) < w).astype(np.float32))
+    _, _, a_ref, c_ref, e_ref = _prefill(flat, full_tokens, valid, "xla")
+
+    decode = jax.jit(M.make_decode(C.MAIN, "xla", w, C.S_MAX))
+    kc = jnp.zeros((C.MAIN.n_layers, C.S_MAX, C.MAIN.d_kv), jnp.float32)
+    a, c, e, _, _ = decode(
+        flat, jnp.asarray(toks), jnp.arange(w, dtype=jnp.int32),
+        jnp.ones(w, jnp.float32), kc, kc, jnp.zeros(C.S_MAX, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref)[:w])
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref)[:w],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ar_cache_exactness(flat):
+    """AR prefix caching is exact: full causal prefill == prompt prefill +
+    windowed verify, at the window positions."""
+    rng = np.random.default_rng(2)
+    n_prompt, w = 100, C.VERIFY_W
+    toks = rng.integers(2, C.VOCAB, n_prompt + w).astype(np.int32)
+    pad = np.zeros(C.S_MAX - n_prompt - w, np.int32)
+
+    full = jnp.asarray(np.concatenate([toks, pad]))
+    valid_full = jnp.asarray(
+        (np.arange(C.S_MAX) < n_prompt + w).astype(np.float32))
+    ar_prefill = jax.jit(M.make_ar_prefill(C.MAIN, C.S_MAX))
+    _, _, a_ref, c_ref, _ = ar_prefill(flat, full, valid_full)
+
+    prompt_only = jnp.asarray(np.concatenate([toks[:n_prompt], np.zeros(
+        C.S_MAX - n_prompt, np.int32)]))
+    valid_p = jnp.asarray((np.arange(C.S_MAX) < n_prompt).astype(np.float32))
+    kc, vc, _, _, _ = ar_prefill(flat, prompt_only, valid_p)
+
+    verify = jax.jit(M.make_ar_verify(C.MAIN, w, C.S_MAX))
+    a, c, e, _, _ = verify(
+        flat, jnp.asarray(toks[n_prompt:]),
+        jnp.arange(n_prompt, n_prompt + w, dtype=jnp.int32),
+        jnp.ones(w, jnp.float32), kc, vc, valid_p)
+    np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(a_ref)[n_prompt:n_prompt + w])
+    np.testing.assert_allclose(
+        np.asarray(c), np.asarray(c_ref)[n_prompt:n_prompt + w],
+        rtol=1e-4, atol=1e-5)
+
+
+def test_train_step_decreases_loss(flat):
+    """~40 AdamW steps on a fixed batch must drive masked-CE down."""
+    rng = np.random.default_rng(3)
+    B, S = C.B_TRAIN, C.S_TRAIN
+    tokens = rng.integers(5, C.VOCAB, (B, S)).astype(np.int32)
+    labels = tokens.copy()
+    mask_pos = rng.random((B, S)) < 0.3
+    tokens[mask_pos] = C.MASK_ID
+    loss_mask = mask_pos.astype(np.float32)
+    attn_valid = np.ones((B, S), np.float32)
+
+    step_fn = jax.jit(M.make_train(C.MAIN, False, B, S))
+    p = flat
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    losses = []
+    for i in range(1, 61):
+        p, m, v, loss = step_fn(
+            p, m, v, jnp.int32(i), jnp.asarray(tokens), jnp.asarray(labels),
+            jnp.asarray(loss_mask), jnp.asarray(attn_valid),
+            jnp.float32(6e-3), jnp.float32(0.0))
+        losses.append(float(loss))
+    assert losses[-1] < 0.75 * losses[0], losses[::12]
+
+
+def test_trajectory_properties(flat):
+    """Ranks: one per step, unique, block-ordered, confined to gen region."""
+    B, S, G = C.B_TRAJ, C.S_TRAIN, C.GEN_TRAIN
+    rng = np.random.default_rng(4)
+    prompt_len = 40
+    tokens = np.full((B, S), C.MASK_ID, np.int32)
+    tokens[:, :prompt_len] = rng.integers(5, C.VOCAB, (B, prompt_len))
+    attn_valid = np.zeros((B, S), np.float32)
+    attn_valid[:, :prompt_len + G] = 1.0
+    gen_mask = np.zeros((B, S), np.float32)
+    gen_mask[:, prompt_len:prompt_len + G] = 1.0
+
+    traj = jax.jit(M.make_trajectory(C.MAIN, B, S, G))
+    rank, final = traj(flat, jnp.asarray(tokens), jnp.asarray(attn_valid),
+                       jnp.asarray(gen_mask))
+    rank = np.asarray(rank)
+    final = np.asarray(final)
+
+    for b in range(B):
+        gen_ranks = rank[b, prompt_len:prompt_len + G]
+        # every gen position unmasked exactly once, ranks = {0..G-1}
+        assert sorted(gen_ranks.tolist()) == list(range(G))
+        # prompt/padding never ranked
+        assert np.all(rank[b, :prompt_len] == M.RANK_NEVER)
+        assert np.all(rank[b, prompt_len + G:] == M.RANK_NEVER)
+        # block-diffusion order: all of block i before any of block i+1
+        blocks = gen_ranks.reshape(G // C.BLOCK, C.BLOCK)
+        for i in range(len(blocks) - 1):
+            assert blocks[i].max() < blocks[i + 1].min()
+        # no mask tokens remain in the gen region
+        assert np.all(final[b, prompt_len:prompt_len + G] != C.MASK_ID)

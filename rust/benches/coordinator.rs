@@ -1,0 +1,80 @@
+//! `cargo bench --bench coordinator` — L3 overhead microbenchmarks that
+//! need no model: batcher throughput, JSON protocol round-trip, AUP
+//! computation, KV-cache row commits, tokenizer encode/decode.
+//!
+//! These are the pure-coordinator costs that must stay negligible next to
+//! a ~6 ms model forward (see EXPERIMENTS.md §Perf).
+
+use d3llm::coordinator::batcher::Batcher;
+use d3llm::coordinator::protocol;
+use d3llm::metrics::aup::{aup_from_points, Point};
+use d3llm::model::KvCache;
+use d3llm::tokenizer::Tokenizer;
+use d3llm::util::stats::{bench, bench_line};
+
+fn main() {
+    // ---- batcher: 1k push+pop with mixed priorities
+    let secs = bench(3, 50, || {
+        let mut b: Batcher<u64> = Batcher::new(2048);
+        for i in 0..1000u64 {
+            b.push(i, (i % 7) as i64);
+        }
+        while b.pop().is_some() {}
+    });
+    println!("{}", bench_line("batcher 1k push+pop", &secs));
+
+    // ---- protocol: parse + serialize one request/response
+    let req =
+        r#"{"id":"r1","prompt":"Q EVAL 3 + 4 * 2","gen_len":96,"priority":1}"#;
+    let secs = bench(10, 200, || {
+        let _ = protocol::parse_request(req).unwrap();
+    });
+    println!("{}", bench_line("protocol parse_request", &secs));
+
+    let resp = protocol::GenResponse {
+        id: "r1".into(),
+        text: "STEP 4 * 2 = 8 ; ANS 11".into(),
+        tokens: (0..64).collect(),
+        tpf: 5.2,
+        forwards: 12,
+        gen_tokens: 61,
+        queue_ms: 0.2,
+        decode_ms: 80.0,
+    };
+    let secs = bench(10, 200, || {
+        let _ = protocol::ok_response(&resp);
+    });
+    println!("{}", bench_line("protocol ok_response (64 tok)", &secs));
+
+    // ---- AUP over a realistic sweep
+    let pts: Vec<Point> = (0..24)
+        .map(|i| Point { rho: 1.0 + i as f64 * 0.4,
+                         acc: 75.0 - i as f64 * 0.2 })
+        .collect();
+    let secs = bench(10, 500, || {
+        let _ = aup_from_points(&pts, 3.0, None);
+    });
+    println!("{}", bench_line("aup 24-point sweep", &secs));
+
+    // ---- KV cache: commit one completed block (32 rows x 3 layers)
+    let mut cache = KvCache::new(3, 384, 96);
+    let k_win = vec![0.5f32; 3 * 96 * 96];
+    let pairs: Vec<(usize, usize)> = (0..32).map(|i| (i, 100 + i)).collect();
+    let secs = bench(5, 200, || {
+        cache.commit_window_rows(&k_win, &k_win, 96, &pairs);
+    });
+    println!("{}", bench_line("kv commit 32-row block", &secs));
+
+    // ---- tokenizer
+    let tk = Tokenizer::new(128).unwrap();
+    let text = "STEP 1 2 + 7 = 1 9 ; STEP 1 9 * 2 = 3 8 ; ANS 3 8";
+    let ids = tk.encode(text).unwrap();
+    let secs = bench(10, 500, || {
+        let _ = tk.encode(text).unwrap();
+    });
+    println!("{}", bench_line("tokenizer encode (25 tok)", &secs));
+    let secs = bench(10, 500, || {
+        let _ = tk.decode(&ids);
+    });
+    println!("{}", bench_line("tokenizer decode (25 tok)", &secs));
+}

@@ -1,0 +1,73 @@
+//! `cargo bench --bench hotpath` — serving hot-path latency (no criterion
+//! offline; harness = false + util::stats).
+//!
+//! Covers: prefill/decode executables in both hot-path variants
+//! (Pallas kernels vs fused-XLA), the AR step, host-dispatch overhead, and
+//! the per-strategy end-to-end decode of one request. Skips politely when
+//! artifacts/ is missing.
+
+use d3llm::data::{self, Family};
+use d3llm::decode::{self, DecodeCfg, Strategy};
+use d3llm::model::{exec, KvCache, ParamStore};
+use d3llm::runtime::Engine;
+use d3llm::tokenizer::Tokenizer;
+use d3llm::util::stats::{bench, bench_line};
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("skipping hotpath bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let eng = Engine::load("artifacts")?;
+    let c = eng.manifest.constants.clone();
+    let spec = eng.manifest.model("main")?.clone();
+    let params = ParamStore::load("checkpoints/d3llm-llada.ckpt")
+        .map(|p| p.data)
+        .unwrap_or_else(|_| ParamStore::init(&spec, 7).data);
+
+    println!("== executable latency ==");
+    let tokens: Vec<i32> = (0..c.s_max as i32).map(|i| 5 + i % 90).collect();
+    let valid: Vec<f32> =
+        (0..c.s_max).map(|i| if i < 256 { 1.0 } else { 0.0 }).collect();
+    for variant in ["xla", "pallas"] {
+        let name = format!("prefill_{variant}");
+        let secs = bench(2, 10, || {
+            exec::prefill(&eng, &name, &params, &tokens, &valid).unwrap();
+        });
+        println!("{}", bench_line(&name, &secs));
+    }
+
+    let cache = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
+    let win_tokens = vec![c.mask_id; c.window];
+    let win_pos: Vec<i32> = (0..c.window as i32).collect();
+    let win_valid = vec![1.0f32; c.window];
+    for variant in ["xla", "pallas"] {
+        let name = format!("decode_{variant}");
+        let secs = bench(2, 20, || {
+            exec::decode_window(&eng, &name, &params, &win_tokens, &win_pos,
+                                &win_valid, &cache)
+                .unwrap();
+        });
+        println!("{}", bench_line(&name, &secs));
+    }
+    let secs = bench(4, 40, || {
+        exec::decode_window(&eng, "ar_step", &params, &[5], &[0], &[1.0],
+                            &cache)
+            .unwrap();
+    });
+    println!("{}", bench_line("ar_step", &secs));
+
+    println!("\n== end-to-end decode (1 GSM8K request, gen 96) ==");
+    let tk = Tokenizer::new(c.vocab)?;
+    let sample = &data::eval_set(&tk, Family::Gsm8k, 1, 3)[0];
+    for strategy in [Strategy::Ar, Strategy::Vanilla, Strategy::FastDllm,
+                     Strategy::D2f, Strategy::D3llm] {
+        let cfg = DecodeCfg::preset(strategy);
+        let secs = bench(1, 3, || {
+            decode::generate(&eng, &cfg, &params, None, &sample.prompt, 96)
+                .unwrap();
+        });
+        println!("{}", bench_line(strategy.name(), &secs));
+    }
+    Ok(())
+}

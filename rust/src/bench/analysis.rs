@@ -1,0 +1,231 @@
+//! Post-hoc analysis: reads the bench CSV outputs and checks the paper's
+//! qualitative claims ("shape checks"), then emits the EXPERIMENTS.md
+//! summary section. This is the automated paper-vs-measured comparator.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One parsed family-table row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub task: String,
+    pub method: String,
+    pub tpf: f64,
+    pub acc: f64,
+    pub aup: f64,
+}
+
+fn parse_pm(s: &str) -> f64 {
+    s.split('±').next().unwrap_or("0").trim().parse().unwrap_or(0.0)
+}
+
+/// Read a family table CSV (Benchmark, Method, TPF, Acc, AUP).
+pub fn read_family_csv(path: impl AsRef<Path>) -> Result<Vec<Row>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    let mut rows = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 || line.trim().is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').collect();
+        if cells.len() < 5 {
+            continue;
+        }
+        rows.push(Row {
+            task: cells[0].to_string(),
+            method: cells[1].to_string(),
+            tpf: parse_pm(cells[2]),
+            acc: parse_pm(cells[3]),
+            aup: parse_pm(cells[4]),
+        });
+    }
+    Ok(rows)
+}
+
+/// The outcome of one qualitative claim check.
+#[derive(Debug, Clone)]
+pub struct Claim {
+    pub name: String,
+    pub holds: bool,
+    pub detail: String,
+}
+
+fn by_task(rows: &[Row]) -> BTreeMap<String, Vec<Row>> {
+    let mut m: BTreeMap<String, Vec<Row>> = BTreeMap::new();
+    for r in rows {
+        m.entry(r.task.clone()).or_default().push(r.clone());
+    }
+    m
+}
+
+fn find<'a>(rows: &'a [Row], needle: &str) -> Option<&'a Row> {
+    rows.iter().find(|r| r.method.contains(needle))
+}
+
+/// Shape checks for a family table (paper Tables 1/2): d3LLM wins AUP,
+/// TPF ordering, bounded accuracy cost, vanilla TPF == 1.
+pub fn check_family(rows: &[Row], d3_name: &str, vanilla_name: &str)
+                    -> Vec<Claim> {
+    let mut claims = Vec::new();
+    let tasks = by_task(rows);
+    let mut d3_wins = 0usize;
+    let mut n_tasks = 0usize;
+    let mut tpf_ordered = 0usize;
+    let mut acc_ok = 0usize;
+    let mut vanilla_tpf_one = true;
+
+    for (_task, trows) in &tasks {
+        let Some(d3) = find(trows, d3_name) else { continue };
+        let Some(van) = find(trows, vanilla_name) else { continue };
+        n_tasks += 1;
+        // d3LLM has the best AUP among dLLM methods (AR reference excluded)
+        let best_aup = trows
+            .iter()
+            .filter(|r| !r.method.contains("AR"))
+            .map(|r| r.aup)
+            .fold(f64::MIN, f64::max);
+        if d3.aup >= best_aup - 1e-9 {
+            d3_wins += 1;
+        }
+        // d3LLM has the highest TPF in the family
+        let best_tpf = trows
+            .iter()
+            .filter(|r| !r.method.contains("AR"))
+            .map(|r| r.tpf)
+            .fold(f64::MIN, f64::max);
+        if d3.tpf >= best_tpf - 1e-9 {
+            tpf_ordered += 1;
+        }
+        // accuracy cost vs vanilla bounded (paper: "negligible"; we allow
+        // 5 points on the scaled-down testbed)
+        if d3.acc >= van.acc - 5.0 {
+            acc_ok += 1;
+        }
+        if (van.tpf - 1.0).abs() > 0.05 {
+            vanilla_tpf_one = false;
+        }
+    }
+
+    claims.push(Claim {
+        name: format!("{d3_name} best AUP"),
+        holds: n_tasks > 0 && d3_wins * 2 > n_tasks,
+        detail: format!("{d3_wins}/{n_tasks} tasks"),
+    });
+    claims.push(Claim {
+        name: format!("{d3_name} highest TPF"),
+        holds: n_tasks > 0 && tpf_ordered * 2 > n_tasks,
+        detail: format!("{tpf_ordered}/{n_tasks} tasks"),
+    });
+    claims.push(Claim {
+        name: "accuracy cost bounded (<=5pt vs vanilla)".into(),
+        holds: n_tasks > 0 && acc_ok * 2 > n_tasks,
+        detail: format!("{acc_ok}/{n_tasks} tasks"),
+    });
+    claims.push(Claim {
+        name: format!("{vanilla_name} TPF = 1.0"),
+        holds: vanilla_tpf_one,
+        detail: String::new(),
+    });
+    claims
+}
+
+/// Speedup summary vs the vanilla row on one task (paper's "10x over
+/// vanilla LLaDA/Dream" claim, via TPF ratio).
+pub fn speedup_vs_vanilla(rows: &[Row], task: &str, d3: &str, vanilla: &str)
+                          -> Option<f64> {
+    let trows = by_task(rows).remove(task)?;
+    let d = find(&trows, d3)?.tpf;
+    let v = find(&trows, vanilla)?.tpf;
+    (v > 0.0).then(|| d / v)
+}
+
+/// Render the EXPERIMENTS.md summary for all family tables present.
+pub fn render_summary(results_dir: &Path) -> Result<String> {
+    let mut out = String::new();
+    for (stem, d3, vanilla, paper_shape) in [
+        ("table1", "d3LLM-LLaDA", "LLaDA-sim",
+         "paper: d3LLM best AUP on 5/5 LLaDA tasks, TPF 9.11 on GSM8K"),
+        ("table2", "d3LLM-Dream", "Dream-sim",
+         "paper: d3LLM best AUP on 4/5 Dream tasks"),
+        ("table8", "d3LLM-Coder", "Dream-Coder-sim",
+         "paper: d3LLM-Coder ~2.5-2.9x TPF at comparable accuracy"),
+    ] {
+        let path = results_dir.join(format!("{stem}.csv"));
+        if !path.exists() {
+            continue;
+        }
+        let rows = read_family_csv(&path)?;
+        writeln!(out, "### {stem} ({paper_shape})\n").ok();
+        for c in check_family(&rows, d3, vanilla) {
+            writeln!(out, "- [{}] {} {}",
+                     if c.holds { "x" } else { " " }, c.name, c.detail)
+                .ok();
+        }
+        if let Some(s) =
+            speedup_vs_vanilla(&rows, "gsm8k", d3, vanilla)
+        {
+            writeln!(out, "- TPF speedup vs vanilla on GSM8K: {s:.1}x \
+                           (paper: ~9-10x)")
+                .ok();
+        }
+        writeln!(out).ok();
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<Row> {
+        let mk = |task: &str, method: &str, tpf: f64, acc: f64, aup: f64| Row {
+            task: task.into(), method: method.into(), tpf, acc, aup,
+        };
+        vec![
+            mk("gsm8k", "Qwen-sim (AR)", 1.0, 80.0, 80.0),
+            mk("gsm8k", "LLaDA-sim", 1.0, 72.0, 72.0),
+            mk("gsm8k", "Fast-dLLM-LLaDA", 2.5, 71.0, 150.0),
+            mk("gsm8k", "d3LLM-LLaDA", 6.0, 71.5, 380.0),
+            mk("math", "LLaDA-sim", 1.0, 30.0, 30.0),
+            mk("math", "Fast-dLLM-LLaDA", 2.0, 29.0, 50.0),
+            mk("math", "d3LLM-LLaDA", 4.0, 28.5, 95.0),
+        ]
+    }
+
+    #[test]
+    fn claims_hold_on_paper_shaped_data() {
+        let claims = check_family(&rows(), "d3LLM-LLaDA", "LLaDA-sim");
+        assert!(claims.iter().all(|c| c.holds),
+                "{:?}", claims.iter().filter(|c| !c.holds).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn claims_fail_when_d3_loses() {
+        let mut r = rows();
+        for row in &mut r {
+            if row.method == "d3LLM-LLaDA" {
+                row.aup = 10.0;
+            }
+        }
+        let claims = check_family(&r, "d3LLM-LLaDA", "LLaDA-sim");
+        assert!(!claims[0].holds);
+    }
+
+    #[test]
+    fn speedup_math() {
+        let s = speedup_vs_vanilla(&rows(), "gsm8k", "d3LLM-LLaDA",
+                                   "LLaDA-sim")
+            .unwrap();
+        assert!((s - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pm_parsing() {
+        assert!((parse_pm("9.11 ± 0.14") - 9.11).abs() < 1e-9);
+        assert!((parse_pm("73.1") - 73.1).abs() < 1e-9);
+    }
+}

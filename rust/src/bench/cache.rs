@@ -1,0 +1,184 @@
+//! Eval-result cache: every (checkpoint, strategy, threshold, task, n,
+//! seed, variant) evaluation is stored in results/eval_cache.json so
+//! tables, curves and radar charts share sweep data instead of re-decoding,
+//! and interrupted bench runs resume where they stopped.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::{ForwardMix, RunMetrics};
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub acc: f64,
+    pub tpf: f64,
+    pub tps_cpu: f64,
+    pub gen_tokens: usize,
+    pub forwards: usize,
+    pub full_forwards: usize,
+    pub window_forwards: usize,
+    pub ar_steps: usize,
+    pub wall_secs: f64,
+}
+
+impl EvalRecord {
+    pub fn from_run(m: &RunMetrics, mix: &ForwardMix) -> EvalRecord {
+        EvalRecord {
+            acc: m.accuracy(),
+            tpf: m.tpf(),
+            tps_cpu: m.tps(),
+            gen_tokens: m.gen_tokens,
+            forwards: m.forwards,
+            full_forwards: mix.full_forwards,
+            window_forwards: mix.window_forwards,
+            ar_steps: mix.ar_steps,
+            wall_secs: m.wall_secs,
+        }
+    }
+
+    pub fn mix(&self) -> ForwardMix {
+        ForwardMix {
+            full_forwards: self.full_forwards,
+            window_forwards: self.window_forwards,
+            ar_steps: self.ar_steps,
+            gen_tokens: self.gen_tokens,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("acc", Json::num(self.acc)),
+            ("tpf", Json::num(self.tpf)),
+            ("tps_cpu", Json::num(self.tps_cpu)),
+            ("gen_tokens", Json::num(self.gen_tokens as f64)),
+            ("forwards", Json::num(self.forwards as f64)),
+            ("full_forwards", Json::num(self.full_forwards as f64)),
+            ("window_forwards", Json::num(self.window_forwards as f64)),
+            ("ar_steps", Json::num(self.ar_steps as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<EvalRecord> {
+        let g = |k: &str| -> Result<f64> {
+            j.req(k)?.as_f64().ok_or_else(|| anyhow!("bad field {k}"))
+        };
+        Ok(EvalRecord {
+            acc: g("acc")?,
+            tpf: g("tpf")?,
+            tps_cpu: g("tps_cpu")?,
+            gen_tokens: g("gen_tokens")? as usize,
+            forwards: g("forwards")? as usize,
+            full_forwards: g("full_forwards")? as usize,
+            window_forwards: g("window_forwards")? as usize,
+            ar_steps: g("ar_steps")? as usize,
+            wall_secs: g("wall_secs")?,
+        })
+    }
+}
+
+pub struct EvalCache {
+    path: PathBuf,
+    map: BTreeMap<String, EvalRecord>,
+    dirty: usize,
+}
+
+impl EvalCache {
+    pub fn open(path: impl Into<PathBuf>) -> EvalCache {
+        let path = path.into();
+        let mut map = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(Json::Obj(entries)) = json::parse(&text) {
+                for (k, v) in entries {
+                    if let Ok(r) = EvalRecord::from_json(&v) {
+                        map.insert(k, r);
+                    }
+                }
+            }
+        }
+        EvalCache { path, map, dirty: 0 }
+    }
+
+    /// Canonical cache key.
+    #[allow(clippy::too_many_arguments)]
+    pub fn key(ckpt: &str, strategy: &str, threshold: f32, task: &str,
+               n: usize, seed: u64, variant: &str, strict: bool) -> String {
+        format!(
+            "{ckpt}|{strategy}|{threshold:.4}|{task}|{n}|{seed}|{variant}|{}",
+            strict as u8
+        )
+    }
+
+    pub fn get(&self, key: &str) -> Option<&EvalRecord> {
+        self.map.get(key)
+    }
+
+    pub fn put(&mut self, key: String, rec: EvalRecord) {
+        self.map.insert(key, rec);
+        self.dirty += 1;
+        if self.dirty >= 4 {
+            let _ = self.save();
+        }
+    }
+
+    pub fn save(&mut self) -> Result<()> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let obj = Json::Obj(
+            self.map
+                .iter()
+                .map(|(k, v)| (k.clone(), v.to_json()))
+                .collect(),
+        );
+        std::fs::write(&self.path, obj.to_string())?;
+        self.dirty = 0;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+impl Drop for EvalCache {
+    fn drop(&mut self) {
+        let _ = self.save();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("d3llm_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+        let rec = EvalRecord {
+            acc: 72.5, tpf: 5.1, tps_cpu: 120.0, gen_tokens: 610,
+            forwards: 120, full_forwards: 10, window_forwards: 110,
+            ar_steps: 0, wall_secs: 5.0,
+        };
+        {
+            let mut c = EvalCache::open(&path);
+            c.put(EvalCache::key("x", "d3llm", 0.45, "gsm8k", 10, 1, "xla",
+                                 false), rec.clone());
+            c.save().unwrap();
+        }
+        let c = EvalCache::open(&path);
+        let k = EvalCache::key("x", "d3llm", 0.45, "gsm8k", 10, 1, "xla",
+                               false);
+        let got = c.get(&k).unwrap();
+        assert!((got.acc - 72.5).abs() < 1e-9);
+        assert_eq!(got.window_forwards, 110);
+    }
+}

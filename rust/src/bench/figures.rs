@@ -1,0 +1,157 @@
+//! Figure generators: accuracy-parallelism curves (Figs. 4a/5/7/9), AUP
+//! radar/histogram data (Figs. 4b/4c/6/8/10), and the AUP illustration
+//! (Fig. 1). Output is CSV series; plots/plot_figures.py renders PNGs when
+//! matplotlib is available (build-time only).
+
+use anyhow::Result;
+
+use crate::data::Family;
+use crate::metrics::aup::{aup_from_points, Point, DEFAULT_ALPHA};
+
+use super::sweep::{self, MethodSpec};
+use super::tables::{dream_methods, llada_methods};
+use super::BenchCtx;
+
+const EVAL_TASKS: [Family; 5] = [
+    Family::Gsm8k,
+    Family::Math,
+    Family::Mbpp,
+    Family::HumanEval,
+    Family::LongGsm8k,
+];
+
+fn coder_methods() -> Vec<MethodSpec> {
+    vec![
+        MethodSpec::new("Dream-Coder-sim", "coder-teacher",
+                        crate::decode::Strategy::Vanilla),
+        MethodSpec::new("d3LLM-Coder", "d3llm-coder",
+                        crate::decode::Strategy::D3llm),
+    ]
+}
+
+/// Figure 1: the AUP construction, on real d3LLM sweep data — per point:
+/// accuracy, weight W(y), weighted contribution. Regenerates the paper's
+/// illustration with measured numbers.
+pub fn figure1(ctx: &BenchCtx) -> Result<()> {
+    let n = ctx.opts.n_or(10);
+    let m = MethodSpec::new("d3LLM-LLaDA", "d3llm-llada",
+                            crate::decode::Strategy::D3llm);
+    let s = sweep::sweep_method(ctx, &m, Family::Gsm8k, n, 42, false)?;
+    let pts = sweep::to_points(&s);
+    let y_max = pts.iter().map(|p| p.acc).fold(0.0, f64::max);
+    let alpha = DEFAULT_ALPHA;
+
+    let mut rows = Vec::new();
+    let mut sorted = pts.clone();
+    sorted.sort_by(|a, b| a.rho.partial_cmp(&b.rho).unwrap());
+    for p in &sorted {
+        let w = (-alpha * (1.0 - p.acc / y_max)).exp().min(1.0);
+        rows.push(vec![
+            format!("{:.3}", p.rho),
+            format!("{:.2}", p.acc),
+            format!("{w:.4}"),
+            format!("{:.2}", p.acc * w),
+        ]);
+    }
+    crate::util::write_csv("results/figure1_aup_illustration.csv",
+                           &["tpf", "acc", "weight", "weighted_acc"],
+                           &rows)?;
+    let aup = aup_from_points(&pts, alpha, Some(y_max));
+    eprintln!("[bench] figure1: AUP = {aup:.1} (alpha={alpha})");
+    Ok(())
+}
+
+/// Accuracy-parallelism curves for each family x task (Figures 4a/5/7/9).
+pub fn curves(ctx: &BenchCtx) -> Result<()> {
+    let n = ctx.opts.n_or(10);
+    let seed = 42u64;
+    for (family, methods) in [
+        ("llada", llada_methods()),
+        ("dream", dream_methods()),
+        ("coder", coder_methods()),
+    ] {
+        let tasks: Vec<Family> = if family == "coder" {
+            vec![Family::CoderHumanEval, Family::CoderMbpp]
+        } else {
+            EVAL_TASKS.to_vec()
+        };
+        let mut rows = Vec::new();
+        for task in tasks {
+            for m in &methods {
+                let Ok(s) = sweep::sweep_method(ctx, m, task, n, seed, false)
+                else {
+                    continue;
+                };
+                for p in &s {
+                    rows.push(vec![
+                        task.name().to_string(),
+                        m.label.clone(),
+                        format!("{:.4}", p.threshold),
+                        format!("{:.3}", p.rec.tpf),
+                        format!("{:.2}", p.rec.acc),
+                    ]);
+                }
+            }
+        }
+        crate::util::write_csv(
+            format!("results/curves_{family}.csv"),
+            &["task", "method", "threshold", "tpf", "acc"],
+            &rows,
+        )?;
+    }
+    eprintln!("[bench] curves written (results/curves_*.csv)");
+    Ok(())
+}
+
+/// Per-task AUP matrices for the radar charts / histograms
+/// (Figures 4b, 4c, 6, 8, 10).
+pub fn radar(ctx: &BenchCtx) -> Result<()> {
+    let n = ctx.opts.n_or(10);
+    let seed = 42u64;
+    for (family, methods) in [
+        ("llada", llada_methods()),
+        ("dream", dream_methods()),
+        ("coder", coder_methods()),
+    ] {
+        let tasks: Vec<Family> = if family == "coder" {
+            vec![Family::CoderHumanEval, Family::CoderMbpp]
+        } else {
+            EVAL_TASKS.to_vec()
+        };
+        let mut rows = Vec::new();
+        for task in tasks {
+            // family-wide y_max per task
+            let mut sweeps = Vec::new();
+            let mut kept = Vec::new();
+            let mut y_max: f64 = 0.0;
+            for m in &methods {
+                match sweep::sweep_method(ctx, m, task, n, seed, false) {
+                    Ok(s) => {
+                        for p in &s {
+                            y_max = y_max.max(p.rec.acc);
+                        }
+                        sweeps.push(s);
+                        kept.push(m.clone());
+                    }
+                    Err(_) => continue,
+                }
+            }
+            for (m, s) in kept.iter().zip(&sweeps) {
+                let pts: Vec<Point> = sweep::to_points(s);
+                let aup = aup_from_points(&pts, DEFAULT_ALPHA, Some(y_max));
+                rows.push(vec![
+                    task.name().to_string(),
+                    m.label.clone(),
+                    format!("{aup:.2}"),
+                ]);
+            }
+        }
+        crate::util::write_csv(
+            format!("results/radar_{family}.csv"),
+            &["task", "method", "aup"],
+            &rows,
+        )?;
+    }
+    eprintln!("[bench] radar AUP matrices written (results/radar_*.csv)");
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Benchmark harnesses: one generator per paper table/figure
+//! (DESIGN.md §5 maps experiment ids to modules). Everything lands in
+//! results/ as markdown + CSV; EXPERIMENTS.md summarises paper-vs-measured.
+
+pub mod analysis;
+pub mod cache;
+pub mod figures;
+pub mod perf;
+pub mod report;
+pub mod sweep;
+pub mod tables;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::ParamStore;
+use crate::runtime::Engine;
+use crate::tokenizer::Tokenizer;
+use crate::train::TrainCfg;
+
+use cache::EvalCache;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BenchOpts {
+    /// samples per eval run (0 = per-experiment default)
+    pub n: usize,
+    /// shrink everything for smoke runs
+    pub fast: bool,
+    /// eval-set replicas for +-std (0 = default 2)
+    pub seeds: usize,
+}
+
+impl BenchOpts {
+    pub fn n_or(&self, default: usize) -> usize {
+        let n = if self.n > 0 { self.n } else { default };
+        if self.fast {
+            (n / 2).max(4)
+        } else {
+            n
+        }
+    }
+
+    pub fn seeds_or(&self, default: usize) -> usize {
+        let s = if self.seeds > 0 { self.seeds } else { default };
+        if self.fast {
+            1
+        } else {
+            s
+        }
+    }
+}
+
+/// Shared bench context: engine, tokenizer, checkpoint + eval caches.
+pub struct BenchCtx {
+    pub eng: Engine,
+    pub tk: Tokenizer,
+    pub opts: BenchOpts,
+    pub cache: RefCell<EvalCache>,
+    ckpts: RefCell<HashMap<String, Rc<ParamStore>>>,
+}
+
+impl BenchCtx {
+    pub fn new(opts: BenchOpts) -> Result<BenchCtx> {
+        let eng = Engine::load("artifacts")?;
+        let tk = Tokenizer::new(eng.manifest.constants.vocab)?;
+        Ok(BenchCtx {
+            eng,
+            tk,
+            opts,
+            cache: RefCell::new(EvalCache::open("results/eval_cache.json")),
+            ckpts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn ckpt(&self, name: &str) -> Result<Rc<ParamStore>> {
+        if let Some(p) = self.ckpts.borrow().get(name) {
+            return Ok(p.clone());
+        }
+        let path = TrainCfg::ckpt_path(Path::new("checkpoints"), name);
+        let p = Rc::new(ParamStore::load(&path).map_err(|e| {
+            anyhow!("{e:#}. Run `repro train-all` to build checkpoints")
+        })?);
+        self.ckpts.borrow_mut().insert(name.to_string(), p.clone());
+        Ok(p)
+    }
+}
+
+/// Dispatcher: `repro bench --exp <id>`.
+pub fn run(exp: &str, opts: BenchOpts) -> Result<()> {
+    let ctx = BenchCtx::new(opts)?;
+    std::fs::create_dir_all("results")?;
+    match exp {
+        "table1" => tables::table1(&ctx),
+        "table2" => tables::table2(&ctx),
+        "table3" => tables::table3(&ctx),
+        "table4" => tables::table4(&ctx),
+        "table5" => tables::table5(&ctx),
+        "table6" => tables::table6(&ctx),
+        "table7" => tables::table7(&ctx),
+        "table8" => tables::table8(&ctx),
+        "table9" | "table10" | "table9_10" => tables::table9_10(&ctx),
+        "table11" => tables::table11(&ctx),
+        "figure1" => figures::figure1(&ctx),
+        "curves" => figures::curves(&ctx),
+        "radar" => figures::radar(&ctx),
+        "perf" => perf::run(&ctx),
+        "summary" => {
+            let text = analysis::render_summary(Path::new("results"))?;
+            std::fs::write("results/summary.md", &text)?;
+            println!("{text}");
+            Ok(())
+        }
+        "all" => {
+            tables::table1(&ctx)?;
+            tables::table2(&ctx)?;
+            tables::table3(&ctx)?;
+            tables::table4(&ctx)?;
+            tables::table5(&ctx)?;
+            tables::table6(&ctx)?;
+            tables::table7(&ctx)?;
+            tables::table8(&ctx)?;
+            tables::table9_10(&ctx)?;
+            tables::table11(&ctx)?;
+            figures::figure1(&ctx)?;
+            figures::curves(&ctx)?;
+            figures::radar(&ctx)?;
+            Ok(())
+        }
+        other => Err(anyhow!(
+            "unknown experiment `{other}` (table1..table11, figure1, \
+             curves, radar, perf, all)"
+        )),
+    }
+}

@@ -1,0 +1,127 @@
+//! Performance profiling harness (`repro bench --exp perf`):
+//! per-executable latency, host-dispatch overhead, hot-path variant
+//! comparison (pallas vs fused-xla), and end-to-end strategy throughput.
+//! Feeds EXPERIMENTS.md §Perf.
+
+use anyhow::Result;
+
+use crate::data::{self, Family};
+use crate::decode::{self, DecodeCfg, Strategy};
+use crate::model::{exec, KvCache, ParamStore};
+use crate::util::stats::{bench, bench_line, Summary};
+
+use super::BenchCtx;
+
+pub fn run(ctx: &BenchCtx) -> Result<()> {
+    let eng = &ctx.eng;
+    let c = eng.manifest.constants.clone();
+    let spec = eng.manifest.model("main")?.clone();
+    // use a real checkpoint when available so numerics are representative
+    let params = ctx
+        .ckpt("d3llm-llada")
+        .map(|p| p.data.clone())
+        .unwrap_or_else(|_| ParamStore::init(&spec, 7).data);
+
+    let mut lines: Vec<String> = Vec::new();
+
+    // ---- L2/L1 executables: prefill + decode, both variants
+    let tokens: Vec<i32> = (0..c.s_max as i32).map(|i| 5 + i % 90).collect();
+    let valid: Vec<f32> = (0..c.s_max)
+        .map(|i| if i < 256 { 1.0 } else { 0.0 })
+        .collect();
+    for variant in ["xla", "pallas"] {
+        let name = format!("prefill_{variant}");
+        eng.warmup(&[name.as_str()])?;
+        let secs = bench(2, 8, || {
+            exec::prefill(eng, &name, &params, &tokens, &valid).unwrap();
+        });
+        lines.push(bench_line(&name, &secs));
+    }
+
+    let cache = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
+    let win_tokens = vec![c.mask_id; c.window];
+    let win_pos: Vec<i32> = (0..c.window as i32).collect();
+    let win_valid = vec![1.0f32; c.window];
+    for variant in ["xla", "pallas"] {
+        let name = format!("decode_{variant}");
+        eng.warmup(&[name.as_str()])?;
+        let secs = bench(2, 16, || {
+            exec::decode_window(eng, &name, &params, &win_tokens, &win_pos,
+                                &win_valid, &cache)
+                .unwrap();
+        });
+        lines.push(bench_line(&name, &secs));
+    }
+
+    // ---- AR step (the smallest dispatch: overhead shows up here)
+    {
+        eng.warmup(&["ar_step"])?;
+        let secs = bench(4, 32, || {
+            exec::decode_window(eng, "ar_step", &params, &[5], &[0], &[1.0],
+                                &cache)
+                .unwrap();
+        });
+        lines.push(bench_line("ar_step", &secs));
+    }
+
+    // ---- L3 §Perf A/B: literal path vs device-resident-params execute_b
+    for (label, buffered) in [("decode literal-args (before)", false),
+                              ("decode buffered-args (after)", true)] {
+        eng.set_buffered(buffered);
+        let secs = bench(3, 24, || {
+            exec::decode_window(eng, "decode_xla", &params, &win_tokens,
+                                &win_pos, &win_valid, &cache)
+                .unwrap();
+        });
+        lines.push(bench_line(label, &secs));
+    }
+    eng.set_buffered(true);
+
+    // ---- dispatch overhead: engine-reported upload vs total
+    eng.reset_stats();
+    for _ in 0..16 {
+        exec::decode_window(eng, "decode_xla", &params, &win_tokens,
+                            &win_pos, &win_valid, &cache)?;
+    }
+    if let Some(s) = eng.stats().get("decode_xla") {
+        lines.push(format!(
+            "decode_xla host-upload share: {:.1}% ({:.3} ms of {:.3} ms/call)",
+            100.0 * s.upload_secs / s.total_secs,
+            s.upload_secs / s.calls as f64 * 1e3,
+            s.total_secs / s.calls as f64 * 1e3,
+        ));
+    }
+
+    // ---- end-to-end strategy throughput on one GSM8K prompt
+    let samples = data::eval_set(&ctx.tk, Family::Gsm8k, 3, 1);
+    for strategy in [Strategy::Ar, Strategy::Vanilla, Strategy::FastDllm,
+                     Strategy::D3llm] {
+        let cfg = DecodeCfg::preset(strategy);
+        let mut secs = Vec::new();
+        let mut toks = 0usize;
+        for s in &samples {
+            let t0 = std::time::Instant::now();
+            let r = decode::generate(eng, &cfg, &params, None, &s.prompt,
+                                     96)?;
+            secs.push(t0.elapsed().as_secs_f64());
+            toks += r.tokens.len();
+        }
+        let total: f64 = secs.iter().sum();
+        lines.push(format!(
+            "e2e {:<10} {:>8.1} tok/s   ({} tokens, {})",
+            strategy.name(),
+            toks as f64 / total,
+            toks,
+            bench_line("", &secs).trim_start()
+        ));
+    }
+
+    let report = lines.join("\n");
+    println!("{report}");
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/perf.md",
+                   format!("# Perf profile\n\n```\n{report}\n```\n"))?;
+    eprintln!("[bench] wrote results/perf.md");
+    let _ = Summary::of(&[]);
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Markdown/CSV emitters for the table harnesses.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A rendered table: header + rows, written as both .md and .csv.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn write(&self, stem: &str) -> Result<()> {
+        let md_path = format!("results/{stem}.md");
+        if let Some(parent) = Path::new(&md_path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(&md_path)?;
+        writeln!(f, "# {}\n", self.title)?;
+        writeln!(f, "| {} |", self.header.join(" | "))?;
+        writeln!(
+            f,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        )?;
+        for row in &self.rows {
+            writeln!(f, "| {} |", row.join(" | "))?;
+        }
+        crate::util::write_csv(
+            format!("results/{stem}.csv"),
+            &self.header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+            &self.rows,
+        )?;
+        eprintln!("[bench] wrote results/{stem}.md (+.csv)");
+        Ok(())
+    }
+
+    /// Also print to stdout for interactive runs.
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        println!("{}", self.header.join(" | "));
+        for row in &self.rows {
+            println!("{}", row.join(" | "));
+        }
+    }
+}
+
+/// mean ± std formatting used across tables.
+pub fn pm(mean: f64, std: f64, prec: usize) -> String {
+    format!("{mean:.prec$} ± {std:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pm_formats() {
+        assert_eq!(pm(9.112, 0.14, 2), "9.11 ± 0.14");
+        assert_eq!(pm(73.06, 0.31, 1), "73.1 ± 0.3");
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_row_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,153 @@
+//! Threshold sweeps: the machinery that turns one (checkpoint, strategy)
+//! into accuracy-parallelism points — the raw material of every AUP score
+//! and every curve figure. All runs go through the eval cache.
+
+use anyhow::Result;
+
+use crate::data::{self, Family};
+use crate::decode::{DecodeCfg, Strategy};
+use crate::eval::evaluate;
+use crate::metrics::aup::Point;
+
+use super::cache::{EvalCache, EvalRecord};
+use super::BenchCtx;
+
+/// One contender in a family table.
+#[derive(Debug, Clone)]
+pub struct MethodSpec {
+    /// display name, e.g. "d3LLM-LLaDA"
+    pub label: String,
+    /// checkpoint name under checkpoints/
+    pub ckpt: String,
+    pub strategy: Strategy,
+    /// sweep knob values; empty = single run at the preset default.
+    pub sweep: Vec<f32>,
+    /// index into `sweep` of the method's headline operating point
+    pub headline: usize,
+}
+
+impl MethodSpec {
+    pub fn new(label: &str, ckpt: &str, strategy: Strategy) -> MethodSpec {
+        let sweep = match strategy {
+            Strategy::Vanilla | Strategy::Ar | Strategy::Spec => vec![],
+            Strategy::D3llm => vec![0.1, 0.25, 0.45, 0.8, 1.3],
+            // confidence-threshold methods
+            _ => vec![0.99, 0.95, 0.85, 0.7, 0.55],
+        };
+        let headline = if sweep.is_empty() { 0 } else { 2 };
+        MethodSpec {
+            label: label.to_string(),
+            ckpt: ckpt.to_string(),
+            strategy,
+            sweep,
+            headline,
+        }
+    }
+}
+
+/// One evaluated operating point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub threshold: f32,
+    pub rec: EvalRecord,
+}
+
+/// Evaluate one (method, task, seed) at one threshold, cached.
+pub fn eval_point(ctx: &BenchCtx, m: &MethodSpec, task: Family,
+                  threshold: f32, n: usize, seed: u64, strict: bool)
+                  -> Result<EvalRecord> {
+    let variant = "xla";
+    let key = EvalCache::key(&m.ckpt, m.strategy.name(), threshold,
+                             task.name(), n, seed, variant, strict);
+    if let Some(rec) = ctx.cache.borrow().get(&key) {
+        return Ok(rec.clone());
+    }
+    let params = ctx.ckpt(&m.ckpt)?;
+    let draft = if m.strategy == Strategy::Spec {
+        Some(ctx.ckpt("draft")?)
+    } else {
+        None
+    };
+    let mut cfg = DecodeCfg::preset(m.strategy);
+    cfg.variant = variant.to_string();
+    if threshold > 0.0 {
+        cfg = cfg.with_threshold(threshold);
+    }
+    let samples = data::eval_set(&ctx.tk, task, n, seed);
+    let out = evaluate(&ctx.eng, &cfg, &params.data,
+                       draft.as_ref().map(|d| d.data.as_slice()), &ctx.tk,
+                       &samples, strict)?;
+    let rec = EvalRecord::from_run(&out.metrics, &out.mix);
+    eprintln!(
+        "[bench] {} {} th={threshold:.2} seed={seed}: acc {:.1} tpf {:.2}",
+        m.label,
+        task.name(),
+        rec.acc,
+        rec.tpf
+    );
+    ctx.cache.borrow_mut().put(key, rec.clone());
+    Ok(rec)
+}
+
+/// Evaluate an arbitrary decode configuration (ablation rows that are not
+/// plain presets). `tag` names the configuration in the cache.
+pub fn eval_custom(ctx: &BenchCtx, ckpt: &str, cfg: &DecodeCfg, tag: &str,
+                   task: Family, threshold: f32, n: usize, seed: u64)
+                   -> Result<EvalRecord> {
+    let key = EvalCache::key(ckpt, tag, threshold, task.name(), n, seed,
+                             &cfg.variant, false);
+    if let Some(rec) = ctx.cache.borrow().get(&key) {
+        return Ok(rec.clone());
+    }
+    let params = ctx.ckpt(ckpt)?;
+    let cfg = if threshold > 0.0 {
+        cfg.clone().with_threshold(threshold)
+    } else {
+        cfg.clone()
+    };
+    let samples = data::eval_set(&ctx.tk, task, n, seed);
+    let out = evaluate(&ctx.eng, &cfg, &params.data, None, &ctx.tk,
+                       &samples, false)?;
+    let rec = EvalRecord::from_run(&out.metrics, &out.mix);
+    eprintln!(
+        "[bench] {tag} {} th={threshold:.2} seed={seed}: acc {:.1} tpf {:.2}",
+        task.name(),
+        rec.acc,
+        rec.tpf
+    );
+    ctx.cache.borrow_mut().put(key, rec.clone());
+    Ok(rec)
+}
+
+/// Full sweep of one (method, task, seed).
+pub fn sweep_method(ctx: &BenchCtx, m: &MethodSpec, task: Family, n: usize,
+                    seed: u64, strict: bool) -> Result<Vec<SweepPoint>> {
+    let thresholds: Vec<f32> = if m.sweep.is_empty() {
+        vec![0.0] // single preset-default run
+    } else {
+        m.sweep.clone()
+    };
+    thresholds
+        .into_iter()
+        .map(|t| {
+            Ok(SweepPoint {
+                threshold: t,
+                rec: eval_point(ctx, m, task, t, n, seed, strict)?,
+            })
+        })
+        .collect()
+}
+
+/// Convert sweep points to AUP points.
+pub fn to_points(points: &[SweepPoint]) -> Vec<Point> {
+    points
+        .iter()
+        .map(|p| Point { rho: p.rec.tpf, acc: p.rec.acc })
+        .collect()
+}
+
+/// Headline record of a sweep (the method's default operating point).
+pub fn headline<'a>(m: &MethodSpec, points: &'a [SweepPoint])
+                    -> &'a SweepPoint {
+    &points[m.headline.min(points.len() - 1)]
+}

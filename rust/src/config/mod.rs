@@ -1,0 +1,253 @@
+//! Typed configuration system: every tunable of the serving coordinator,
+//! decode strategies and training runs as a JSON-loadable config with
+//! defaults, validation and round-trip serialization. The CLI flags are
+//! thin overrides on top of these.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::decode::{DecodeCfg, SelMetric, Strategy};
+use crate::util::json::{self, Json};
+
+/// Top-level service configuration (repro serve --config file.json).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub host: String,
+    pub port: u16,
+    pub ckpt: String,
+    pub draft_ckpt: Option<String>,
+    pub max_queue: usize,
+    pub decode: DecodeCfg,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            host: "127.0.0.1".into(),
+            port: 7070,
+            ckpt: "d3llm-llada".into(),
+            draft_ckpt: None,
+            max_queue: 256,
+            decode: DecodeCfg::preset(Strategy::D3llm),
+        }
+    }
+}
+
+fn get_str(j: &Json, key: &str, default: &str) -> String {
+    j.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+}
+
+fn get_f64(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+}
+
+fn get_usize(j: &Json, key: &str, default: usize) -> usize {
+    j.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+}
+
+fn get_bool(j: &Json, key: &str, default: bool) -> bool {
+    j.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+}
+
+/// Parse a decode config object (all fields optional over the preset).
+pub fn decode_from_json(j: &Json) -> Result<DecodeCfg> {
+    let strategy_name = get_str(j, "strategy", "d3llm");
+    let strategy = Strategy::parse(&strategy_name)
+        .ok_or_else(|| anyhow!("unknown strategy `{strategy_name}`"))?;
+    let mut cfg = DecodeCfg::preset(strategy);
+
+    if let Some(m) = j.get("metric").and_then(|v| v.as_str()) {
+        let t = get_f64(j, "threshold", 0.0) as f32;
+        cfg.metric = match m {
+            "conf" => SelMetric::Conf(if t > 0.0 { t } else { 0.85 }),
+            "entropy" => SelMetric::Entropy(if t > 0.0 { t } else { 0.45 }),
+            other => bail!("unknown metric `{other}`"),
+        };
+    } else if let Some(t) = j.get("threshold").and_then(|v| v.as_f64()) {
+        cfg = cfg.with_threshold(t as f32);
+    }
+    cfg.block_add = get_f64(j, "block_add", cfg.block_add);
+    cfg.fully_at = get_f64(j, "fully_at", cfg.fully_at);
+    cfg.stabilize_rounds =
+        get_usize(j, "stabilize_rounds", cfg.stabilize_rounds);
+    cfg.refresh_every = get_usize(j, "refresh_every", cfg.refresh_every);
+    cfg.early_stop = get_bool(j, "early_stop", cfg.early_stop);
+    cfg.use_cache = get_bool(j, "use_cache", cfg.use_cache);
+    cfg.gamma = get_usize(j, "gamma", cfg.gamma);
+    cfg.variant = get_str(j, "variant", &cfg.variant);
+    validate_decode(&cfg)?;
+    Ok(cfg)
+}
+
+pub fn validate_decode(cfg: &DecodeCfg) -> Result<()> {
+    match cfg.metric {
+        SelMetric::Conf(t) => {
+            if !(0.0..=2.0).contains(&t) {
+                bail!("confidence threshold {t} out of [0, 2]");
+            }
+        }
+        SelMetric::Entropy(t) => {
+            if !(0.0..=10.0).contains(&t) {
+                bail!("entropy threshold {t} out of [0, 10]");
+            }
+        }
+    }
+    if !(0.0..=1.0).contains(&cfg.block_add) {
+        bail!("block_add must be in [0,1]");
+    }
+    if !(0.0..=1.0).contains(&cfg.fully_at) {
+        bail!("fully_at must be in [0,1]");
+    }
+    if cfg.block_add > cfg.fully_at {
+        bail!("block_add must not exceed fully_at");
+    }
+    if cfg.stabilize_rounds > 8 {
+        bail!("stabilize_rounds > 8 is pathological");
+    }
+    if cfg.gamma == 0 || cfg.gamma > 15 {
+        bail!("gamma must be in 1..=15 (verify window is 16)");
+    }
+    if cfg.variant != "xla" && cfg.variant != "pallas" {
+        bail!("variant must be `xla` or `pallas`");
+    }
+    Ok(())
+}
+
+pub fn decode_to_json(cfg: &DecodeCfg) -> Json {
+    let (metric, threshold) = match cfg.metric {
+        SelMetric::Conf(t) => ("conf", t),
+        SelMetric::Entropy(t) => ("entropy", t),
+    };
+    Json::obj(vec![
+        ("strategy", Json::str(cfg.strategy.name())),
+        ("metric", Json::str(metric)),
+        ("threshold", Json::num(threshold as f64)),
+        ("block_add", Json::num(cfg.block_add)),
+        ("fully_at", Json::num(cfg.fully_at)),
+        ("stabilize_rounds", Json::num(cfg.stabilize_rounds as f64)),
+        ("refresh_every", Json::num(cfg.refresh_every as f64)),
+        ("early_stop", Json::Bool(cfg.early_stop)),
+        ("use_cache", Json::Bool(cfg.use_cache)),
+        ("gamma", Json::num(cfg.gamma as f64)),
+        ("variant", Json::str(cfg.variant.clone())),
+    ])
+}
+
+impl ServiceConfig {
+    pub fn from_json(j: &Json) -> Result<ServiceConfig> {
+        let d = ServiceConfig::default();
+        let decode = match j.get("decode") {
+            Some(dj) => decode_from_json(dj)?,
+            None => d.decode.clone(),
+        };
+        let cfg = ServiceConfig {
+            host: get_str(j, "host", &d.host),
+            port: get_usize(j, "port", d.port as usize) as u16,
+            ckpt: get_str(j, "ckpt", &d.ckpt),
+            draft_ckpt: j
+                .get("draft_ckpt")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string()),
+            max_queue: get_usize(j, "max_queue", d.max_queue),
+            decode,
+        };
+        if cfg.max_queue == 0 {
+            bail!("max_queue must be positive");
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ServiceConfig> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let j = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("host", Json::str(self.host.clone())),
+            ("port", Json::num(self.port as f64)),
+            ("ckpt", Json::str(self.ckpt.clone())),
+            ("draft_ckpt", match &self.draft_ckpt {
+                Some(s) => Json::str(s.clone()),
+                None => Json::Null,
+            }),
+            ("max_queue", Json::num(self.max_queue as f64)),
+            ("decode", decode_to_json(&self.decode)),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips() {
+        let c = ServiceConfig::default();
+        let j = c.to_json();
+        let c2 = ServiceConfig::from_json(&j).unwrap();
+        assert_eq!(c2.host, c.host);
+        assert_eq!(c2.port, c.port);
+        assert_eq!(c2.max_queue, c.max_queue);
+        assert_eq!(c2.decode.strategy, c.decode.strategy);
+        assert_eq!(c2.decode.refresh_every, c.decode.refresh_every);
+    }
+
+    #[test]
+    fn decode_overrides_apply() {
+        let j = json::parse(
+            r#"{"strategy":"d3llm","threshold":0.3,"refresh_every":4,
+                "stabilize_rounds":2,"early_stop":false}"#,
+        )
+        .unwrap();
+        let cfg = decode_from_json(&j).unwrap();
+        match cfg.metric {
+            SelMetric::Entropy(t) => assert!((t - 0.3).abs() < 1e-6),
+            _ => panic!("d3llm preset keeps the entropy metric"),
+        }
+        assert_eq!(cfg.refresh_every, 4);
+        assert_eq!(cfg.stabilize_rounds, 2);
+        assert!(!cfg.early_stop);
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        for bad in [
+            r#"{"strategy":"nope"}"#,
+            r#"{"strategy":"d3llm","block_add":1.5}"#,
+            r#"{"strategy":"d3llm","block_add":0.99,"fully_at":0.5}"#,
+            r#"{"strategy":"spec","gamma":99}"#,
+            r#"{"strategy":"d3llm","variant":"cuda"}"#,
+        ] {
+            let j = json::parse(bad).unwrap();
+            assert!(decode_from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn metric_kind_override() {
+        let j = json::parse(r#"{"strategy":"fast-dllm","metric":"entropy",
+                                "threshold":0.5}"#).unwrap();
+        let cfg = decode_from_json(&j).unwrap();
+        assert!(matches!(cfg.metric, SelMetric::Entropy(_)));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("d3llm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("svc.json");
+        let mut c = ServiceConfig::default();
+        c.port = 9999;
+        c.save(&path).unwrap();
+        let c2 = ServiceConfig::load(&path).unwrap();
+        assert_eq!(c2.port, 9999);
+    }
+}

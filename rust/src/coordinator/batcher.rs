@@ -1,0 +1,133 @@
+//! Request batcher / scheduler.
+//!
+//! The decode engine is single-stream (batch = 1, matching the paper's
+//! serving setup), so the batcher's job is admission control and ordering:
+//! a bounded priority queue with FIFO tie-breaking and queue-time
+//! accounting. Higher `priority` values are served first.
+
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+/// A queued unit of work.
+pub struct QueuedJob<T> {
+    pub payload: T,
+    pub priority: i64,
+    pub enqueued: Instant,
+    seq: u64,
+}
+
+impl<T> PartialEq for QueuedJob<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl<T> Eq for QueuedJob<T> {}
+impl<T> PartialOrd for QueuedJob<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for QueuedJob<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // max-heap: higher priority first; then earlier seq (FIFO)
+        self.priority
+            .cmp(&other.priority)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+pub struct Batcher<T> {
+    heap: BinaryHeap<QueuedJob<T>>,
+    next_seq: u64,
+    max_queue: usize,
+    pub enqueued_total: u64,
+    pub rejected_total: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_queue: usize) -> Self {
+        Batcher {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            max_queue,
+            enqueued_total: 0,
+            rejected_total: 0,
+        }
+    }
+
+    /// Admit a job; returns false (backpressure) when the queue is full.
+    pub fn push(&mut self, payload: T, priority: i64) -> bool {
+        if self.heap.len() >= self.max_queue {
+            self.rejected_total += 1;
+            return false;
+        }
+        self.heap.push(QueuedJob {
+            payload,
+            priority,
+            enqueued: Instant::now(),
+            seq: self.next_seq,
+        });
+        self.next_seq += 1;
+        self.enqueued_total += 1;
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<QueuedJob<T>> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_priority() {
+        let mut b = Batcher::new(10);
+        b.push("a", 0);
+        b.push("b", 0);
+        b.push("c", 0);
+        assert_eq!(b.pop().unwrap().payload, "a");
+        assert_eq!(b.pop().unwrap().payload, "b");
+        assert_eq!(b.pop().unwrap().payload, "c");
+    }
+
+    #[test]
+    fn priority_wins() {
+        let mut b = Batcher::new(10);
+        b.push("low", 0);
+        b.push("high", 5);
+        b.push("mid", 2);
+        assert_eq!(b.pop().unwrap().payload, "high");
+        assert_eq!(b.pop().unwrap().payload, "mid");
+        assert_eq!(b.pop().unwrap().payload, "low");
+    }
+
+    #[test]
+    fn backpressure() {
+        let mut b = Batcher::new(2);
+        assert!(b.push(1, 0));
+        assert!(b.push(2, 0));
+        assert!(!b.push(3, 0));
+        assert_eq!(b.rejected_total, 1);
+        b.pop();
+        assert!(b.push(3, 0));
+    }
+
+    #[test]
+    fn queue_time_is_tracked() {
+        let mut b = Batcher::new(4);
+        b.push((), 0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let j = b.pop().unwrap();
+        assert!(j.enqueued.elapsed().as_secs_f64() >= 0.005);
+    }
+}

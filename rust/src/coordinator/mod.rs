@@ -1,0 +1,301 @@
+//! Serving coordinator: a threaded JSON-line TCP server in front of a
+//! single-stream decode engine.
+//!
+//! Topology (the offline registry has no tokio; std threads + channels):
+//!
+//!   acceptor thread --- per-connection reader threads
+//!        |  (mpsc)                |  parse JSON-line requests
+//!        v                        v
+//!   router/batcher  <-- bounded priority queue, backpressure
+//!        |
+//!        v
+//!   engine worker (owns PJRT Engine + checkpoint; decodes batch=1,
+//!                  matching the paper's serving setup)
+//!        |
+//!        v  per-request reply channel
+//!   connection writer
+//!
+//! The engine worker pre-compiles the executables its strategy needs, so
+//! first-request latency is decode, not XLA compilation.
+
+pub mod batcher;
+pub mod protocol;
+pub mod scheduler;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::decode::{self, DecodeCfg, Strategy};
+use crate::model::ParamStore;
+use crate::runtime::Engine;
+use crate::tokenizer::Tokenizer;
+use crate::train::TrainCfg;
+
+use batcher::Batcher;
+use protocol::{GenRequest, GenResponse, Request};
+
+#[derive(Debug, Clone)]
+pub struct ServerCfg {
+    pub host: String,
+    pub port: u16,
+    pub ckpt: String,
+    pub strategy: Strategy,
+    pub variant: String,
+    pub max_queue: usize,
+    /// full decode configuration; per-request `strategy` switches presets,
+    /// otherwise this config is used verbatim
+    pub decode: Option<crate::decode::DecodeCfg>,
+}
+
+struct Job {
+    req: GenRequest,
+    reply: mpsc::Sender<String>,
+}
+
+#[derive(Default)]
+pub struct ServerStats {
+    pub served: AtomicU64,
+    pub errors: AtomicU64,
+    pub queue_ms_total: AtomicU64,
+    pub decode_ms_total: AtomicU64,
+}
+
+/// Run the server until a shutdown request arrives.
+pub fn serve(cfg: ServerCfg) -> Result<()> {
+    let addr = format!("{}:{}", cfg.host, cfg.port);
+    let listener =
+        TcpListener::bind(&addr).with_context(|| format!("bind {addr}"))?;
+    eprintln!("[serve] listening on {addr} (ckpt={}, strategy={})",
+              cfg.ckpt, cfg.strategy.name());
+
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let stats = Arc::new(ServerStats::default());
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    // ---- engine worker (owns the non-Sync PJRT engine)
+    let worker_cfg = cfg.clone();
+    let worker_stats = stats.clone();
+    let worker_shutdown = shutdown.clone();
+    let worker = std::thread::spawn(move || {
+        if let Err(e) =
+            engine_worker(worker_cfg, job_rx, worker_stats, worker_shutdown)
+        {
+            eprintln!("[serve] engine worker failed: {e:#}");
+        }
+    });
+
+    // ---- accept loop
+    listener.set_nonblocking(true)?;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let tx = job_tx.clone();
+                let st = stats.clone();
+                let sd = shutdown.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, tx, st, sd) {
+                        eprintln!("[serve] connection error: {e:#}");
+                    }
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    drop(job_tx);
+    let _ = worker.join();
+    eprintln!("[serve] shut down cleanly");
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, jobs: mpsc::Sender<Job>,
+               stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>)
+               -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match protocol::parse_request(&line) {
+            Ok(Request::Shutdown) => {
+                shutdown.store(true, Ordering::SeqCst);
+                writeln!(writer, "{}", protocol::err_response("", "shutting down"))?;
+                break;
+            }
+            Ok(Request::Stats) => {
+                let s = format!(
+                    r#"{{"ok":true,"served":{},"errors":{},"queue_ms":{},"decode_ms":{}}}"#,
+                    stats.served.load(Ordering::Relaxed),
+                    stats.errors.load(Ordering::Relaxed),
+                    stats.queue_ms_total.load(Ordering::Relaxed),
+                    stats.decode_ms_total.load(Ordering::Relaxed),
+                );
+                writeln!(writer, "{s}")?;
+            }
+            Ok(Request::Generate(req)) => {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                jobs.send(Job { req, reply: reply_tx })
+                    .map_err(|_| anyhow!("engine worker gone"))?;
+                let response = reply_rx
+                    .recv()
+                    .unwrap_or_else(|_| protocol::err_response("", "worker died"));
+                writeln!(writer, "{response}")?;
+            }
+            Err(e) => {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                writeln!(writer, "{}", protocol::err_response("", &format!("{e}")))?;
+            }
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
+                 stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>)
+                 -> Result<()> {
+    let eng = Engine::load("artifacts")?;
+    let c = eng.manifest.constants.clone();
+    let tk = Tokenizer::new(c.vocab)?;
+    let params = ParamStore::load(TrainCfg::ckpt_path(
+        std::path::Path::new("checkpoints"),
+        &cfg.ckpt,
+    ))?;
+    params.check(eng.manifest.model("main")?)?;
+
+    // pre-compile the strategy's executables
+    let (prefill, dec) = decode::exec_names(&cfg.variant);
+    eng.warmup(&[prefill.as_str(), dec.as_str()])?;
+    eprintln!("[serve] engine ready");
+
+    let mut batcher: Batcher<Job> = Batcher::new(cfg.max_queue);
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // drain the channel into the priority queue
+        loop {
+            match jobs.try_recv() {
+                Ok(job) => {
+                    let pri = job.req.priority;
+                    if !batcher.push(job, pri) {
+                        // reject newest on overflow
+                        if let Some(j) = batcher.pop() {
+                            let _ = j.payload.reply.send(
+                                protocol::err_response(
+                                    &j.payload.req.id,
+                                    "queue full",
+                                ),
+                            );
+                        }
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    if batcher.is_empty() {
+                        return Ok(());
+                    }
+                    break;
+                }
+            }
+        }
+        let Some(queued) = batcher.pop() else {
+            // block for the next job to avoid spinning
+            match jobs.recv_timeout(std::time::Duration::from_millis(50)) {
+                Ok(job) => {
+                    let pri = job.req.priority;
+                    batcher.push(job, pri);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+            continue;
+        };
+
+        let queue_ms = queued.enqueued.elapsed().as_secs_f64() * 1e3;
+        let job = queued.payload;
+        let response = serve_one(&eng, &cfg, &tk, &params, &job.req, queue_ms);
+        let line = match response {
+            Ok(r) => {
+                stats.served.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .queue_ms_total
+                    .fetch_add(r.queue_ms as u64, Ordering::Relaxed);
+                stats
+                    .decode_ms_total
+                    .fetch_add(r.decode_ms as u64, Ordering::Relaxed);
+                protocol::ok_response(&r)
+            }
+            Err(e) => {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                protocol::err_response(&job.req.id, &format!("{e:#}"))
+            }
+        };
+        let _ = job.reply.send(line);
+    }
+    Ok(())
+}
+
+fn serve_one(eng: &Engine, cfg: &ServerCfg, tk: &Tokenizer,
+             params: &ParamStore, req: &GenRequest, queue_ms: f64)
+             -> Result<GenResponse> {
+    let c = eng.manifest.constants.clone();
+    let prompt = tk.encode(&req.prompt)?;
+    if prompt.is_empty() {
+        return Err(anyhow!("empty prompt"));
+    }
+    let mut dcfg = match (&req.strategy, &cfg.decode) {
+        (Some(s), _) => DecodeCfg::preset(
+            Strategy::parse(s).ok_or_else(|| anyhow!("bad strategy"))?),
+        (None, Some(d)) => d.clone(),
+        (None, None) => DecodeCfg::preset(cfg.strategy),
+    };
+    dcfg.variant = cfg.variant.clone();
+    let gen_len = req
+        .gen_len
+        .unwrap_or(96)
+        .min(c.gen_max)
+        .next_multiple_of(c.block)
+        .min(c.s_max.saturating_sub(prompt.len()) / c.block * c.block);
+    if gen_len == 0 {
+        return Err(anyhow!("prompt too long"));
+    }
+
+    let t0 = Instant::now();
+    let r = decode::generate(eng, &dcfg, &params.data, None, &prompt,
+                             gen_len)?;
+    Ok(GenResponse {
+        id: req.id.clone(),
+        text: tk.decode(&r.tokens),
+        tpf: r.tpf(),
+        forwards: r.forwards,
+        gen_tokens: r.tokens.len(),
+        tokens: r.tokens,
+        queue_ms,
+        decode_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Blocking client helper (examples + integration tests).
+pub fn client_request(addr: &str, line: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{line}")?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    Ok(resp.trim().to_string())
+}

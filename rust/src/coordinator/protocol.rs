@@ -1,0 +1,158 @@
+//! JSON-line serving protocol.
+//!
+//! Request (one JSON object per line):
+//!   {"id": "r1", "prompt": "Q EVAL 3 + 4", "gen_len": 96,
+//!    "priority": 0, "strategy": "d3llm"}        // strategy optional
+//!   {"cmd": "stats"} | {"cmd": "shutdown"}
+//!
+//! Response:
+//!   {"id": "r1", "ok": true, "text": "...", "tokens": [..],
+//!    "tpf": 5.1, "forwards": 12, "gen_tokens": 61,
+//!    "queue_ms": 0.3, "decode_ms": 210.0}
+//!   {"id": "r1", "ok": false, "error": "..."}
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub enum Request {
+    Generate(GenRequest),
+    Stats,
+    Shutdown,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: String,
+    pub prompt: String,
+    pub gen_len: Option<usize>,
+    pub priority: i64,
+    pub strategy: Option<String>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct GenResponse {
+    pub id: String,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub tpf: f64,
+    pub forwards: usize,
+    pub gen_tokens: usize,
+    pub queue_ms: f64,
+    pub decode_ms: f64,
+}
+
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = json::parse(line.trim()).map_err(|e| anyhow!("{e}"))?;
+    if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(anyhow!("unknown cmd `{other}`")),
+        };
+    }
+    let id = j
+        .get("id")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("missing `id`"))?
+        .to_string();
+    let prompt = j
+        .get("prompt")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("missing `prompt`"))?
+        .to_string();
+    Ok(Request::Generate(GenRequest {
+        id,
+        prompt,
+        gen_len: j.get("gen_len").and_then(|v| v.as_usize()),
+        priority: j.get("priority").and_then(|v| v.as_i64()).unwrap_or(0),
+        strategy: j
+            .get("strategy")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string()),
+    }))
+}
+
+pub fn ok_response(r: &GenResponse) -> String {
+    Json::obj(vec![
+        ("id", Json::str(r.id.clone())),
+        ("ok", Json::Bool(true)),
+        ("text", Json::str(r.text.clone())),
+        ("tokens",
+         Json::arr(r.tokens.iter().map(|&t| Json::num(t as f64)))),
+        ("tpf", Json::num(r.tpf)),
+        ("forwards", Json::num(r.forwards as f64)),
+        ("gen_tokens", Json::num(r.gen_tokens as f64)),
+        ("queue_ms", Json::num(r.queue_ms)),
+        ("decode_ms", Json::num(r.decode_ms)),
+    ])
+    .to_string()
+}
+
+pub fn err_response(id: &str, msg: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_generate() {
+        let r = parse_request(
+            r#"{"id":"a","prompt":"Q EVAL 1 + 2","gen_len":96,"priority":2}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Generate(g) => {
+                assert_eq!(g.id, "a");
+                assert_eq!(g.gen_len, Some(96));
+                assert_eq!(g.priority, 2);
+                assert!(g.strategy.is_none());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_cmds() {
+        assert!(matches!(parse_request(r#"{"cmd":"stats"}"#).unwrap(),
+                         Request::Stats));
+        assert!(matches!(parse_request(r#"{"cmd":"shutdown"}"#).unwrap(),
+                         Request::Shutdown));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"prompt":"x"}"#).is_err()); // no id
+        assert!(parse_request(r#"{"cmd":"nope"}"#).is_err());
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let resp = GenResponse {
+            id: "r".into(),
+            text: "ANS 7".into(),
+            tokens: vec![1, 2],
+            tpf: 3.5,
+            forwards: 4,
+            gen_tokens: 14,
+            queue_ms: 0.4,
+            decode_ms: 9.0,
+        };
+        let line = ok_response(&resp);
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("tpf").unwrap().as_f64(), Some(3.5));
+        let e = err_response("x", "boom");
+        let j = json::parse(&e).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+    }
+}

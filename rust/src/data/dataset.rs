@@ -1,0 +1,95 @@
+//! Corpus assembly: distillation corpora and held-out eval sets.
+//!
+//! Mirrors the paper's setup (§4.1): the distillation corpus is math-heavy
+//! with a code slice (PRM12K + GSM8K + Numina + AceCode analog); the coder
+//! corpus is code-only; eval sets are held out by seed-space separation
+//! (generator seeds for eval sets never overlap the train stream).
+
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+use super::tasks::{generate, Family, Sample};
+
+/// Seed offsets guaranteeing train/eval separation.
+const TRAIN_STREAM: u64 = 0x7261_494E;
+const EVAL_STREAM: u64 = 0xE7A1_0000;
+
+/// The standard distillation mixture (Gsm8k-heavy, math + code slices).
+pub fn main_mixture() -> Vec<(Family, f64)> {
+    vec![
+        (Family::Gsm8k, 0.40),
+        (Family::Math, 0.30),
+        (Family::HumanEval, 0.15),
+        (Family::Mbpp, 0.15),
+    ]
+}
+
+/// Code-only mixture for the coder family (Dream-Coder analog).
+pub fn coder_mixture() -> Vec<(Family, f64)> {
+    vec![(Family::CoderHumanEval, 0.5), (Family::CoderMbpp, 0.5)]
+}
+
+/// Draw `n` training samples from a mixture.
+pub fn train_corpus(tk: &Tokenizer, mixture: &[(Family, f64)], n: usize,
+                    seed: u64) -> Vec<Sample> {
+    let mut rng = Rng::new(seed ^ TRAIN_STREAM);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut r = rng.f64();
+        let mut fam = mixture[0].0;
+        for &(f, w) in mixture {
+            if r < w {
+                fam = f;
+                break;
+            }
+            r -= w;
+        }
+        out.push(generate(tk, fam, &mut rng));
+    }
+    out
+}
+
+/// Held-out eval set for one family.
+pub fn eval_set(tk: &Tokenizer, family: Family, n: usize, seed: u64)
+                -> Vec<Sample> {
+    let mut rng = Rng::new(seed ^ EVAL_STREAM ^ (family as u64) << 32);
+    (0..n).map(|_| generate(tk, family, &mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_respects_mixture_roughly() {
+        let tk = Tokenizer::new(128).unwrap();
+        let corpus = train_corpus(&tk, &main_mixture(), 2000, 1);
+        let gsm = corpus.iter().filter(|s| s.family == Family::Gsm8k).count();
+        let frac = gsm as f64 / 2000.0;
+        assert!((0.33..0.47).contains(&frac), "gsm frac {frac}");
+    }
+
+    #[test]
+    fn eval_train_disjoint_streams() {
+        let tk = Tokenizer::new(128).unwrap();
+        let train = train_corpus(&tk, &[(Family::Gsm8k, 1.0)], 50, 7);
+        let eval = eval_set(&tk, Family::Gsm8k, 50, 7);
+        // prompts should not collide (probabilistic but deterministic here)
+        let overlap = eval
+            .iter()
+            .filter(|e| train.iter().any(|t| t.prompt == e.prompt))
+            .count();
+        assert!(overlap <= 2, "{overlap} overlapping prompts");
+    }
+
+    #[test]
+    fn eval_set_deterministic() {
+        let tk = Tokenizer::new(128).unwrap();
+        let a = eval_set(&tk, Family::Math, 10, 3);
+        let b = eval_set(&tk, Family::Math, 10, 3);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+}

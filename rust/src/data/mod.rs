@@ -1,0 +1,7 @@
+//! Synthetic workloads: task families, corpora, eval sets.
+
+pub mod dataset;
+pub mod tasks;
+
+pub use dataset::{coder_mixture, eval_set, main_mixture, train_corpus};
+pub use tasks::{check, full_sequence, generate, Answer, Family, Sample};

@@ -1,0 +1,469 @@
+//! Synthetic task families — the benchmark-analog workloads (DESIGN.md §1).
+//!
+//! Each family mirrors the *shape* of its paper counterpart: a prompt, a
+//! chain-of-thought response whose token-level structure makes decoding
+//! order meaningful (so pseudo-trajectory distillation has signal), and an
+//! exactly-checkable answer (so accuracy is measurable):
+//!
+//!   * Gsm8k      — left-to-right CoT arithmetic, small operands
+//!   * Math       — longer chains, MOD/larger values (harder)
+//!   * HumanEval  — per-element list transformation with STEP lines
+//!   * Mbpp       — list programs: REV / SORT / FILTER with YES/NO steps
+//!   * LongGsm8k  — 5-shot Gsm8k (long prompt, eval-only)
+//!   * Coder*     — HumanEval/Mbpp restricted to the coder teacher's
+//!                  domain; "+" variants additionally verify STEP lines
+//!                  (the stricter extended test sets of HumanEval+/MBPP+).
+
+use anyhow::Result;
+
+use crate::tokenizer::{Tokenizer, EOS, SEP};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    Gsm8k,
+    Math,
+    HumanEval,
+    Mbpp,
+    LongGsm8k,
+    CoderHumanEval,
+    CoderMbpp,
+}
+
+impl Family {
+    pub fn all_eval() -> &'static [Family] {
+        &[Family::Gsm8k, Family::Math, Family::HumanEval, Family::Mbpp,
+          Family::LongGsm8k]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Gsm8k => "gsm8k",
+            Family::Math => "math",
+            Family::HumanEval => "humaneval",
+            Family::Mbpp => "mbpp",
+            Family::LongGsm8k => "long-gsm8k",
+            Family::CoderHumanEval => "coder-humaneval",
+            Family::CoderMbpp => "coder-mbpp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Family> {
+        Some(match s {
+            "gsm8k" => Family::Gsm8k,
+            "math" => Family::Math,
+            "humaneval" => Family::HumanEval,
+            "mbpp" => Family::Mbpp,
+            "long-gsm8k" => Family::LongGsm8k,
+            "coder-humaneval" => Family::CoderHumanEval,
+            "coder-mbpp" => Family::CoderMbpp,
+            _ => return None,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Answer {
+    Num(i64),
+    List(Vec<i64>),
+}
+
+/// One generated task instance.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub family: Family,
+    pub prompt: Vec<i32>,
+    /// Ground-truth response (ends with EOS).
+    pub response: Vec<i32>,
+    pub answer: Answer,
+    /// Expected STEP intermediate values ("+" checkers verify these).
+    pub steps: Vec<i64>,
+}
+
+// ------------------------------------------------------------- arithmetic
+
+struct ArithSpec {
+    n_ops: (usize, usize),
+    operand: (i64, i64),
+    use_mod: bool,
+    /// clamp every intermediate result to [lo, hi]: the tasks probe
+    /// decoding order and parallelism, not model arithmetic capacity
+    /// (the paper's 7-8B models vs our 0.4M — see DESIGN.md §1)
+    result: (i64, i64),
+}
+
+fn gen_arith(tk: &Tokenizer, rng: &mut Rng, spec: &ArithSpec,
+             family: Family) -> Sample {
+    let n_ops = rng.range(spec.n_ops.0 as i64, spec.n_ops.1 as i64 + 1) as usize;
+    let mut cur = rng.range(spec.operand.0, spec.operand.1 + 1);
+    let mut prompt = tk.encode("Q EVAL").unwrap();
+    tk.push_number(&mut prompt, cur);
+
+    let mut steps = Vec::new();
+    let mut resp: Vec<i32> = Vec::new();
+    for _ in 0..n_ops {
+        let in_range = |v: i64| v >= spec.result.0 && v <= spec.result.1;
+        // rejection-sample an (op, x) keeping the chain inside the result
+        // range; x = 0 with "-" is the always-valid fallback
+        let mut op = "-";
+        let mut x = 0i64;
+        for _ in 0..16 {
+            let cand = rng.range(spec.operand.0.max(0), spec.operand.1 + 1);
+            let mut ops = Vec::new();
+            if in_range(cur + cand) {
+                ops.push("+");
+            }
+            if in_range(cur - cand) {
+                ops.push("-");
+            }
+            if cand != 0 && in_range(cur * cand) {
+                ops.push("*");
+            }
+            if spec.use_mod && cand > 1 {
+                ops.push("%");
+            }
+            if !ops.is_empty() {
+                op = *rng.choice(&ops);
+                x = cand;
+                break;
+            }
+        }
+        let next = match op {
+            "+" => cur + x,
+            "-" => cur - x,
+            "*" => cur * x,
+            _ => cur.rem_euclid(x),
+        };
+        prompt.extend(tk.encode(op).unwrap());
+        tk.push_number(&mut prompt, x);
+
+        resp.extend(tk.encode("STEP").unwrap());
+        tk.push_number(&mut resp, cur);
+        resp.extend(tk.encode(op).unwrap());
+        tk.push_number(&mut resp, x);
+        resp.extend(tk.encode("=").unwrap());
+        tk.push_number(&mut resp, next);
+        resp.extend(tk.encode(";").unwrap());
+        steps.push(next);
+        cur = next;
+    }
+    resp.extend(tk.encode("ANS").unwrap());
+    tk.push_number(&mut resp, cur);
+    resp.push(EOS);
+    Sample { family, prompt, response: resp, answer: Answer::Num(cur), steps }
+}
+
+// ------------------------------------------------------------- list tasks
+
+fn push_list(tk: &Tokenizer, out: &mut Vec<i32>, xs: &[i64]) {
+    out.extend(tk.encode("[").unwrap());
+    for (i, &x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.extend(tk.encode(",").unwrap());
+        }
+        tk.push_number(out, x);
+    }
+    out.extend(tk.encode("]").unwrap());
+}
+
+/// MAP-style per-element transform with STEP lines (HumanEval analog).
+fn gen_map(tk: &Tokenizer, rng: &mut Rng, family: Family) -> Sample {
+    let n = rng.range(3, 6) as usize;
+    let xs: Vec<i64> = (0..n).map(|_| rng.range(0, 10)).collect();
+    let (opname, k, f): (&str, i64, fn(i64, i64) -> i64) =
+        match rng.usize(4) {
+            0 => ("ADD", rng.range(1, 4), |x, k| x + k),
+            1 => ("SUB", rng.range(1, 4), |x, k| x - k),
+            2 => ("MUL", 2, |x, k| x * k),
+            _ => ("INC", 1, |x, _| x + 1),
+        };
+    let mut prompt = tk.encode("PROG MAP").unwrap();
+    prompt.extend(tk.encode(opname).unwrap());
+    if opname != "INC" {
+        tk.push_number(&mut prompt, k);
+    }
+    push_list(tk, &mut prompt, &xs);
+
+    let ys: Vec<i64> = xs.iter().map(|&x| f(x, k)).collect();
+    let mut resp = Vec::new();
+    for (&x, &y) in xs.iter().zip(&ys) {
+        resp.extend(tk.encode("STEP").unwrap());
+        tk.push_number(&mut resp, x);
+        resp.extend(tk.encode("->").unwrap());
+        tk.push_number(&mut resp, y);
+        resp.extend(tk.encode(";").unwrap());
+    }
+    resp.extend(tk.encode("OUT").unwrap());
+    push_list(tk, &mut resp, &ys);
+    resp.push(EOS);
+    Sample {
+        family,
+        prompt,
+        response: resp,
+        answer: Answer::List(ys.clone()),
+        steps: ys,
+    }
+}
+
+/// REV / SORT / FILTER list programs (MBPP analog).
+fn gen_listprog(tk: &Tokenizer, rng: &mut Rng, family: Family) -> Sample {
+    let n = rng.range(3, 7) as usize;
+    let xs: Vec<i64> = (0..n).map(|_| rng.range(0, 20)).collect();
+    let kind = rng.usize(3);
+    let mut prompt = tk.encode("PROG").unwrap();
+    let (ys, steps): (Vec<i64>, Vec<i64>) = match kind {
+        0 => {
+            prompt.extend(tk.encode("REV").unwrap());
+            let mut ys = xs.clone();
+            ys.reverse();
+            (ys, vec![])
+        }
+        1 => {
+            prompt.extend(tk.encode("SORT").unwrap());
+            let mut ys = xs.clone();
+            ys.sort();
+            (ys, vec![])
+        }
+        _ => {
+            let keep_odd = rng.bool(0.5);
+            prompt.extend(
+                tk.encode(if keep_odd { "FILTER ODD" } else { "FILTER EVEN" })
+                    .unwrap(),
+            );
+            let ys: Vec<i64> = xs
+                .iter()
+                .copied()
+                .filter(|x| (x % 2 != 0) == keep_odd)
+                .collect();
+            let marks: Vec<i64> = xs
+                .iter()
+                .map(|x| ((x % 2 != 0) == keep_odd) as i64)
+                .collect();
+            (ys, marks)
+        }
+    };
+    push_list(tk, &mut prompt, &xs);
+
+    let mut resp = Vec::new();
+    if kind == 2 {
+        for (&x, &m) in xs.iter().zip(&steps) {
+            resp.extend(tk.encode("STEP").unwrap());
+            tk.push_number(&mut resp, x);
+            resp.extend(tk.encode(if m == 1 { "YES" } else { "NO" }).unwrap());
+            resp.extend(tk.encode(";").unwrap());
+        }
+    }
+    resp.extend(tk.encode("OUT").unwrap());
+    push_list(tk, &mut resp, &ys);
+    resp.push(EOS);
+    Sample { family, prompt, response: resp, answer: Answer::List(ys), steps }
+}
+
+// ------------------------------------------------------------- generation
+
+/// Generate one sample of a family.
+pub fn generate(tk: &Tokenizer, family: Family, rng: &mut Rng) -> Sample {
+    match family {
+        Family::Gsm8k => gen_arith(
+            tk, rng,
+            &ArithSpec { n_ops: (2, 3), operand: (0, 9), use_mod: false,
+                         result: (0, 12) },
+            family),
+        Family::Math => gen_arith(
+            tk, rng,
+            &ArithSpec { n_ops: (3, 5), operand: (0, 12), use_mod: true,
+                         result: (-9, 20) },
+            family),
+        Family::HumanEval | Family::CoderHumanEval => gen_map(tk, rng, family),
+        Family::Mbpp | Family::CoderMbpp => gen_listprog(tk, rng, family),
+        Family::LongGsm8k => {
+            // 5-shot: exemplars (prompt + full CoT answer + SEP) x5, then
+            // the actual question.
+            let mut prompt = Vec::new();
+            for _ in 0..5 {
+                let ex = gen_arith(
+                    tk, rng,
+                    &ArithSpec { n_ops: (2, 3), operand: (0, 9),
+                                 use_mod: false, result: (0, 12) },
+                    Family::Gsm8k);
+                prompt.extend(&ex.prompt);
+                prompt.extend(tk.encode("A").unwrap());
+                prompt.extend(&ex.response[..ex.response.len() - 1]); // no EOS
+                prompt.push(SEP);
+            }
+            let q = gen_arith(
+                tk, rng,
+                &ArithSpec { n_ops: (2, 3), operand: (0, 9),
+                             use_mod: false, result: (0, 12) },
+                Family::LongGsm8k);
+            prompt.extend(&q.prompt);
+            prompt.extend(tk.encode("A").unwrap());
+            Sample { prompt, ..q }
+        }
+    }
+}
+
+// --------------------------------------------------------------- checking
+
+/// Verify a generated output (token ids of the generation region).
+/// `strict` additionally verifies the STEP intermediate values — the
+/// HumanEval+/MBPP+ analog.
+pub fn check(tk: &Tokenizer, sample: &Sample, output: &[i32],
+             strict: bool) -> bool {
+    let ok = match &sample.answer {
+        Answer::Num(n) => tk.extract_answer(output) == Some(*n),
+        Answer::List(xs) => {
+            tk.extract_out_list(output).as_deref() == Some(xs.as_slice())
+        }
+    };
+    if !ok || !strict {
+        return ok;
+    }
+    // strict: every expected STEP value must appear in order
+    let step_id = match tk.id("STEP") {
+        Ok(id) => id,
+        Err(_) => return false,
+    };
+    let mut found = Vec::new();
+    let mut i = 0;
+    while i < output.len() {
+        if output[i] == EOS {
+            break;
+        }
+        if output[i] == step_id {
+            // last number before the next `;` is the step value
+            let semi = tk.id(";").unwrap();
+            let mut j = i + 1;
+            let mut last = None;
+            while j < output.len() && output[j] != semi && output[j] != EOS {
+                if let Some((v, next)) = tk.parse_number(output, j) {
+                    last = Some(v);
+                    j = next;
+                } else {
+                    j += 1;
+                }
+            }
+            if let Some(v) = last {
+                found.push(v);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    // For FILTER tasks steps are YES/NO marks, not numbers; strict mode
+    // then only checks the final list (already done above).
+    if sample.steps.is_empty()
+        || matches!(sample.family, Family::Mbpp | Family::CoderMbpp)
+    {
+        return true;
+    }
+    found == sample.steps
+}
+
+/// Render the full training sequence: prompt ++ response.
+pub fn full_sequence(sample: &Sample) -> Vec<i32> {
+    let mut seq = sample.prompt.clone();
+    seq.extend(&sample.response);
+    seq
+}
+
+pub fn to_text(tk: &Tokenizer, sample: &Sample) -> Result<String> {
+    Ok(format!("{} | {}", tk.decode(&sample.prompt),
+               tk.decode(&sample.response)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tk() -> Tokenizer {
+        Tokenizer::new(128).unwrap()
+    }
+
+    #[test]
+    fn ground_truth_passes_its_own_checker() {
+        let tk = tk();
+        let mut rng = Rng::new(1);
+        for &fam in &[Family::Gsm8k, Family::Math, Family::HumanEval,
+                      Family::Mbpp, Family::LongGsm8k,
+                      Family::CoderHumanEval, Family::CoderMbpp] {
+            for _ in 0..200 {
+                let s = generate(&tk, fam, &mut rng);
+                assert!(check(&tk, &s, &s.response, false),
+                        "{fam:?}: {}", to_text(&tk, &s).unwrap());
+                assert!(check(&tk, &s, &s.response, true),
+                        "strict {fam:?}: {}", to_text(&tk, &s).unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_answer_fails_checker() {
+        let tk = tk();
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let s = generate(&tk, Family::Gsm8k, &mut rng);
+            let mut bad = s.response.clone();
+            // corrupt the final answer digit
+            let n = bad.len();
+            let pos = n - 2; // last token before EOS is a digit
+            bad[pos] = if bad[pos] == 5 { 6 } else { 5 };
+            assert!(!check(&tk, &s, &bad, false));
+        }
+    }
+
+    #[test]
+    fn strict_catches_bad_steps() {
+        let tk = tk();
+        let mut rng = Rng::new(3);
+        let mut tried = 0;
+        for _ in 0..100 {
+            let s = generate(&tk, Family::CoderHumanEval, &mut rng);
+            // corrupt a STEP result but keep OUT list correct
+            let arrow = tk.id("->").unwrap();
+            let mut bad = s.response.clone();
+            if let Some(pos) = bad.iter().position(|&t| t == arrow) {
+                // digit after the arrow
+                let d = bad[pos + 1];
+                bad[pos + 1] = if d == 5 { 6 } else { 5 };
+                // only counts when value actually changed numerically
+                if check(&tk, &s, &bad, false) {
+                    tried += 1;
+                    assert!(!check(&tk, &s, &bad, true));
+                }
+            }
+        }
+        assert!(tried > 10);
+    }
+
+    #[test]
+    fn sequence_lengths_fit_training_budget() {
+        let tk = tk();
+        let mut rng = Rng::new(4);
+        for &fam in &[Family::Gsm8k, Family::Math, Family::HumanEval,
+                      Family::Mbpp] {
+            for _ in 0..500 {
+                let s = generate(&tk, fam, &mut rng);
+                assert!(s.prompt.len() <= 96,
+                        "{fam:?} prompt {}", s.prompt.len());
+                assert!(s.response.len() <= 96,
+                        "{fam:?} resp {}", s.response.len());
+            }
+        }
+        // long variant must still fit serving capacity
+        for _ in 0..100 {
+            let s = generate(&tk, Family::LongGsm8k, &mut rng);
+            assert!(s.prompt.len() <= 256, "long prompt {}", s.prompt.len());
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let tk = tk();
+        let a = generate(&tk, Family::Math, &mut Rng::new(9));
+        let b = generate(&tk, Family::Math, &mut Rng::new(9));
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.response, b.response);
+    }
+}

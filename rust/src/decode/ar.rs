@@ -1,0 +1,65 @@
+//! Autoregressive baseline (Qwen-2.5 analog): greedy decoding with an
+//! exact KV cache, one token per forward — the TPF = 1 reference point for
+//! the paper's speedup ratios.
+
+use anyhow::Result;
+
+use crate::model::{exec, KvCache};
+use crate::runtime::Engine;
+use crate::tokenizer::EOS;
+
+use super::GenResult;
+
+/// Greedy AR decode. `prefix` selects the model family: "" for the main
+/// AR checkpoint, "draft_" for the draft model.
+pub fn decode_ar_with(eng: &Engine, prefix: &str, params: &[f32],
+                      prompt: &[i32], gen_len: usize) -> Result<GenResult> {
+    let c = eng.manifest.constants.clone();
+    let model_name = if prefix.is_empty() { "main" } else { "draft" };
+    let spec = eng.manifest.model(model_name)?.clone();
+    let prefill_exec = format!("{prefix}ar_prefill");
+    let step_exec = format!("{prefix}ar_step");
+    assert!(prompt.len() + gen_len <= c.s_max);
+
+    let mut res = GenResult::default();
+    let mut cache = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
+
+    // Exact prefix cache for prompt rows 0..p-2; the last prompt token is
+    // fed through the first ar_step so its row is computed exactly once.
+    let p = prompt.len();
+    let mut tokens = vec![0i32; c.s_max];
+    tokens[..p].copy_from_slice(prompt);
+    let valid: Vec<f32> =
+        (0..c.s_max).map(|i| if i < p { 1.0 } else { 0.0 }).collect();
+    let pre = exec::prefill(eng, &prefill_exec, params, &tokens, &valid)?;
+    cache.install_full(&pre.kcache, &pre.vcache, 0, p - 1);
+
+    let mut generated = Vec::with_capacity(gen_len);
+    let mut cur_tok = prompt[p - 1];
+    let mut cur_pos = p - 1;
+    for _ in 0..gen_len {
+        let out = exec::decode_window(eng, &step_exec, params, &[cur_tok],
+                                      &[cur_pos as i32], &[1.0], &cache)?;
+        res.forwards += 1;
+        res.mix.ar_steps += 1;
+        // freeze the exact KV row of the token just consumed
+        cache.commit_window_rows(&out.k_win, &out.v_win, 1, &[(0, cur_pos)]);
+        let next = out.argmax[0];
+        generated.push(next);
+        if next == EOS {
+            break;
+        }
+        cur_pos += 1;
+        cur_tok = next;
+    }
+
+    res.unmasked = generated.len();
+    res.tokens = generated;
+    res.mix.gen_tokens = res.unmasked;
+    Ok(res)
+}
+
+pub fn decode_ar(eng: &Engine, params: &[f32], prompt: &[i32],
+                 gen_len: usize) -> Result<GenResult> {
+    decode_ar_with(eng, "", params, prompt, gen_len)
+}

@@ -1,0 +1,274 @@
+//! Decode strategies (paper §3.2 + every contender of §4.1).
+//!
+//! All strategies run against the same AOT executables and the same
+//! `SeqState`; they differ only in *which* forward they issue per round and
+//! *which* masked positions they unmask from its statistics:
+//!
+//!   * `Ar`        — autoregressive baseline, exact KV cache (Qwen analog)
+//!   * `Vanilla`   — full no-cache forward, 1 token/step (LLaDA/Dream)
+//!   * `FastDllm`  — single-block confidence-threshold parallel decoding
+//!                   over the block-approximate cache (Fast-dLLM)
+//!   * `DParallel` — FastDllm mechanics; pair with a distilled checkpoint
+//!   * `D2f`       — multi-block, confidence threshold, no refresh (D2F)
+//!   * `D3llm`     — entropy-based multi-block with the 5-state block
+//!                   machine, KV-refresh, early stop (the paper's method)
+//!   * `Spec`      — draft-model speculative decoding (EAGLE-3 analog)
+
+pub mod ar;
+pub mod multi_block;
+pub mod seq_state;
+pub mod session;
+pub mod single_block;
+pub mod spec;
+
+use anyhow::Result;
+
+pub use seq_state::SeqState;
+pub use session::DecodeSession;
+
+use crate::metrics::ForwardMix;
+use crate::runtime::Engine;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    Ar,
+    Vanilla,
+    FastDllm,
+    DParallel,
+    D2f,
+    D3llm,
+    Spec,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Ar => "ar",
+            Strategy::Vanilla => "vanilla",
+            Strategy::FastDllm => "fast-dllm",
+            Strategy::DParallel => "dparallel",
+            Strategy::D2f => "d2f",
+            Strategy::D3llm => "d3llm",
+            Strategy::Spec => "spec",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        Some(match s {
+            "ar" => Strategy::Ar,
+            "vanilla" => Strategy::Vanilla,
+            "fast-dllm" => Strategy::FastDllm,
+            "dparallel" => Strategy::DParallel,
+            "d2f" => Strategy::D2f,
+            "d3llm" => Strategy::D3llm,
+            "spec" => Strategy::Spec,
+            _ => return None,
+        })
+    }
+}
+
+/// Token-selection rule applied to head statistics.
+#[derive(Debug, Clone, Copy)]
+pub enum SelMetric {
+    /// Unmask positions with confidence >= threshold.
+    Conf(f32),
+    /// Unmask positions with entropy <= threshold (paper's rule).
+    Entropy(f32),
+}
+
+impl SelMetric {
+    #[inline]
+    pub fn selects(&self, conf: f32, entropy: f32) -> bool {
+        match self {
+            SelMetric::Conf(t) => conf >= *t,
+            SelMetric::Entropy(t) => entropy <= *t,
+        }
+    }
+
+    /// Score for "most confident" fallback ordering (higher = better).
+    #[inline]
+    pub fn score(&self, conf: f32, entropy: f32) -> f32 {
+        match self {
+            SelMetric::Conf(_) => conf,
+            SelMetric::Entropy(_) => -entropy,
+        }
+    }
+}
+
+/// Full decode configuration; presets below give each contender its
+/// paper-default knobs, benches sweep the thresholds for AUP curves.
+#[derive(Debug, Clone)]
+pub struct DecodeCfg {
+    pub strategy: Strategy,
+    pub metric: SelMetric,
+    /// block-add threshold (paper: 0.1)
+    pub block_add: f64,
+    /// fully-activated threshold (paper: 0.95)
+    pub fully_at: f64,
+    /// stabilizing rounds after a block completes (paper: 1-2)
+    pub stabilize_rounds: usize,
+    /// periodic KV refresh every N rounds (0 = off)
+    pub refresh_every: usize,
+    pub early_stop: bool,
+    /// single-block strategies: whether to use the KV cache
+    pub use_cache: bool,
+    /// speculative decoding: draft proposals per verify round
+    pub gamma: usize,
+    /// executable variant for the dLLM hot path ("xla" | "pallas")
+    pub variant: String,
+}
+
+impl DecodeCfg {
+    pub fn preset(strategy: Strategy) -> DecodeCfg {
+        let base = DecodeCfg {
+            strategy,
+            metric: SelMetric::Conf(0.85),
+            block_add: 0.1,
+            fully_at: 0.95,
+            stabilize_rounds: 0,
+            refresh_every: 0,
+            early_stop: true,
+            use_cache: true,
+            gamma: 7,
+            variant: "xla".to_string(),
+        };
+        match strategy {
+            Strategy::Ar | Strategy::Spec => base,
+            Strategy::Vanilla => DecodeCfg {
+                metric: SelMetric::Conf(2.0), // unreachable => 1 token/step
+                early_stop: false,
+                use_cache: false,
+                ..base
+            },
+            Strategy::FastDllm | Strategy::DParallel => base,
+            Strategy::D2f => DecodeCfg {
+                metric: SelMetric::Conf(0.85),
+                ..base
+            },
+            Strategy::D3llm => DecodeCfg {
+                metric: SelMetric::Entropy(0.45), // paper: 0.4-0.5
+                stabilize_rounds: 1,
+                refresh_every: 8,
+                ..base
+            },
+        }
+    }
+
+    /// Set the sweep knob (confidence or entropy threshold, per metric).
+    pub fn with_threshold(mut self, t: f32) -> DecodeCfg {
+        self.metric = match self.metric {
+            SelMetric::Conf(_) => SelMetric::Conf(t),
+            SelMetric::Entropy(_) => SelMetric::Entropy(t),
+        };
+        self
+    }
+}
+
+/// Outcome of decoding one request.
+#[derive(Debug, Clone, Default)]
+pub struct GenResult {
+    /// Generated tokens up to & including EOS.
+    pub tokens: Vec<i32>,
+    /// Positions decoded during the run (TPF numerator, the paper's
+    /// convention: tokens generated per forward, EOS truncation aside).
+    pub unmasked: usize,
+    /// Target-model decode forwards (TPF denominator).
+    pub forwards: usize,
+    pub draft_forwards: usize,
+    /// Forward mix for the GPU cost model.
+    pub mix: ForwardMix,
+    pub wall_secs: f64,
+    /// Decode rounds (multi-block scheduling iterations).
+    pub rounds: usize,
+}
+
+impl GenResult {
+    pub fn tpf(&self) -> f64 {
+        if self.forwards == 0 {
+            0.0
+        } else {
+            self.unmasked as f64 / self.forwards as f64
+        }
+    }
+}
+
+/// Decode one request with the configured strategy.
+///
+/// `params` is the target checkpoint; `draft_params` is only used by
+/// `Strategy::Spec`.
+pub fn generate(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
+                draft_params: Option<&[f32]>, prompt: &[i32],
+                gen_len: usize) -> Result<GenResult> {
+    let t0 = std::time::Instant::now();
+    let mut result = match cfg.strategy {
+        Strategy::Ar => ar::decode_ar(eng, params, prompt, gen_len)?,
+        Strategy::Spec => spec::decode_spec(
+            eng,
+            params,
+            draft_params.ok_or_else(|| {
+                anyhow::anyhow!("spec decoding needs --draft checkpoint")
+            })?,
+            prompt,
+            gen_len,
+            cfg.gamma,
+        )?,
+        Strategy::Vanilla | Strategy::FastDllm | Strategy::DParallel => {
+            single_block::decode_single_block(eng, cfg, params, prompt,
+                                              gen_len)?
+        }
+        Strategy::D2f | Strategy::D3llm => {
+            multi_block::decode_multi_block(eng, cfg, params, prompt,
+                                            gen_len)?
+        }
+    };
+    result.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(result)
+}
+
+/// Executable names for a hot-path variant.
+pub fn exec_names(variant: &str) -> (String, String) {
+    (format!("prefill_{variant}"), format!("decode_{variant}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_defaults() {
+        let d3 = DecodeCfg::preset(Strategy::D3llm);
+        assert!(matches!(d3.metric, SelMetric::Entropy(_)));
+        assert!(d3.stabilize_rounds >= 1);
+        assert!(d3.refresh_every > 0);
+        assert!(d3.early_stop);
+        assert!((d3.block_add - 0.1).abs() < 1e-9);
+        assert!((d3.fully_at - 0.95).abs() < 1e-9);
+
+        let v = DecodeCfg::preset(Strategy::Vanilla);
+        assert!(!v.use_cache);
+        assert!(!v.early_stop);
+
+        let d2f = DecodeCfg::preset(Strategy::D2f);
+        assert_eq!(d2f.stabilize_rounds, 0);
+        assert_eq!(d2f.refresh_every, 0);
+    }
+
+    #[test]
+    fn metric_selection() {
+        let c = SelMetric::Conf(0.9);
+        assert!(c.selects(0.95, 1.0));
+        assert!(!c.selects(0.85, 0.0));
+        let e = SelMetric::Entropy(0.5);
+        assert!(e.selects(0.1, 0.4));
+        assert!(!e.selects(0.99, 0.6));
+    }
+
+    #[test]
+    fn threshold_override() {
+        let cfg = DecodeCfg::preset(Strategy::D3llm).with_threshold(0.8);
+        match cfg.metric {
+            SelMetric::Entropy(t) => assert!((t - 0.8).abs() < 1e-6),
+            _ => panic!("metric kind must be preserved"),
+        }
+    }
+}

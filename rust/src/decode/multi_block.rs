@@ -1,0 +1,149 @@
+//! Entropy-based multi-block decoding with the 5-state block machine and
+//! the KV-cache refresh mechanism (paper §3.2). Also covers D2F
+//! (confidence metric, no stabilizing, no refresh) via configuration.
+//!
+//! Block lifecycle:
+//!   Inactive -> Activated            predecessor >= block_add (10%)
+//!   Activated -> FullyActivated      predecessor >= fully_at (95%)
+//!   (any active, fully unmasked) -> Stabilizing(stabilize_rounds)
+//!   Stabilizing(0) -> Completed      rows frozen into the cache
+//!
+//! While any block is Stabilizing — and every `refresh_every`-th round —
+//! the round's forward is a full no-cache forward whose KV output also
+//! *refreshes every previously cached row* (the KV-refresh mechanism).
+//! Otherwise the round is a windowed forward over the active span against
+//! the approximate cache.
+//!
+//! The round mechanics live in `DecodeSession` (decode/session.rs) so the
+//! coordinator can interleave several requests; this module holds the
+//! block state machine, the selection rule, and the one-request driver.
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+use crate::tokenizer::MASK;
+
+use super::session::DecodeSession;
+use super::{DecodeCfg, GenResult, SeqState};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BlockState {
+    Inactive,
+    Activated,
+    FullyActivated,
+    /// Completed but stabilizing: n full-forward rounds remain before the
+    /// block's KV rows are frozen.
+    Stabilizing(usize),
+    Completed,
+}
+
+impl BlockState {
+    pub fn is_active(&self) -> bool {
+        matches!(self, BlockState::Activated | BlockState::FullyActivated)
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self, BlockState::Stabilizing(_) | BlockState::Completed)
+    }
+}
+
+/// Head statistics for one round, from either a windowed forward
+/// (positions w_lo..w_hi map to slice offsets) or a full forward
+/// (absolute indexing).
+pub struct RoundStatsOwned {
+    pub argmax: Vec<i32>,
+    pub conf: Vec<f32>,
+    pub entropy: Vec<f32>,
+    pub w_lo: usize,
+    pub w_hi: usize,
+    pub absolute: bool,
+}
+
+impl RoundStatsOwned {
+    #[inline]
+    pub fn index(&self, p: usize) -> Option<usize> {
+        if self.absolute {
+            (p < self.argmax.len()).then_some(p)
+        } else {
+            (p >= self.w_lo && p < self.w_hi).then(|| p - self.w_lo)
+        }
+    }
+}
+
+/// One-request driver over the resumable session.
+pub fn decode_multi_block(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
+                          prompt: &[i32], gen_len: usize)
+                          -> Result<GenResult> {
+    let mut session = DecodeSession::new(eng, cfg.clone(), prompt, gen_len)?;
+    while !session.step(eng, params)? {}
+    Ok(session.finish())
+}
+
+/// Apply one round of threshold selection. Active blocks decode
+/// conservatively (threshold only); FullyActivated blocks decode at least
+/// one token per forward. Returns blocks that became fully unmasked.
+pub fn unmask_round(cfg: &DecodeCfg, st: &mut SeqState,
+                    states: &mut [BlockState], stats: &RoundStatsOwned,
+                    restrict: Option<(usize, usize)>) -> Vec<usize> {
+    let nb = st.n_blocks();
+    let (b_lo, b_hi) = restrict.unwrap_or((0, nb));
+    let mut newly_complete = Vec::new();
+    let mut any_selected = false;
+    let mut global_best: Option<(usize, f32)> = None;
+
+    let mut to_unmask: Vec<(usize, i32)> = Vec::new();
+    for b in b_lo..b_hi.min(nb) {
+        if !states[b].is_active() {
+            continue;
+        }
+        let (lo, hi) = st.block_range(b);
+        let mut block_best: Option<(usize, f32)> = None;
+        let mut block_selected = false;
+        for p in lo..hi {
+            if st.tokens[p] != MASK {
+                continue;
+            }
+            let Some(i) = stats.index(p) else { continue };
+            let (cf, en) = (stats.conf[i], stats.entropy[i]);
+            let sc = cfg.metric.score(cf, en);
+            if block_best.map(|(_, s)| sc > s).unwrap_or(true) {
+                block_best = Some((p, sc));
+            }
+            if global_best.map(|(_, s)| sc > s).unwrap_or(true) {
+                global_best = Some((p, sc));
+            }
+            if cfg.metric.selects(cf, en) {
+                to_unmask.push((p, stats.argmax[i]));
+                block_selected = true;
+                any_selected = true;
+            }
+        }
+        // aggressive mode: FullyActivated decodes >=1 token per forward
+        if !block_selected && states[b] == BlockState::FullyActivated {
+            if let Some((p, _)) = block_best {
+                let i = stats.index(p).unwrap();
+                to_unmask.push((p, stats.argmax[i]));
+                any_selected = true;
+            }
+        }
+    }
+    // global progress guarantee: never waste a forward entirely
+    if !any_selected {
+        if let Some((p, _)) = global_best {
+            let i = stats.index(p).unwrap();
+            to_unmask.push((p, stats.argmax[i]));
+        }
+    }
+    for (p, t) in to_unmask {
+        st.tokens[p] = t;
+    }
+    for b in 0..nb {
+        if states[b].is_active() && st.block_complete(b) {
+            newly_complete.push(b);
+            if cfg.stabilize_rounds > 0 {
+                states[b] = BlockState::Stabilizing(cfg.stabilize_rounds);
+            }
+        }
+    }
+    newly_complete
+}

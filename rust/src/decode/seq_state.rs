@@ -1,0 +1,189 @@
+//! Per-request sequence state shared by every decode strategy: prompt +
+//! generation region geometry, block bookkeeping, EOS/early-stop logic.
+
+use crate::tokenizer::{EOS, MASK, PAD};
+
+#[derive(Clone)]
+pub struct SeqState {
+    /// Full padded sequence (length s_max): prompt, generation region
+    /// (MASK until decoded), PAD tail.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Generation capacity (multiple of block size).
+    pub gen_len: usize,
+    pub block: usize,
+    pub s_max: usize,
+}
+
+impl SeqState {
+    pub fn new(prompt: &[i32], gen_len: usize, block: usize, s_max: usize)
+               -> SeqState {
+        assert!(gen_len % block == 0, "gen_len must be a block multiple");
+        assert!(prompt.len() + gen_len <= s_max,
+                "prompt {} + gen {} > s_max {}", prompt.len(), gen_len, s_max);
+        let mut tokens = vec![PAD; s_max];
+        tokens[..prompt.len()].copy_from_slice(prompt);
+        for t in tokens.iter_mut().skip(prompt.len()).take(gen_len) {
+            *t = MASK;
+        }
+        SeqState {
+            tokens,
+            prompt_len: prompt.len(),
+            gen_len,
+            block,
+            s_max,
+        }
+    }
+
+    #[inline]
+    pub fn gen_start(&self) -> usize {
+        self.prompt_len
+    }
+
+    #[inline]
+    pub fn n_blocks(&self) -> usize {
+        self.gen_len / self.block
+    }
+
+    /// Absolute position range of generation block `b`.
+    pub fn block_range(&self, b: usize) -> (usize, usize) {
+        let lo = self.prompt_len + b * self.block;
+        (lo, lo + self.block)
+    }
+
+    /// Attention validity over the full sequence: prompt + gen region
+    /// (mask tokens are visible in masked diffusion), PAD excluded.
+    pub fn full_valid(&self) -> Vec<f32> {
+        let end = self.prompt_len + self.gen_len;
+        (0..self.s_max)
+            .map(|i| if i < end { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// Number of already-decoded tokens in block `b`.
+    pub fn decoded_in_block(&self, b: usize) -> usize {
+        let (lo, hi) = self.block_range(b);
+        self.tokens[lo..hi].iter().filter(|&&t| t != MASK).count()
+    }
+
+    pub fn completion(&self, b: usize) -> f64 {
+        self.decoded_in_block(b) as f64 / self.block as f64
+    }
+
+    pub fn block_complete(&self, b: usize) -> bool {
+        self.decoded_in_block(b) == self.block
+    }
+
+    /// Index of the first block still containing a MASK, if any.
+    pub fn first_incomplete_block(&self) -> Option<usize> {
+        (0..self.n_blocks()).find(|&b| !self.block_complete(b))
+    }
+
+    pub fn all_decoded(&self) -> bool {
+        self.first_incomplete_block().is_none()
+    }
+
+    /// Position of the first decoded EOS in the generation region.
+    pub fn first_eos(&self) -> Option<usize> {
+        let (lo, hi) = (self.gen_start(), self.gen_start() + self.gen_len);
+        (lo..hi).find(|&i| self.tokens[i] == EOS)
+    }
+
+    /// Early-stop condition (paper §3.2): an EOS has been decoded and no
+    /// masked position remains before it.
+    pub fn eos_settled(&self) -> bool {
+        match self.first_eos() {
+            None => false,
+            Some(e) => {
+                !self.tokens[self.gen_start()..e].iter().any(|&t| t == MASK)
+            }
+        }
+    }
+
+    /// Generated output: tokens up to and including the first EOS (or the
+    /// full region). Remaining MASKs (when stopped early) are dropped.
+    pub fn output(&self) -> Vec<i32> {
+        let lo = self.gen_start();
+        let hi = match self.first_eos() {
+            Some(e) => e + 1,
+            None => lo + self.gen_len,
+        };
+        self.tokens[lo..hi].iter().copied().filter(|&t| t != MASK).collect()
+    }
+
+    /// Token count credited to the decode (up to & incl. EOS).
+    pub fn gen_token_count(&self) -> usize {
+        self.output().len()
+    }
+
+    /// Number of generation positions decoded so far (TPF numerator).
+    pub fn unmasked_count(&self) -> usize {
+        let lo = self.gen_start();
+        self.tokens[lo..lo + self.gen_len]
+            .iter()
+            .filter(|&&t| t != MASK)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st() -> SeqState {
+        SeqState::new(&[10, 11, 12], 64, 32, 128)
+    }
+
+    #[test]
+    fn geometry() {
+        let s = st();
+        assert_eq!(s.gen_start(), 3);
+        assert_eq!(s.n_blocks(), 2);
+        assert_eq!(s.block_range(1), (35, 67));
+        assert_eq!(s.full_valid().iter().filter(|&&v| v > 0.0).count(), 67);
+    }
+
+    #[test]
+    fn completion_tracking() {
+        let mut s = st();
+        assert_eq!(s.completion(0), 0.0);
+        for i in 3..3 + 16 {
+            s.tokens[i] = 9;
+        }
+        assert!((s.completion(0) - 0.5).abs() < 1e-12);
+        assert_eq!(s.first_incomplete_block(), Some(0));
+        for i in 3..35 {
+            s.tokens[i] = 9;
+        }
+        assert!(s.block_complete(0));
+        assert_eq!(s.first_incomplete_block(), Some(1));
+    }
+
+    #[test]
+    fn eos_and_early_stop() {
+        let mut s = st();
+        s.tokens[5] = EOS;
+        assert_eq!(s.first_eos(), Some(5));
+        assert!(!s.eos_settled()); // masks at 3,4
+        s.tokens[3] = 9;
+        s.tokens[4] = 9;
+        assert!(s.eos_settled());
+        assert_eq!(s.output(), vec![9, 9, EOS]);
+        assert_eq!(s.gen_token_count(), 3);
+    }
+
+    #[test]
+    fn output_without_eos_is_full_region() {
+        let mut s = st();
+        for i in 3..67 {
+            s.tokens[i] = 7;
+        }
+        assert_eq!(s.output().len(), 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_block_multiple() {
+        SeqState::new(&[1], 33, 32, 128);
+    }
+}

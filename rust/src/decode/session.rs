@@ -1,0 +1,246 @@
+//! Resumable decode session: the multi-block engine exposed one round at a
+//! time, so the coordinator can interleave several in-flight requests on
+//! one engine (round-robin continuous serving) and stream partial tokens.
+//!
+//! `decode_multi_block` is a thin driver over this type; the serving
+//! interleaver (`coordinator::scheduler`) is another.
+
+use anyhow::Result;
+
+use crate::model::{exec, KvCache};
+use crate::runtime::Engine;
+
+use super::multi_block::{unmask_round, BlockState, RoundStatsOwned};
+use super::{exec_names, DecodeCfg, GenResult, SeqState};
+
+pub struct DecodeSession {
+    pub cfg: DecodeCfg,
+    pub st: SeqState,
+    pub states: Vec<BlockState>,
+    pub cache: KvCache,
+    pub res: GenResult,
+    round: usize,
+    prefilled: bool,
+    done: bool,
+    prefill_exec: String,
+    decode_exec: String,
+    max_active_blocks: usize,
+}
+
+impl DecodeSession {
+    pub fn new(eng: &Engine, cfg: DecodeCfg, prompt: &[i32], gen_len: usize)
+               -> Result<DecodeSession> {
+        let c = eng.manifest.constants.clone();
+        let spec = eng.manifest.model("main")?.clone();
+        let (prefill_exec, decode_exec) = exec_names(&cfg.variant);
+        let st = SeqState::new(prompt, gen_len, c.block, c.s_max);
+        let nb = st.n_blocks();
+        let mut states = vec![BlockState::Inactive; nb];
+        states[0] = BlockState::FullyActivated; // prompt is "complete"
+        Ok(DecodeSession {
+            cfg,
+            cache: KvCache::new(spec.n_layers, st.s_max, spec.d_kv),
+            st,
+            states,
+            res: GenResult::default(),
+            round: 0,
+            prefilled: false,
+            done: false,
+            prefill_exec,
+            decode_exec,
+            max_active_blocks: c.window / c.block,
+        })
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Tokens decoded so far (snapshot for streaming).
+    pub fn snapshot(&self) -> Vec<i32> {
+        self.st.output()
+    }
+
+    /// Run one decode round. Returns true when the request is finished.
+    /// The first call performs the prompt prefill (not counted in TPF).
+    pub fn step(&mut self, eng: &Engine, params: &[f32]) -> Result<bool> {
+        if self.done {
+            return Ok(true);
+        }
+        if !self.prefilled {
+            let mut pv = vec![0.0f32; self.st.s_max];
+            for v in pv.iter_mut().take(self.st.prompt_len) {
+                *v = 1.0;
+            }
+            let pre = exec::prefill(eng, &self.prefill_exec, params,
+                                    &self.st.tokens, &pv)?;
+            self.cache.install_full(&pre.kcache, &pre.vcache, 0,
+                                    self.st.prompt_len);
+            self.prefilled = true;
+            return Ok(false);
+        }
+
+        let cfg = self.cfg.clone();
+        let nb = self.st.n_blocks();
+        self.round += 1;
+        self.res.rounds += 1;
+
+        let any_stabilizing = self
+            .states
+            .iter()
+            .any(|s| matches!(s, BlockState::Stabilizing(_)));
+        let periodic =
+            cfg.refresh_every > 0 && self.round % cfg.refresh_every == 0;
+
+        if any_stabilizing || periodic {
+            // full no-cache forward: decode + refresh every cached row
+            let full_valid = self.st.full_valid();
+            let out = exec::prefill(eng, &self.prefill_exec, params,
+                                    &self.st.tokens, &full_valid)?;
+            self.res.forwards += 1;
+            self.res.mix.full_forwards += 1;
+
+            self.cache.install_full(&out.kcache, &out.vcache, 0,
+                                    self.st.prompt_len);
+            for b in 0..nb {
+                let (lo, hi) = self.st.block_range(b);
+                match self.states[b] {
+                    BlockState::Completed => {
+                        self.cache.install_full(&out.kcache, &out.vcache,
+                                                lo, hi);
+                    }
+                    BlockState::Stabilizing(n) => {
+                        if n <= 1 {
+                            self.cache.install_full(&out.kcache, &out.vcache,
+                                                    lo, hi);
+                            self.states[b] = BlockState::Completed;
+                        } else {
+                            self.states[b] = BlockState::Stabilizing(n - 1);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let stats = RoundStatsOwned {
+                argmax: out.argmax,
+                conf: out.conf,
+                entropy: out.entropy,
+                w_lo: 0,
+                w_hi: self.st.s_max,
+                absolute: true,
+            };
+            unmask_round(&cfg, &mut self.st, &mut self.states, &stats, None);
+        } else {
+            // windowed forward over the active span
+            let first = match (0..nb).find(|&b| self.states[b].is_active()) {
+                Some(f) => f,
+                None => {
+                    match (0..nb)
+                        .find(|&b| self.states[b] == BlockState::Inactive)
+                    {
+                        Some(b) => {
+                            self.states[b] = BlockState::Activated;
+                            return Ok(false);
+                        }
+                        None => {
+                            self.done = true;
+                            return Ok(true);
+                        }
+                    }
+                }
+            };
+            let last =
+                (0..nb).rev().find(|&b| self.states[b].is_active()).unwrap();
+            let span = (last - first + 1).min(self.max_active_blocks);
+            let (w_lo, _) = self.st.block_range(first);
+            let w_hi = self.st.block_range(first + span - 1).1;
+            let window = eng.manifest.constants.window;
+
+            let mut win_tokens = vec![0i32; window];
+            let mut win_pos = vec![0i32; window];
+            let mut win_valid = vec![0.0f32; window];
+            for (off, p) in (w_lo..w_hi).enumerate() {
+                win_tokens[off] = self.st.tokens[p];
+                win_pos[off] = p as i32;
+                win_valid[off] =
+                    if self.cache.valid[p] > 0.0 { 0.0 } else { 1.0 };
+            }
+            let out = exec::decode_window(eng, &self.decode_exec, params,
+                                          &win_tokens, &win_pos, &win_valid,
+                                          &self.cache)?;
+            self.res.forwards += 1;
+            self.res.mix.window_forwards += 1;
+
+            let stats = RoundStatsOwned {
+                argmax: out.argmax.clone(),
+                conf: out.conf.clone(),
+                entropy: out.entropy.clone(),
+                w_lo,
+                w_hi,
+                absolute: false,
+            };
+            let completed = unmask_round(&cfg, &mut self.st,
+                                         &mut self.states, &stats,
+                                         Some((first, first + span)));
+            if cfg.stabilize_rounds == 0 {
+                for b in completed {
+                    let (lo, hi) = self.st.block_range(b);
+                    let pairs: Vec<(usize, usize)> =
+                        (lo..hi).map(|p| (p - w_lo, p)).collect();
+                    if pairs.iter().all(|&(off, _)| off < window) {
+                        self.cache.commit_window_rows(&out.k_win, &out.v_win,
+                                                      window, &pairs);
+                    }
+                    self.states[b] = BlockState::Completed;
+                }
+            }
+        }
+
+        // transitions
+        for b in 0..nb {
+            let pred = if b == 0 { 1.0 } else { self.st.completion(b - 1) };
+            match self.states[b] {
+                BlockState::Inactive => {
+                    let first_inc =
+                        self.st.first_incomplete_block().unwrap_or(b);
+                    let fits = b < first_inc + self.max_active_blocks;
+                    let eos_done =
+                        cfg.early_stop && self.st.first_eos().is_some();
+                    if fits && !eos_done && pred >= cfg.block_add {
+                        self.states[b] = BlockState::Activated;
+                    }
+                }
+                BlockState::Activated => {
+                    if pred >= cfg.fully_at {
+                        self.states[b] = BlockState::FullyActivated;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        let finished = (cfg.early_stop && self.st.eos_settled())
+            || (self.st.all_decoded()
+                && self
+                    .states
+                    .iter()
+                    .all(|s| *s == BlockState::Completed))
+            || (self.st.all_decoded() && cfg.stabilize_rounds == 0);
+        if finished {
+            self.done = true;
+        }
+        if self.round > self.st.gen_len * 4 {
+            anyhow::bail!("decode session failed to make progress");
+        }
+        Ok(self.done)
+    }
+
+    /// Consume the session into its final result.
+    pub fn finish(mut self) -> GenResult {
+        self.res.tokens = self.st.output();
+        self.res.unmasked = self.st.unmasked_count();
+        self.res.mix.gen_tokens = self.res.unmasked;
+        self.res
+    }
+}
+

@@ -1,0 +1,153 @@
+//! Single-block decoding: vanilla (LLaDA/Dream) and Fast-dLLM-style
+//! confidence-threshold parallel decoding with the block-approximate
+//! KV cache. dParallel uses the same mechanics with a distilled
+//! checkpoint.
+
+use anyhow::Result;
+
+use crate::model::{exec, KvCache};
+use crate::runtime::Engine;
+use crate::tokenizer::MASK;
+
+use super::{exec_names, DecodeCfg, GenResult, SeqState};
+
+pub fn decode_single_block(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
+                           prompt: &[i32], gen_len: usize)
+                           -> Result<GenResult> {
+    let c = eng.manifest.constants.clone();
+    let spec = eng.manifest.model("main")?.clone();
+    let (prefill_exec, decode_exec) = exec_names(&cfg.variant);
+    let mut st = SeqState::new(prompt, gen_len, c.block, c.s_max);
+    let mut res = GenResult::default();
+
+    if cfg.use_cache {
+        decode_cached(eng, cfg, params, &mut st, &mut res, &spec,
+                      &prefill_exec, &decode_exec, c.window)?;
+    } else {
+        decode_nocache(eng, cfg, params, &mut st, &mut res, &prefill_exec)?;
+    }
+
+    res.tokens = st.output();
+    res.unmasked = st.unmasked_count();
+    res.mix.gen_tokens = res.unmasked;
+    Ok(res)
+}
+
+/// Vanilla decoding: one full no-cache forward per unmasked token,
+/// restricted to the first incomplete block (semi-AR block diffusion).
+fn decode_nocache(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
+                  st: &mut SeqState, res: &mut GenResult,
+                  prefill_exec: &str) -> Result<()> {
+    let valid = st.full_valid();
+    while let Some(b) = st.first_incomplete_block() {
+        let out = exec::prefill(eng, prefill_exec, params, &st.tokens,
+                                &valid)?;
+        res.forwards += 1;
+        res.mix.full_forwards += 1;
+        res.rounds += 1;
+
+        let (lo, hi) = st.block_range(b);
+        // threshold-select within the block; always unmask at least the best
+        let mut best: Option<(usize, f32)> = None;
+        let mut selected = Vec::new();
+        for i in lo..hi {
+            if st.tokens[i] != MASK {
+                continue;
+            }
+            let sc = cfg.metric.score(out.conf[i], out.entropy[i]);
+            if best.map(|(_, s)| sc > s).unwrap_or(true) {
+                best = Some((i, sc));
+            }
+            if cfg.metric.selects(out.conf[i], out.entropy[i]) {
+                selected.push(i);
+            }
+        }
+        if selected.is_empty() {
+            selected.push(best.expect("incomplete block has masks").0);
+        }
+        for i in selected {
+            st.tokens[i] = out.argmax[i];
+        }
+        if cfg.early_stop && st.eos_settled() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Fast-dLLM-style: prefill the prompt once into the approximate cache,
+/// then per block decode through the windowed executable; the block's KV
+/// rows are committed when it completes.
+#[allow(clippy::too_many_arguments)]
+fn decode_cached(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
+                 st: &mut SeqState, res: &mut GenResult, spec: &crate::runtime::manifest::ModelSpec,
+                 prefill_exec: &str, decode_exec: &str, window: usize)
+                 -> Result<()> {
+    let mut cache = KvCache::new(spec.n_layers, st.s_max, spec.d_kv);
+    // prompt prefill (excluded from TPF for every method alike)
+    let mut pv = vec![0.0f32; st.s_max];
+    for v in pv.iter_mut().take(st.prompt_len) {
+        *v = 1.0;
+    }
+    let pre = exec::prefill(eng, prefill_exec, params, &st.tokens, &pv)?;
+    cache.install_full(&pre.kcache, &pre.vcache, 0, st.prompt_len);
+
+    'blocks: while let Some(b) = st.first_incomplete_block() {
+        let (lo, hi) = st.block_range(b);
+        loop {
+            // window = current block in slots 0..block, rest invalid
+            let mut win_tokens = vec![0i32; window];
+            let mut win_pos = vec![0i32; window];
+            let mut win_valid = vec![0.0f32; window];
+            for (off, p) in (lo..hi).enumerate() {
+                win_tokens[off] = st.tokens[p];
+                win_pos[off] = p as i32;
+                win_valid[off] = 1.0;
+            }
+            let out = exec::decode_window(eng, decode_exec, params,
+                                          &win_tokens, &win_pos, &win_valid,
+                                          &cache)?;
+            res.forwards += 1;
+            res.mix.window_forwards += 1;
+            res.rounds += 1;
+
+            let mut best: Option<(usize, f32)> = None;
+            let mut selected = Vec::new();
+            for off in 0..(hi - lo) {
+                let p = lo + off;
+                if st.tokens[p] != MASK {
+                    continue;
+                }
+                let sc = cfg.metric.score(out.conf[off], out.entropy[off]);
+                if best.map(|(_, s)| sc > s).unwrap_or(true) {
+                    best = Some((off, sc));
+                }
+                if cfg.metric.selects(out.conf[off], out.entropy[off]) {
+                    selected.push(off);
+                }
+            }
+            if selected.is_empty() {
+                selected.push(best.expect("block has masks").0);
+            }
+            for off in selected {
+                st.tokens[lo + off] = out.argmax[off];
+            }
+
+            if st.block_complete(b) {
+                // approximate commit: KV rows from this (last) forward
+                let pairs: Vec<(usize, usize)> =
+                    (0..(hi - lo)).map(|off| (off, lo + off)).collect();
+                cache.commit_window_rows(&out.k_win, &out.v_win, window,
+                                         &pairs);
+                if cfg.early_stop && st.eos_settled() {
+                    break 'blocks;
+                }
+                break;
+            }
+            if cfg.early_stop && st.eos_settled() {
+                break 'blocks;
+            }
+        }
+    }
+    Ok(())
+}

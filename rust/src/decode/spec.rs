@@ -1,0 +1,127 @@
+//! Draft-model speculative decoding (EAGLE-3 analog, paper §A.8).
+//!
+//! A small AR draft proposes gamma tokens; the AR target verifies them in
+//! one windowed causal forward (`ar_verify`). Greedy acceptance: the
+//! longest proposal prefix matching the target's own argmax chain is kept,
+//! plus the target's token at the first mismatch (the "bonus" token), so
+//! every verify round yields >= 1 token and the output is exactly the
+//! target's greedy decode — lossless parallelism, the property that lets
+//! speculative methods escape the accuracy-parallelism trade-off (§A.8).
+//!
+//! TPF counts target forwards only (the paper's convention for EAGLE-3);
+//! draft forwards are reported separately.
+
+use anyhow::Result;
+
+use crate::model::{exec, KvCache};
+use crate::runtime::Engine;
+use crate::tokenizer::EOS;
+
+use super::GenResult;
+
+pub fn decode_spec(eng: &Engine, params: &[f32], draft_params: &[f32],
+                   prompt: &[i32], gen_len: usize, gamma: usize)
+                   -> Result<GenResult> {
+    let c = eng.manifest.constants.clone();
+    let spec_t = eng.manifest.model("main")?.clone();
+    let spec_d = eng.manifest.model("draft")?.clone();
+    let w = c.verify_w;
+    let gamma = gamma.min(w - 1).max(1);
+    let p = prompt.len();
+    assert!(p + gen_len <= c.s_max);
+
+    let mut res = GenResult::default();
+    let mut t_cache = KvCache::new(spec_t.n_layers, c.s_max, spec_t.d_kv);
+    let mut d_cache = KvCache::new(spec_d.n_layers, c.s_max, spec_d.d_kv);
+
+    // exact prefix caches for rows 0..p-2 (the last prompt token flows
+    // through the first windowed forward of each model)
+    let mut tokens = vec![0i32; c.s_max];
+    tokens[..p].copy_from_slice(prompt);
+    let valid: Vec<f32> =
+        (0..c.s_max).map(|i| if i < p { 1.0 } else { 0.0 }).collect();
+    let pre_t = exec::prefill(eng, "ar_prefill", params, &tokens, &valid)?;
+    t_cache.install_full(&pre_t.kcache, &pre_t.vcache, 0, p - 1);
+    let pre_d =
+        exec::prefill(eng, "draft_ar_prefill", draft_params, &tokens, &valid)?;
+    d_cache.install_full(&pre_d.kcache, &pre_d.vcache, 0, p - 1);
+
+    // `pending`: last token whose KV row is not yet cached anywhere.
+    let mut pending = prompt[p - 1];
+    let mut pending_pos = p - 1;
+    let mut generated: Vec<i32> = Vec::with_capacity(gen_len);
+
+    'outer: while generated.len() < gen_len {
+        // ---- draft proposes gamma tokens (committing its own exact rows)
+        let mut proposals = Vec::with_capacity(gamma);
+        let mut d_tok = pending;
+        let mut d_pos = pending_pos;
+        for _ in 0..gamma {
+            let out = exec::decode_window(eng, "draft_ar_step", draft_params,
+                                          &[d_tok], &[d_pos as i32], &[1.0],
+                                          &d_cache)?;
+            res.draft_forwards += 1;
+            d_cache.commit_window_rows(&out.k_win, &out.v_win, 1,
+                                       &[(0, d_pos)]);
+            let t = out.argmax[0];
+            proposals.push(t);
+            d_pos += 1;
+            d_tok = t;
+        }
+
+        // ---- target verifies in one windowed causal forward
+        // window = [pending, d1..dgamma], slot i predicts window[i+1]'s
+        // position; slot gamma-? produces the bonus/correction token.
+        let mut win_tokens = vec![0i32; w];
+        let mut win_pos = vec![0i32; w];
+        let mut win_valid = vec![0.0f32; w];
+        win_tokens[0] = pending;
+        win_pos[0] = pending_pos as i32;
+        win_valid[0] = 1.0;
+        for (j, &d) in proposals.iter().enumerate() {
+            win_tokens[j + 1] = d;
+            win_pos[j + 1] = (pending_pos + 1 + j) as i32;
+            win_valid[j + 1] = 1.0;
+        }
+        let out = exec::decode_window(eng, "ar_verify", params, &win_tokens,
+                                      &win_pos, &win_valid, &t_cache)?;
+        res.forwards += 1;
+        res.mix.window_forwards += 1;
+        res.rounds += 1;
+
+        // ---- greedy acceptance
+        let mut accepted = 0usize;
+        while accepted < gamma && out.argmax[accepted] == proposals[accepted] {
+            accepted += 1;
+        }
+        // target rows become exact cache entries for every consumed slot
+        let commit: Vec<(usize, usize)> = (0..=accepted)
+            .map(|j| (j, pending_pos + j))
+            .collect();
+        t_cache.commit_window_rows(&out.k_win, &out.v_win, w, &commit);
+
+        // accepted proposals stream out...
+        for &d in proposals.iter().take(accepted) {
+            generated.push(d);
+            if d == EOS || generated.len() >= gen_len {
+                break 'outer;
+            }
+        }
+        // ...plus the target's own token at the first mismatch (bonus)
+        let bonus = out.argmax[accepted];
+        generated.push(bonus);
+        if bonus == EOS {
+            break;
+        }
+
+        // draft cache: rows beyond the accepted prefix are stale
+        d_cache.invalidate_from(pending_pos + accepted + 1);
+        pending = bonus;
+        pending_pos += accepted + 1;
+    }
+
+    res.unmasked = generated.len();
+    res.tokens = generated;
+    res.mix.gen_tokens = res.unmasked;
+    Ok(res)
+}

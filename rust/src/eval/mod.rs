@@ -1,0 +1,64 @@
+//! Evaluation: run a decode strategy over an eval set and score it.
+
+use anyhow::Result;
+
+use crate::data::{check, Family, Sample};
+use crate::decode::{self, DecodeCfg};
+use crate::metrics::{ForwardMix, RunMetrics};
+use crate::runtime::Engine;
+use crate::tokenizer::Tokenizer;
+
+/// Per-task generation length (tokens, block multiple).
+pub fn gen_len_for(family: Family, block: usize, gen_max: usize) -> usize {
+    let blocks = match family {
+        Family::Gsm8k | Family::LongGsm8k => 3,
+        Family::Math => 4,
+        Family::HumanEval | Family::CoderHumanEval => 3,
+        Family::Mbpp | Family::CoderMbpp => 3,
+    };
+    (blocks * block).min(gen_max)
+}
+
+/// Outcome of one eval run (one method x one task x one threshold).
+#[derive(Debug, Clone, Default)]
+pub struct EvalOutcome {
+    pub metrics: RunMetrics,
+    pub mix: ForwardMix,
+}
+
+/// Evaluate `cfg` with checkpoint `params` over `samples`.
+/// `strict` enables the "+"-style step-verifying checker.
+pub fn evaluate(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
+                draft_params: Option<&[f32]>, tk: &Tokenizer,
+                samples: &[Sample], strict: bool) -> Result<EvalOutcome> {
+    let c = eng.manifest.constants.clone();
+    let mut out = EvalOutcome::default();
+    for s in samples {
+        let gen_len = gen_len_for(s.family, c.block, c.gen_max);
+        let r = decode::generate(eng, cfg, params, draft_params, &s.prompt,
+                                 gen_len)?;
+        let ok = check(tk, s, &r.tokens, strict);
+        out.metrics.samples += 1;
+        out.metrics.correct += ok as usize;
+        out.metrics.gen_tokens += r.unmasked;
+        out.metrics.forwards += r.forwards;
+        out.metrics.draft_forwards += r.draft_forwards;
+        out.metrics.wall_secs += r.wall_secs;
+        out.mix.merge(&r.mix);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_len_is_block_multiple() {
+        for &f in Family::all_eval() {
+            let g = gen_len_for(f, 32, 128);
+            assert_eq!(g % 32, 0);
+            assert!(g <= 128 && g >= 64);
+        }
+    }
+}

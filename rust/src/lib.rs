@@ -1,0 +1,22 @@
+//! d3LLM reproduction: ultra-fast diffusion-LLM serving via
+//! pseudo-trajectory distillation, as a three-layer Rust + JAX + Pallas
+//! stack (see DESIGN.md).
+//!
+//! Layer 3 (this crate): serving coordinator — decode strategies, block
+//! state machine, KV-cache management, batching/serving, training and
+//! distillation drivers, metrics (AUP), and the benchmark harnesses that
+//! regenerate every table and figure of the paper.
+
+pub mod model;
+pub mod runtime;
+pub mod util;
+pub mod tokenizer;
+pub mod data;
+pub mod decode;
+pub mod metrics;
+pub mod eval;
+pub mod train;
+pub mod trajectory;
+pub mod bench;
+pub mod coordinator;
+pub mod config;

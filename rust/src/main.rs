@@ -1,0 +1,248 @@
+//! `repro` — CLI driver for the d3LLM reproduction.
+//!
+//! Subcommands:
+//!   info                               manifest / platform summary
+//!   gen-data  --family F --n N        inspect synthetic task samples
+//!   train     --preset NAME [--fast]  run one training preset
+//!   train-all [--fast]                run the full checkpoint plan
+//!   eval      --ckpt NAME --strategy S --task T [--n N] [--threshold X]
+//!   serve     --ckpt NAME [--port P]  JSON-line TCP serving coordinator
+//!   bench     --exp EXP               regenerate a paper table/figure
+//!
+//! Everything reads artifacts/ (run `make artifacts` first) and writes
+//! checkpoints/ and results/.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use d3llm::bench;
+use d3llm::coordinator;
+use d3llm::data::{self, Family};
+use d3llm::decode::{DecodeCfg, Strategy};
+use d3llm::eval::evaluate;
+use d3llm::model::ParamStore;
+use d3llm::runtime::Engine;
+use d3llm::tokenizer::Tokenizer;
+use d3llm::train::{self, presets, TrainCfg};
+use d3llm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    if let Err(e) = dispatch(cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => info(args),
+        "gen-data" => gen_data(args),
+        "train" => cmd_train(args),
+        "train-all" => cmd_train_all(args),
+        "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
+        "bench" => cmd_bench(args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — d3LLM reproduction (see README.md)\n\
+         \n\
+         usage: repro <command> [flags]\n\
+         \n\
+         commands:\n\
+           info                                  show manifest + platform\n\
+           gen-data --family F [--n N]           print synthetic samples\n\
+           train --preset NAME [--fast]          run one training preset\n\
+           train-all [--fast]                    run the full plan\n\
+           eval --ckpt C --strategy S --task T   evaluate a checkpoint\n\
+                [--n N] [--threshold X] [--strict] [--variant xla|pallas]\n\
+           serve --ckpt C [--port 7070]          start the serving coordinator\n\
+           bench --exp EXP [--n N] [--fast]      regenerate a table/figure\n\
+                 (table1..table11, curves, radar, figure1, perf, all)"
+    );
+}
+
+fn engine() -> Result<Engine> {
+    Engine::load("artifacts")
+}
+
+fn ckpt_dir() -> &'static Path {
+    Path::new("checkpoints")
+}
+
+fn load_ckpt(name: &str) -> Result<ParamStore> {
+    ParamStore::load(TrainCfg::ckpt_path(ckpt_dir(), name))
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let eng = engine()?;
+    let c = &eng.manifest.constants;
+    println!("platform: {}", eng.platform());
+    println!(
+        "constants: vocab={} s_max={} window={} block={} gen_max={}",
+        c.vocab, c.s_max, c.window, c.block, c.gen_max
+    );
+    for (name, m) in &eng.manifest.models {
+        println!(
+            "model `{name}`: d={} L={} H={} ff={} params={}",
+            m.d_model, m.n_layers, m.n_heads, m.d_ff, m.total_params
+        );
+    }
+    println!("executables:");
+    for name in eng.manifest.executables.keys() {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+fn gen_data(args: &Args) -> Result<()> {
+    let fam = Family::parse(&args.str_or("family", "gsm8k"))
+        .ok_or_else(|| anyhow!("unknown family"))?;
+    let n = args.usize_or("n", 5);
+    let tk = Tokenizer::new(128)?;
+    let mut rng = d3llm::util::rng::Rng::new(args.u64_or("seed", 1));
+    for _ in 0..n {
+        let s = data::generate(&tk, fam, &mut rng);
+        println!("{}", data::tasks::to_text(&tk, &s)?);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let name = args
+        .get("preset")
+        .ok_or_else(|| anyhow!("--preset required (see train-all plan)"))?;
+    let fast = args.has("fast");
+    let mut cfg = presets::by_name(name, fast)
+        .ok_or_else(|| anyhow!("unknown preset `{name}`"))?;
+    if let Some(lr) = args.get("lr") {
+        cfg.lr = lr.parse()?;
+    }
+    if let Some(steps) = args.get("steps") {
+        cfg.steps = steps.parse()?;
+    }
+    if let Some(cs) = args.get("corpus") {
+        cfg.corpus_size = cs.parse()?;
+    }
+    if let Some(suffix) = args.get("tag") {
+        cfg.name = format!("{}-{suffix}", cfg.name);
+        cfg.init_from = None;
+        cfg.teacher = None;
+    }
+    let eng = engine()?;
+    let out = train::train(&eng, &cfg, ckpt_dir())?;
+    train::save_log(&out.log, format!("results/loss_{}.csv", cfg.name))?;
+    Ok(())
+}
+
+fn cmd_train_all(args: &Args) -> Result<()> {
+    let fast = args.has("fast");
+    let skip_existing = !args.has("force");
+    let eng = engine()?;
+    for cfg in presets::plan(fast) {
+        let path = TrainCfg::ckpt_path(ckpt_dir(), &cfg.name);
+        if skip_existing && path.exists() {
+            eprintln!("[train-all] skip `{}` (exists)", cfg.name);
+            continue;
+        }
+        let out = train::train(&eng, &cfg, ckpt_dir())?;
+        train::save_log(&out.log, format!("results/loss_{}.csv", cfg.name))?;
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let eng = engine()?;
+    let ckpt = args.str_or("ckpt", "d3llm-llada");
+    let params = load_ckpt(&ckpt)?;
+    let strategy = Strategy::parse(&args.str_or("strategy", "d3llm"))
+        .ok_or_else(|| anyhow!("unknown strategy"))?;
+    let fam = Family::parse(&args.str_or("task", "gsm8k"))
+        .ok_or_else(|| anyhow!("unknown family"))?;
+    let n = args.usize_or("n", 20);
+    let mut cfg = DecodeCfg::preset(strategy);
+    cfg.variant = args.str_or("variant", "xla");
+    if let Some(t) = args.get("threshold") {
+        cfg = cfg.with_threshold(t.parse()?);
+    }
+    let draft = if strategy == Strategy::Spec {
+        Some(load_ckpt(&args.str_or("draft", "draft"))?)
+    } else {
+        None
+    };
+    let tk = Tokenizer::new(eng.manifest.constants.vocab)?;
+    let samples = data::eval_set(&tk, fam, n, args.u64_or("seed", 42));
+    if args.has("show") {
+        for s in samples.iter().take(5) {
+            let gen_len = d3llm::eval::gen_len_for(
+                s.family, eng.manifest.constants.block,
+                eng.manifest.constants.gen_max);
+            let r = d3llm::decode::generate(&eng, &cfg, &params.data, None,
+                                            &s.prompt, gen_len)?;
+            println!("----\nprompt:   {}", tk.decode(&s.prompt));
+            println!("expected: {}", tk.decode(&s.response));
+            println!("got:      {}", tk.decode(&r.tokens));
+            println!("ok={} tpf={:.2}", data::check(&tk, s, &r.tokens, false),
+                     r.tpf());
+        }
+        return Ok(());
+    }
+    let out = evaluate(&eng, &cfg, &params.data,
+                       draft.as_ref().map(|d| d.data.as_slice()), &tk,
+                       &samples, args.has("strict"))?;
+    let m = &out.metrics;
+    println!(
+        "ckpt={ckpt} strategy={} task={} n={}\n\
+         accuracy {:.1}%  TPF {:.2}  TPS(cpu) {:.1}  forwards {}  tokens {}",
+        strategy.name(),
+        fam.name(),
+        m.samples,
+        m.accuracy(),
+        m.tpf(),
+        m.tps(),
+        m.forwards,
+        m.gen_tokens
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ckpt = args.str_or("ckpt", "d3llm-llada");
+    let port = args.usize_or("port", 7070) as u16;
+    let strategy = Strategy::parse(&args.str_or("strategy", "d3llm"))
+        .ok_or_else(|| anyhow!("unknown strategy"))?;
+    let decode = match args.get("config") {
+        Some(path) => {
+            let svc = d3llm::config::ServiceConfig::load(path)?;
+            Some(svc.decode)
+        }
+        None => None,
+    };
+    let cfg = coordinator::ServerCfg {
+        host: args.str_or("host", "127.0.0.1"),
+        port,
+        ckpt,
+        strategy,
+        variant: args.str_or("variant", "xla"),
+        max_queue: args.usize_or("max-queue", 256),
+        decode,
+    };
+    coordinator::serve(cfg)
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let exp = args.str_or("exp", "all");
+    let n = args.usize_or("n", 0); // 0 = experiment default
+    let fast = args.has("fast");
+    let seeds = args.usize_or("seeds", 0);
+    bench::run(&exp, bench::BenchOpts { n, fast, seeds })
+}

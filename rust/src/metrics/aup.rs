@@ -1,0 +1,165 @@
+//! AUP — Accuracy Under Parallelism (paper §2).
+//!
+//! Given parallelism/accuracy pairs S = {(rho_i, y_i)} with
+//! rho_1 < ... < rho_m, accuracy in percent:
+//!
+//!   AUP = rho_1*y_1 + sum_{i>=2} (rho_i - rho_{i-1}) *
+//!                     (y_i W(y_i) + y_{i-1} W(y_{i-1})) / 2
+//!
+//! with W(y) = min(e^{-alpha (1 - y/y_max)}, 1), y_max the best accuracy
+//! achieved on the task, and points below y_min = y_1 - 5 discarded
+//! (no credit for regimes of significant accuracy collapse).
+
+pub const DEFAULT_ALPHA: f64 = 3.0;
+
+/// One parallelism/accuracy observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    /// parallelism (TPF)
+    pub rho: f64,
+    /// accuracy in percent [0, 100]
+    pub acc: f64,
+}
+
+fn weight(y: f64, y_max: f64, alpha: f64) -> f64 {
+    if y_max <= 0.0 {
+        return 1.0;
+    }
+    (-alpha * (1.0 - y / y_max)).exp().min(1.0)
+}
+
+/// AUP over a raw point set. Points are sorted by rho; `y_max` defaults to
+/// the best accuracy observed on the task (pass the best across *all*
+/// methods when comparing methods, per the paper's definition).
+pub fn aup_from_points(points: &[Point], alpha: f64, y_max: Option<f64>)
+                       -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    let mut pts = points.to_vec();
+    pts.sort_by(|a, b| a.rho.partial_cmp(&b.rho).unwrap());
+    // dedupe identical rho (keep best accuracy — one decode run per knob)
+    let mut uniq: Vec<Point> = Vec::with_capacity(pts.len());
+    for p in pts {
+        match uniq.last_mut() {
+            Some(last) if (last.rho - p.rho).abs() < 1e-12 => {
+                last.acc = last.acc.max(p.acc);
+            }
+            _ => uniq.push(p),
+        }
+    }
+    let y1 = uniq[0].acc;
+    let y_min = y1 - 5.0;
+    let y_max = y_max
+        .unwrap_or_else(|| uniq.iter().map(|p| p.acc).fold(0.0, f64::max));
+    let kept: Vec<Point> =
+        uniq.into_iter().filter(|p| p.acc >= y_min).collect();
+    if kept.is_empty() {
+        return 0.0;
+    }
+    let mut total = kept[0].rho * kept[0].acc;
+    for i in 1..kept.len() {
+        let (a, b) = (kept[i - 1], kept[i]);
+        let wa = b.acc * weight(b.acc, y_max, alpha)
+            + a.acc * weight(a.acc, y_max, alpha);
+        total += (b.rho - a.rho) * wa / 2.0;
+    }
+    total
+}
+
+/// AUP with the default alpha and task-local y_max.
+pub fn aup(points: &[Point]) -> f64 {
+    aup_from_points(points, DEFAULT_ALPHA, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point_is_rho_times_acc() {
+        let p = [Point { rho: 1.0, acc: 72.6 }];
+        assert!((aup(&p) - 72.6).abs() < 1e-9);
+        let p = [Point { rho: 2.0, acc: 50.0 }];
+        assert!((aup(&p) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_curve_reduces_to_auc() {
+        // no accuracy loss => W == 1 everywhere => plain area
+        let pts = [
+            Point { rho: 1.0, acc: 80.0 },
+            Point { rho: 3.0, acc: 80.0 },
+            Point { rho: 5.0, acc: 80.0 },
+        ];
+        let expect = 1.0 * 80.0 + 2.0 * 80.0 + 2.0 * 80.0;
+        assert!((aup(&pts) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_collapse_is_penalized() {
+        let flat = [
+            Point { rho: 1.0, acc: 80.0 },
+            Point { rho: 5.0, acc: 80.0 },
+        ];
+        let droop = [
+            Point { rho: 1.0, acc: 80.0 },
+            Point { rho: 5.0, acc: 76.0 },
+        ];
+        assert!(aup(&droop) < aup(&flat));
+        // but still rewards the parallelism some
+        assert!(aup(&droop) > 80.0);
+    }
+
+    #[test]
+    fn below_ymin_points_are_dropped() {
+        let pts = [
+            Point { rho: 1.0, acc: 80.0 },
+            Point { rho: 3.0, acc: 79.0 },
+            Point { rho: 50.0, acc: 10.0 }, // collapsed regime
+        ];
+        let without = [
+            Point { rho: 1.0, acc: 80.0 },
+            Point { rho: 3.0, acc: 79.0 },
+        ];
+        assert!((aup(&pts) - aup(&without)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_monotonicity() {
+        let pts = [
+            Point { rho: 1.0, acc: 80.0 },
+            Point { rho: 4.0, acc: 77.0 },
+            Point { rho: 6.0, acc: 76.0 },
+        ];
+        let a1 = aup_from_points(&pts, 1.0, None);
+        let a3 = aup_from_points(&pts, 3.0, None);
+        let a10 = aup_from_points(&pts, 10.0, None);
+        assert!(a1 > a3 && a3 > a10, "{a1} {a3} {a10}");
+    }
+
+    #[test]
+    fn unsorted_input_is_sorted() {
+        let a = [
+            Point { rho: 4.0, acc: 70.0 },
+            Point { rho: 1.0, acc: 72.0 },
+        ];
+        let b = [
+            Point { rho: 1.0, acc: 72.0 },
+            Point { rho: 4.0, acc: 70.0 },
+        ];
+        assert_eq!(aup(&a), aup(&b));
+    }
+
+    #[test]
+    fn global_ymax_penalizes_weak_methods() {
+        // same curve, but judged against a stronger best-achievable
+        let pts = [
+            Point { rho: 1.0, acc: 60.0 },
+            Point { rho: 4.0, acc: 60.0 },
+        ];
+        let local = aup_from_points(&pts, 3.0, None);
+        let global = aup_from_points(&pts, 3.0, Some(80.0));
+        assert!(global < local);
+    }
+}

@@ -1,0 +1,163 @@
+//! Evaluation metrics: TPF, TPS, and the paper's AUP score (§2).
+
+pub mod aup;
+
+pub use aup::{aup, aup_from_points, Point, DEFAULT_ALPHA};
+
+/// Aggregate decode statistics over an eval run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub samples: usize,
+    pub correct: usize,
+    pub gen_tokens: usize,
+    pub forwards: usize,
+    pub draft_forwards: usize,
+    pub wall_secs: f64,
+}
+
+impl RunMetrics {
+    pub fn accuracy(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            100.0 * self.correct as f64 / self.samples as f64
+        }
+    }
+
+    /// Tokens per forward pass (paper's parallelism measure). Counts
+    /// decode-phase forwards of the *target* model: window forwards,
+    /// no-cache forwards, stabilizing and refresh forwards. The initial
+    /// prompt prefill is excluded for every method alike.
+    pub fn tpf(&self) -> f64 {
+        if self.forwards == 0 {
+            0.0
+        } else {
+            self.gen_tokens as f64 / self.forwards as f64
+        }
+    }
+
+    /// Measured tokens per second on this testbed.
+    pub fn tps(&self) -> f64 {
+        if self.wall_secs == 0.0 {
+            0.0
+        } else {
+            self.gen_tokens as f64 / self.wall_secs
+        }
+    }
+
+    pub fn merge(&mut self, other: &RunMetrics) {
+        self.samples += other.samples;
+        self.correct += other.correct;
+        self.gen_tokens += other.gen_tokens;
+        self.forwards += other.forwards;
+        self.draft_forwards += other.draft_forwards;
+        self.wall_secs += other.wall_secs;
+    }
+}
+
+/// Modeled wall-clock for the paper's GPU regimes (Tables 3-4).
+///
+/// On 7-8B models every forward is weight-bandwidth-bound, so per-forward
+/// latency is roughly constant per hardware; the paper's own vanilla/AR
+/// rows calibrate it (H100: LLaDA 27.9 TPS at TPF=1 => 35.8 ms/forward,
+/// Qwen 57.3 TPS => 17.5 ms/AR-step; A100: 52.1 and 19.8 ms). Our testbed
+/// is compute-bound (0.4M params), so measured CPU TPS is reported next to
+/// this calibrated model; see DESIGN.md §1 and EXPERIMENTS.md.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuCostModel {
+    pub name: &'static str,
+    /// full-sequence dLLM forward (prefill / no-cache / refresh), seconds
+    pub t_full: f64,
+    /// windowed dLLM forward against cache, seconds
+    pub t_window: f64,
+    /// AR step with exact cache, seconds
+    pub t_ar: f64,
+}
+
+pub const H100: GpuCostModel = GpuCostModel {
+    name: "h100-sim",
+    t_full: 0.0358,
+    t_window: 0.0304, // 0.85x full: cache skips recomputing cached rows
+    t_ar: 0.0175,
+};
+
+pub const A100: GpuCostModel = GpuCostModel {
+    name: "a100-sim",
+    t_full: 0.0521,
+    t_window: 0.0443,
+    t_ar: 0.0198,
+};
+
+/// Per-sample forward mix for the cost model.
+#[derive(Debug, Clone, Default)]
+pub struct ForwardMix {
+    pub full_forwards: usize,
+    pub window_forwards: usize,
+    pub ar_steps: usize,
+    pub gen_tokens: usize,
+}
+
+impl ForwardMix {
+    pub fn modeled_tps(&self, m: &GpuCostModel) -> f64 {
+        let secs = self.full_forwards as f64 * m.t_full
+            + self.window_forwards as f64 * m.t_window
+            + self.ar_steps as f64 * m.t_ar;
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.gen_tokens as f64 / secs
+        }
+    }
+
+    pub fn merge(&mut self, o: &ForwardMix) {
+        self.full_forwards += o.full_forwards;
+        self.window_forwards += o.window_forwards;
+        self.ar_steps += o.ar_steps;
+        self.gen_tokens += o.gen_tokens;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpf_and_accuracy() {
+        let m = RunMetrics {
+            samples: 10,
+            correct: 7,
+            gen_tokens: 300,
+            forwards: 60,
+            draft_forwards: 0,
+            wall_secs: 3.0,
+        };
+        assert!((m.accuracy() - 70.0).abs() < 1e-9);
+        assert!((m.tpf() - 5.0).abs() < 1e-9);
+        assert!((m.tps() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_model_vanilla_matches_calibration() {
+        // vanilla dLLM: 1 token per full forward => paper's 27.9 TPS on H100
+        let mix = ForwardMix {
+            full_forwards: 100,
+            window_forwards: 0,
+            ar_steps: 0,
+            gen_tokens: 100,
+        };
+        let tps = mix.modeled_tps(&H100);
+        assert!((tps - 27.9).abs() < 0.2, "{tps}");
+    }
+
+    #[test]
+    fn cost_model_ar_matches_calibration() {
+        let mix = ForwardMix {
+            full_forwards: 0,
+            window_forwards: 0,
+            ar_steps: 50,
+            gen_tokens: 50,
+        };
+        assert!((mix.modeled_tps(&H100) - 57.1).abs() < 0.5);
+        assert!((mix.modeled_tps(&A100) - 50.5).abs() < 0.5);
+    }
+}

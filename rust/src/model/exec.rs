@@ -1,0 +1,157 @@
+//! Typed host-side wrappers around the AOT executables: each wrapper
+//! assembles the manifest-ordered argument list, runs the graph, and
+//! unpacks outputs into plain Rust vectors.
+
+use anyhow::{bail, Result};
+
+use crate::model::kv_cache::KvCache;
+use crate::runtime::engine::{
+    scalar_f32_out, to_vec_f32, to_vec_i32, ArgData, Engine, TypedArgs,
+};
+
+/// Output of `prefill` / `ar_prefill`: full-sequence caches + head stats.
+pub struct PrefillOut {
+    pub kcache: Vec<f32>,
+    pub vcache: Vec<f32>,
+    pub argmax: Vec<i32>,
+    pub conf: Vec<f32>,
+    pub entropy: Vec<f32>,
+}
+
+/// Output of `decode` / `ar_verify`: window head stats + window KV rows.
+pub struct DecodeOut {
+    pub argmax: Vec<i32>,
+    pub conf: Vec<f32>,
+    pub entropy: Vec<f32>,
+    pub k_win: Vec<f32>,
+    pub v_win: Vec<f32>,
+}
+
+/// Output of a fused train step.
+pub struct TrainOut {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Output of the pseudo-trajectory extractor.
+pub struct TrajectoryOut {
+    pub rank: Vec<i32>,
+    pub final_tokens: Vec<i32>,
+}
+
+/// Full-sequence bidirectional forward (`prefill_{variant}`) — prompt
+/// prefill, KV-refresh, and the vanilla no-cache decode forward.
+pub fn prefill(eng: &Engine, exec: &str, params: &[f32], tokens: &[i32],
+               valid: &[f32]) -> Result<PrefillOut> {
+    let spec = eng.manifest.exec(exec)?.clone();
+    let s = spec.inputs[1].shape[0];
+    if tokens.len() != s || valid.len() != s {
+        bail!("prefill: tokens/valid must be length {s}");
+    }
+    let out = if eng.buffered() {
+        eng.run_buffered(exec, params, &[
+            ArgData::I32(tokens, &spec.inputs[1].shape),
+            ArgData::F32(valid, &spec.inputs[2].shape),
+        ])?
+    } else {
+        let args = TypedArgs::new()
+            .f32(params, &spec.inputs[0].shape)?
+            .i32(tokens, &[s])?
+            .f32(valid, &[s])?;
+        eng.run(exec, args)?
+    };
+    Ok(PrefillOut {
+        kcache: to_vec_f32(&out[0], &spec.outputs[0])?,
+        vcache: to_vec_f32(&out[1], &spec.outputs[1])?,
+        argmax: to_vec_i32(&out[2], &spec.outputs[2])?,
+        conf: to_vec_f32(&out[3], &spec.outputs[3])?,
+        entropy: to_vec_f32(&out[4], &spec.outputs[4])?,
+    })
+}
+
+/// Windowed forward against the KV cache (`decode_{variant}`, `ar_step`,
+/// `ar_verify`, `draft_ar_step`): the serving hot path.
+pub fn decode_window(eng: &Engine, exec: &str, params: &[f32],
+                     win_tokens: &[i32], win_pos: &[i32], win_valid: &[f32],
+                     cache: &KvCache) -> Result<DecodeOut> {
+    let spec = eng.manifest.exec(exec)?.clone();
+    let w = spec.inputs[1].shape[0];
+    if win_tokens.len() != w || win_pos.len() != w || win_valid.len() != w {
+        bail!("decode: window inputs must be length {w}");
+    }
+    let out = if eng.buffered() {
+        eng.run_buffered(exec, params, &[
+            ArgData::I32(win_tokens, &spec.inputs[1].shape),
+            ArgData::I32(win_pos, &spec.inputs[2].shape),
+            ArgData::F32(win_valid, &spec.inputs[3].shape),
+            ArgData::F32(&cache.k, &spec.inputs[4].shape),
+            ArgData::F32(&cache.v, &spec.inputs[5].shape),
+            ArgData::F32(&cache.valid, &spec.inputs[6].shape),
+        ])?
+    } else {
+        let args = TypedArgs::new()
+            .f32(params, &spec.inputs[0].shape)?
+            .i32(win_tokens, &[w])?
+            .i32(win_pos, &[w])?
+            .f32(win_valid, &[w])?
+            .f32(&cache.k, &spec.inputs[4].shape)?
+            .f32(&cache.v, &spec.inputs[5].shape)?
+            .f32(&cache.valid, &[cache.seq])?;
+        eng.run(exec, args)?
+    };
+    Ok(DecodeOut {
+        argmax: to_vec_i32(&out[0], &spec.outputs[0])?,
+        conf: to_vec_f32(&out[1], &spec.outputs[1])?,
+        entropy: to_vec_f32(&out[2], &spec.outputs[2])?,
+        k_win: to_vec_f32(&out[3], &spec.outputs[3])?,
+        v_win: to_vec_f32(&out[4], &spec.outputs[4])?,
+    })
+}
+
+/// Fused fwd+bwd+AdamW step (`train_diff` / `train_ar` / `draft_train_ar`).
+#[allow(clippy::too_many_arguments)]
+pub fn train_step(eng: &Engine, exec: &str, params: &[f32], m: &[f32],
+                  v: &[f32], step: i32, tokens: &[i32], labels: &[i32],
+                  loss_mask: &[f32], attn_valid: &[f32], lr: f32,
+                  ent_weight: f32) -> Result<TrainOut> {
+    let spec = eng.manifest.exec(exec)?.clone();
+    let bs = &spec.inputs[4].shape; // [B, S]
+    let args = TypedArgs::new()
+        .f32(params, &spec.inputs[0].shape)?
+        .f32(m, &spec.inputs[1].shape)?
+        .f32(v, &spec.inputs[2].shape)?
+        .scalar_i32(step)
+        .i32(tokens, bs)?
+        .i32(labels, bs)?
+        .f32(loss_mask, bs)?
+        .f32(attn_valid, bs)?
+        .scalar_f32(lr)
+        .scalar_f32(ent_weight);
+    let out = eng.run(exec, args)?;
+    Ok(TrainOut {
+        params: to_vec_f32(&out[0], &spec.outputs[0])?,
+        m: to_vec_f32(&out[1], &spec.outputs[1])?,
+        v: to_vec_f32(&out[2], &spec.outputs[2])?,
+        loss: scalar_f32_out(&out[3])?,
+    })
+}
+
+/// Pseudo-trajectory extraction (`trajectory`): batched on-device scan.
+pub fn trajectory(eng: &Engine, params: &[f32], tokens: &[i32],
+                  attn_valid: &[f32], gen_mask: &[f32])
+                  -> Result<TrajectoryOut> {
+    let spec = eng.manifest.exec("trajectory")?.clone();
+    let bs = &spec.inputs[1].shape; // [B, S]
+    let args = TypedArgs::new()
+        .f32(params, &spec.inputs[0].shape)?
+        .i32(tokens, bs)?
+        .f32(attn_valid, bs)?
+        .f32(gen_mask, bs)?;
+    let out = eng.run("trajectory", args)?;
+    Ok(TrajectoryOut {
+        rank: to_vec_i32(&out[0], &spec.outputs[0])?,
+        final_tokens: to_vec_i32(&out[1], &spec.outputs[1])?,
+    })
+}

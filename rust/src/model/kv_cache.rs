@@ -1,0 +1,121 @@
+//! Host-side mirror of the block-approximate KV cache (paper §3.2).
+//!
+//! Layout matches the AOT executables: k/v are [L, S_max, H*Dh] row-major,
+//! `valid` marks which cache rows the decode window may attend to. Cache
+//! entries are *approximate*: a row is computed under whatever view of the
+//! sequence existed when it was produced, and the KV-refresh mechanism
+//! (a full `prefill` forward) rewrites all rows with the current view.
+
+#[derive(Clone)]
+pub struct KvCache {
+    pub layers: usize,
+    pub seq: usize,
+    pub d_kv: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub valid: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, seq: usize, d_kv: usize) -> KvCache {
+        KvCache {
+            layers,
+            seq,
+            d_kv,
+            k: vec![0.0; layers * seq * d_kv],
+            v: vec![0.0; layers * seq * d_kv],
+            valid: vec![0.0; seq],
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.k.fill(0.0);
+        self.v.fill(0.0);
+        self.valid.fill(0.0);
+    }
+
+    #[inline]
+    fn row(&self, layer: usize, pos: usize) -> usize {
+        (layer * self.seq + pos) * self.d_kv
+    }
+
+    /// Number of valid cache rows.
+    pub fn valid_count(&self) -> usize {
+        self.valid.iter().filter(|&&x| x > 0.0).count()
+    }
+
+    /// Install rows from a full-sequence forward (`prefill` output, shape
+    /// [L, S, d_kv]) for positions `pos0..pos1`, marking them valid.
+    /// This is both prompt prefill and the KV-refresh path.
+    pub fn install_full(&mut self, k_full: &[f32], v_full: &[f32],
+                        pos0: usize, pos1: usize) {
+        debug_assert_eq!(k_full.len(), self.k.len());
+        let d = self.d_kv;
+        for l in 0..self.layers {
+            let a = self.row(l, pos0);
+            let b = self.row(l, pos1);
+            self.k[a..b].copy_from_slice(&k_full[a..b]);
+            self.v[a..b].copy_from_slice(&v_full[a..b]);
+        }
+        let _ = d;
+        for p in pos0..pos1 {
+            self.valid[p] = 1.0;
+        }
+    }
+
+    /// Commit window rows (decode output k_win/v_win, shape [L, W, d_kv])
+    /// into the cache: window offset `off` -> absolute position `pos`.
+    pub fn commit_window_rows(&mut self, k_win: &[f32], v_win: &[f32],
+                              w: usize, pairs: &[(usize, usize)]) {
+        let d = self.d_kv;
+        debug_assert_eq!(k_win.len(), self.layers * w * d);
+        for l in 0..self.layers {
+            for &(off, pos) in pairs {
+                debug_assert!(off < w && pos < self.seq);
+                let src = (l * w + off) * d;
+                let dst = self.row(l, pos);
+                self.k[dst..dst + d].copy_from_slice(&k_win[src..src + d]);
+                self.v[dst..dst + d].copy_from_slice(&v_win[src..src + d]);
+            }
+        }
+        for &(_, pos) in pairs {
+            self.valid[pos] = 1.0;
+        }
+    }
+
+    /// Invalidate rows at and after `pos` (used when re-planning).
+    pub fn invalidate_from(&mut self, pos: usize) {
+        for p in pos..self.seq {
+            self.valid[p] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_and_commit() {
+        let (l, s, d) = (2, 8, 3);
+        let mut c = KvCache::new(l, s, d);
+        let full: Vec<f32> = (0..l * s * d).map(|i| i as f32).collect();
+        c.install_full(&full, &full, 0, 4);
+        assert_eq!(c.valid_count(), 4);
+        assert_eq!(c.k[0..3], full[0..3]);
+        // commit window rows: window of 2, offset 1 -> pos 5
+        let w = 2;
+        let kwin: Vec<f32> = (0..l * w * d).map(|i| 100.0 + i as f32).collect();
+        c.commit_window_rows(&kwin, &kwin, w, &[(1, 5)]);
+        assert_eq!(c.valid_count(), 5);
+        // layer 0, pos 5 row == kwin layer 0, off 1
+        assert_eq!(c.k[(0 * s + 5) * d..(0 * s + 5) * d + 3],
+                   kwin[(0 * w + 1) * d..(0 * w + 1) * d + 3]);
+        // layer 1 row too
+        assert_eq!(c.k[(1 * s + 5) * d..(1 * s + 5) * d + 3],
+                   kwin[(1 * w + 1) * d..(1 * w + 1) * d + 3]);
+
+        c.invalidate_from(4);
+        assert_eq!(c.valid_count(), 4);
+    }
+}

@@ -1,0 +1,10 @@
+//! Host-side model layer: parameter lifecycle, KV cache mirror, and typed
+//! wrappers over the AOT executables.
+
+pub mod exec;
+pub mod kv_cache;
+pub mod params;
+
+pub use exec::{DecodeOut, PrefillOut, TrainOut, TrajectoryOut};
+pub use kv_cache::KvCache;
+pub use params::{OptState, ParamStore};

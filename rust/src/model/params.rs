@@ -1,0 +1,160 @@
+//! Flat parameter store: initialisation per the manifest layout, and a
+//! self-describing binary checkpoint format.
+//!
+//! Python never touches weights at run time — the Rust side owns the full
+//! parameter lifecycle (init -> train -> checkpoint -> serve), exchanging
+//! only the flat f32 vector with the AOT executables.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::manifest::ModelSpec;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 8] = b"D3LLMCKP";
+
+/// Flat f32 parameter vector + the layout it follows.
+#[derive(Clone)]
+pub struct ParamStore {
+    pub model: String,
+    pub data: Vec<f32>,
+}
+
+impl ParamStore {
+    /// Random initialisation per the manifest layout ("normal" tensors get
+    /// N(0, 0.02), "zeros"/"ones" as named).
+    pub fn init(spec: &ModelSpec, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0.0f32; spec.total_params];
+        for t in &spec.param_layout {
+            let seg = &mut data[t.offset..t.offset + t.size];
+            match t.init.as_str() {
+                "normal" => {
+                    for x in seg.iter_mut() {
+                        *x = rng.normal_f32(0.0, 0.02);
+                    }
+                }
+                "ones" => seg.fill(1.0),
+                _ => seg.fill(0.0),
+            }
+        }
+        ParamStore { model: spec.name.clone(), data }
+    }
+
+    pub fn zeros_like(&self) -> Vec<f32> {
+        vec![0.0f32; self.data.len()]
+    }
+
+    /// View one named tensor (row-major).
+    pub fn tensor<'a>(&'a self, spec: &ModelSpec, name: &str) -> Result<&'a [f32]> {
+        let t = spec
+            .param_layout
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("unknown tensor `{name}`"))?;
+        Ok(&self.data[t.offset..t.offset + t.size])
+    }
+
+    // ------------------------------------------------------------ checkpoint
+
+    /// Save: magic | header_len u32 LE | header json | raw f32 LE.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let header = Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("total", Json::num(self.data.len() as f64)),
+            ("dtype", Json::str("f32")),
+        ])
+        .to_string();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        let bytes: Vec<u8> =
+            self.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ParamStore> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a d3llm checkpoint");
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = json::parse(std::str::from_utf8(&hbytes)?)
+            .map_err(|e| anyhow!("{e}"))?;
+        let model = header
+            .req("model")?
+            .as_str()
+            .ok_or_else(|| anyhow!("bad header"))?
+            .to_string();
+        let total = header
+            .req("total")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("bad header"))?;
+        let mut raw = Vec::new();
+        f.read_to_end(&mut raw)?;
+        if raw.len() != total * 4 {
+            bail!(
+                "checkpoint {path:?}: payload {} bytes, header says {}",
+                raw.len(),
+                total * 4
+            );
+        }
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(ParamStore { model, data })
+    }
+
+    /// Validate compatibility with a model spec before serving/training.
+    pub fn check(&self, spec: &ModelSpec) -> Result<()> {
+        if self.model != spec.name {
+            bail!(
+                "checkpoint is for model `{}`, executable wants `{}`",
+                self.model,
+                spec.name
+            );
+        }
+        if self.data.len() != spec.total_params {
+            bail!(
+                "checkpoint has {} params, model `{}` wants {}",
+                self.data.len(),
+                spec.name,
+                spec.total_params
+            );
+        }
+        Ok(())
+    }
+}
+
+/// AdamW optimiser state (first/second moments + step counter), persisted
+/// alongside the params so training can resume.
+pub struct OptState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl OptState {
+    pub fn new(n: usize) -> OptState {
+        OptState { m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+}

@@ -1,0 +1,398 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them once on the
+//! CPU PJRT client, and executes them from the Rust request path.
+//!
+//! Design notes:
+//!   * HLO **text** is the interchange format (see aot.py / DESIGN.md).
+//!   * Executables are compiled lazily on first use and memoised, so a
+//!     serving process only pays for the graphs its decode strategy needs.
+//!   * `TypedArgs` validates every call against the manifest signature
+//!     (shape, dtype, argument order) — a mismatched call fails loudly in
+//!     the runtime instead of silently inside XLA.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArgSpec, DType, ExecSpec, Manifest};
+
+/// Per-executable call statistics (the L3 profiler reads these).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    /// Host-side time spent building input literals.
+    pub upload_secs: f64,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    executables: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+    /// Device-resident parameter buffers (perf: skip re-uploading the flat
+    /// weight vector on every forward). Keyed by a content fingerprint.
+    param_bufs: RefCell<HashMap<u64, PjRtBuffer>>,
+    /// Hot-path toggle: route `run_buffered` through execute_b with the
+    /// cached parameter buffer (default on; flip for A/B perf runs).
+    buffered: std::cell::Cell<bool>,
+}
+
+/// Non-parameter argument for the buffered hot path.
+pub enum ArgData<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// Content fingerprint for a parameter vector (strided FNV — parameters
+/// change only on checkpoint swaps, never mid-decode).
+pub fn param_fingerprint(params: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325 ^ params.len() as u64;
+    let stride = (params.len() / 64).max(1);
+    for i in (0..params.len()).step_by(stride) {
+        h ^= params[i].to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Engine {
+    /// Load the manifest from `dir` and create a CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir,
+            executables: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+            param_bufs: RefCell::new(HashMap::new()),
+            buffered: std::cell::Cell::new(true),
+        })
+    }
+
+    /// Toggle the buffered (device-resident params + execute_b) hot path.
+    pub fn set_buffered(&self, on: bool) {
+        self.buffered.set(on);
+    }
+
+    pub fn buffered(&self) -> bool {
+        self.buffered.get()
+    }
+
+    /// Drop cached device parameter buffers (e.g. after a checkpoint swap
+    /// storm in tests).
+    pub fn clear_param_cache(&self) {
+        self.param_bufs.borrow_mut().clear();
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch memoised) executable by manifest name.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.exec(name)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling `{name}`: {e:?}"))?;
+        eprintln!(
+            "[engine] compiled `{name}` in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        self.executables.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of executables (used by the server at startup so
+    /// first-request latency is not a compile).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with validated inputs; returns decomposed outputs.
+    pub fn run(&self, name: &str, args: TypedArgs) -> Result<Vec<Literal>> {
+        let spec = self.manifest.exec(name)?.clone();
+        args.validate(&spec)?;
+        self.ensure_compiled(name)?;
+
+        let t0 = Instant::now();
+        let outputs = {
+            let execs = self.executables.borrow();
+            let exe = execs.get(name).unwrap();
+            let result = exe
+                .execute::<Literal>(&args.literals)
+                .map_err(|e| anyhow!("executing `{name}`: {e:?}"))?;
+            result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching `{name}` output: {e:?}"))?
+        };
+        let elapsed = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.borrow_mut();
+            let s = stats.entry(name.to_string()).or_default();
+            s.calls += 1;
+            s.total_secs += elapsed;
+            s.upload_secs += args.upload_secs;
+        }
+
+        // Graphs are lowered with return_tuple=True: decompose.
+        let parts = outputs
+            .to_tuple()
+            .map_err(|e| anyhow!("`{name}` output not a tuple: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "`{name}` returned {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Buffered hot path: params live on device (uploaded once per
+    /// checkpoint), remaining args go straight to device buffers, and the
+    /// graph runs via execute_b — no Literal round-trip on the inputs.
+    pub fn run_buffered(&self, name: &str, params: &[f32],
+                        rest: &[ArgData]) -> Result<Vec<Literal>> {
+        let spec = self.manifest.exec(name)?.clone();
+        if rest.len() + 1 != spec.inputs.len() {
+            bail!("`{name}` expects {} inputs, got {}", spec.inputs.len(),
+                  rest.len() + 1);
+        }
+        if spec.inputs[0].shape != [params.len()] {
+            bail!("`{name}` param length mismatch");
+        }
+        self.ensure_compiled(name)?;
+
+        let t_up = Instant::now();
+        // ---- cached device-resident parameter buffer
+        let key = param_fingerprint(params);
+        if !self.param_bufs.borrow().contains_key(&key) {
+            let buf = self
+                .client
+                .buffer_from_host_buffer(params, &[params.len()], None)
+                .map_err(|e| anyhow!("param upload: {e:?}"))?;
+            self.param_bufs.borrow_mut().insert(key, buf);
+        }
+        // ---- fresh buffers for the per-call arguments
+        let mut fresh: Vec<PjRtBuffer> = Vec::with_capacity(rest.len());
+        for (i, arg) in rest.iter().enumerate() {
+            let want = &spec.inputs[i + 1];
+            let buf = match arg {
+                ArgData::F32(data, shape) => {
+                    if want.dtype != DType::F32 || want.shape != *shape {
+                        bail!("`{name}` arg {} shape/dtype mismatch", i + 1);
+                    }
+                    self.client.buffer_from_host_buffer(data, shape, None)
+                }
+                ArgData::I32(data, shape) => {
+                    if want.dtype != DType::I32 || want.shape != *shape {
+                        bail!("`{name}` arg {} shape/dtype mismatch", i + 1);
+                    }
+                    self.client.buffer_from_host_buffer(data, shape, None)
+                }
+            }
+            .map_err(|e| anyhow!("arg upload: {e:?}"))?;
+            fresh.push(buf);
+        }
+        let upload = t_up.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let outputs = {
+            let bufs = self.param_bufs.borrow();
+            let pbuf = bufs.get(&key).unwrap();
+            let mut all: Vec<&PjRtBuffer> = Vec::with_capacity(rest.len() + 1);
+            all.push(pbuf);
+            all.extend(fresh.iter());
+            let execs = self.executables.borrow();
+            let exe = execs.get(name).unwrap();
+            let result = exe
+                .execute_b::<&PjRtBuffer>(&all)
+                .map_err(|e| anyhow!("executing `{name}` (buffered): {e:?}"))?;
+            result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching `{name}` output: {e:?}"))?
+        };
+        let elapsed = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.borrow_mut();
+            let s = stats.entry(name.to_string()).or_default();
+            s.calls += 1;
+            s.total_secs += elapsed + upload;
+            s.upload_secs += upload;
+        }
+
+        let parts = outputs
+            .to_tuple()
+            .map_err(|e| anyhow!("`{name}` output not a tuple: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!("`{name}` returned {} outputs, manifest says {}",
+                  parts.len(), spec.outputs.len());
+        }
+        Ok(parts)
+    }
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+}
+
+/// Input builder that records host-side upload cost and validates against
+/// the manifest signature.
+pub struct TypedArgs {
+    literals: Vec<Literal>,
+    kinds: Vec<(Vec<usize>, DType)>,
+    upload_secs: f64,
+}
+
+impl TypedArgs {
+    pub fn new() -> Self {
+        TypedArgs { literals: Vec::new(), kinds: Vec::new(), upload_secs: 0.0 }
+    }
+
+    pub fn f32(mut self, data: &[f32], shape: &[usize]) -> Result<Self> {
+        let t0 = Instant::now();
+        let lit = literal_f32(data, shape)?;
+        self.upload_secs += t0.elapsed().as_secs_f64();
+        self.literals.push(lit);
+        self.kinds.push((shape.to_vec(), DType::F32));
+        Ok(self)
+    }
+
+    pub fn i32(mut self, data: &[i32], shape: &[usize]) -> Result<Self> {
+        let t0 = Instant::now();
+        let lit = literal_i32(data, shape)?;
+        self.upload_secs += t0.elapsed().as_secs_f64();
+        self.literals.push(lit);
+        self.kinds.push((shape.to_vec(), DType::I32));
+        Ok(self)
+    }
+
+    pub fn scalar_f32(mut self, x: f32) -> Self {
+        self.literals.push(Literal::scalar(x));
+        self.kinds.push((vec![], DType::F32));
+        self
+    }
+
+    pub fn scalar_i32(mut self, x: i32) -> Self {
+        self.literals.push(Literal::scalar(x));
+        self.kinds.push((vec![], DType::I32));
+        self
+    }
+
+    fn validate(&self, spec: &ExecSpec) -> Result<()> {
+        if self.kinds.len() != spec.inputs.len() {
+            bail!(
+                "`{}` expects {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                self.kinds.len()
+            );
+        }
+        for (i, (got, want)) in
+            self.kinds.iter().zip(spec.inputs.iter()).enumerate()
+        {
+            if got.0 != want.shape || got.1 != want.dtype {
+                bail!(
+                    "`{}` arg {i} (`{}`): got {:?}/{:?}, manifest wants {:?}/{:?}",
+                    spec.name,
+                    want.name,
+                    got.0,
+                    got.1,
+                    want.shape,
+                    want.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for TypedArgs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ----------------------------------------------------------------- literals
+
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != n {
+        bail!("literal_f32: data len {} != shape {:?}", data.len(), shape);
+    }
+    let lit = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != n {
+        bail!("literal_i32: data len {} != shape {:?}", data.len(), shape);
+    }
+    let lit = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Read a literal back as Vec<f32>, validating the element count.
+pub fn to_vec_f32(lit: &Literal, spec: &ArgSpec) -> Result<Vec<f32>> {
+    let v = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("reading `{}`: {e:?}", spec.name))?;
+    if v.len() != spec.elements() {
+        bail!("`{}`: got {} elements, want {}", spec.name, v.len(),
+              spec.elements());
+    }
+    Ok(v)
+}
+
+pub fn to_vec_i32(lit: &Literal, spec: &ArgSpec) -> Result<Vec<i32>> {
+    let v = lit
+        .to_vec::<i32>()
+        .map_err(|e| anyhow!("reading `{}`: {e:?}", spec.name))?;
+    if v.len() != spec.elements() {
+        bail!("`{}`: got {} elements, want {}", spec.name, v.len(),
+              spec.elements());
+    }
+    Ok(v)
+}
+
+pub fn scalar_f32_out(lit: &Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("scalar out: {e:?}"))?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty scalar"))
+}

@@ -1,0 +1,312 @@
+//! artifacts/manifest.json loader — the ABI between the Python AOT build
+//! and this runtime. Every shape, dtype, argument order and compile-time
+//! constant the executables were lowered with is recorded there; the Rust
+//! side validates against it instead of assuming.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Constants {
+    pub vocab: usize,
+    pub pad_id: i32,
+    pub mask_id: i32,
+    pub eos_id: i32,
+    pub bos_id: i32,
+    pub sep_id: i32,
+    pub s_max: usize,
+    pub s_train: usize,
+    pub gen_max: usize,
+    pub gen_train: usize,
+    pub window: usize,
+    pub block: usize,
+    pub verify_w: usize,
+    pub b_train: usize,
+    pub b_traj: usize,
+    pub rank_never: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub s_max: usize,
+    pub d_kv: usize,
+    pub total_params: usize,
+    pub param_layout: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub constants: Constants,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub executables: BTreeMap<String, ExecSpec>,
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("field `{key}` is not a number"))
+}
+
+fn get_i32(j: &Json, key: &str) -> Result<i32> {
+    Ok(j.req(key)?
+        .as_i64()
+        .ok_or_else(|| anyhow!("field `{key}` is not a number"))? as i32)
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field `{key}` is not a string"))?
+        .to_string())
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect()
+}
+
+fn parse_arg(j: &Json) -> Result<ArgSpec> {
+    let dtype = match get_str(j, "dtype")?.as_str() {
+        "f32" => DType::F32,
+        "i32" => DType::I32,
+        other => bail!("unsupported dtype `{other}`"),
+    };
+    Ok(ArgSpec {
+        name: get_str(j, "name")?,
+        shape: parse_shape(j.req("shape")?)?,
+        dtype,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let version = get_usize(&j, "format_version")?;
+        if version != 1 {
+            bail!("unsupported manifest format_version {version}");
+        }
+
+        let c = j.req("constants")?;
+        let constants = Constants {
+            vocab: get_usize(c, "vocab")?,
+            pad_id: get_i32(c, "pad_id")?,
+            mask_id: get_i32(c, "mask_id")?,
+            eos_id: get_i32(c, "eos_id")?,
+            bos_id: get_i32(c, "bos_id")?,
+            sep_id: get_i32(c, "sep_id")?,
+            s_max: get_usize(c, "s_max")?,
+            s_train: get_usize(c, "s_train")?,
+            gen_max: get_usize(c, "gen_max")?,
+            gen_train: get_usize(c, "gen_train")?,
+            window: get_usize(c, "window")?,
+            block: get_usize(c, "block")?,
+            verify_w: get_usize(c, "verify_w")?,
+            b_train: get_usize(c, "b_train")?,
+            b_traj: get_usize(c, "b_traj")?,
+            rank_never: get_i32(c, "rank_never")?,
+        };
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models is not an object"))?
+        {
+            let mut layout = Vec::new();
+            let mut expect_offset = 0usize;
+            for t in m
+                .req("param_layout")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("param_layout not array"))?
+            {
+                let spec = TensorSpec {
+                    name: get_str(t, "name")?,
+                    shape: parse_shape(t.req("shape")?)?,
+                    offset: get_usize(t, "offset")?,
+                    size: get_usize(t, "size")?,
+                    init: get_str(t, "init")?,
+                };
+                if spec.offset != expect_offset {
+                    bail!("param layout hole at `{}`", spec.name);
+                }
+                if spec.size != spec.shape.iter().product::<usize>() {
+                    bail!("param size mismatch at `{}`", spec.name);
+                }
+                expect_offset += spec.size;
+                layout.push(spec);
+            }
+            let spec = ModelSpec {
+                name: name.clone(),
+                d_model: get_usize(m, "d_model")?,
+                n_layers: get_usize(m, "n_layers")?,
+                n_heads: get_usize(m, "n_heads")?,
+                d_head: get_usize(m, "d_head")?,
+                d_ff: get_usize(m, "d_ff")?,
+                vocab: get_usize(m, "vocab")?,
+                s_max: get_usize(m, "s_max")?,
+                d_kv: get_usize(m, "d_kv")?,
+                total_params: get_usize(m, "total_params")?,
+                param_layout: layout,
+            };
+            if spec.total_params != expect_offset {
+                bail!("model `{name}` total_params != layout sum");
+            }
+            if spec.d_kv != spec.n_heads * spec.d_head {
+                bail!("model `{name}` d_kv mismatch");
+            }
+            models.insert(name.clone(), spec);
+        }
+
+        let mut executables = BTreeMap::new();
+        for e in j
+            .req("executables")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("executables not array"))?
+        {
+            let spec = ExecSpec {
+                name: get_str(e, "name")?,
+                file: get_str(e, "file")?,
+                model: get_str(e, "model")?,
+                inputs: e
+                    .req("inputs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("inputs not array"))?
+                    .iter()
+                    .map(parse_arg)
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .req("outputs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("outputs not array"))?
+                    .iter()
+                    .map(parse_arg)
+                    .collect::<Result<_>>()?,
+            };
+            if !models.contains_key(&spec.model) {
+                bail!("executable `{}` references unknown model", spec.name);
+            }
+            executables.insert(spec.name.clone(), spec);
+        }
+
+        Ok(Manifest { constants, models, executables })
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown executable `{name}`"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model `{name}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "format_version": 1,
+      "constants": {"vocab":128,"pad_id":0,"mask_id":1,"eos_id":2,"bos_id":3,
+        "sep_id":4,"s_max":384,"s_train":192,"gen_max":128,"gen_train":96,
+        "window":96,"block":32,"verify_w":16,"b_train":8,"b_traj":8,
+        "rank_never":100000},
+      "models": {"main": {"name":"main","d_model":4,"n_layers":1,"n_heads":2,
+        "d_head":2,"d_ff":8,"vocab":128,"s_max":384,"d_kv":4,
+        "total_params":12,
+        "param_layout":[
+          {"name":"a","shape":[2,3],"offset":0,"size":6,"init":"normal"},
+          {"name":"b","shape":[6],"offset":6,"size":6,"init":"zeros"}]}},
+      "executables": [{"name":"x","file":"x.hlo.txt","model":"main",
+        "inputs":[{"name":"p","shape":[12],"dtype":"f32"}],
+        "outputs":[{"name":"o","shape":[],"dtype":"i32"}]}]
+    }"#;
+
+    #[test]
+    fn parses_minimal() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.constants.block, 32);
+        assert_eq!(m.models["main"].total_params, 12);
+        assert_eq!(m.executables["x"].inputs[0].elements(), 12);
+        assert_eq!(m.executables["x"].outputs[0].elements(), 1);
+    }
+
+    #[test]
+    fn rejects_layout_hole() {
+        let bad = MINI.replace("\"offset\":6", "\"offset\":7");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = MINI.replace("\"format_version\": 1", "\"format_version\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_model_ref() {
+        let bad = MINI.replace("\"model\":\"main\"", "\"model\":\"nope\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime: manifest ABI + executable engine.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, TypedArgs};
+pub use manifest::Manifest;

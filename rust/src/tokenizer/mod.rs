@@ -1,0 +1,278 @@
+//! Word-level tokenizer over the 128-token vocabulary the models were
+//! AOT-compiled against.
+//!
+//! The synthetic task families (DESIGN.md §1) use a constrained token
+//! grammar: digits are encoded digit-by-digit, everything else is a word
+//! token. Ids 0..=4 are the specials the executables were compiled with
+//! (PAD/MASK/EOS/BOS/SEP); the rest of the table is fixed here and checked
+//! against the manifest's vocab size.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+pub const PAD: i32 = 0;
+pub const MASK: i32 = 1;
+pub const EOS: i32 = 2;
+pub const BOS: i32 = 3;
+pub const SEP: i32 = 4;
+
+/// Non-special word list. Order is ABI: changing it invalidates every
+/// trained checkpoint.
+const WORDS: &[&str] = &[
+    // 5..14: digits
+    "0", "1", "2", "3", "4", "5", "6", "7", "8", "9",
+    // 15..: arithmetic / structure
+    "+", "-", "*", "/", "%", "=", "(", ")", "[", "]", ";", ":", ",", "->",
+    // task keywords
+    "EVAL", "STEP", "ANS", "MAP", "FILTER", "FOLD", "REV", "SORT", "MIN",
+    "MAX", "SUM", "LEN", "OUT", "IN", "PROG", "RUN", "GT", "LT", "EQ", "ODD",
+    "EVEN", "ADD", "MUL", "SUB", "NEG", "ABS", "HEAD", "TAIL", "LAST",
+    "TAKE", "DROP", "IF", "THEN", "ELSE", "DEF", "RET", "CALL", "VAR",
+    "SET", "GET", "LIST", "NUM", "BEGIN", "END", "Q", "A", "X", "Y", "Z",
+    "COUNT", "ZIP", "CONCAT", "PAIR", "FST", "SND", "INC", "DEC", "DUP",
+    "SWAP", "POP", "PUSH", "NIL", "TRUE", "FALSE", "NOT", "AND", "OR",
+    "XOR", "SHL", "SHR", "MOD", "POW", "SQ", "ROOT", "FLOOR", "CEIL",
+    "ROUND", "SIGN", "GCD", "LCM", "FIB", "FACT", "PRIME", "DIV", "REM",
+    "LOOP", "DONE", "SKIP", "STOP", "GO", "AT", "BY", "TO", "OF", "NO",
+    "YES",
+];
+
+pub struct Tokenizer {
+    vocab: usize,
+    word_to_id: HashMap<&'static str, i32>,
+    id_to_word: Vec<String>,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Result<Tokenizer> {
+        let needed = 5 + WORDS.len();
+        if needed > vocab {
+            bail!("vocab {vocab} too small for {needed} tokens");
+        }
+        let mut word_to_id = HashMap::new();
+        let mut id_to_word =
+            vec!["<pad>", "<mask>", "<eos>", "<bos>", "<sep>"]
+                .into_iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>();
+        for (i, w) in WORDS.iter().enumerate() {
+            word_to_id.insert(*w, (5 + i) as i32);
+            id_to_word.push(w.to_string());
+        }
+        // pad table to vocab with unused slots
+        while id_to_word.len() < vocab {
+            id_to_word.push(format!("<unused{}>", id_to_word.len()));
+        }
+        Ok(Tokenizer { vocab, word_to_id, id_to_word })
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn id(&self, word: &str) -> Result<i32> {
+        self.word_to_id
+            .get(word)
+            .copied()
+            .ok_or_else(|| anyhow!("unknown token `{word}`"))
+    }
+
+    /// Encode a whitespace-separated string. Multi-digit numbers must
+    /// already be split (use `push_number`).
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    /// Append the digit tokens of a non-negative number.
+    pub fn push_number(&self, out: &mut Vec<i32>, n: i64) {
+        if n < 0 {
+            out.push(self.id("-").unwrap());
+            self.push_number(out, -n);
+            return;
+        }
+        let s = n.to_string();
+        for ch in s.chars() {
+            let d = ch.to_digit(10).unwrap() as i32;
+            out.push(5 + d);
+        }
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut parts = Vec::new();
+        for &id in ids {
+            if id == EOS {
+                break;
+            }
+            if id == PAD {
+                continue;
+            }
+            parts.push(
+                self.id_to_word
+                    .get(id as usize)
+                    .cloned()
+                    .unwrap_or_else(|| format!("<bad{id}>")),
+            );
+        }
+        parts.join(" ")
+    }
+
+    /// Parse a (possibly multi-digit, possibly negative) number from token
+    /// ids starting at `i`; returns (value, next index).
+    pub fn parse_number(&self, ids: &[i32], mut i: usize) -> Option<(i64, usize)> {
+        let mut neg = false;
+        if i < ids.len() && ids[i] == self.id("-").ok()? {
+            neg = true;
+            i += 1;
+        }
+        let mut val: i64 = 0;
+        let mut digits = 0;
+        while i < ids.len() {
+            let d = ids[i] - 5;
+            if !(0..=9).contains(&d) {
+                break;
+            }
+            val = val * 10 + d as i64;
+            digits += 1;
+            i += 1;
+        }
+        if digits == 0 {
+            return None;
+        }
+        Some((if neg { -val } else { val }, i))
+    }
+
+    /// Extract the final answer: the number following the last `ANS` token.
+    pub fn extract_answer(&self, ids: &[i32]) -> Option<i64> {
+        let ans = self.id("ANS").ok()?;
+        let mut result = None;
+        let mut i = 0;
+        while i < ids.len() {
+            if ids[i] == EOS {
+                break;
+            }
+            if ids[i] == ans {
+                if let Some((v, next)) = self.parse_number(ids, i + 1) {
+                    result = Some(v);
+                    i = next;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+        result
+    }
+
+    /// Extract the list following the last `OUT [ ... ]`.
+    pub fn extract_out_list(&self, ids: &[i32]) -> Option<Vec<i64>> {
+        let out_id = self.id("OUT").ok()?;
+        let lb = self.id("[").ok()?;
+        let rb = self.id("]").ok()?;
+        let mut result = None;
+        let mut i = 0;
+        while i < ids.len() {
+            if ids[i] == EOS {
+                break;
+            }
+            if ids[i] == out_id && i + 1 < ids.len() && ids[i + 1] == lb {
+                let comma = self.id(",").ok()?;
+                let mut xs = Vec::new();
+                let mut j = i + 2;
+                let mut ok = false;
+                while j < ids.len() {
+                    if ids[j] == rb {
+                        ok = true;
+                        break;
+                    }
+                    if ids[j] == comma {
+                        j += 1;
+                        continue;
+                    }
+                    match self.parse_number(ids, j) {
+                        Some((v, next)) => {
+                            xs.push(v);
+                            j = next;
+                        }
+                        None => break,
+                    }
+                }
+                if ok {
+                    result = Some(xs);
+                    i = j;
+                }
+            }
+            i += 1;
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tk() -> Tokenizer {
+        Tokenizer::new(128).unwrap()
+    }
+
+    #[test]
+    fn vocab_fits() {
+        let t = tk();
+        assert!(t.vocab() == 128);
+        assert_eq!(t.id("0").unwrap(), 5);
+        assert_eq!(t.id("9").unwrap(), 14);
+    }
+
+    #[test]
+    fn number_roundtrip() {
+        let t = tk();
+        for n in [0i64, 7, 10, 99, 123, -5, -40] {
+            let mut ids = Vec::new();
+            t.push_number(&mut ids, n);
+            let (v, next) = t.parse_number(&ids, 0).unwrap();
+            assert_eq!(v, n);
+            assert_eq!(next, ids.len());
+        }
+    }
+
+    #[test]
+    fn encode_decode() {
+        let t = tk();
+        let ids = t.encode("EVAL 3 + 5 = ANS 8").unwrap();
+        assert_eq!(t.decode(&ids), "EVAL 3 + 5 = ANS 8");
+    }
+
+    #[test]
+    fn extract_answer_takes_last() {
+        let t = tk();
+        let mut ids = t.encode("STEP ANS 3 ; ANS").unwrap();
+        t.push_number(&mut ids, 42);
+        ids.push(EOS);
+        // garbage after EOS must be ignored
+        ids.extend(t.encode("ANS 9 9").unwrap());
+        assert_eq!(t.extract_answer(&ids), Some(42));
+    }
+
+    #[test]
+    fn extract_out_list_works() {
+        let t = tk();
+        let mut ids = t.encode("OUT [").unwrap();
+        t.push_number(&mut ids, 12);
+        t.push_number(&mut ids, 3);
+        ids.extend(t.encode("]").unwrap());
+        // digits are greedy: without separators `12 3` reads as 123 —
+        // which is why the list grammar uses `,` separators.
+        assert_eq!(t.extract_out_list(&ids), Some(vec![123]));
+        let mut ids2 = t.encode("OUT [").unwrap();
+        t.push_number(&mut ids2, 12);
+        ids2.extend(t.encode(",").unwrap());
+        t.push_number(&mut ids2, 3);
+        ids2.extend(t.encode("]").unwrap());
+        assert_eq!(t.extract_out_list(&ids2), Some(vec![12, 3]));
+    }
+
+    #[test]
+    fn unknown_token_rejected() {
+        assert!(tk().encode("FOOBARBAZ").is_err());
+    }
+}

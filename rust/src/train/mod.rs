@@ -1,0 +1,194 @@
+//! Training / distillation driver: drives the fused AOT train-step
+//! executables from Rust. Python never sees a weight.
+
+pub mod presets;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::{train_corpus, Family, Sample};
+use crate::model::{exec, OptState, ParamStore};
+use crate::runtime::Engine;
+use crate::tokenizer::Tokenizer;
+use crate::trajectory::{self, build_noisy, Curriculum, Recipe};
+use crate::util::rng::Rng;
+
+/// One training run (a named checkpoint).
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    /// checkpoint name: saved to checkpoints/<name>.ckpt
+    pub name: String,
+    /// "main" or "draft"
+    pub model: String,
+    pub recipe: Recipe,
+    pub curriculum: Curriculum,
+    pub steps: usize,
+    pub lr: f32,
+    /// certainty-forcing entropy regulariser weight
+    pub ent_weight: f32,
+    pub corpus_size: usize,
+    pub mixture: Vec<(Family, f64)>,
+    pub seed: u64,
+    /// initialise student weights from this checkpoint
+    pub init_from: Option<String>,
+    /// teacher checkpoint for pseudo-trajectory extraction
+    pub teacher: Option<String>,
+    pub log_every: usize,
+}
+
+impl TrainCfg {
+    pub fn ckpt_path(dir: &Path, name: &str) -> PathBuf {
+        dir.join(format!("{name}.ckpt"))
+    }
+}
+
+/// Progress record for loss curves (bench/figures reads these).
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub t: f64,
+    pub k: usize,
+}
+
+pub struct TrainOutcome {
+    pub params: ParamStore,
+    pub log: Vec<StepLog>,
+}
+
+/// Run one training job; saves the checkpoint and returns the loss log.
+pub fn train(eng: &Engine, cfg: &TrainCfg, ckpt_dir: &Path)
+             -> Result<TrainOutcome> {
+    let c = eng.manifest.constants.clone();
+    let spec = eng.manifest.model(&cfg.model)?.clone();
+    let tk = Tokenizer::new(c.vocab)?;
+
+    let exec_name = match (cfg.recipe, cfg.model.as_str()) {
+        (Recipe::ArLm, "main") => "train_ar",
+        (Recipe::ArLm, "draft") => "draft_train_ar",
+        (Recipe::ArLm, m) => bail!("no AR train exec for model `{m}`"),
+        (_, "main") => "train_diff",
+        (_, m) => bail!("no diffusion train exec for model `{m}`"),
+    };
+
+    // ---- corpus
+    let corpus: Vec<Sample> =
+        train_corpus(&tk, &cfg.mixture, cfg.corpus_size, cfg.seed);
+
+    // ---- weights
+    let mut params = match &cfg.init_from {
+        Some(name) => {
+            let p = ParamStore::load(TrainCfg::ckpt_path(ckpt_dir, name))?;
+            p.check(&spec)?;
+            eprintln!("[train:{}] init from `{name}`", cfg.name);
+            p
+        }
+        None => ParamStore::init(&spec, cfg.seed ^ 0x1111),
+    };
+
+    // ---- pseudo-trajectories (cached per teacher+corpus)
+    let ranks = if cfg.recipe == Recipe::PseudoTraj {
+        let tname = cfg
+            .teacher
+            .as_ref()
+            .ok_or_else(|| anyhow!("PseudoTraj requires a teacher"))?;
+        let teacher = ParamStore::load(TrainCfg::ckpt_path(ckpt_dir, tname))?;
+        teacher.check(&spec)?;
+        Some(trajectory::extract_all(
+            eng,
+            &teacher.data,
+            &corpus,
+            trajectory::default_cache_dir(),
+            tname,
+        )?)
+    } else {
+        None
+    };
+
+    // ---- loop
+    let (b, s) = (c.b_train, c.s_train);
+    let mut opt = OptState::new(params.data.len());
+    let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
+    let mut order: Vec<usize> = (0..corpus.len()).collect();
+    rng.shuffle(&mut order);
+    let mut cursor = 0usize;
+    let mut log = Vec::with_capacity(cfg.steps);
+    let t0 = std::time::Instant::now();
+
+    for step in 1..=cfg.steps {
+        let progress = (step - 1) as f64 / (cfg.steps.max(2) - 1) as f64;
+        let t = cfg.curriculum.t_at(progress);
+        let k = cfg.curriculum.k_at(progress);
+
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut labels = Vec::with_capacity(b * s);
+        let mut loss_mask = Vec::with_capacity(b * s);
+        let mut attn_valid = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            if cursor >= order.len() {
+                rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            let idx = order[cursor];
+            cursor += 1;
+            let ex = build_noisy(
+                &corpus[idx],
+                cfg.recipe,
+                ranks.as_ref().map(|r| &r[idx]),
+                t,
+                k,
+                &c,
+                &mut rng,
+            );
+            tokens.extend(ex.tokens);
+            labels.extend(ex.labels);
+            loss_mask.extend(ex.loss_mask);
+            attn_valid.extend(ex.attn_valid);
+        }
+
+        let out = exec::train_step(
+            eng, exec_name, &params.data, &opt.m, &opt.v, step as i32,
+            &tokens, &labels, &loss_mask, &attn_valid, cfg.lr,
+            cfg.ent_weight,
+        )?;
+        params.data = out.params;
+        opt.m = out.m;
+        opt.v = out.v;
+        opt.step = step as i32;
+
+        log.push(StepLog { step, loss: out.loss, t, k });
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!(
+                "[train:{}] step {step}/{} loss {:.4} t={:.2} k={k} ({:.1}s)",
+                cfg.name,
+                cfg.steps,
+                out.loss,
+                t,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+
+    let path = TrainCfg::ckpt_path(ckpt_dir, &cfg.name);
+    params.save(&path)?;
+    eprintln!(
+        "[train:{}] saved {path:?} after {} steps ({:.1}s)",
+        cfg.name,
+        cfg.steps,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(TrainOutcome { params, log })
+}
+
+/// Write a loss-curve CSV next to the results.
+pub fn save_log(log: &[StepLog], path: impl AsRef<Path>) -> Result<()> {
+    let rows: Vec<Vec<String>> = log
+        .iter()
+        .map(|l| {
+            vec![l.step.to_string(), format!("{:.6}", l.loss),
+                 format!("{:.3}", l.t), l.k.to_string()]
+        })
+        .collect();
+    crate::util::write_csv(path, &["step", "loss", "t", "k"], &rows)
+}

@@ -1,0 +1,85 @@
+//! Curriculum schedules (paper §3.1): the mask-ratio ramp ("curriculum
+//! noise level", 0.0 -> 0.8) and the decoding-window ramp ("curriculum
+//! window size", 16 -> 32), both linear in training progress.
+
+/// Linear schedule between two endpoints over training progress [0, 1].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Schedule {
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Schedule {
+    pub fn fixed(v: f64) -> Schedule {
+        Schedule { start: v, end: v }
+    }
+
+    pub fn at(&self, progress: f64) -> f64 {
+        let p = progress.clamp(0.0, 1.0);
+        self.start + (self.end - self.start) * p
+    }
+}
+
+/// Full curriculum configuration for a distillation run.
+#[derive(Debug, Clone, Copy)]
+pub struct Curriculum {
+    /// mask ratio t
+    pub noise: Schedule,
+    /// decoding window length k (tokens)
+    pub window: Schedule,
+}
+
+impl Curriculum {
+    /// The paper's default: t 0.0 -> 0.8, k 16 -> 32.
+    pub fn paper_default() -> Curriculum {
+        Curriculum {
+            noise: Schedule { start: 0.0, end: 0.8 },
+            window: Schedule { start: 16.0, end: 32.0 },
+        }
+    }
+
+    /// Ablation: no curricula (fixed t = 0.5, k = 32).
+    pub fn fixed(t: f64, k: f64) -> Curriculum {
+        Curriculum { noise: Schedule::fixed(t), window: Schedule::fixed(k) }
+    }
+
+    pub fn t_at(&self, progress: f64) -> f64 {
+        self.noise.at(progress).clamp(0.0, 1.0)
+    }
+
+    pub fn k_at(&self, progress: f64) -> usize {
+        (self.window.at(progress).round() as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_ramp() {
+        let s = Schedule { start: 0.0, end: 0.8 };
+        assert_eq!(s.at(0.0), 0.0);
+        assert!((s.at(0.5) - 0.4).abs() < 1e-12);
+        assert!((s.at(1.0) - 0.8).abs() < 1e-12);
+        assert!((s.at(2.0) - 0.8).abs() < 1e-12); // clamped
+    }
+
+    #[test]
+    fn paper_defaults() {
+        let c = Curriculum::paper_default();
+        assert_eq!(c.k_at(0.0), 16);
+        assert_eq!(c.k_at(1.0), 32);
+        assert_eq!(c.t_at(0.0), 0.0);
+        assert!((c.t_at(1.0) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_is_flat() {
+        let c = Curriculum::fixed(0.5, 32.0);
+        for p in [0.0, 0.3, 0.9] {
+            assert_eq!(c.t_at(p), 0.5);
+            assert_eq!(c.k_at(p), 32);
+        }
+    }
+}

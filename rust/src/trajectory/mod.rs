@@ -1,0 +1,142 @@
+//! Pseudo-trajectory pipeline (paper §3.1): teacher decoding-order
+//! extraction (with a disk cache), the noisy-sequence construction
+//! equation, and the curriculum schedules.
+
+pub mod curriculum;
+pub mod noisy;
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Sample;
+use crate::model::exec;
+use crate::runtime::Engine;
+use crate::tokenizer::MASK;
+use crate::util::fnv1a;
+
+pub use curriculum::Curriculum;
+pub use noisy::{build_noisy, NoisyExample, Recipe};
+
+/// Teacher decoding ranks for one sample: rank[i] = step at which the
+/// teacher unmasked training-sequence position i (RANK_NEVER elsewhere).
+pub type Ranks = Vec<i32>;
+
+/// Extract pseudo-trajectories for a corpus, batched through the on-device
+/// `trajectory` executable. Results are cached on disk keyed by
+/// (teacher checkpoint, corpus) content hashes — extraction runs once per
+/// teacher and is reused by every distillation variant.
+pub fn extract_all(eng: &Engine, teacher: &[f32], samples: &[Sample],
+                   cache_dir: impl AsRef<Path>, label: &str)
+                   -> Result<Vec<Ranks>> {
+    let c = eng.manifest.constants.clone();
+    let (b, s) = (c.b_traj, c.s_train);
+
+    let key = cache_key(teacher, samples);
+    let path = cache_dir.as_ref().join(format!("traj_{label}_{key:016x}.bin"));
+    if path.exists() {
+        if let Ok(cached) = load_cache(&path, samples.len(), s) {
+            eprintln!("[traj] cache hit: {path:?}");
+            return Ok(cached);
+        }
+    }
+
+    let mut out: Vec<Ranks> = Vec::with_capacity(samples.len());
+    let t0 = std::time::Instant::now();
+    for chunk in samples.chunks(b) {
+        let mut tokens = vec![MASK; b * s];
+        let mut attn_valid = vec![0.0f32; b * s];
+        let mut gen_mask = vec![0.0f32; b * s];
+        for (bi, sample) in chunk.iter().enumerate() {
+            let p = sample.prompt.len();
+            if p + c.gen_train > s {
+                bail!("prompt too long for trajectory extraction: {p}");
+            }
+            tokens[bi * s..bi * s + p].copy_from_slice(&sample.prompt);
+            for i in 0..p + c.gen_train {
+                attn_valid[bi * s + i] = 1.0;
+            }
+            for i in p..p + c.gen_train {
+                gen_mask[bi * s + i] = 1.0;
+            }
+        }
+        let r = exec::trajectory(eng, teacher, &tokens, &attn_valid,
+                                 &gen_mask)?;
+        for (bi, _) in chunk.iter().enumerate() {
+            out.push(r.rank[bi * s..(bi + 1) * s].to_vec());
+        }
+    }
+    eprintln!(
+        "[traj] extracted {} trajectories in {:.1}s",
+        out.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    save_cache(&path, &out)?;
+    Ok(out)
+}
+
+fn cache_key(teacher: &[f32], samples: &[Sample]) -> u64 {
+    // params: hash a strided sample (hashing 400k floats fully is fine too,
+    // but this keeps corpus rebuilds cheap)
+    let mut h = 0xD3u64;
+    for (i, x) in teacher.iter().enumerate() {
+        if i % 97 == 0 {
+            h = h.rotate_left(13) ^ x.to_bits() as u64;
+        }
+    }
+    for s in samples.iter().take(64) {
+        let bytes: Vec<u8> =
+            s.prompt.iter().flat_map(|t| t.to_le_bytes()).collect();
+        h = h.rotate_left(7) ^ fnv1a(&bytes);
+    }
+    h ^ (samples.len() as u64) << 48
+}
+
+fn save_cache(path: &Path, ranks: &[Ranks]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"D3TRAJ01")?;
+    f.write_all(&(ranks.len() as u32).to_le_bytes())?;
+    for r in ranks {
+        let bytes: Vec<u8> = r.iter().flat_map(|x| x.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+fn load_cache(path: &Path, n: usize, s: usize) -> Result<Vec<Ranks>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != b"D3TRAJ01" {
+        bail!("bad trajectory cache magic");
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    if u32::from_le_bytes(len4) as usize != n {
+        bail!("trajectory cache holds a different corpus size");
+    }
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    if raw.len() != n * s * 4 {
+        bail!("trajectory cache truncated");
+    }
+    Ok(raw
+        .chunks_exact(s * 4)
+        .map(|chunk| {
+            chunk
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        })
+        .collect())
+}
+
+/// Default trajectory cache directory.
+pub fn default_cache_dir() -> PathBuf {
+    PathBuf::from("data/cache")
+}

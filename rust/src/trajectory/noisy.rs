@@ -1,0 +1,293 @@
+//! Noisy-sequence construction (paper §3.1, Figure 2).
+//!
+//! Given ground truth (x, y), a teacher pseudo-trajectory T (rank per
+//! position), mask ratio t and decode window w = (s, s+k]:
+//!
+//!   prefix j <= s             -> ground-truth token
+//!   window s < j <= s+k       -> visible iff the teacher had unmasked it
+//!                                by state s + ceil(k(1-t)) (so the window
+//!                                is masked at ratio t, in *teacher order*)
+//!   beyond j > s+k            -> MASK
+//!
+//! The student is trained to predict ground-truth labels at every masked
+//! generation position (CE loss), which teaches the teacher's unmasking
+//! order: exactly the tokens the teacher would have decoded by now are
+//! visible, everything else must be inferred in parallel.
+//!
+//! (The paper's formula indexes the trajectory at s + ceil(k t); with t
+//! described as the *mask* ratio ramping 0 -> 0.8 "easier to harder", the
+//! consistent reading is that the window retains ratio t of masked tokens,
+//! i.e. state s + ceil(k(1-t)); we implement that and note the discrepancy
+//! in DESIGN.md.)
+//!
+//! Also implements the contenders' recipes: random-mask distillation
+//! (dParallel's certainty-forcing analog) and plain masked-diffusion
+//! pretraining (LLaDA-style) and AR LM batches.
+
+use crate::data::Sample;
+use crate::runtime::manifest::Constants;
+use crate::tokenizer::{EOS, MASK};
+use crate::util::rng::Rng;
+
+/// Loss weight for EOS-padding positions (beyond the response). The gen
+/// region is much longer than typical responses, so unweighted padding
+/// makes EOS dominate the masked-token distribution and a small model
+/// floods sequences with EOS; downweighting keeps the supervision (no
+/// unsupervised garbage enters the decode context) without the prior.
+pub const PAD_LOSS_WEIGHT: f32 = 0.15;
+
+use super::Ranks;
+
+/// Which masking recipe builds the batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Recipe {
+    /// LLaDA-style pretraining: iid masking at t ~ U(0.15, 1).
+    DiffusionPretrain,
+    /// Paper's pseudo-trajectory distillation (needs ranks).
+    PseudoTraj,
+    /// Window-random masking (no trajectory): the "no pseudo-trajectory"
+    /// ablation row and the dParallel certainty-forcing analog.
+    RandomMask,
+    /// Causal LM (AR baseline, draft model, Fast-dLLM-v2 init).
+    ArLm,
+}
+
+/// One training example in executable layout (length s_train each).
+pub struct NoisyExample {
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    pub attn_valid: Vec<f32>,
+}
+
+/// Ground-truth token for generation offset j (response padded with EOS —
+/// the teacher "continues generation beyond the EOS token", §3.1).
+#[inline]
+fn gt(sample: &Sample, j: usize) -> i32 {
+    sample.response.get(j).copied().unwrap_or(EOS)
+}
+
+/// Build one noisy example.
+///
+/// `t` = mask ratio, `k` = decode window length, `ranks` = teacher
+/// trajectory (PseudoTraj only). `s` (prefix length) is sampled uniformly.
+pub fn build_noisy(sample: &Sample, recipe: Recipe, ranks: Option<&Ranks>,
+                   t: f64, k: usize, c: &Constants, rng: &mut Rng)
+                   -> NoisyExample {
+    let s_train = c.s_train;
+    let n = c.gen_train;
+    let p = sample.prompt.len();
+    assert!(p + n <= s_train, "prompt {p} too long");
+
+    let mut tokens = vec![0i32; s_train];
+    let mut labels = vec![0i32; s_train];
+    let mut loss_mask = vec![0.0f32; s_train];
+    let mut attn_valid = vec![0.0f32; s_train];
+    tokens[..p].copy_from_slice(&sample.prompt);
+    labels[..p].copy_from_slice(&sample.prompt);
+    for v in attn_valid.iter_mut().take(p + n) {
+        *v = 1.0;
+    }
+
+    match recipe {
+        Recipe::ArLm => {
+            // tokens = prompt ++ y; labels shifted left; loss on the
+            // positions that *predict* response tokens.
+            for j in 0..n {
+                tokens[p + j] = gt(sample, j);
+            }
+            for i in 0..p + n - 1 {
+                labels[i] = tokens[i + 1];
+            }
+            labels[p + n - 1] = EOS;
+            // predictions for response tokens come from positions
+            // p-1 .. p+resp_len-1 (incl. the EOS prediction)
+            let resp_end = p + sample.response.len().min(n);
+            for i in (p - 1)..resp_end.min(s_train) {
+                loss_mask[i] = 1.0;
+            }
+        }
+        Recipe::DiffusionPretrain => {
+            let ratio = 0.15 + 0.85 * rng.f64();
+            let resp = sample.response.len().min(n);
+            for j in 0..n {
+                let y = gt(sample, j);
+                labels[p + j] = y;
+                if rng.bool(ratio) {
+                    tokens[p + j] = MASK;
+                    loss_mask[p + j] =
+                        if j < resp { 1.0 } else { PAD_LOSS_WEIGHT };
+                } else {
+                    tokens[p + j] = y;
+                }
+            }
+        }
+        Recipe::PseudoTraj | Recipe::RandomMask => {
+            let k = k.clamp(1, n);
+            let s = rng.usize(n - k + 1); // prefix length (decoded tokens)
+            let visible_in_window = ((k as f64) * (1.0 - t)).ceil() as usize;
+            // per-window random visibility for RandomMask
+            let mut vis_idx: Vec<usize> = (s..s + k).collect();
+            if recipe == Recipe::RandomMask {
+                rng.shuffle(&mut vis_idx);
+            }
+            let rank_cut = (s + visible_in_window) as i32;
+            for j in 0..n {
+                let y = gt(sample, j);
+                labels[p + j] = y;
+                let visible = if j < s {
+                    true
+                } else if j >= s + k {
+                    false
+                } else {
+                    match recipe {
+                        Recipe::PseudoTraj => {
+                            let r = ranks.expect("PseudoTraj needs ranks");
+                            r[p + j] < rank_cut
+                        }
+                        _ => {
+                            // first `visible_in_window` of the shuffled set
+                            vis_idx
+                                .iter()
+                                .take(visible_in_window)
+                                .any(|&v| v == j)
+                        }
+                    }
+                };
+                if visible {
+                    tokens[p + j] = y;
+                } else {
+                    tokens[p + j] = MASK;
+                    loss_mask[p + j] = if j < sample.response.len().min(n) {
+                        1.0
+                    } else {
+                        PAD_LOSS_WEIGHT
+                    };
+                }
+            }
+        }
+    }
+
+    NoisyExample { tokens, labels, loss_mask, attn_valid }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Family};
+    use crate::tokenizer::Tokenizer;
+
+    fn consts() -> Constants {
+        Constants {
+            vocab: 128, pad_id: 0, mask_id: 1, eos_id: 2, bos_id: 3,
+            sep_id: 4, s_max: 384, s_train: 192, gen_max: 128, gen_train: 96,
+            window: 96, block: 32, verify_w: 16, b_train: 8, b_traj: 8,
+            rank_never: 100_000,
+        }
+    }
+
+    fn sample() -> Sample {
+        let tk = Tokenizer::new(128).unwrap();
+        generate(&tk, Family::Gsm8k, &mut Rng::new(3))
+    }
+
+    /// Synthetic left-to-right trajectory over the gen region.
+    fn ltr_ranks(s: &Sample, c: &Constants) -> Ranks {
+        let mut r = vec![c.rank_never; c.s_train];
+        for j in 0..c.gen_train {
+            r[s.prompt.len() + j] = j as i32;
+        }
+        r
+    }
+
+    #[test]
+    fn pseudo_traj_respects_trajectory_order() {
+        let c = consts();
+        let s = sample();
+        let ranks = ltr_ranks(&s, &c);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let ex = build_noisy(&s, Recipe::PseudoTraj, Some(&ranks), 0.5,
+                                 32, &c, &mut rng);
+            let p = s.prompt.len();
+            // with a left-to-right trajectory the visible gen prefix is
+            // contiguous: no unmasked position after the first MASK
+            let gen = &ex.tokens[p..p + c.gen_train];
+            if let Some(first_mask) = gen.iter().position(|&t| t == MASK) {
+                assert!(gen[first_mask..].iter().all(|&t| t == MASK));
+            }
+            // loss exactly on masked gen positions
+            for j in 0..c.gen_train {
+                let masked = ex.tokens[p + j] == MASK;
+                assert_eq!(ex.loss_mask[p + j] > 0.0, masked);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_ratio_monotone_in_t() {
+        let c = consts();
+        let s = sample();
+        let ranks = ltr_ranks(&s, &c);
+        let count = |t: f64| {
+            let mut rng = Rng::new(7);
+            let mut total = 0usize;
+            for _ in 0..50 {
+                let ex = build_noisy(&s, Recipe::PseudoTraj, Some(&ranks), t,
+                                     32, &c, &mut rng);
+                total +=
+                    ex.loss_mask.iter().filter(|&&m| m > 0.0).count();
+            }
+            total
+        };
+        let lo = count(0.1);
+        let hi = count(0.9);
+        assert!(hi > lo, "masking must grow with t: {lo} vs {hi}");
+    }
+
+    #[test]
+    fn random_mask_window_ratio() {
+        let c = consts();
+        let s = sample();
+        let mut rng = Rng::new(5);
+        // t=1 => whole window masked
+        let ex = build_noisy(&s, Recipe::RandomMask, None, 1.0, 32, &c,
+                             &mut rng);
+        let p = s.prompt.len();
+        let masked =
+            ex.tokens[p..p + c.gen_train].iter().filter(|&&t| t == MASK)
+                .count();
+        assert!(masked >= 32, "window fully masked plus tail: {masked}");
+    }
+
+    #[test]
+    fn ar_lm_labels_are_shifted() {
+        let c = consts();
+        let s = sample();
+        let mut rng = Rng::new(6);
+        let ex = build_noisy(&s, Recipe::ArLm, None, 0.0, 32, &c, &mut rng);
+        let p = s.prompt.len();
+        // position p-1 predicts the first response token
+        assert_eq!(ex.labels[p - 1], s.response[0]);
+        assert!(ex.loss_mask[p - 1] > 0.0);
+        // inside the response, label = next token
+        assert_eq!(ex.labels[p], ex.tokens[p + 1]);
+        // no masks anywhere
+        assert!(!ex.tokens.iter().any(|&t| t == MASK));
+    }
+
+    #[test]
+    fn pretrain_loss_only_on_masks() {
+        let c = consts();
+        let s = sample();
+        let mut rng = Rng::new(8);
+        let ex = build_noisy(&s, Recipe::DiffusionPretrain, None, 0.0, 32,
+                             &c, &mut rng);
+        for i in 0..c.s_train {
+            if ex.loss_mask[i] > 0.0 {
+                assert_eq!(ex.tokens[i], MASK);
+                assert_ne!(ex.labels[i], MASK);
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
+//! and positional arguments, with typed getters and a usage printer.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. A `--key` followed by a non-`--` token is a
+    /// key/value pair; a `--key` followed by another `--` token (or end),
+    /// or a known boolean flag, stands alone.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        const BOOL_FLAGS: &[&str] =
+            &["fast", "force", "strict", "verbose", "help"];
+        let mut out = Args::default();
+        let items: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let key = key.to_string();
+                out.present.push(key.clone());
+                let takes_value = i + 1 < items.len()
+                    && !items[i + 1].starts_with("--")
+                    && !BOOL_FLAGS.contains(&key.as_str());
+                if takes_value {
+                    out.flags.insert(key, items[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.insert(key, String::new());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.present.iter().any(|k| k == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str()).filter(|s| !s.is_empty())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.f64_or(key, default as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("train --steps 200 --fast teacher --lr 2e-3");
+        assert_eq!(a.positional, vec!["train", "teacher"]);
+        assert_eq!(a.usize_or("steps", 0), 200);
+        assert!(a.has("fast"));
+        assert!((a.f64_or("lr", 0.0) - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.usize_or("port", 7070), 7070);
+        assert_eq!(a.str_or("host", "127.0.0.1"), "127.0.0.1");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("--verbose --steps 3");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), None);
+        assert_eq!(a.usize_or("steps", 0), 3);
+    }
+}

@@ -1,0 +1,46 @@
+//! Dependency-free substrates: PRNG, JSON, CLI parsing, stats/benching.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a CSV file (header + rows) under `results/`, creating parents.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Hex-less short hash (FNV-1a) for cache keys / file names.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv_stable() {
+        assert_eq!(super::fnv1a(b"d3llm"), super::fnv1a(b"d3llm"));
+        assert_ne!(super::fnv1a(b"a"), super::fnv1a(b"b"));
+    }
+}

@@ -1,0 +1,138 @@
+//! Integration: the training/distillation pipeline — short real training
+//! runs through the AOT train executables, trajectory extraction + cache,
+//! checkpoint round-trips. Heavier than unit tests; still < 1 min total.
+
+use d3llm::data::{main_mixture, Family};
+use d3llm::model::ParamStore;
+use d3llm::runtime::Engine;
+use d3llm::tokenizer::Tokenizer;
+use d3llm::train::{train, TrainCfg};
+use d3llm::trajectory::{self, Curriculum, Recipe};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing");
+        return None;
+    }
+    Some(Engine::load("artifacts").unwrap())
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("d3llm_test_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn mini_cfg(name: &str, recipe: Recipe, steps: usize) -> TrainCfg {
+    TrainCfg {
+        name: name.into(),
+        model: "main".into(),
+        recipe,
+        curriculum: Curriculum::paper_default(),
+        steps,
+        lr: 2.5e-3,
+        ent_weight: 0.0,
+        corpus_size: 64,
+        mixture: main_mixture(),
+        seed: 77,
+        init_from: None,
+        teacher: None,
+        log_every: 0,
+    }
+}
+
+#[test]
+fn diffusion_training_reduces_loss_and_checkpoints() {
+    let Some(eng) = engine() else { return };
+    let dir = tmp_dir("train");
+    let cfg = mini_cfg("t-diff", Recipe::DiffusionPretrain, 30);
+    let out = train(&eng, &cfg, &dir).unwrap();
+    let first = out.log.first().unwrap().loss;
+    let last = out.log.last().unwrap().loss;
+    assert!(last < first, "loss {first} -> {last}");
+
+    // checkpoint round-trip
+    let loaded =
+        ParamStore::load(TrainCfg::ckpt_path(&dir, "t-diff")).unwrap();
+    assert_eq!(loaded.data.len(), out.params.data.len());
+    assert_eq!(loaded.data, out.params.data);
+    loaded.check(eng.manifest.model("main").unwrap()).unwrap();
+}
+
+#[test]
+fn curriculum_schedules_progress_through_training() {
+    let Some(eng) = engine() else { return };
+    let dir = tmp_dir("curr");
+    let mut cfg = mini_cfg("t-curr", Recipe::RandomMask, 20);
+    cfg.curriculum = Curriculum::paper_default();
+    let out = train(&eng, &cfg, &dir).unwrap();
+    // t ramps 0 -> 0.8, k ramps 16 -> 32
+    assert!(out.log.first().unwrap().t < 0.1);
+    assert!(out.log.last().unwrap().t > 0.7);
+    assert_eq!(out.log.first().unwrap().k, 16);
+    assert_eq!(out.log.last().unwrap().k, 32);
+}
+
+#[test]
+fn full_distillation_path_teacher_to_student() {
+    let Some(eng) = engine() else { return };
+    let dir = tmp_dir("distill");
+    // teacher
+    let teacher_cfg = mini_cfg("t-teacher", Recipe::DiffusionPretrain, 25);
+    train(&eng, &teacher_cfg, &dir).unwrap();
+    // student distilled on the teacher's pseudo-trajectories
+    let mut student_cfg = mini_cfg("t-student", Recipe::PseudoTraj, 10);
+    student_cfg.init_from = Some("t-teacher".into());
+    student_cfg.teacher = Some("t-teacher".into());
+    let out = train(&eng, &student_cfg, &dir).unwrap();
+    assert!(out.log.last().unwrap().loss.is_finite());
+    assert!(TrainCfg::ckpt_path(&dir, "t-student").exists());
+}
+
+#[test]
+fn trajectory_extraction_caches_and_reloads() {
+    let Some(eng) = engine() else { return };
+    let c = eng.manifest.constants.clone();
+    let tk = Tokenizer::new(c.vocab).unwrap();
+    let spec = eng.manifest.model("main").unwrap().clone();
+    let teacher = ParamStore::init(&spec, 9);
+    let corpus = d3llm::data::train_corpus(
+        &tk, &[(Family::Gsm8k, 1.0)], 12, 5);
+    let cache_dir = tmp_dir("trajcache");
+
+    let t0 = std::time::Instant::now();
+    let first = trajectory::extract_all(&eng, &teacher.data, &corpus,
+                                        &cache_dir, "test").unwrap();
+    let cold = t0.elapsed();
+    assert_eq!(first.len(), corpus.len());
+
+    let t1 = std::time::Instant::now();
+    let second = trajectory::extract_all(&eng, &teacher.data, &corpus,
+                                         &cache_dir, "test").unwrap();
+    let warm = t1.elapsed();
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a, b, "cache must return identical ranks");
+    }
+    assert!(warm < cold / 5, "cache hit must be much faster: {warm:?} vs {cold:?}");
+
+    // rank sanity on one sample: gen region ranks are a permutation
+    let p = corpus[0].prompt.len();
+    let mut ranks: Vec<i32> =
+        first[0][p..p + c.gen_train].to_vec();
+    ranks.sort();
+    assert_eq!(ranks, (0..c.gen_train as i32).collect::<Vec<_>>());
+}
+
+#[test]
+fn ar_training_works_for_draft_model() {
+    let Some(eng) = engine() else { return };
+    let dir = tmp_dir("draft");
+    let mut cfg = mini_cfg("t-draft", Recipe::ArLm, 25);
+    cfg.model = "draft".into();
+    let out = train(&eng, &cfg, &dir).unwrap();
+    let first = out.log.first().unwrap().loss;
+    let last = out.log.last().unwrap().loss;
+    assert!(last < first, "draft loss {first} -> {last}");
+}

@@ -1,0 +1,262 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state machines, metric math). No proptest offline — a seeded-RNG
+//! harness sweeps many random cases per property with failure reporting.
+
+use d3llm::coordinator::batcher::Batcher;
+use d3llm::data::{self, Family};
+use d3llm::decode::seq_state::SeqState;
+use d3llm::metrics::aup::{aup_from_points, Point};
+use d3llm::tokenizer::{Tokenizer, EOS, MASK};
+use d3llm::util::json;
+use d3llm::util::rng::Rng;
+
+/// Run `f` over `cases` seeded cases; panic with the seed on failure.
+fn prop(name: &str, cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37).wrapping_add(1));
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut rng)),
+        );
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ----------------------------------------------------------------- batcher
+
+#[test]
+fn prop_batcher_orders_by_priority_then_fifo() {
+    prop("batcher order", 200, |rng| {
+        let n = 1 + rng.usize(60);
+        let mut b: Batcher<(usize, i64)> = Batcher::new(n);
+        let mut items = Vec::new();
+        for i in 0..n {
+            let pri = rng.range(-3, 4);
+            items.push((i, pri));
+            assert!(b.push((i, pri), pri));
+        }
+        let mut popped = Vec::new();
+        while let Some(j) = b.pop() {
+            popped.push(j.payload);
+        }
+        assert_eq!(popped.len(), n);
+        // sorted by (priority desc, insertion asc)
+        for w in popped.windows(2) {
+            let (i0, p0) = w[0];
+            let (i1, p1) = w[1];
+            assert!(p0 > p1 || (p0 == p1 && i0 < i1),
+                    "bad order: {:?} then {:?}", w[0], w[1]);
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_never_exceeds_capacity() {
+    prop("batcher capacity", 100, |rng| {
+        let cap = 1 + rng.usize(10);
+        let mut b: Batcher<u32> = Batcher::new(cap);
+        let mut accepted = 0;
+        for i in 0..40u32 {
+            if b.push(i, 0) {
+                accepted += 1;
+            }
+            if rng.bool(0.3) {
+                if b.pop().is_some() {
+                    accepted -= 1;
+                }
+            }
+            assert!(b.len() <= cap);
+            assert_eq!(b.len(), accepted);
+        }
+    });
+}
+
+// --------------------------------------------------------------- SeqState
+
+#[test]
+fn prop_seq_state_block_accounting() {
+    prop("seq block accounting", 200, |rng| {
+        let block = 32;
+        let n_blocks = 1 + rng.usize(4);
+        let gen = block * n_blocks;
+        let prompt_len = 1 + rng.usize(100);
+        let prompt: Vec<i32> = (0..prompt_len).map(|_| 5).collect();
+        let mut st = SeqState::new(&prompt, gen, block, 384);
+
+        // unmask a random subset
+        let mut decoded = vec![false; gen];
+        for j in 0..gen {
+            if rng.bool(0.5) {
+                st.tokens[prompt_len + j] = 9;
+                decoded[j] = true;
+            }
+        }
+        for b in 0..n_blocks {
+            let want =
+                decoded[b * block..(b + 1) * block].iter().filter(|&&x| x)
+                    .count();
+            assert_eq!(st.decoded_in_block(b), want);
+            assert_eq!(st.block_complete(b), want == block);
+        }
+        let first = st.first_incomplete_block();
+        match first {
+            None => assert!(st.all_decoded()),
+            Some(b) => {
+                for earlier in 0..b {
+                    assert!(st.block_complete(earlier));
+                }
+                assert!(!st.block_complete(b));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_eos_settled_iff_no_mask_before_eos() {
+    prop("eos settled", 300, |rng| {
+        let prompt: Vec<i32> = vec![5; 4];
+        let mut st = SeqState::new(&prompt, 64, 32, 384);
+        // random fill
+        for j in 0..64 {
+            let r = rng.f64();
+            st.tokens[4 + j] = if r < 0.4 {
+                MASK
+            } else if r < 0.5 {
+                EOS
+            } else {
+                9
+            };
+        }
+        let settled = st.eos_settled();
+        match st.first_eos() {
+            None => assert!(!settled),
+            Some(e) => {
+                let mask_before =
+                    st.tokens[4..e].iter().any(|&t| t == MASK);
+                assert_eq!(settled, !mask_before);
+                if settled {
+                    // output ends exactly at EOS
+                    let out = st.output();
+                    assert_eq!(*out.last().unwrap(), EOS);
+                    assert_eq!(out.len(), e - 4 + 1);
+                }
+            }
+        }
+    });
+}
+
+// -------------------------------------------------------------------- AUP
+
+#[test]
+fn prop_aup_monotone_in_added_lossless_point() {
+    // adding a higher-parallelism point at unchanged accuracy never hurts
+    prop("aup monotone", 300, |rng| {
+        let base_acc = 40.0 + rng.f64() * 50.0;
+        let mut pts = vec![Point { rho: 1.0, acc: base_acc }];
+        let mut rho = 1.0;
+        for _ in 0..rng.usize(5) {
+            rho += rng.f64() * 3.0 + 0.1;
+            pts.push(Point {
+                rho,
+                acc: base_acc - rng.f64() * 3.0,
+            });
+        }
+        let before = aup_from_points(&pts, 3.0, None);
+        let mut extended = pts.clone();
+        extended.push(Point { rho: rho + 2.0, acc: base_acc });
+        let after = aup_from_points(&extended, 3.0, None);
+        assert!(after >= before - 1e-9, "{before} -> {after}");
+    });
+}
+
+#[test]
+fn prop_aup_bounded_by_unweighted_area() {
+    // W(y) <= 1, so AUP <= the plain trapezoid area (same point set)
+    prop("aup bounded", 300, |rng| {
+        let mut pts = Vec::new();
+        let mut rho = 0.5 + rng.f64();
+        let top = 50.0 + rng.f64() * 40.0;
+        for _ in 0..2 + rng.usize(5) {
+            pts.push(Point { rho, acc: top - rng.f64() * 4.0 });
+            rho += 0.2 + rng.f64() * 2.0;
+        }
+        pts.sort_by(|a, b| a.rho.partial_cmp(&b.rho).unwrap());
+        let aup = aup_from_points(&pts, 3.0, None);
+        let mut area = pts[0].rho * pts[0].acc;
+        for w in pts.windows(2) {
+            area += (w[1].rho - w[0].rho) * (w[1].acc + w[0].acc) / 2.0;
+        }
+        assert!(aup <= area + 1e-9, "aup {aup} > area {area}");
+    });
+}
+
+#[test]
+fn prop_aup_alpha_monotone() {
+    prop("aup alpha monotone", 200, |rng| {
+        let mut pts = Vec::new();
+        let mut rho = 1.0;
+        let top = 60.0 + rng.f64() * 30.0;
+        for i in 0..4 {
+            pts.push(Point { rho, acc: top - i as f64 * rng.f64() * 2.0 });
+            rho += 1.0 + rng.f64();
+        }
+        let a1 = aup_from_points(&pts, 1.0, None);
+        let a5 = aup_from_points(&pts, 5.0, None);
+        assert!(a5 <= a1 + 1e-9);
+    });
+}
+
+// ------------------------------------------------------------ data + json
+
+#[test]
+fn prop_generated_samples_roundtrip_their_checker() {
+    let tk = Tokenizer::new(128).unwrap();
+    prop("sample checker", 150, |rng| {
+        for &fam in &[Family::Gsm8k, Family::Math, Family::HumanEval,
+                      Family::Mbpp] {
+            let s = data::generate(&tk, fam, rng);
+            assert!(data::check(&tk, &s, &s.response, false));
+            // token budget invariants the executables rely on
+            assert!(s.prompt.len() + 96 <= 192);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    prop("json roundtrip", 300, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(parsed, v, "{text}");
+    });
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> json::Json {
+    use json::Json;
+    if depth == 0 {
+        return match rng.usize(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::num((rng.range(-1000, 1000) as f64) / 8.0),
+            _ => Json::str(format!("s{}", rng.next_u64() % 1000)),
+        };
+    }
+    match rng.usize(6) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => Json::num(rng.range(-100000, 100000) as f64),
+        3 => Json::str("weird \"chars\"\n\t\\ ☃".to_string()),
+        4 => Json::arr((0..rng.usize(4)).map(|_| random_json(rng, depth - 1))),
+        _ => {
+            let n = rng.usize(4);
+            Json::Obj(
+                (0..n)
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Integration: AOT artifacts load, compile and execute through PJRT, and
+//! the serving-graph semantics hold end to end (pallas == xla variants,
+//! decode-vs-prefill consistency, AR cache exactness).
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use d3llm::model::{exec, KvCache, ParamStore};
+use d3llm::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load("artifacts").expect("engine"))
+}
+
+#[test]
+fn manifest_and_prefill_roundtrip() {
+    let Some(eng) = engine() else { return };
+    let c = eng.manifest.constants.clone();
+    assert_eq!(c.block, 32);
+    let spec = eng.manifest.model("main").unwrap().clone();
+    let params = ParamStore::init(&spec, 7);
+
+    let s = c.s_max;
+    let mut tokens = vec![c.mask_id; s];
+    for (i, t) in tokens.iter_mut().enumerate().take(64) {
+        *t = 5 + (i as i32 % 100);
+    }
+    let valid: Vec<f32> =
+        (0..s).map(|i| if i < 128 { 1.0 } else { 0.0 }).collect();
+
+    let px = exec::prefill(&eng, "prefill_xla", &params.data, &tokens, &valid)
+        .expect("prefill_xla");
+    assert_eq!(px.argmax.len(), s);
+    assert_eq!(px.kcache.len(), spec.n_layers * s * spec.d_kv);
+    // stats are sane on valid positions
+    for i in 0..128 {
+        assert!(px.conf[i] > 0.0 && px.conf[i] <= 1.0 + 1e-5, "conf[{i}]");
+        assert!(
+            px.entropy[i] >= -1e-4
+                && px.entropy[i] <= (spec.vocab as f32).ln() + 1e-3,
+            "entropy[{i}]={}",
+            px.entropy[i]
+        );
+        assert!((0..spec.vocab as i32).contains(&px.argmax[i]));
+    }
+
+    // the Pallas hot path must agree with the fused-XLA path
+    let pp =
+        exec::prefill(&eng, "prefill_pallas", &params.data, &tokens, &valid)
+            .expect("prefill_pallas");
+    for i in 0..128 {
+        assert_eq!(pp.argmax[i], px.argmax[i], "argmax[{i}]");
+        assert!((pp.conf[i] - px.conf[i]).abs() < 1e-4, "conf[{i}]");
+        assert!((pp.entropy[i] - px.entropy[i]).abs() < 1e-3, "ent[{i}]");
+    }
+}
+
+#[test]
+fn decode_against_empty_cache_matches_prefill() {
+    let Some(eng) = engine() else { return };
+    let c = eng.manifest.constants.clone();
+    let spec = eng.manifest.model("main").unwrap().clone();
+    let params = ParamStore::init(&spec, 9);
+    let w = c.window;
+
+    // a window of real tokens at positions 0..w with nothing cached
+    let win_tokens: Vec<i32> = (0..w).map(|i| 5 + (i as i32 % 90)).collect();
+    let win_pos: Vec<i32> = (0..w as i32).collect();
+    let win_valid = vec![1.0f32; w];
+    let cache = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
+
+    let d = exec::decode_window(&eng, "decode_xla", &params.data, &win_tokens,
+                                &win_pos, &win_valid, &cache)
+        .expect("decode");
+
+    // reference: prefill over the same tokens, valid only on 0..w
+    let mut tokens = vec![0i32; c.s_max];
+    tokens[..w].copy_from_slice(&win_tokens);
+    let valid: Vec<f32> =
+        (0..c.s_max).map(|i| if i < w { 1.0 } else { 0.0 }).collect();
+    let p = exec::prefill(&eng, "prefill_xla", &params.data, &tokens, &valid)
+        .expect("prefill");
+
+    for i in 0..w {
+        assert_eq!(d.argmax[i], p.argmax[i], "argmax[{i}]");
+        assert!((d.conf[i] - p.conf[i]).abs() < 1e-4);
+    }
+    // window KV rows must equal the prefill cache rows at those positions
+    for l in 0..spec.n_layers {
+        for i in 0..w {
+            let a = (l * w + i) * spec.d_kv;
+            let b = (l * c.s_max + i) * spec.d_kv;
+            for j in 0..spec.d_kv {
+                assert!(
+                    (d.k_win[a + j] - p.kcache[b + j]).abs() < 1e-4,
+                    "k mismatch l={l} i={i} j={j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ar_cache_is_exact() {
+    let Some(eng) = engine() else { return };
+    let c = eng.manifest.constants.clone();
+    let spec = eng.manifest.model("main").unwrap().clone();
+    let params = ParamStore::init(&spec, 11);
+    let (n_prompt, w) = (50usize, c.verify_w);
+
+    let seq: Vec<i32> = (0..(n_prompt + w) as i32).map(|i| 5 + i % 97).collect();
+    let mut full = vec![0i32; c.s_max];
+    full[..seq.len()].copy_from_slice(&seq);
+    let valid_full: Vec<f32> = (0..c.s_max)
+        .map(|i| if i < n_prompt + w { 1.0 } else { 0.0 })
+        .collect();
+    let reference =
+        exec::prefill(&eng, "ar_prefill", &params.data, &full, &valid_full)
+            .expect("ar_prefill full");
+
+    // cached prefix + windowed verify
+    let mut prompt = vec![0i32; c.s_max];
+    prompt[..n_prompt].copy_from_slice(&seq[..n_prompt]);
+    let valid_p: Vec<f32> = (0..c.s_max)
+        .map(|i| if i < n_prompt { 1.0 } else { 0.0 })
+        .collect();
+    let pre = exec::prefill(&eng, "ar_prefill", &params.data, &prompt, &valid_p)
+        .expect("ar_prefill prompt");
+    let mut cache = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
+    cache.install_full(&pre.kcache, &pre.vcache, 0, n_prompt);
+
+    let win_pos: Vec<i32> =
+        (n_prompt as i32..(n_prompt + w) as i32).collect();
+    let out = exec::decode_window(&eng, "ar_verify", &params.data,
+                                  &seq[n_prompt..], &win_pos,
+                                  &vec![1.0; w], &cache)
+        .expect("ar_verify");
+
+    for i in 0..w {
+        assert_eq!(out.argmax[i], reference.argmax[n_prompt + i],
+                   "argmax[{i}]");
+        assert!((out.conf[i] - reference.conf[n_prompt + i]).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let Some(eng) = engine() else { return };
+    let c = eng.manifest.constants.clone();
+    let spec = eng.manifest.model("main").unwrap().clone();
+    let params = ParamStore::init(&spec, 13);
+    let (b, s) = (c.b_train, c.s_train);
+
+    // memorise a fixed masked batch
+    let mut rng = d3llm::util::rng::Rng::new(5);
+    let mut tokens = vec![0i32; b * s];
+    let mut labels = vec![0i32; b * s];
+    let mut loss_mask = vec![0.0f32; b * s];
+    let attn_valid = vec![1.0f32; b * s];
+    for i in 0..b * s {
+        let t = rng.range(5, c.vocab as i64) as i32;
+        labels[i] = t;
+        if rng.bool(0.3) {
+            tokens[i] = c.mask_id;
+            loss_mask[i] = 1.0;
+        } else {
+            tokens[i] = t;
+        }
+    }
+
+    let mut p = params.data.clone();
+    let mut m = vec![0.0f32; p.len()];
+    let mut v = vec![0.0f32; p.len()];
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 1..=30 {
+        let out = exec::train_step(&eng, "train_diff", &p, &m, &v, step,
+                                   &tokens, &labels, &loss_mask, &attn_valid,
+                                   2e-3, 0.0)
+            .expect("train");
+        if step == 1 {
+            first = out.loss;
+        }
+        last = out.loss;
+        p = out.params;
+        m = out.m;
+        v = out.v;
+    }
+    assert!(last < 0.6 * first, "loss {first} -> {last}");
+}
+
+#[test]
+fn trajectory_ranks_are_block_ordered() {
+    let Some(eng) = engine() else { return };
+    let c = eng.manifest.constants.clone();
+    let spec = eng.manifest.model("main").unwrap().clone();
+    let params = ParamStore::init(&spec, 17);
+    let (b, s, g) = (c.b_traj, c.s_train, c.gen_train);
+    let prompt_len = 32usize;
+
+    let mut tokens = vec![c.mask_id; b * s];
+    let mut attn_valid = vec![0.0f32; b * s];
+    let mut gen_mask = vec![0.0f32; b * s];
+    let mut rng = d3llm::util::rng::Rng::new(23);
+    for bi in 0..b {
+        for i in 0..prompt_len {
+            tokens[bi * s + i] = rng.range(5, c.vocab as i64) as i32;
+        }
+        for i in 0..prompt_len + g {
+            attn_valid[bi * s + i] = 1.0;
+        }
+        for i in prompt_len..prompt_len + g {
+            gen_mask[bi * s + i] = 1.0;
+        }
+    }
+
+    let out = exec::trajectory(&eng, &params.data, &tokens, &attn_valid,
+                               &gen_mask)
+        .expect("trajectory");
+    for bi in 0..b {
+        let ranks: Vec<i32> =
+            (0..g).map(|i| out.rank[bi * s + prompt_len + i]).collect();
+        let mut sorted = ranks.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..g as i32).collect::<Vec<_>>(), "b={bi}");
+        // block-diffusion order
+        let nb = g / c.block;
+        for blk in 0..nb - 1 {
+            let max_this =
+                ranks[blk * c.block..(blk + 1) * c.block].iter().max().unwrap();
+            let min_next = ranks[(blk + 1) * c.block..(blk + 2) * c.block]
+                .iter()
+                .min()
+                .unwrap();
+            assert!(max_this < min_next, "b={bi} blk={blk}");
+        }
+        // prompt untouched
+        for i in 0..prompt_len {
+            assert_eq!(out.rank[bi * s + i], c.rank_never);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Integration: the serving coordinator end to end over a real TCP socket
+//! — request routing, priority batching, stats, malformed input, shutdown.
+//! Needs artifacts; builds a throwaway random-init checkpoint.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use d3llm::coordinator::{self, ServerCfg};
+use d3llm::decode::Strategy;
+use d3llm::model::ParamStore;
+use d3llm::runtime::Manifest;
+use d3llm::util::json;
+
+fn request(addr: &str, line: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    writeln!(stream, "{line}").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    resp.trim().to_string()
+}
+
+#[test]
+fn server_serves_generates_and_shuts_down() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing");
+        return;
+    }
+    // throwaway checkpoint the server can load
+    let manifest = Manifest::load("artifacts").unwrap();
+    let params = ParamStore::init(&manifest.models["main"], 11);
+    std::fs::create_dir_all("checkpoints").unwrap();
+    params.save("checkpoints/test-server.ckpt").unwrap();
+
+    let port = 7891u16;
+    let cfg = ServerCfg {
+        host: "127.0.0.1".into(),
+        port,
+        ckpt: "test-server".into(),
+        strategy: Strategy::FastDllm,
+        variant: "xla".into(),
+        max_queue: 16,
+        decode: None,
+    };
+    let handle = std::thread::spawn(move || {
+        let _ = coordinator::serve(cfg);
+    });
+    let addr = format!("127.0.0.1:{port}");
+    // wait for readiness
+    let mut up = false;
+    for _ in 0..300 {
+        if TcpStream::connect(&addr).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(up, "server did not come up");
+
+    // ---- malformed request -> structured error
+    let resp = request(&addr, "this is not json");
+    let j = json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+
+    // ---- generate
+    let resp = request(
+        &addr,
+        r#"{"id":"g1","prompt":"Q EVAL 3 + 4","gen_len":32}"#,
+    );
+    let j = json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp}");
+    assert_eq!(j.get("id").and_then(|v| v.as_str()), Some("g1"));
+    assert!(j.get("gen_tokens").and_then(|v| v.as_usize()).unwrap() > 0);
+    assert!(j.get("tpf").and_then(|v| v.as_f64()).unwrap() > 0.0);
+
+    // ---- unknown token in prompt -> per-request error, server survives
+    let resp = request(&addr, r#"{"id":"g2","prompt":"BOGUSWORD"}"#);
+    let j = json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+
+    // ---- concurrent requests from multiple clients
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let line = format!(
+                r#"{{"id":"c{i}","prompt":"Q EVAL {i} + 2","gen_len":32,"priority":{i}}}"#
+            );
+            let resp = request(&addr, &line);
+            let j = json::parse(&resp).unwrap();
+            assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true),
+                       "{resp}");
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // ---- stats
+    let resp = request(&addr, r#"{"cmd":"stats"}"#);
+    let j = json::parse(&resp).unwrap();
+    assert!(j.get("served").and_then(|v| v.as_usize()).unwrap() >= 5);
+
+    // ---- shutdown
+    let _ = request(&addr, r#"{"cmd":"shutdown"}"#);
+    for _ in 0..100 {
+        if handle.is_finished() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(handle.is_finished(), "server did not shut down");
+}
