@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         strategy,
         variant: args.str_or("variant", "xla"),
         max_queue: 256,
+        max_concurrent_sessions: args.usize_or("max-sessions", 4),
         decode: None,
     };
     std::thread::spawn(move || {

@@ -1,0 +1,156 @@
+//! Interleaved serving demo: starts the coordinator twice — once with
+//! `max_concurrent_sessions = 1` (classic batch=1 serving) and once with
+//! an interleaving pool — fires the same batch of concurrent requests at
+//! each, and compares per-request latency shape. While the wide run is in
+//! flight it polls `{"cmd":"stats"}` to show the live queue-depth /
+//! active-session gauges the engine worker exports.
+//!
+//!   make artifacts && repro train-all      # once
+//!   cargo run --release --example serve_interleaved -- \
+//!       --requests 8 --max-sessions 8
+//!
+//! Skips politely when artifacts/ is missing (the deterministic
+//! scheduler behavior is covered without artifacts by
+//! tests/scheduler_determinism.rs and benches/interleave.rs).
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use d3llm::coordinator::{self, client_request, ServerCfg};
+use d3llm::data::{self, Family};
+use d3llm::decode::Strategy;
+use d3llm::tokenizer::Tokenizer;
+use d3llm::util::cli::Args;
+use d3llm::util::json;
+use d3llm::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("skipping serve_interleaved: run `make artifacts` first");
+        return Ok(());
+    }
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.usize_or("requests", 8);
+    let width = args.usize_or("max-sessions", 8);
+    let base_port = args.usize_or("port", 7117) as u16;
+    let ckpt = args.str_or("ckpt", "d3llm-llada");
+
+    let tk = Tokenizer::new(128)?;
+    let samples = data::eval_set(&tk, Family::Gsm8k, n_requests, 7);
+    let prompts: Vec<String> =
+        samples.iter().map(|s| tk.decode(&s.prompt)).collect();
+
+    println!("== serve_interleaved: {n_requests} concurrent requests ==");
+    let lat1 = run_once(&ckpt, base_port, 1, &prompts)?;
+    let latn = run_once(&ckpt, base_port + 1, width, &prompts)?;
+
+    let (a, b) = (Summary::of(&lat1), Summary::of(&latn));
+    println!("\nwidth 1      lat p50 {:7.0} ms   p95 {:7.0} ms   max {:7.0} ms",
+             a.p50 * 1e3, a.p95 * 1e3, a.max * 1e3);
+    println!("width {width:<6} lat p50 {:7.0} ms   p95 {:7.0} ms   max {:7.0} ms",
+             b.p50 * 1e3, b.p95 * 1e3, b.max * 1e3);
+    println!("\ninterleaving bounds head-of-line blocking: a short request \
+              now waits one round, not a full decode");
+    Ok(())
+}
+
+fn run_once(ckpt: &str, port: u16, width: usize, prompts: &[String])
+            -> anyhow::Result<Vec<f64>> {
+    let cfg = ServerCfg {
+        host: "127.0.0.1".into(),
+        port,
+        ckpt: ckpt.to_string(),
+        strategy: Strategy::D3llm,
+        variant: "xla".into(),
+        max_queue: 256,
+        max_concurrent_sessions: width,
+        decode: None,
+    };
+    std::thread::spawn(move || {
+        if let Err(e) = coordinator::serve(cfg) {
+            eprintln!("server: {e:#}");
+        }
+    });
+    let addr = format!("127.0.0.1:{port}");
+    wait_for_server(&addr)?;
+    println!("\n-- width {width} on {addr} --");
+
+    // live gauge monitor (the per-session progress the worker publishes)
+    let stop = Arc::new(AtomicBool::new(false));
+    let mon_stop = stop.clone();
+    let mon_addr = addr.clone();
+    let monitor = std::thread::spawn(move || {
+        let mut peak_active = 0usize;
+        while !mon_stop.load(Ordering::Relaxed) {
+            if let Ok(resp) = client_request(&mon_addr, r#"{"cmd":"stats"}"#) {
+                if let Ok(j) = json::parse(&resp) {
+                    let active = j
+                        .get("active_sessions")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(0);
+                    let depth = j
+                        .get("queue_depth")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(0);
+                    if active > peak_active {
+                        peak_active = active;
+                        println!("   [stats] active={active} queued={depth}");
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(200));
+        }
+        peak_active
+    });
+
+    // fire all requests concurrently
+    let mut handles = Vec::new();
+    for (i, prompt) in prompts.iter().enumerate() {
+        let addr = addr.clone();
+        // build through the JSON writer so prompts with quotes/backslashes
+        // stay well-formed
+        let line = json::Json::obj(vec![
+            ("id", json::Json::str(format!("r{i}"))),
+            ("prompt", json::Json::str(prompt.clone())),
+            ("gen_len", json::Json::num(96.0)),
+        ])
+        .to_string();
+        handles.push(std::thread::spawn(move || {
+            let t = Instant::now();
+            let ok = client_request(&addr, &line)
+                .ok()
+                .and_then(|resp| json::parse(&resp).ok())
+                .and_then(|j| j.get("ok").and_then(|v| v.as_bool()))
+                == Some(true);
+            (t.elapsed().as_secs_f64(), ok)
+        }));
+    }
+    let mut latencies = Vec::new();
+    for h in handles {
+        let (lat, ok) = h.join().expect("client thread");
+        if ok {
+            latencies.push(lat);
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let peak = monitor.join().unwrap_or(0);
+    println!("   served {} / {}   peak active sessions {}",
+             latencies.len(), prompts.len(), peak);
+
+    let _ = client_request(&addr, r#"{"cmd":"shutdown"}"#);
+    std::thread::sleep(Duration::from_millis(200));
+    Ok(latencies)
+}
+
+
+fn wait_for_server(addr: &str) -> anyhow::Result<()> {
+    for _ in 0..600 {
+        if TcpStream::connect(addr).is_ok() {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    anyhow::bail!("server did not come up on {addr}")
+}

@@ -1,0 +1,215 @@
+//! `cargo bench --bench interleave` — interleaved multi-session serving
+//! vs. sequential batch=1 serving, fully deterministic (SimBackend, no
+//! artifacts).
+//!
+//! Both schedules run the identical 8-request mixed-gen_len workload and
+//! issue the *identical per-request forwards* (session trajectories are
+//! schedule-independent — see tests/scheduler_determinism.rs). Costs are
+//! charged on the repo's calibrated H100 cost model
+//! (`metrics::GpuCostModel`): on 7-8B models every forward is
+//! weight-bandwidth-bound, so the B concurrent same-shape forwards of one
+//! interleaved round execute as one batched forward costing
+//! `t * batch_factor(B, beta)` with beta = 0.2 (`DEFAULT_BATCH_BETA`)
+//! instead of `t * B` serialized — that amortization is the aggregate
+//! throughput win of keeping the engine busy across requests. Sequential
+//! batch=1 serving decodes one request end-to-end at a time and can never
+//! batch across requests (B = 1 always).
+//!
+//! The bench also reports the latency-shape effects (TTFT, per-request
+//! completion) and the measured host-side scheduling overhead per step,
+//! and asserts the >= 1.5x aggregate-throughput acceptance bar.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use d3llm::coordinator::scheduler::SessionPool;
+use d3llm::decode::{DecodeCfg, DecodeSession, SessionPhase, SimBackend,
+                    Strategy};
+use d3llm::metrics::{batch_factor, GpuCostModel, DEFAULT_BATCH_BETA, H100};
+use d3llm::util::stats::Summary;
+
+const LENS: [usize; 8] = [128, 96, 64, 32, 128, 96, 64, 32];
+
+fn prompt_for(k: usize) -> Vec<i32> {
+    (0..(10 + k % 4)).map(|i| 5 + ((i + 5 * k) % 80) as i32).collect()
+}
+
+fn cfg() -> DecodeCfg {
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false;
+    cfg
+}
+
+#[derive(Debug, Clone)]
+struct Served {
+    tokens: usize,
+    completion: f64,
+    ttft: f64,
+    forwards: usize,
+}
+
+/// Sequential batch=1 serving: each request decodes end-to-end before the
+/// next starts; every forward (prompt prefill included) is batch=1.
+fn run_sequential(sim: &SimBackend, params: &[f32], m: &GpuCostModel)
+                  -> (f64, Vec<Served>) {
+    let mut clock = 0.0;
+    let mut out = Vec::new();
+    for (k, &gen_len) in LENS.iter().enumerate() {
+        let mut s = DecodeSession::new(sim, cfg(), &prompt_for(k), gen_len)
+            .expect("session");
+        let mut ttft = None;
+        loop {
+            let prefill = s.phase() == SessionPhase::Prefill;
+            let (f0, w0) =
+                (s.res.mix.full_forwards, s.res.mix.window_forwards);
+            let done = s.step(sim, params).expect("step");
+            let (f1, w1) =
+                (s.res.mix.full_forwards, s.res.mix.window_forwards);
+            let fulls = (f1 - f0) + usize::from(prefill);
+            clock += m.t_full * fulls as f64
+                + m.t_window * (w1 - w0) as f64;
+            if ttft.is_none() && s.progress().unmasked > 0 {
+                ttft = Some(clock);
+            }
+            if done {
+                break;
+            }
+        }
+        let r = s.finish();
+        out.push(Served {
+            tokens: r.unmasked,
+            completion: clock,
+            ttft: ttft.unwrap_or(clock),
+            forwards: r.forwards + 1, // + prompt prefill
+        });
+    }
+    (clock, out)
+}
+
+/// Interleaved serving over `SessionPool`: all 8 requests live at once,
+/// one round-robin step each per cycle; the round's same-kind forwards
+/// are charged as one batched forward.
+fn run_interleaved(sim: &SimBackend, params: &[f32], m: &GpuCostModel,
+                   beta: f64) -> (f64, Vec<Served>, u64, f64) {
+    let mut pool: SessionPool<usize> = SessionPool::new();
+    for (k, &gen_len) in LENS.iter().enumerate() {
+        let s = DecodeSession::new(sim, cfg(), &prompt_for(k), gen_len)
+            .expect("session");
+        pool.admit(format!("r{k}"), k, s);
+    }
+    let mut clock = 0.0;
+    let mut prev: HashMap<String, d3llm::decode::SessionProgress> =
+        pool.progress().into_iter().collect();
+    let mut ttft: HashMap<String, f64> = HashMap::new();
+    let mut served: Vec<Option<Served>> = (0..LENS.len()).map(|_| None)
+        .collect();
+    let wall = Instant::now();
+    while !pool.is_empty() {
+        let finished = pool.step_round(sim, params);
+        let after: HashMap<String, d3llm::decode::SessionProgress> =
+            pool.progress().into_iter().collect();
+        let (mut b_full, mut b_win) = (0usize, 0usize);
+        for (id, p) in &after {
+            let q = &prev[id];
+            if p.rounds == q.rounds {
+                b_full += 1; // prompt prefill round
+            } else {
+                b_full += p.full_forwards - q.full_forwards;
+                b_win += p.window_forwards - q.window_forwards;
+            }
+        }
+        for f in &finished {
+            let q = &prev[&f.id];
+            let r = f.result.as_ref().expect("sim decode");
+            b_full += r.mix.full_forwards - q.full_forwards;
+            b_win += r.mix.window_forwards - q.window_forwards;
+        }
+        clock += m.t_full * batch_factor(b_full, beta)
+            + m.t_window * batch_factor(b_win, beta);
+        for (id, p) in &after {
+            if p.unmasked > 0 {
+                ttft.entry(id.clone()).or_insert(clock);
+            }
+        }
+        for f in finished {
+            let r = f.result.expect("sim decode");
+            let t = *ttft.entry(f.id.clone()).or_insert(clock);
+            served[f.tag] = Some(Served {
+                tokens: r.unmasked,
+                completion: clock,
+                ttft: t,
+                forwards: r.forwards + 1,
+            });
+        }
+        prev = after;
+    }
+    let host = wall.elapsed().as_secs_f64();
+    let steps = pool.steps_total;
+    (clock, served.into_iter().map(|s| s.expect("all served")).collect(),
+     steps, host)
+}
+
+fn report(name: &str, makespan: f64, served: &[Served]) -> f64 {
+    let tokens: usize = served.iter().map(|s| s.tokens).sum();
+    let lat: Vec<f64> = served.iter().map(|s| s.completion).collect();
+    let ttft: Vec<f64> = served.iter().map(|s| s.ttft).collect();
+    let (l, t) = (Summary::of(&lat), Summary::of(&ttft));
+    let thr = tokens as f64 / makespan;
+    println!(
+        "{name:<14} makespan {makespan:7.2} s   agg {thr:7.1} tok/s   \
+         lat p50/p95 {:.2}/{:.2} s   ttft p50/p95 {:.2}/{:.2} s",
+        l.p50, l.p95, t.p50, t.p95
+    );
+    thr
+}
+
+fn main() {
+    let sim = SimBackend::new(11);
+    let params = vec![0.5f32; 8];
+    let model = H100;
+    let beta = DEFAULT_BATCH_BETA;
+
+    println!(
+        "== interleaved vs sequential serving: {} requests, gen_lens {:?} ==",
+        LENS.len(),
+        LENS
+    );
+    println!(
+        "cost model {} (t_full {:.1} ms, t_window {:.1} ms), batch beta {beta}",
+        model.name,
+        model.t_full * 1e3,
+        model.t_window * 1e3
+    );
+
+    let (seq_make, seq) = run_sequential(&sim, &params, &model);
+    let (int_make, int, steps, host) =
+        run_interleaved(&sim, &params, &model, beta);
+
+    // identical per-request work: the schedule must not change any decode
+    let seq_forwards: usize = seq.iter().map(|s| s.forwards).sum();
+    let int_forwards: usize = int.iter().map(|s| s.forwards).sum();
+    assert_eq!(seq_forwards, int_forwards,
+               "schedules diverged: {seq_forwards} vs {int_forwards} forwards");
+    let tokens: usize = seq.iter().map(|s| s.tokens).sum();
+    assert_eq!(tokens, LENS.iter().sum::<usize>());
+
+    let thr_seq = report("sequential", seq_make, &seq);
+    let thr_int = report("interleaved", int_make, &int);
+    let ratio = thr_int / thr_seq;
+    println!(
+        "\naggregate throughput: {ratio:.2}x  ({} forwards either way; \
+         interleaving batches each round's {}-way forwards)",
+        seq_forwards,
+        LENS.len()
+    );
+    println!(
+        "host scheduling overhead: {:.1} us/step over {} steps",
+        host / steps.max(1) as f64 * 1e6,
+        steps
+    );
+    assert!(
+        ratio >= 1.5,
+        "interleaving must deliver >= 1.5x aggregate throughput, got {ratio:.2}x"
+    );
+    println!("PASS: >= 1.5x aggregate throughput for 8 concurrent requests");
+}

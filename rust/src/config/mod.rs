@@ -10,6 +10,25 @@ use anyhow::{anyhow, bail, Result};
 use crate::decode::{DecodeCfg, SelMetric, Strategy};
 use crate::util::json::{self, Json};
 
+/// Upper bound on the engine worker's interleaving width.
+pub const MAX_SESSIONS_LIMIT: usize = 256;
+
+/// Shared bounds for the serving knobs; enforced identically for CLI
+/// flags and config files.
+pub fn validate_service_limits(max_queue: usize,
+                               max_concurrent_sessions: usize)
+                               -> Result<()> {
+    if max_queue == 0 {
+        bail!("max_queue must be positive");
+    }
+    if max_concurrent_sessions == 0
+        || max_concurrent_sessions > MAX_SESSIONS_LIMIT
+    {
+        bail!("max_concurrent_sessions must be in 1..={MAX_SESSIONS_LIMIT}");
+    }
+    Ok(())
+}
+
 /// Top-level service configuration (repro serve --config file.json).
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -18,6 +37,9 @@ pub struct ServiceConfig {
     pub ckpt: String,
     pub draft_ckpt: Option<String>,
     pub max_queue: usize,
+    /// Interleaving width of the engine worker (live sessions; 1 = the
+    /// classic batch=1 serving loop).
+    pub max_concurrent_sessions: usize,
     pub decode: DecodeCfg,
 }
 
@@ -29,6 +51,7 @@ impl Default for ServiceConfig {
             ckpt: "d3llm-llada".into(),
             draft_ckpt: None,
             max_queue: 256,
+            max_concurrent_sessions: 4,
             decode: DecodeCfg::preset(Strategy::D3llm),
         }
     }
@@ -150,11 +173,15 @@ impl ServiceConfig {
                 .and_then(|v| v.as_str())
                 .map(|s| s.to_string()),
             max_queue: get_usize(j, "max_queue", d.max_queue),
+            max_concurrent_sessions: get_usize(
+                j,
+                "max_concurrent_sessions",
+                d.max_concurrent_sessions,
+            ),
             decode,
         };
-        if cfg.max_queue == 0 {
-            bail!("max_queue must be positive");
-        }
+        validate_service_limits(cfg.max_queue,
+                                cfg.max_concurrent_sessions)?;
         Ok(cfg)
     }
 
@@ -174,6 +201,8 @@ impl ServiceConfig {
                 None => Json::Null,
             }),
             ("max_queue", Json::num(self.max_queue as f64)),
+            ("max_concurrent_sessions",
+             Json::num(self.max_concurrent_sessions as f64)),
             ("decode", decode_to_json(&self.decode)),
         ])
     }
@@ -196,6 +225,7 @@ mod tests {
         assert_eq!(c2.host, c.host);
         assert_eq!(c2.port, c.port);
         assert_eq!(c2.max_queue, c.max_queue);
+        assert_eq!(c2.max_concurrent_sessions, c.max_concurrent_sessions);
         assert_eq!(c2.decode.strategy, c.decode.strategy);
         assert_eq!(c2.decode.refresh_every, c.decode.refresh_every);
     }
@@ -237,6 +267,22 @@ mod tests {
                                 "threshold":0.5}"#).unwrap();
         let cfg = decode_from_json(&j).unwrap();
         assert!(matches!(cfg.metric, SelMetric::Entropy(_)));
+    }
+
+    #[test]
+    fn rejects_bad_session_width() {
+        for bad in [
+            r#"{"max_concurrent_sessions":0}"#,
+            r#"{"max_concurrent_sessions":1000}"#,
+        ] {
+            let j = json::parse(bad).unwrap();
+            assert!(ServiceConfig::from_json(&j).is_err(), "{bad}");
+        }
+        let j = json::parse(r#"{"max_concurrent_sessions":8}"#).unwrap();
+        assert_eq!(
+            ServiceConfig::from_json(&j).unwrap().max_concurrent_sessions,
+            8
+        );
     }
 
     #[test]

@@ -36,6 +36,15 @@ impl<T> Ord for QueuedJob<T> {
     }
 }
 
+/// Outcome of a priority-aware admission attempt (`push_evicting`).
+pub enum Admission<T> {
+    /// Admitted; if the queue was full, the displaced lowest-priority
+    /// job is returned so the caller can answer it.
+    Admitted(Option<QueuedJob<T>>),
+    /// Queue full of equal-or-higher-priority work; payload handed back.
+    Rejected(T),
+}
+
 pub struct Batcher<T> {
     heap: BinaryHeap<QueuedJob<T>>,
     next_seq: u64,
@@ -74,6 +83,59 @@ impl<T> Batcher<T> {
 
     pub fn pop(&mut self) -> Option<QueuedJob<T>> {
         self.heap.pop()
+    }
+
+    /// At capacity: the next `push` would be rejected.
+    pub fn is_full(&self) -> bool {
+        self.heap.len() >= self.max_queue
+    }
+
+    /// Priority-aware admission: like `push`, but when the queue is full
+    /// a newcomer that outranks the lowest-priority queued job displaces
+    /// it (newest-first among equals) instead of being turned away.
+    /// Exactly one job loses in either case, and it is handed back so the
+    /// caller can answer it.
+    pub fn push_evicting(&mut self, payload: T, priority: i64)
+                         -> Admission<T> {
+        if self.heap.len() < self.max_queue {
+            self.push(payload, priority);
+            return Admission::Admitted(None);
+        }
+        // victim candidate: lowest priority, newest among equals; found
+        // by a borrow-only scan so the rejection path (the common case
+        // under sustained overload) never deconstructs the heap
+        let victim = self
+            .heap
+            .iter()
+            .map(|j| (j.priority, std::cmp::Reverse(j.seq)))
+            .min();
+        let Some((v_pri, v_seq)) = victim else {
+            // zero-capacity queue: nothing to displace
+            self.rejected_total += 1;
+            return Admission::Rejected(payload);
+        };
+        if v_pri >= priority {
+            // everything queued outranks (or ties) the newcomer
+            self.rejected_total += 1;
+            return Admission::Rejected(payload);
+        }
+        let mut v = std::mem::take(&mut self.heap).into_vec();
+        let pos = v
+            .iter()
+            .position(|j| j.seq == v_seq.0)
+            .expect("victim vanished");
+        let evicted = v.swap_remove(pos);
+        self.heap = BinaryHeap::from(v);
+        self.rejected_total += 1;
+        self.heap.push(QueuedJob {
+            payload,
+            priority,
+            enqueued: Instant::now(),
+            seq: self.next_seq,
+        });
+        self.next_seq += 1;
+        self.enqueued_total += 1;
+        Admission::Admitted(Some(evicted))
     }
 
     pub fn len(&self) -> usize {
@@ -120,6 +182,41 @@ mod tests {
         assert_eq!(b.rejected_total, 1);
         b.pop();
         assert!(b.push(3, 0));
+    }
+
+    #[test]
+    fn eviction_prefers_low_priority_newest() {
+        let mut b = Batcher::new(3);
+        b.push("old-low", 0);
+        b.push("high", 5);
+        b.push("new-low", 0);
+        // newcomer outranks the lows: newest low is displaced
+        match b.push_evicting("mid", 2) {
+            Admission::Admitted(Some(evicted)) => {
+                assert_eq!(evicted.payload, "new-low");
+            }
+            _ => panic!("expected eviction"),
+        }
+        assert_eq!(b.len(), 3);
+        // newcomer that ties the lowest is rejected (FIFO respected)
+        match b.push_evicting("tie-low", 0) {
+            Admission::Rejected(p) => assert_eq!(p, "tie-low"),
+            _ => panic!("tie must not evict"),
+        }
+        assert_eq!(b.rejected_total, 2);
+        // drain order: priority desc, FIFO within priority
+        assert_eq!(b.pop().unwrap().payload, "high");
+        assert_eq!(b.pop().unwrap().payload, "mid");
+        assert_eq!(b.pop().unwrap().payload, "old-low");
+    }
+
+    #[test]
+    fn push_evicting_on_spare_capacity_is_plain_push() {
+        let mut b = Batcher::new(2);
+        assert!(matches!(b.push_evicting(1, 0), Admission::Admitted(None)));
+        assert!(b.push(2, 1));
+        assert!(b.is_full());
+        assert_eq!(b.enqueued_total, 2);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Serving coordinator: a threaded JSON-line TCP server in front of a
-//! single-stream decode engine.
+//! Serving coordinator: a threaded JSON-line TCP server in front of an
+//! interleaved multi-session decode engine.
 //!
 //! Topology (the offline registry has no tokio; std threads + channels):
 //!
@@ -7,16 +7,26 @@
 //!        |  (mpsc)                |  parse JSON-line requests
 //!        v                        v
 //!   router/batcher  <-- bounded priority queue, backpressure
-//!        |
+//!        |   admit up to `max_concurrent_sessions`
 //!        v
-//!   engine worker (owns PJRT Engine + checkpoint; decodes batch=1,
-//!                  matching the paper's serving setup)
+//!   engine worker (owns PJRT Engine + checkpoint; round-robins one
+//!        |          decode round per live `DecodeSession` per cycle —
+//!        |          `scheduler::SessionPool` — retiring finished
+//!        |          sessions and admitting queued jobs between rounds)
 //!        |
 //!        v  per-request reply channel
 //!   connection writer
 //!
+//! Multi-block strategies (d3llm / d2f) decode as resumable sessions and
+//! interleave; the non-resumable baselines (ar / vanilla / fast-dllm /
+//! dparallel / spec) run inline between rounds, preserving their exact
+//! single-stream behavior. With `max_concurrent_sessions = 1` the worker
+//! degenerates to the classic batch=1 loop token-for-token.
+//!
 //! The engine worker pre-compiles the executables its strategy needs, so
-//! first-request latency is decode, not XLA compilation.
+//! first-request latency is decode, not XLA compilation. Queue depth,
+//! active-session count and per-session progress are exported through the
+//! `{"cmd":"stats"}` protocol request.
 
 pub mod batcher;
 pub mod protocol;
@@ -25,20 +35,21 @@ pub mod scheduler;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::decode::{self, DecodeCfg, Strategy};
+use crate::decode::{self, DecodeCfg, DecodeSession, SessionProgress,
+                    Strategy};
 use crate::model::ParamStore;
 use crate::runtime::Engine;
 use crate::tokenizer::Tokenizer;
 use crate::train::TrainCfg;
 
-use batcher::Batcher;
+use batcher::{Admission, Batcher};
 use protocol::{GenRequest, GenResponse, Request};
+use scheduler::SessionPool;
 
 #[derive(Debug, Clone)]
 pub struct ServerCfg {
@@ -48,6 +59,9 @@ pub struct ServerCfg {
     pub strategy: Strategy,
     pub variant: String,
     pub max_queue: usize,
+    /// Interleaving width: how many resumable decode sessions the engine
+    /// worker keeps live at once (1 = classic batch=1 serving).
+    pub max_concurrent_sessions: usize,
     /// full decode configuration; per-request `strategy` switches presets,
     /// otherwise this config is used verbatim
     pub decode: Option<crate::decode::DecodeCfg>,
@@ -58,12 +72,32 @@ struct Job {
     reply: mpsc::Sender<String>,
 }
 
+/// Metadata carried through the session pool for each admitted job.
+struct ActiveJob {
+    reply: mpsc::Sender<String>,
+    queue_ms: f64,
+}
+
 #[derive(Default)]
 pub struct ServerStats {
     pub served: AtomicU64,
     pub errors: AtomicU64,
     pub queue_ms_total: AtomicU64,
     pub decode_ms_total: AtomicU64,
+    /// Jobs waiting in the admission queue (gauge).
+    pub queue_depth: AtomicU64,
+    /// Live interleaved sessions (gauge).
+    pub active_sessions: AtomicU64,
+    /// Total session steps issued by the worker.
+    pub steps_total: AtomicU64,
+    /// Sessions ever admitted to the pool.
+    pub admitted_total: AtomicU64,
+    /// Requests served inline (non-resumable strategies).
+    pub inline_total: AtomicU64,
+    /// Configured interleaving width (set once at startup).
+    pub max_concurrent: AtomicU64,
+    /// Per-session progress snapshots, refreshed every worker cycle.
+    pub sessions: Mutex<Vec<(String, SessionProgress)>>,
 }
 
 /// Run the server until a shutdown request arrives.
@@ -71,11 +105,18 @@ pub fn serve(cfg: ServerCfg) -> Result<()> {
     let addr = format!("{}:{}", cfg.host, cfg.port);
     let listener =
         TcpListener::bind(&addr).with_context(|| format!("bind {addr}"))?;
-    eprintln!("[serve] listening on {addr} (ckpt={}, strategy={})",
-              cfg.ckpt, cfg.strategy.name());
+    eprintln!(
+        "[serve] listening on {addr} (ckpt={}, strategy={}, sessions={})",
+        cfg.ckpt,
+        cfg.strategy.name(),
+        cfg.max_concurrent_sessions
+    );
 
     let (job_tx, job_rx) = mpsc::channel::<Job>();
     let stats = Arc::new(ServerStats::default());
+    stats
+        .max_concurrent
+        .store(cfg.max_concurrent_sessions.max(1) as u64, Ordering::Relaxed);
     let shutdown = Arc::new(AtomicBool::new(false));
 
     // ---- engine worker (owns the non-Sync PJRT engine)
@@ -137,14 +178,7 @@ fn handle_conn(stream: TcpStream, jobs: mpsc::Sender<Job>,
                 break;
             }
             Ok(Request::Stats) => {
-                let s = format!(
-                    r#"{{"ok":true,"served":{},"errors":{},"queue_ms":{},"decode_ms":{}}}"#,
-                    stats.served.load(Ordering::Relaxed),
-                    stats.errors.load(Ordering::Relaxed),
-                    stats.queue_ms_total.load(Ordering::Relaxed),
-                    stats.decode_ms_total.load(Ordering::Relaxed),
-                );
-                writeln!(writer, "{s}")?;
+                writeln!(writer, "{}", protocol::stats_response(&stats))?;
             }
             Ok(Request::Generate(req)) => {
                 let (reply_tx, reply_rx) = mpsc::channel();
@@ -165,6 +199,39 @@ fn handle_conn(stream: TcpStream, jobs: mpsc::Sender<Job>,
     Ok(())
 }
 
+/// Resolve the effective decode config for one request.
+fn request_cfg(cfg: &ServerCfg, req: &GenRequest) -> Result<DecodeCfg> {
+    let mut dcfg = match (&req.strategy, &cfg.decode) {
+        (Some(s), _) => DecodeCfg::preset(
+            Strategy::parse(s).ok_or_else(|| anyhow!("bad strategy"))?),
+        (None, Some(d)) => d.clone(),
+        (None, None) => DecodeCfg::preset(cfg.strategy),
+    };
+    dcfg.variant = cfg.variant.clone();
+    Ok(dcfg)
+}
+
+/// Shared request preamble for both decode paths: tokenize the prompt and
+/// clamp the requested generation length to the lowered geometry.
+fn prepare_request(eng: &Engine, tk: &Tokenizer, req: &GenRequest)
+                   -> Result<(Vec<i32>, usize)> {
+    let prompt = tk.encode(&req.prompt)?;
+    if prompt.is_empty() {
+        return Err(anyhow!("empty prompt"));
+    }
+    let c = &eng.manifest.constants;
+    let gen_len = req
+        .gen_len
+        .unwrap_or(96)
+        .min(c.gen_max)
+        .next_multiple_of(c.block)
+        .min(c.s_max.saturating_sub(prompt.len()) / c.block * c.block);
+    if gen_len == 0 {
+        return Err(anyhow!("prompt too long"));
+    }
+    Ok((prompt, gen_len))
+}
+
 fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                  stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>)
                  -> Result<()> {
@@ -177,106 +244,200 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
     ))?;
     params.check(eng.manifest.model("main")?)?;
 
-    // pre-compile the strategy's executables
+    // pre-compile the strategy's executables once; every session reuses
+    // the same memoised executables and device-resident parameter buffer
     let (prefill, dec) = decode::exec_names(&cfg.variant);
     eng.warmup(&[prefill.as_str(), dec.as_str()])?;
     eprintln!("[serve] engine ready");
 
+    let max_live = cfg.max_concurrent_sessions.max(1);
     let mut batcher: Batcher<Job> = Batcher::new(cfg.max_queue);
+    let mut pool: SessionPool<ActiveJob> = SessionPool::new();
+    let mut disconnected = false;
+
     loop {
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
-        // drain the channel into the priority queue
+        // ---- drain the channel into the priority queue
         loop {
             match jobs.try_recv() {
                 Ok(job) => {
                     let pri = job.req.priority;
-                    if !batcher.push(job, pri) {
-                        // reject newest on overflow
-                        if let Some(j) = batcher.pop() {
-                            let _ = j.payload.reply.send(
+                    // priority-aware backpressure: on overflow the lowest
+                    // ranked job (newcomer or queued) is answered and
+                    // dropped
+                    match batcher.push_evicting(job, pri) {
+                        Admission::Admitted(None) => {}
+                        Admission::Admitted(Some(evicted)) => {
+                            stats.errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = evicted.payload.reply.send(
                                 protocol::err_response(
-                                    &j.payload.req.id,
-                                    "queue full",
+                                    &evicted.payload.req.id,
+                                    "queue full (displaced by higher \
+                                     priority)",
                                 ),
                             );
+                        }
+                        Admission::Rejected(job) => {
+                            stats.errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = job.reply.send(protocol::err_response(
+                                &job.req.id,
+                                "queue full",
+                            ));
                         }
                     }
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
-                    if batcher.is_empty() {
-                        return Ok(());
-                    }
+                    disconnected = true;
                     break;
                 }
             }
         }
-        let Some(queued) = batcher.pop() else {
-            // block for the next job to avoid spinning
-            match jobs.recv_timeout(std::time::Duration::from_millis(50)) {
-                Ok(job) => {
-                    let pri = job.req.priority;
-                    batcher.push(job, pri);
+
+        // ---- admit queued jobs: resumable strategies join the pool,
+        //      the rest decode inline (classic one-shot path)
+        while pool.len() < max_live {
+            let Some(queued) = batcher.pop() else { break };
+            let queue_ms = queued.enqueued.elapsed().as_secs_f64() * 1e3;
+            let job = queued.payload;
+            match request_cfg(&cfg, &job.req) {
+                Ok(dcfg) if dcfg.strategy.is_resumable() => {
+                    match admit_session(&eng, &tk, &dcfg, &job.req) {
+                        Ok(session) => {
+                            pool.admit(
+                                job.req.id.clone(),
+                                ActiveJob { reply: job.reply, queue_ms },
+                                session,
+                            );
+                        }
+                        Err(e) => reply_err(&stats, &job, &e),
+                    }
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+                Ok(dcfg) => {
+                    stats.inline_total.fetch_add(1, Ordering::Relaxed);
+                    let line = match serve_inline(&eng, &dcfg, &tk, &params,
+                                                  &job.req, queue_ms) {
+                        Ok(r) => {
+                            record_served(&stats, &r);
+                            protocol::ok_response(&r)
+                        }
+                        Err(e) => {
+                            stats.errors.fetch_add(1, Ordering::Relaxed);
+                            protocol::err_response(&job.req.id,
+                                                   &format!("{e:#}"))
+                        }
+                    };
+                    let _ = job.reply.send(line);
+                    // at most one inline decode per cycle, so a burst of
+                    // non-resumable jobs can't starve the live sessions
+                    break;
+                }
+                Err(e) => reply_err(&stats, &job, &e),
+            }
+        }
+
+        // ---- publish gauges + per-session progress (the pool is the
+        //      single source of truth for its own counters)
+        stats.queue_depth.store(batcher.len() as u64, Ordering::Relaxed);
+        stats
+            .active_sessions
+            .store(pool.len() as u64, Ordering::Relaxed);
+        stats.steps_total.store(pool.steps_total, Ordering::Relaxed);
+        stats
+            .admitted_total
+            .store(pool.admitted_total, Ordering::Relaxed);
+        if let Ok(mut s) = stats.sessions.lock() {
+            *s = pool.progress();
+        }
+
+        if pool.is_empty() {
+            // only block when there is truly nothing to do; with jobs
+            // still queued, loop straight back into admission
+            if batcher.is_empty() {
+                if disconnected {
+                    return Ok(());
+                }
+                match jobs.recv_timeout(std::time::Duration::from_millis(50))
+                {
+                    Ok(job) => {
+                        let pri = job.req.priority;
+                        batcher.push(job, pri);
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return Ok(());
+                    }
+                }
             }
             continue;
-        };
+        }
 
-        let queue_ms = queued.enqueued.elapsed().as_secs_f64() * 1e3;
-        let job = queued.payload;
-        let response = serve_one(&eng, &cfg, &tk, &params, &job.req, queue_ms);
-        let line = match response {
-            Ok(r) => {
-                stats.served.fetch_add(1, Ordering::Relaxed);
-                stats
-                    .queue_ms_total
-                    .fetch_add(r.queue_ms as u64, Ordering::Relaxed);
-                stats
-                    .decode_ms_total
-                    .fetch_add(r.decode_ms as u64, Ordering::Relaxed);
-                protocol::ok_response(&r)
-            }
-            Err(e) => {
-                stats.errors.fetch_add(1, Ordering::Relaxed);
-                protocol::err_response(&job.req.id, &format!("{e:#}"))
-            }
-        };
-        let _ = job.reply.send(line);
+        // ---- one interleaved round: each live session advances one step
+        let finished = pool.step_round(&eng, &params.data);
+        for f in finished {
+            let line = match f.result {
+                Ok(r) => {
+                    let resp = GenResponse {
+                        id: f.id.clone(),
+                        text: tk.decode(&r.tokens),
+                        tpf: r.tpf(),
+                        forwards: r.forwards,
+                        gen_tokens: r.tokens.len(),
+                        tokens: r.tokens,
+                        queue_ms: f.tag.queue_ms,
+                        // engine time of this session's own steps, so it
+                        // is comparable with the inline path's decode_ms
+                        decode_ms: f.busy_secs * 1e3,
+                    };
+                    record_served(&stats, &resp);
+                    protocol::ok_response(&resp)
+                }
+                Err(e) => {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                    protocol::err_response(&f.id, &format!("{e:#}"))
+                }
+            };
+            let _ = f.tag.reply.send(line);
+        }
     }
     Ok(())
 }
 
-fn serve_one(eng: &Engine, cfg: &ServerCfg, tk: &Tokenizer,
-             params: &ParamStore, req: &GenRequest, queue_ms: f64)
-             -> Result<GenResponse> {
-    let c = eng.manifest.constants.clone();
-    let prompt = tk.encode(&req.prompt)?;
-    if prompt.is_empty() {
-        return Err(anyhow!("empty prompt"));
-    }
-    let mut dcfg = match (&req.strategy, &cfg.decode) {
-        (Some(s), _) => DecodeCfg::preset(
-            Strategy::parse(s).ok_or_else(|| anyhow!("bad strategy"))?),
-        (None, Some(d)) => d.clone(),
-        (None, None) => DecodeCfg::preset(cfg.strategy),
-    };
-    dcfg.variant = cfg.variant.clone();
-    let gen_len = req
-        .gen_len
-        .unwrap_or(96)
-        .min(c.gen_max)
-        .next_multiple_of(c.block)
-        .min(c.s_max.saturating_sub(prompt.len()) / c.block * c.block);
-    if gen_len == 0 {
-        return Err(anyhow!("prompt too long"));
-    }
+fn reply_err(stats: &ServerStats, job: &Job, e: &anyhow::Error) {
+    stats.errors.fetch_add(1, Ordering::Relaxed);
+    let _ = job
+        .reply
+        .send(protocol::err_response(&job.req.id, &format!("{e:#}")));
+}
 
+fn record_served(stats: &ServerStats, r: &GenResponse) {
+    stats.served.fetch_add(1, Ordering::Relaxed);
+    stats
+        .queue_ms_total
+        .fetch_add(r.queue_ms as u64, Ordering::Relaxed);
+    stats
+        .decode_ms_total
+        .fetch_add(r.decode_ms as u64, Ordering::Relaxed);
+}
+
+/// Build a resumable session for one admitted request.
+fn admit_session(eng: &Engine, tk: &Tokenizer, dcfg: &DecodeCfg,
+                 req: &GenRequest) -> Result<DecodeSession> {
+    let (prompt, gen_len) = prepare_request(eng, tk, req)?;
+    DecodeSession::new(eng, dcfg.clone(), &prompt, gen_len)
+}
+
+/// One-shot decode for the non-resumable baselines (ar / vanilla /
+/// fast-dllm / dparallel / spec): identical to the pre-interleaving
+/// engine-worker behavior.
+fn serve_inline(eng: &Engine, dcfg: &DecodeCfg, tk: &Tokenizer,
+                params: &ParamStore, req: &GenRequest, queue_ms: f64)
+                -> Result<GenResponse> {
+    let (prompt, gen_len) = prepare_request(eng, tk, req)?;
     let t0 = Instant::now();
-    let r = decode::generate(eng, &dcfg, &params.data, None, &prompt,
+    let r = decode::generate(eng, dcfg, &params.data, None, &prompt,
                              gen_len)?;
     Ok(GenResponse {
         id: req.id.clone(),

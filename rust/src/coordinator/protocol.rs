@@ -90,6 +90,47 @@ pub fn ok_response(r: &GenResponse) -> String {
     .to_string()
 }
 
+/// Serialize the server stats snapshot, including the interleaving
+/// gauges (queue depth, live sessions) and per-session progress.
+pub fn stats_response(s: &super::ServerStats) -> String {
+    use std::sync::atomic::Ordering::Relaxed;
+    let sessions: Vec<Json> = s
+        .sessions
+        .lock()
+        .map(|v| {
+            v.iter()
+                .map(|(id, p)| {
+                    Json::obj(vec![
+                        ("id", Json::str(id.clone())),
+                        ("unmasked", Json::num(p.unmasked as f64)),
+                        ("gen_len", Json::num(p.gen_len as f64)),
+                        ("steps", Json::num(p.steps as f64)),
+                        ("rounds", Json::num(p.rounds as f64)),
+                        ("forwards", Json::num(p.forwards as f64)),
+                    ])
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("served", Json::num(s.served.load(Relaxed) as f64)),
+        ("errors", Json::num(s.errors.load(Relaxed) as f64)),
+        ("queue_ms", Json::num(s.queue_ms_total.load(Relaxed) as f64)),
+        ("decode_ms", Json::num(s.decode_ms_total.load(Relaxed) as f64)),
+        ("queue_depth", Json::num(s.queue_depth.load(Relaxed) as f64)),
+        ("active_sessions",
+         Json::num(s.active_sessions.load(Relaxed) as f64)),
+        ("steps", Json::num(s.steps_total.load(Relaxed) as f64)),
+        ("admitted", Json::num(s.admitted_total.load(Relaxed) as f64)),
+        ("inline", Json::num(s.inline_total.load(Relaxed) as f64)),
+        ("max_concurrent_sessions",
+         Json::num(s.max_concurrent.load(Relaxed) as f64)),
+        ("sessions", Json::Arr(sessions)),
+    ])
+    .to_string()
+}
+
 pub fn err_response(id: &str, msg: &str) -> String {
     Json::obj(vec![
         ("id", Json::str(id)),
@@ -154,5 +195,36 @@ mod tests {
         let e = err_response("x", "boom");
         let j = json::parse(&e).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn stats_response_exposes_interleaving_gauges() {
+        use std::sync::atomic::Ordering;
+        let s = crate::coordinator::ServerStats::default();
+        s.served.store(5, Ordering::Relaxed);
+        s.queue_depth.store(3, Ordering::Relaxed);
+        s.active_sessions.store(2, Ordering::Relaxed);
+        s.max_concurrent.store(8, Ordering::Relaxed);
+        s.sessions.lock().unwrap().push((
+            "r1".to_string(),
+            crate::decode::SessionProgress {
+                unmasked: 40,
+                gen_len: 96,
+                steps: 11,
+                rounds: 10,
+                forwards: 9,
+                ..Default::default()
+            },
+        ));
+        let j = json::parse(&stats_response(&s)).unwrap();
+        assert_eq!(j.get("served").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("queue_depth").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("active_sessions").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("max_concurrent_sessions").unwrap().as_usize(),
+                   Some(8));
+        let sess = j.get("sessions").unwrap().as_arr().unwrap();
+        assert_eq!(sess.len(), 1);
+        assert_eq!(sess[0].get("id").unwrap().as_str(), Some("r1"));
+        assert_eq!(sess[0].get("unmasked").unwrap().as_usize(), Some(40));
     }
 }

@@ -1,13 +1,23 @@
-//! Round-robin request interleaver: runs several in-flight multi-block
+//! Round-robin session scheduler: runs several in-flight multi-block
 //! decode sessions on one engine, one round each per cycle. This is the
 //! continuous-serving analog at the paper's batch=1 compute granularity —
 //! it bounds head-of-line blocking (a long request no longer delays a
 //! short one by its full decode time, only by one round ~ one forward).
+//!
+//! `SessionPool` is the reusable core: the coordinator's engine worker
+//! admits jobs into it between rounds (up to `max_concurrent_sessions`),
+//! and `benches/interleave.rs` / the scheduler-determinism tests drive it
+//! directly over the `SimBackend`. Fairness invariant: `step_round` steps
+//! every live session exactly once in admission order, so between two
+//! consecutive steps of any session, every other live session steps
+//! exactly once (per-session step gap <= pool size).
+
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::decode::{DecodeCfg, DecodeSession, GenResult};
-use crate::runtime::Engine;
+use crate::decode::{Backend, DecodeCfg, DecodeSession, GenResult,
+                    SessionProgress};
 
 /// One admitted request.
 pub struct InterleavedRequest {
@@ -16,32 +26,163 @@ pub struct InterleavedRequest {
     pub gen_len: usize,
 }
 
-/// Fair round-robin over all sessions until every request completes.
-/// Returns results in the input order.
-pub fn run_interleaved(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
-                       requests: Vec<InterleavedRequest>)
-                       -> Result<Vec<(String, GenResult)>> {
-    let mut live: Vec<(usize, String, DecodeSession)> = requests
-        .into_iter()
-        .enumerate()
-        .map(|(i, r)| {
-            DecodeSession::new(eng, cfg.clone(), &r.prompt, r.gen_len)
-                .map(|s| (i, r.id, s))
-        })
-        .collect::<Result<_>>()?;
-    let mut done: Vec<(usize, String, GenResult)> = Vec::new();
+/// A session retired from the pool: either a finished decode or the error
+/// that killed it. Per-session failures never poison the rest of the pool.
+pub struct Finished<T> {
+    pub id: String,
+    pub tag: T,
+    pub result: Result<GenResult>,
+    /// Engine time this session's own steps took (excludes rounds spent
+    /// on other interleaved sessions).
+    pub busy_secs: f64,
+}
 
-    while !live.is_empty() {
-        let mut still = Vec::with_capacity(live.len());
-        for (idx, id, mut session) in live {
-            let finished = session.step(eng, params)?;
-            if finished {
-                done.push((idx, id, session.finish()));
-            } else {
-                still.push((idx, id, session));
+struct Entry<T> {
+    id: String,
+    tag: T,
+    session: DecodeSession,
+    seq: u64,
+    busy_secs: f64,
+}
+
+/// Pool of live decode sessions, stepped round-robin in admission order.
+/// `T` is caller metadata carried alongside each session (reply channels,
+/// timing) and handed back on retirement.
+pub struct SessionPool<T> {
+    entries: Vec<Entry<T>>,
+    next_seq: u64,
+    /// Total `session.step()` calls issued by this pool.
+    pub steps_total: u64,
+    /// Total sessions ever admitted.
+    pub admitted_total: u64,
+    record_trace: bool,
+    trace: Vec<u64>,
+}
+
+impl<T> SessionPool<T> {
+    pub fn new() -> SessionPool<T> {
+        SessionPool {
+            entries: Vec::new(),
+            next_seq: 0,
+            steps_total: 0,
+            admitted_total: 0,
+            record_trace: false,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Record the admission-sequence number of every step (for fairness
+    /// assertions in tests). Off by default.
+    pub fn with_trace(mut self) -> SessionPool<T> {
+        self.record_trace = true;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.id.clone()).collect()
+    }
+
+    /// Per-session progress snapshots, in admission order.
+    pub fn progress(&self) -> Vec<(String, SessionProgress)> {
+        self.entries
+            .iter()
+            .map(|e| (e.id.clone(), e.session.progress()))
+            .collect()
+    }
+
+    /// Admission-sequence step trace recorded so far (see `with_trace`).
+    pub fn trace(&self) -> &[u64] {
+        &self.trace
+    }
+
+    /// Admit a live session with caller metadata. Returns its admission
+    /// sequence number (stable id for the fairness trace).
+    pub fn admit(&mut self, id: String, tag: T, session: DecodeSession)
+                 -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.admitted_total += 1;
+        self.entries.push(Entry { id, tag, session, seq, busy_secs: 0.0 });
+        seq
+    }
+
+    /// Step every runnable session exactly once, in admission order.
+    /// Finished (or failed) sessions are retired and returned.
+    pub fn step_round(&mut self, backend: &dyn Backend, params: &[f32])
+                      -> Vec<Finished<T>> {
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < self.entries.len() {
+            if !self.entries[i].session.is_runnable() {
+                // blocked (future async backends): skip this round; a
+                // *finished* session is retired by the step that finished
+                // it, so this never strands a completed decode
+                i += 1;
+                continue;
+            }
+            if self.record_trace {
+                self.trace.push(self.entries[i].seq);
+            }
+            self.steps_total += 1;
+            let t0 = Instant::now();
+            let stepped = self.entries[i].session.step(backend, params);
+            self.entries[i].busy_secs += t0.elapsed().as_secs_f64();
+            match stepped {
+                Ok(true) => {
+                    let e = self.entries.remove(i);
+                    finished.push(Finished {
+                        id: e.id,
+                        tag: e.tag,
+                        result: Ok(e.session.finish()),
+                        busy_secs: e.busy_secs,
+                    });
+                }
+                Ok(false) => i += 1,
+                Err(err) => {
+                    let e = self.entries.remove(i);
+                    finished.push(Finished {
+                        id: e.id,
+                        tag: e.tag,
+                        result: Err(err),
+                        busy_secs: e.busy_secs,
+                    });
+                }
             }
         }
-        live = still;
+        finished
+    }
+}
+
+impl<T> Default for SessionPool<T> {
+    fn default() -> Self {
+        SessionPool::new()
+    }
+}
+
+/// Fair round-robin over all sessions until every request completes.
+/// Returns results in the input order.
+pub fn run_interleaved(backend: &dyn Backend, cfg: &DecodeCfg,
+                       params: &[f32], requests: Vec<InterleavedRequest>)
+                       -> Result<Vec<(String, GenResult)>> {
+    let mut pool: SessionPool<usize> = SessionPool::new();
+    for (i, r) in requests.into_iter().enumerate() {
+        let session =
+            DecodeSession::new(backend, cfg.clone(), &r.prompt, r.gen_len)?;
+        pool.admit(r.id, i, session);
+    }
+    let mut done: Vec<(usize, String, GenResult)> = Vec::new();
+    while !pool.is_empty() {
+        for f in pool.step_round(backend, params) {
+            done.push((f.tag, f.id, f.result?));
+        }
     }
     done.sort_by_key(|(idx, _, _)| *idx);
     Ok(done.into_iter().map(|(_, id, r)| (id, r)).collect())
@@ -52,6 +193,7 @@ mod tests {
     use super::*;
     use crate::decode::Strategy;
     use crate::model::ParamStore;
+    use crate::runtime::Engine;
 
     #[test]
     fn interleaved_matches_sequential() {

@@ -1,0 +1,61 @@
+//! Forward-provider abstraction for the resumable decode session.
+//!
+//! `DecodeSession` (and therefore the serving scheduler) only needs two
+//! forwards — the full no-cache forward and the windowed cached forward —
+//! plus the compile-time geometry they were lowered with. Abstracting
+//! those behind `Backend` lets the same state machine run against:
+//!
+//!   * the real PJRT `Engine` (production serving), and
+//!   * the deterministic `SimBackend` (`decode::sim`) for scheduler and
+//!     state-machine tests/benches that must not depend on artifacts.
+//!
+//! `&Engine` coerces to `&dyn Backend` at every existing call site, so the
+//! engine-facing code is unchanged apart from the signatures.
+
+use anyhow::Result;
+
+use crate::model::exec::{self, DecodeOut, PrefillOut};
+use crate::model::KvCache;
+use crate::runtime::manifest::{Constants, ModelSpec};
+use crate::runtime::Engine;
+
+pub trait Backend {
+    /// Compile-time constants the executables were lowered with.
+    fn constants(&self) -> &Constants;
+
+    /// Geometry of the main serving model (cache layout).
+    fn model_spec(&self) -> Result<&ModelSpec>;
+
+    /// Full-sequence bidirectional forward (prompt prefill, KV refresh,
+    /// stabilizing rounds). Output vectors are `s_max`-sized.
+    fn prefill(&self, exec: &str, params: &[f32], tokens: &[i32],
+               valid: &[f32]) -> Result<PrefillOut>;
+
+    /// Windowed forward against the approximate KV cache (the hot path).
+    /// Output vectors are `window`-sized.
+    fn decode_window(&self, exec: &str, params: &[f32], win_tokens: &[i32],
+                     win_pos: &[i32], win_valid: &[f32], cache: &KvCache)
+                     -> Result<DecodeOut>;
+}
+
+impl Backend for Engine {
+    fn constants(&self) -> &Constants {
+        &self.manifest.constants
+    }
+
+    fn model_spec(&self) -> Result<&ModelSpec> {
+        self.manifest.model("main")
+    }
+
+    fn prefill(&self, exec_name: &str, params: &[f32], tokens: &[i32],
+               valid: &[f32]) -> Result<PrefillOut> {
+        exec::prefill(self, exec_name, params, tokens, valid)
+    }
+
+    fn decode_window(&self, exec_name: &str, params: &[f32],
+                     win_tokens: &[i32], win_pos: &[i32], win_valid: &[f32],
+                     cache: &KvCache) -> Result<DecodeOut> {
+        exec::decode_window(self, exec_name, params, win_tokens, win_pos,
+                            win_valid, cache)
+    }
+}

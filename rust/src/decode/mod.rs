@@ -15,16 +15,20 @@
 //!   * `Spec`      — draft-model speculative decoding (EAGLE-3 analog)
 
 pub mod ar;
+pub mod backend;
 pub mod multi_block;
 pub mod seq_state;
 pub mod session;
+pub mod sim;
 pub mod single_block;
 pub mod spec;
 
 use anyhow::Result;
 
+pub use backend::Backend;
 pub use seq_state::SeqState;
-pub use session::DecodeSession;
+pub use session::{DecodeSession, SessionPhase, SessionProgress};
+pub use sim::SimBackend;
 
 use crate::metrics::ForwardMix;
 use crate::runtime::Engine;
@@ -64,6 +68,14 @@ impl Strategy {
             "spec" => Strategy::Spec,
             _ => return None,
         })
+    }
+
+    /// Whether this strategy decodes through the resumable multi-block
+    /// `DecodeSession` (and can therefore be interleaved by the serving
+    /// coordinator). Keep in sync when adding a strategy: a resumable
+    /// strategy not listed here silently loses interleaving.
+    pub fn is_resumable(&self) -> bool {
+        matches!(self, Strategy::D2f | Strategy::D3llm)
     }
 }
 

@@ -20,9 +20,9 @@
 
 use anyhow::Result;
 
-use crate::runtime::Engine;
 use crate::tokenizer::MASK;
 
+use super::backend::Backend;
 use super::session::DecodeSession;
 use super::{DecodeCfg, GenResult, SeqState};
 
@@ -70,12 +70,14 @@ impl RoundStatsOwned {
     }
 }
 
-/// One-request driver over the resumable session.
-pub fn decode_multi_block(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
-                          prompt: &[i32], gen_len: usize)
+/// One-request driver over the resumable session. Accepts any forward
+/// provider: the PJRT `Engine` or the deterministic `SimBackend`.
+pub fn decode_multi_block(backend: &dyn Backend, cfg: &DecodeCfg,
+                          params: &[f32], prompt: &[i32], gen_len: usize)
                           -> Result<GenResult> {
-    let mut session = DecodeSession::new(eng, cfg.clone(), prompt, gen_len)?;
-    while !session.step(eng, params)? {}
+    let mut session =
+        DecodeSession::new(backend, cfg.clone(), prompt, gen_len)?;
+    while !session.step(backend, params)? {}
     Ok(session.finish())
 }
 

@@ -3,15 +3,49 @@
 //! one engine (round-robin continuous serving) and stream partial tokens.
 //!
 //! `decode_multi_block` is a thin driver over this type; the serving
-//! interleaver (`coordinator::scheduler`) is another.
+//! interleaver (`coordinator::scheduler::SessionPool`) is another. The
+//! session is generic over the forward provider (`decode::Backend`), so
+//! the identical state machine runs against the real PJRT engine or the
+//! deterministic `SimBackend` used by scheduler tests and benches.
 
 use anyhow::Result;
 
-use crate::model::{exec, KvCache};
-use crate::runtime::Engine;
+use crate::model::KvCache;
 
+use super::backend::Backend;
 use super::multi_block::{unmask_round, BlockState, RoundStatsOwned};
 use super::{exec_names, DecodeCfg, GenResult, SeqState};
+
+/// Coarse lifecycle phase, for scheduler accounting / introspection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionPhase {
+    /// Next step performs the prompt prefill.
+    Prefill,
+    /// Next step performs a decode round.
+    Decoding,
+    /// Finished; `step` is a no-op and `finish` may be called.
+    Done,
+}
+
+/// Cheap per-session progress snapshot (the coordinator exports these
+/// through the stats protocol).
+#[derive(Debug, Clone, Default)]
+pub struct SessionProgress {
+    /// Generation positions decoded so far.
+    pub unmasked: usize,
+    /// Generation capacity.
+    pub gen_len: usize,
+    /// `step()` calls that did work (prefill included).
+    pub steps: usize,
+    /// Decode rounds completed (prefill excluded).
+    pub rounds: usize,
+    /// Model forwards issued so far.
+    pub forwards: usize,
+    /// Full no-cache forwards (refresh / stabilizing) so far.
+    pub full_forwards: usize,
+    /// Windowed cached forwards so far.
+    pub window_forwards: usize,
+}
 
 pub struct DecodeSession {
     pub cfg: DecodeCfg,
@@ -20,18 +54,20 @@ pub struct DecodeSession {
     pub cache: KvCache,
     pub res: GenResult,
     round: usize,
+    steps: usize,
     prefilled: bool,
     done: bool,
     prefill_exec: String,
     decode_exec: String,
     max_active_blocks: usize,
+    window: usize,
 }
 
 impl DecodeSession {
-    pub fn new(eng: &Engine, cfg: DecodeCfg, prompt: &[i32], gen_len: usize)
-               -> Result<DecodeSession> {
-        let c = eng.manifest.constants.clone();
-        let spec = eng.manifest.model("main")?.clone();
+    pub fn new(backend: &dyn Backend, cfg: DecodeCfg, prompt: &[i32],
+               gen_len: usize) -> Result<DecodeSession> {
+        let c = backend.constants().clone();
+        let spec = backend.model_spec()?.clone();
         let (prefill_exec, decode_exec) = exec_names(&cfg.variant);
         let st = SeqState::new(prompt, gen_len, c.block, c.s_max);
         let nb = st.n_blocks();
@@ -44,16 +80,58 @@ impl DecodeSession {
             states,
             res: GenResult::default(),
             round: 0,
+            steps: 0,
             prefilled: false,
             done: false,
             prefill_exec,
             decode_exec,
             max_active_blocks: c.window / c.block,
+            window: c.window,
         })
     }
 
     pub fn is_done(&self) -> bool {
         self.done
+    }
+
+    /// Runnable probe for the scheduler: a session on a single shared
+    /// engine is runnable exactly until it finishes. (Kept as a method so
+    /// future backends with async forwards can report "blocked".)
+    pub fn is_runnable(&self) -> bool {
+        !self.done
+    }
+
+    pub fn phase(&self) -> SessionPhase {
+        if self.done {
+            SessionPhase::Done
+        } else if !self.prefilled {
+            SessionPhase::Prefill
+        } else {
+            SessionPhase::Decoding
+        }
+    }
+
+    /// Stable per-step accounting: how many `step()` calls did work.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Decode rounds completed so far (prefill excluded).
+    pub fn rounds(&self) -> usize {
+        self.round
+    }
+
+    /// Cheap progress snapshot for stats/streaming.
+    pub fn progress(&self) -> SessionProgress {
+        SessionProgress {
+            unmasked: self.st.unmasked_count(),
+            gen_len: self.st.gen_len,
+            steps: self.steps,
+            rounds: self.round,
+            forwards: self.res.forwards,
+            full_forwards: self.res.mix.full_forwards,
+            window_forwards: self.res.mix.window_forwards,
+        }
     }
 
     /// Tokens decoded so far (snapshot for streaming).
@@ -63,17 +141,19 @@ impl DecodeSession {
 
     /// Run one decode round. Returns true when the request is finished.
     /// The first call performs the prompt prefill (not counted in TPF).
-    pub fn step(&mut self, eng: &Engine, params: &[f32]) -> Result<bool> {
+    pub fn step(&mut self, backend: &dyn Backend, params: &[f32])
+                -> Result<bool> {
         if self.done {
             return Ok(true);
         }
+        self.steps += 1;
         if !self.prefilled {
             let mut pv = vec![0.0f32; self.st.s_max];
             for v in pv.iter_mut().take(self.st.prompt_len) {
                 *v = 1.0;
             }
-            let pre = exec::prefill(eng, &self.prefill_exec, params,
-                                    &self.st.tokens, &pv)?;
+            let pre = backend.prefill(&self.prefill_exec, params,
+                                      &self.st.tokens, &pv)?;
             self.cache.install_full(&pre.kcache, &pre.vcache, 0,
                                     self.st.prompt_len);
             self.prefilled = true;
@@ -95,8 +175,8 @@ impl DecodeSession {
         if any_stabilizing || periodic {
             // full no-cache forward: decode + refresh every cached row
             let full_valid = self.st.full_valid();
-            let out = exec::prefill(eng, &self.prefill_exec, params,
-                                    &self.st.tokens, &full_valid)?;
+            let out = backend.prefill(&self.prefill_exec, params,
+                                      &self.st.tokens, &full_valid)?;
             self.res.forwards += 1;
             self.res.mix.full_forwards += 1;
 
@@ -154,7 +234,7 @@ impl DecodeSession {
             let span = (last - first + 1).min(self.max_active_blocks);
             let (w_lo, _) = self.st.block_range(first);
             let w_hi = self.st.block_range(first + span - 1).1;
-            let window = eng.manifest.constants.window;
+            let window = self.window;
 
             let mut win_tokens = vec![0i32; window];
             let mut win_pos = vec![0i32; window];
@@ -165,9 +245,9 @@ impl DecodeSession {
                 win_valid[off] =
                     if self.cache.valid[p] > 0.0 { 0.0 } else { 1.0 };
             }
-            let out = exec::decode_window(eng, &self.decode_exec, params,
-                                          &win_tokens, &win_pos, &win_valid,
-                                          &self.cache)?;
+            let out = backend.decode_window(&self.decode_exec, params,
+                                            &win_tokens, &win_pos,
+                                            &win_valid, &self.cache)?;
             self.res.forwards += 1;
             self.res.mix.window_forwards += 1;
 
@@ -243,4 +323,3 @@ impl DecodeSession {
         self.res
     }
 }
-

@@ -1,0 +1,281 @@
+//! Deterministic simulated backend for the decode state machine.
+//!
+//! `SimBackend` implements `Backend` with a pure function of the call
+//! inputs: head statistics (argmax / confidence / entropy) and KV rows are
+//! seeded hashes of the visible token content, so
+//!
+//!   * the same session state always produces the same forward outputs —
+//!     interleaving sessions in any order cannot change any single
+//!     session's decode trajectory (the scheduler-determinism tests and
+//!     `benches/interleave.rs` rely on this), and
+//!   * outputs *re-roll* as tokens get unmasked (the hash covers the
+//!     window content), so threshold selection makes geometric progress
+//!     like a real model instead of degenerating to one token per round.
+//!
+//! No artifacts, no PJRT, no I/O: this is the CI-safe harness for every
+//! scheduler and block-state-machine property.
+
+use anyhow::{bail, Result};
+
+use crate::model::exec::{DecodeOut, PrefillOut};
+use crate::model::KvCache;
+use crate::runtime::manifest::{Constants, ModelSpec};
+
+use super::backend::Backend;
+
+/// Geometry matching the shipped artifacts (see python/compile/config.py
+/// and the manifest loader's test fixture).
+pub fn sim_constants() -> Constants {
+    Constants {
+        vocab: 128,
+        pad_id: 0,
+        mask_id: 1,
+        eos_id: 2,
+        bos_id: 3,
+        sep_id: 4,
+        s_max: 384,
+        s_train: 192,
+        gen_max: 128,
+        gen_train: 96,
+        window: 96,
+        block: 32,
+        verify_w: 16,
+        b_train: 8,
+        b_traj: 8,
+        rank_never: 100000,
+    }
+}
+
+fn sim_model_spec(c: &Constants) -> ModelSpec {
+    ModelSpec {
+        name: "sim".to_string(),
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        d_head: 2,
+        d_ff: 16,
+        vocab: c.vocab,
+        s_max: c.s_max,
+        d_kv: 4,
+        total_params: 0,
+        param_layout: Vec::new(),
+    }
+}
+
+pub struct SimBackend {
+    constants: Constants,
+    spec: ModelSpec,
+    seed: u64,
+    /// When set, roughly this fraction of positions argmax to EOS, for
+    /// exercising the early-stop paths. Default: no EOS (full decodes).
+    eos_rate: f64,
+}
+
+impl SimBackend {
+    pub fn new(seed: u64) -> SimBackend {
+        let constants = sim_constants();
+        let spec = sim_model_spec(&constants);
+        SimBackend { constants, spec, seed, eos_rate: 0.0 }
+    }
+
+    /// Enable EOS predictions at roughly `rate` of positions.
+    pub fn with_eos_rate(mut self, rate: f64) -> SimBackend {
+        self.eos_rate = rate;
+        self
+    }
+
+    #[inline]
+    fn mix(mut z: u64) -> u64 {
+        z = z.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// FNV over the visible token content: the "model's view" fingerprint.
+    fn context_hash(&self, tokens: &[i32], valid_or_pos: &[i32]) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325 ^ self.seed;
+        for (&t, &m) in tokens.iter().zip(valid_or_pos.iter()) {
+            h ^= (t as u64) ^ ((m as u64) << 32);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Per-position head statistics: (argmax, conf, entropy).
+    fn stats_at(&self, ctx: u64, pos: usize, token: i32)
+                -> (i32, f32, f32) {
+        let h = Self::mix(
+            ctx ^ Self::mix((pos as u64) << 1 ^ ((token as u64) << 20)),
+        );
+        // uniform fractions from disjoint bit ranges
+        let u1 = ((h >> 11) & 0x3FFFFF) as f64 / 0x400000 as f64;
+        let u2 = ((h >> 33) & 0x3FFFFF) as f64 / 0x400000 as f64;
+        let max_ent = (self.constants.vocab as f64).ln();
+        // low entropy <-> high confidence, ~30% of draws under 0.45 ent
+        let entropy = (u1 * u1 * max_ent) as f32;
+        let conf = (1.0 - u1 * 0.9).min(1.0) as f32;
+        let n_words = (self.constants.vocab - 5) as u64;
+        let mut argmax = 5 + (h % n_words) as i32;
+        if self.eos_rate > 0.0 && u2 < self.eos_rate {
+            argmax = self.constants.eos_id;
+        }
+        (argmax, conf, entropy)
+    }
+
+    /// Deterministic KV row value, keyed by absolute position so windowed
+    /// and full forwards agree on committed rows.
+    fn kv_at(&self, layer: usize, pos: usize, j: usize, token: i32) -> f32 {
+        let h = Self::mix(
+            self.seed
+                ^ ((layer as u64) << 48)
+                ^ ((pos as u64) << 24)
+                ^ ((j as u64) << 8)
+                ^ (token as u64),
+        );
+        ((h >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+    }
+}
+
+impl Backend for SimBackend {
+    fn constants(&self) -> &Constants {
+        &self.constants
+    }
+
+    fn model_spec(&self) -> Result<&ModelSpec> {
+        Ok(&self.spec)
+    }
+
+    fn prefill(&self, _exec: &str, params: &[f32], tokens: &[i32],
+               valid: &[f32]) -> Result<PrefillOut> {
+        let s = self.constants.s_max;
+        if tokens.len() != s || valid.len() != s {
+            bail!("sim prefill: tokens/valid must be length {s}");
+        }
+        let vmask: Vec<i32> =
+            valid.iter().map(|&v| if v > 0.0 { 1 } else { 0 }).collect();
+        let ctx = self.context_hash(tokens, &vmask)
+            ^ Self::mix(params.first().map(|p| p.to_bits() as u64)
+                .unwrap_or(0) ^ params.len() as u64);
+        let (l, d) = (self.spec.n_layers, self.spec.d_kv);
+        let mut out = PrefillOut {
+            kcache: vec![0.0; l * s * d],
+            vcache: vec![0.0; l * s * d],
+            argmax: vec![0; s],
+            conf: vec![0.0; s],
+            entropy: vec![0.0; s],
+        };
+        for p in 0..s {
+            let (a, c, e) = self.stats_at(ctx, p, tokens[p]);
+            out.argmax[p] = a;
+            out.conf[p] = c;
+            out.entropy[p] = e;
+            for layer in 0..l {
+                for j in 0..d {
+                    let v = self.kv_at(layer, p, j, tokens[p]);
+                    out.kcache[(layer * s + p) * d + j] = v;
+                    out.vcache[(layer * s + p) * d + j] = -v;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn decode_window(&self, _exec: &str, params: &[f32], win_tokens: &[i32],
+                     win_pos: &[i32], win_valid: &[f32], cache: &KvCache)
+                     -> Result<DecodeOut> {
+        let w = self.constants.window;
+        if win_tokens.len() != w || win_pos.len() != w || win_valid.len() != w
+        {
+            bail!("sim decode: window inputs must be length {w}");
+        }
+        let ctx = self.context_hash(win_tokens, win_pos)
+            ^ Self::mix(params.first().map(|p| p.to_bits() as u64)
+                .unwrap_or(0) ^ params.len() as u64)
+            ^ Self::mix(cache.valid_count() as u64);
+        let (l, d) = (self.spec.n_layers, self.spec.d_kv);
+        let mut out = DecodeOut {
+            argmax: vec![0; w],
+            conf: vec![0.0; w],
+            entropy: vec![0.0; w],
+            k_win: vec![0.0; l * w * d],
+            v_win: vec![0.0; l * w * d],
+        };
+        for i in 0..w {
+            let pos = win_pos[i].max(0) as usize;
+            let (a, c, e) = self.stats_at(ctx, pos, win_tokens[i]);
+            out.argmax[i] = a;
+            out.conf[i] = c;
+            out.entropy[i] = e;
+            for layer in 0..l {
+                for j in 0..d {
+                    let v = self.kv_at(layer, pos, j, win_tokens[i]);
+                    out.k_win[(layer * w + i) * d + j] = v;
+                    out.v_win[(layer * w + i) * d + j] = -v;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_are_deterministic() {
+        let sim = SimBackend::new(7);
+        let s = sim.constants().s_max;
+        let tokens: Vec<i32> = (0..s as i32).map(|i| 5 + i % 90).collect();
+        let valid = vec![1.0f32; s];
+        let a = sim.prefill("prefill_xla", &[0.5], &tokens, &valid).unwrap();
+        let b = sim.prefill("prefill_xla", &[0.5], &tokens, &valid).unwrap();
+        assert_eq!(a.argmax, b.argmax);
+        assert_eq!(a.conf, b.conf);
+        assert_eq!(a.kcache, b.kcache);
+    }
+
+    #[test]
+    fn outputs_reroll_when_tokens_change() {
+        let sim = SimBackend::new(7);
+        let s = sim.constants().s_max;
+        let mut tokens: Vec<i32> = (0..s as i32).map(|i| 5 + i % 90).collect();
+        let valid = vec![1.0f32; s];
+        let a = sim.prefill("p", &[0.5], &tokens, &valid).unwrap();
+        tokens[10] = 77;
+        let b = sim.prefill("p", &[0.5], &tokens, &valid).unwrap();
+        assert_ne!(a.entropy, b.entropy, "context change must re-roll stats");
+    }
+
+    #[test]
+    fn stats_are_well_formed() {
+        let sim = SimBackend::new(3);
+        let c = sim.constants().clone();
+        let tokens: Vec<i32> = vec![1; c.s_max];
+        let valid = vec![1.0f32; c.s_max];
+        let out = sim.prefill("p", &[], &tokens, &valid).unwrap();
+        let max_ent = (c.vocab as f32).ln();
+        let mut selected = 0;
+        for p in 0..c.s_max {
+            assert!(out.conf[p] > 0.0 && out.conf[p] <= 1.0);
+            assert!(out.entropy[p] >= 0.0 && out.entropy[p] <= max_ent);
+            assert!(out.argmax[p] >= 5 && out.argmax[p] < c.vocab as i32);
+            if out.entropy[p] <= 0.45 {
+                selected += 1;
+            }
+        }
+        // the entropy rule must select a healthy fraction (parallelism)
+        assert!(selected > c.s_max / 10, "only {selected} selectable");
+    }
+
+    #[test]
+    fn eos_rate_produces_eos() {
+        let sim = SimBackend::new(3).with_eos_rate(0.2);
+        let c = sim.constants().clone();
+        let tokens: Vec<i32> = vec![1; c.s_max];
+        let valid = vec![1.0f32; c.s_max];
+        let out = sim.prefill("p", &[], &tokens, &valid).unwrap();
+        assert!(out.argmax.contains(&c.eos_id));
+    }
+}

@@ -66,6 +66,7 @@ fn print_help() {
            eval --ckpt C --strategy S --task T   evaluate a checkpoint\n\
                 [--n N] [--threshold X] [--strict] [--variant xla|pallas]\n\
            serve --ckpt C [--port 7070]          start the serving coordinator\n\
+                [--max-sessions N] [--max-queue N] [--config svc.json]\n\
            bench --exp EXP [--n N] [--fast]      regenerate a table/figure\n\
                  (table1..table11, curves, radar, figure1, perf, all)"
     );
@@ -216,26 +217,46 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let ckpt = args.str_or("ckpt", "d3llm-llada");
-    let port = args.usize_or("port", 7070) as u16;
     let strategy = Strategy::parse(&args.str_or("strategy", "d3llm"))
         .ok_or_else(|| anyhow!("unknown strategy"))?;
-    let decode = match args.get("config") {
-        Some(path) => {
-            let svc = d3llm::config::ServiceConfig::load(path)?;
-            Some(svc.decode)
-        }
+    // flags override the --config file, which overrides the defaults
+    let svc = match args.get("config") {
+        Some(path) => Some(d3llm::config::ServiceConfig::load(path)?),
         None => None,
     };
     let cfg = coordinator::ServerCfg {
-        host: args.str_or("host", "127.0.0.1"),
-        port,
-        ckpt,
+        host: args.str_or(
+            "host",
+            svc.as_ref().map(|s| s.host.as_str()).unwrap_or("127.0.0.1"),
+        ),
+        port: args.usize_or(
+            "port",
+            svc.as_ref().map(|s| s.port as usize).unwrap_or(7070),
+        ) as u16,
+        ckpt: args.str_or(
+            "ckpt",
+            svc.as_ref().map(|s| s.ckpt.as_str()).unwrap_or("d3llm-llada"),
+        ),
         strategy,
         variant: args.str_or("variant", "xla"),
-        max_queue: args.usize_or("max-queue", 256),
-        decode,
+        max_queue: args.usize_or(
+            "max-queue",
+            svc.as_ref().map(|s| s.max_queue).unwrap_or(256),
+        ),
+        max_concurrent_sessions: args.usize_or(
+            "max-sessions",
+            svc.as_ref().map(|s| s.max_concurrent_sessions).unwrap_or(4),
+        ),
+        // an explicit --strategy flag wins over the config file's decode
+        // block; without the flag the config's tuned decode applies
+        decode: if args.get("strategy").is_some() {
+            None
+        } else {
+            svc.map(|s| s.decode)
+        },
     };
+    d3llm::config::validate_service_limits(cfg.max_queue,
+                                           cfg.max_concurrent_sessions)?;
     coordinator::serve(cfg)
 }
 

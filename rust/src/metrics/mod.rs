@@ -88,6 +88,26 @@ pub const A100: GpuCostModel = GpuCostModel {
     t_ar: 0.0198,
 };
 
+/// Marginal batching share for a weight-bandwidth-bound forward.
+///
+/// On 7-8B models a batch=1 forward is dominated by streaming the weights
+/// (see the calibration above), so batching B concurrent sequences into
+/// one forward costs roughly `1 + beta * (B - 1)` batch=1 forwards, where
+/// `beta` is the compute/activation marginal share. 0.2 is conservative
+/// for H100/A100-class hardware at B <= 16; `beta = 1.0` degenerates to
+/// fully serialized execution (this testbed's CPU PJRT reality).
+pub const DEFAULT_BATCH_BETA: f64 = 0.2;
+
+/// Modeled cost multiplier of a batched forward relative to batch=1:
+/// `batch_factor(0, _) = 0`, `batch_factor(1, _) = 1`.
+pub fn batch_factor(b: usize, beta: f64) -> f64 {
+    if b == 0 {
+        0.0
+    } else {
+        1.0 + beta * (b as f64 - 1.0)
+    }
+}
+
 /// Per-sample forward mix for the cost model.
 #[derive(Debug, Clone, Default)]
 pub struct ForwardMix {
@@ -147,6 +167,19 @@ mod tests {
         };
         let tps = mix.modeled_tps(&H100);
         assert!((tps - 27.9).abs() < 0.2, "{tps}");
+    }
+
+    #[test]
+    fn batch_factor_shape() {
+        assert_eq!(batch_factor(0, 0.2), 0.0);
+        assert_eq!(batch_factor(1, 0.2), 1.0);
+        assert!((batch_factor(8, 0.2) - 2.4).abs() < 1e-12);
+        // beta = 1 is fully serialized
+        assert!((batch_factor(8, 1.0) - 8.0).abs() < 1e-12);
+        // batching must never cost more than serializing
+        for b in 1..32 {
+            assert!(batch_factor(b, 0.2) <= b as f64 + 1e-12);
+        }
     }
 
     #[test]

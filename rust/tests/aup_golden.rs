@@ -1,0 +1,74 @@
+//! Golden-file pins for the AUP metric (paper §2).
+//!
+//! `rust/tests/golden/aup_golden.json` fixes AUP values on a small
+//! accuracy/parallelism grid (computed independently of this crate), so
+//! scheduler or sweep changes can't silently shift reported AUP. If the
+//! metric definition deliberately changes, regenerate the golden file and
+//! say so in the PR.
+
+use d3llm::metrics::aup::{aup_from_points, Point};
+use d3llm::util::json;
+
+fn load_cases() -> Vec<(String, f64, Option<f64>, Vec<Point>, f64)> {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/golden/aup_golden.json"
+    );
+    let text = std::fs::read_to_string(path).expect("golden file");
+    let j = json::parse(&text).expect("golden json");
+    j.get("cases")
+        .and_then(|c| c.as_arr())
+        .expect("cases array")
+        .iter()
+        .map(|c| {
+            let name = c.get("name").unwrap().as_str().unwrap().to_string();
+            let alpha = c.get("alpha").unwrap().as_f64().unwrap();
+            let y_max = c.get("y_max").and_then(|v| v.as_f64());
+            let points: Vec<Point> = c
+                .get("points")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|p| {
+                    let a = p.as_arr().unwrap();
+                    Point {
+                        rho: a[0].as_f64().unwrap(),
+                        acc: a[1].as_f64().unwrap(),
+                    }
+                })
+                .collect();
+            let expect = c.get("expect").unwrap().as_f64().unwrap();
+            (name, alpha, y_max, points, expect)
+        })
+        .collect()
+}
+
+#[test]
+fn aup_matches_golden_values() {
+    let cases = load_cases();
+    assert!(cases.len() >= 8, "golden file lost cases");
+    for (name, alpha, y_max, points, expect) in cases {
+        let got = aup_from_points(&points, alpha, y_max);
+        let tol = 1e-6 * expect.abs().max(1.0);
+        assert!(
+            (got - expect).abs() <= tol,
+            "AUP drift on `{name}`: got {got}, golden {expect}"
+        );
+    }
+}
+
+#[test]
+fn aup_golden_is_input_order_invariant() {
+    // the pinned values must not depend on sweep/scheduler output order
+    for (name, alpha, y_max, points, expect) in load_cases() {
+        let mut reversed = points.clone();
+        reversed.reverse();
+        let got = aup_from_points(&reversed, alpha, y_max);
+        let tol = 1e-6 * expect.abs().max(1.0);
+        assert!(
+            (got - expect).abs() <= tol,
+            "order-dependent AUP on `{name}`: got {got}, golden {expect}"
+        );
+    }
+}

@@ -1,0 +1,198 @@
+//! Deterministic scheduler tests over the SimBackend: no artifacts, no
+//! PJRT, fully reproducible.
+//!
+//!   * N queued requests with mixed gen_lens all complete;
+//!   * round-robin fairness bounds per-session step gaps;
+//!   * `max_concurrent_sessions = 1` reproduces the classic batch=1
+//!     sequential decode token-for-token (and so does any pool width,
+//!     since a session's trajectory is schedule-independent).
+
+use d3llm::coordinator::scheduler::{run_interleaved, InterleavedRequest,
+                                    SessionPool};
+use d3llm::decode::multi_block::decode_multi_block;
+use d3llm::decode::{DecodeCfg, DecodeSession, GenResult, SimBackend,
+                    Strategy};
+
+fn test_cfg() -> DecodeCfg {
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false; // sim argmax never emits EOS by default
+    cfg
+}
+
+fn prompt_for(k: usize) -> Vec<i32> {
+    (0..(8 + k % 5)).map(|i| 5 + ((i + 3 * k) % 80) as i32).collect()
+}
+
+/// The mixed workload: 8 requests spanning every gen_len the geometry
+/// supports.
+fn mixed_requests() -> Vec<InterleavedRequest> {
+    let lens = [32usize, 128, 64, 96, 32, 128, 96, 64];
+    lens.iter()
+        .enumerate()
+        .map(|(k, &gen_len)| InterleavedRequest {
+            id: format!("r{k}"),
+            prompt: prompt_for(k),
+            gen_len,
+        })
+        .collect()
+}
+
+fn sequential_reference(sim: &SimBackend, params: &[f32])
+                        -> Vec<(String, GenResult)> {
+    mixed_requests()
+        .into_iter()
+        .map(|r| {
+            let cfg = test_cfg();
+            let out =
+                decode_multi_block(sim, &cfg, params, &r.prompt, r.gen_len)
+                    .unwrap();
+            (r.id, out)
+        })
+        .collect()
+}
+
+#[test]
+fn mixed_gen_lens_all_complete() {
+    let sim = SimBackend::new(11);
+    let params = vec![0.5f32; 8];
+    let results =
+        run_interleaved(&sim, &test_cfg(), &params, mixed_requests())
+            .unwrap();
+    assert_eq!(results.len(), 8);
+    let lens = [32usize, 128, 64, 96, 32, 128, 96, 64];
+    for (k, (id, r)) in results.iter().enumerate() {
+        assert_eq!(id, &format!("r{k}"), "input order preserved");
+        assert_eq!(r.tokens.len(), lens[k], "{id} incomplete");
+        assert_eq!(r.unmasked, lens[k]);
+        assert!(r.forwards > 0);
+    }
+}
+
+#[test]
+fn round_robin_fairness_bounds_step_gaps() {
+    let sim = SimBackend::new(11);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    let mut pool: SessionPool<usize> = SessionPool::new().with_trace();
+    let reqs = mixed_requests();
+    let n = reqs.len();
+    for (i, r) in reqs.into_iter().enumerate() {
+        let s = DecodeSession::new(&sim, cfg.clone(), &r.prompt, r.gen_len)
+            .unwrap();
+        pool.admit(r.id, i, s);
+    }
+    let mut finished = 0;
+    while !pool.is_empty() {
+        finished += pool.step_round(&sim, &params).len();
+    }
+    assert_eq!(finished, n);
+
+    // fairness: between two consecutive steps of a session, every other
+    // session steps at most once (strict round-robin in admission order)
+    let trace = pool.trace();
+    assert!(!trace.is_empty());
+    for s in 0..n as u64 {
+        let occurrences: Vec<usize> = trace
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x == s)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!occurrences.is_empty(), "session {s} never stepped");
+        for w in occurrences.windows(2) {
+            let gap = &trace[w[0] + 1..w[1]];
+            assert!(gap.len() <= n - 1,
+                    "session {s} starved for {} steps", gap.len());
+            let mut seen = std::collections::HashSet::new();
+            for &other in gap {
+                assert!(seen.insert(other),
+                        "session {other} stepped twice between steps of {s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn width_one_pool_matches_sequential_batch1_token_for_token() {
+    let sim = SimBackend::new(11);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    let reference = sequential_reference(&sim, &params);
+
+    // max_concurrent_sessions = 1: admit the next request only when the
+    // pool is empty — exactly the classic batch=1 engine-worker loop
+    let mut queue: std::collections::VecDeque<InterleavedRequest> =
+        mixed_requests().into();
+    let mut pool: SessionPool<()> = SessionPool::new();
+    let mut results: Vec<(String, GenResult)> = Vec::new();
+    while !queue.is_empty() || !pool.is_empty() {
+        if pool.is_empty() {
+            let r = queue.pop_front().unwrap();
+            let s =
+                DecodeSession::new(&sim, cfg.clone(), &r.prompt, r.gen_len)
+                    .unwrap();
+            pool.admit(r.id, (), s);
+        }
+        for f in pool.step_round(&sim, &params) {
+            results.push((f.id, f.result.unwrap()));
+        }
+    }
+
+    assert_eq!(results.len(), reference.len());
+    for ((id_a, a), (id_b, b)) in results.iter().zip(&reference) {
+        assert_eq!(id_a, id_b);
+        assert_eq!(a.tokens, b.tokens, "{id_a}: tokens diverged");
+        assert_eq!(a.forwards, b.forwards, "{id_a}: forwards diverged");
+        assert_eq!(a.rounds, b.rounds, "{id_a}: rounds diverged");
+        assert_eq!(a.mix.full_forwards, b.mix.full_forwards, "{id_a}");
+        assert_eq!(a.mix.window_forwards, b.mix.window_forwards, "{id_a}");
+    }
+}
+
+#[test]
+fn interleaving_width_does_not_change_any_request() {
+    // a session's decode trajectory only depends on its own state, so the
+    // fully interleaved pool must agree with the sequential reference too
+    let sim = SimBackend::new(11);
+    let params = vec![0.5f32; 8];
+    let reference = sequential_reference(&sim, &params);
+    let interleaved =
+        run_interleaved(&sim, &test_cfg(), &params, mixed_requests())
+            .unwrap();
+    for ((id_a, a), (id_b, b)) in interleaved.iter().zip(&reference) {
+        assert_eq!(id_a, id_b);
+        assert_eq!(a.tokens, b.tokens, "{id_a}: interleaving changed output");
+        assert_eq!(a.forwards, b.forwards, "{id_a}");
+    }
+}
+
+#[test]
+fn per_session_failure_does_not_poison_the_pool() {
+    // a prompt longer than s_max - gen_len can't even build a session;
+    // build a valid pool and kill one session by exhausting its progress
+    // budget is hard to trigger deterministically, so instead check the
+    // retirement path with a session that finishes immediately alongside
+    // long-running ones: the pool keeps stepping the survivors.
+    let sim = SimBackend::new(5);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    let mut pool: SessionPool<usize> = SessionPool::new();
+    for (i, gen_len) in [32usize, 128].into_iter().enumerate() {
+        let s = DecodeSession::new(&sim, cfg.clone(), &prompt_for(i),
+                                   gen_len)
+            .unwrap();
+        pool.admit(format!("r{i}"), i, s);
+    }
+    let mut retired = Vec::new();
+    let mut rounds = 0;
+    while !pool.is_empty() {
+        retired.extend(pool.step_round(&sim, &params));
+        rounds += 1;
+        assert!(rounds < 4096);
+    }
+    assert_eq!(retired.len(), 2);
+    // the short request retires first, the long one keeps running
+    assert_eq!(retired[0].id, "r0");
+    assert_eq!(retired[1].id, "r1");
+    assert!(retired.iter().all(|f| f.result.is_ok()));
+}

@@ -41,6 +41,7 @@ fn server_serves_generates_and_shuts_down() {
         strategy: Strategy::FastDllm,
         variant: "xla".into(),
         max_queue: 16,
+        max_concurrent_sessions: 4,
         decode: None,
     };
     let handle = std::thread::spawn(move || {
@@ -97,10 +98,17 @@ fn server_serves_generates_and_shuts_down() {
         h.join().unwrap();
     }
 
-    // ---- stats
+    // ---- stats (including the interleaving gauges)
     let resp = request(&addr, r#"{"cmd":"stats"}"#);
     let j = json::parse(&resp).unwrap();
     assert!(j.get("served").and_then(|v| v.as_usize()).unwrap() >= 5);
+    assert_eq!(
+        j.get("max_concurrent_sessions").and_then(|v| v.as_usize()),
+        Some(4)
+    );
+    assert!(j.get("queue_depth").is_some());
+    assert!(j.get("active_sessions").is_some());
+    assert!(j.get("sessions").and_then(|v| v.as_arr()).is_some());
 
     // ---- shutdown
     let _ = request(&addr, r#"{"cmd":"shutdown"}"#);

@@ -1,0 +1,285 @@
+//! Deterministic test harness for the decode state machine.
+//!
+//! Drives `unmask_round` directly with synthetic head statistics (no
+//! engine, no artifacts) and whole sessions over the `SimBackend`, and
+//! checks the three contract properties:
+//!
+//!   * progress: a round with any visible masked position in an active
+//!     block unmasks at least one token (no wasted forwards);
+//!   * containment: a round never writes outside the active blocks'
+//!     ranges (and never outside the restrict span / stats window);
+//!   * ordering: block states only move forward along
+//!     Inactive -> Activated -> FullyActivated -> Stabilizing(n) ->
+//!     Completed, with the stabilizing counter non-increasing.
+
+use d3llm::decode::multi_block::{unmask_round, BlockState, RoundStatsOwned};
+use d3llm::decode::{DecodeCfg, DecodeSession, SeqState, SessionPhase,
+                    SimBackend, Strategy};
+use d3llm::tokenizer::MASK;
+use d3llm::util::rng::Rng;
+
+fn prop(name: &str, cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_mul(0x51D3).wrapping_add(9));
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut rng)),
+        );
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn state_rank(s: &BlockState) -> u8 {
+    match s {
+        BlockState::Inactive => 0,
+        BlockState::Activated => 1,
+        BlockState::FullyActivated => 2,
+        BlockState::Stabilizing(_) => 3,
+        BlockState::Completed => 4,
+    }
+}
+
+/// Random block-state vector with at least one active block.
+fn random_states(rng: &mut Rng, nb: usize) -> Vec<BlockState> {
+    let mut states: Vec<BlockState> = (0..nb)
+        .map(|_| match rng.usize(5) {
+            0 => BlockState::Inactive,
+            1 => BlockState::Activated,
+            2 => BlockState::FullyActivated,
+            3 => BlockState::Stabilizing(1 + rng.usize(2)),
+            _ => BlockState::Completed,
+        })
+        .collect();
+    let k = rng.usize(nb);
+    states[k] = if rng.bool(0.5) {
+        BlockState::Activated
+    } else {
+        BlockState::FullyActivated
+    };
+    states
+}
+
+/// Random sequence state: masked gen region with a random decoded subset.
+fn random_seq(rng: &mut Rng, nb: usize, block: usize) -> SeqState {
+    let prompt_len = 1 + rng.usize(64);
+    let prompt: Vec<i32> = (0..prompt_len)
+        .map(|_| 5 + rng.usize(90) as i32)
+        .collect();
+    let mut st = SeqState::new(&prompt, nb * block, block, 384);
+    for j in 0..nb * block {
+        if rng.bool(0.5) {
+            st.tokens[prompt_len + j] = 5 + rng.usize(90) as i32;
+        }
+    }
+    st
+}
+
+/// Synthetic full-sequence head statistics.
+fn random_full_stats(rng: &mut Rng, s_max: usize) -> RoundStatsOwned {
+    RoundStatsOwned {
+        argmax: (0..s_max).map(|_| 5 + rng.usize(123) as i32).collect(),
+        conf: (0..s_max).map(|_| rng.f32()).collect(),
+        entropy: (0..s_max).map(|_| rng.f32() * 4.85).collect(),
+        w_lo: 0,
+        w_hi: s_max,
+        absolute: true,
+    }
+}
+
+#[test]
+fn prop_round_makes_progress_and_stays_in_active_ranges() {
+    prop("progress+containment", 300, |rng| {
+        let block = 32;
+        let nb = 1 + rng.usize(4);
+        let mut st = random_seq(rng, nb, block);
+        let mut states = random_states(rng, nb);
+        let cfg = DecodeCfg::preset(Strategy::D3llm);
+        let stats = random_full_stats(rng, st.s_max);
+        let restrict = if rng.bool(0.5) {
+            None
+        } else {
+            let lo = rng.usize(nb);
+            Some((lo, lo + 1 + rng.usize(nb - lo)))
+        };
+        let (b_lo, b_hi) = restrict.unwrap_or((0, nb));
+
+        let visible_masked: Vec<usize> = (b_lo..b_hi.min(nb))
+            .filter(|&b| states[b].is_active())
+            .flat_map(|b| {
+                let (lo, hi) = st.block_range(b);
+                lo..hi
+            })
+            .filter(|&p| st.tokens[p] == MASK)
+            .collect();
+        let before = st.tokens.clone();
+        let states_before = states.clone();
+
+        let completed =
+            unmask_round(&cfg, &mut st, &mut states, &stats, restrict);
+
+        // progress guarantee
+        let unmasked_now: Vec<usize> = (0..st.tokens.len())
+            .filter(|&p| before[p] == MASK && st.tokens[p] != MASK)
+            .collect();
+        if !visible_masked.is_empty() {
+            assert!(!unmasked_now.is_empty(),
+                    "no progress despite visible masked positions");
+        }
+        // containment: writes only at visible masked positions of active
+        // blocks inside the restrict span
+        for &p in &unmasked_now {
+            assert!(visible_masked.contains(&p),
+                    "wrote outside active range at {p}");
+            assert_eq!(st.tokens[p], stats.argmax[p], "wrong token at {p}");
+        }
+        // non-mask positions are never rewritten
+        for p in 0..st.tokens.len() {
+            if before[p] != MASK {
+                assert_eq!(st.tokens[p], before[p], "rewrote {p}");
+            }
+        }
+        // state changes only: active -> Stabilizing on completion
+        for b in 0..nb {
+            if states[b] != states_before[b] {
+                assert!(states_before[b].is_active());
+                assert!(matches!(states[b], BlockState::Stabilizing(_)));
+                assert!(st.block_complete(b));
+                assert!(completed.contains(&b));
+            }
+        }
+        for &b in &completed {
+            assert!(st.block_complete(b), "completed block {b} has masks");
+        }
+    });
+}
+
+#[test]
+fn prop_windowed_round_never_writes_outside_window() {
+    prop("window containment", 300, |rng| {
+        let block = 32;
+        let nb = 2 + rng.usize(3);
+        let mut st = random_seq(rng, nb, block);
+        let mut states = random_states(rng, nb);
+        let cfg = DecodeCfg::preset(Strategy::D3llm);
+        // window over a sub-span of blocks
+        let first = rng.usize(nb);
+        let span = 1 + rng.usize((nb - first).min(3));
+        let (w_lo, _) = st.block_range(first);
+        let w_hi = st.block_range(first + span - 1).1;
+        let w = w_hi - w_lo;
+        let stats = RoundStatsOwned {
+            argmax: (0..w).map(|_| 5 + rng.usize(123) as i32).collect(),
+            conf: (0..w).map(|_| rng.f32()).collect(),
+            entropy: (0..w).map(|_| rng.f32() * 4.85).collect(),
+            w_lo,
+            w_hi,
+            absolute: false,
+        };
+        let before = st.tokens.clone();
+        unmask_round(&cfg, &mut st, &mut states, &stats,
+                     Some((first, first + span)));
+        for p in 0..st.tokens.len() {
+            if p < w_lo || p >= w_hi {
+                assert_eq!(st.tokens[p], before[p],
+                           "windowed round wrote outside [{w_lo},{w_hi}) at {p}");
+            }
+        }
+    });
+}
+
+#[test]
+fn session_block_states_only_move_forward() {
+    for seed in 0..6u64 {
+        for strategy in [Strategy::D3llm, Strategy::D2f] {
+            let sim = SimBackend::new(100 + seed);
+            let mut cfg = DecodeCfg::preset(strategy);
+            cfg.early_stop = false;
+            let params = vec![0.25f32; 16];
+            let prompt: Vec<i32> =
+                (0..12).map(|i| 5 + (i * 3 + seed as i32) % 80).collect();
+            let mut session =
+                DecodeSession::new(&sim, cfg, &prompt, 128).unwrap();
+            let nb = session.st.n_blocks();
+            let mut last_rank: Vec<u8> =
+                session.states.iter().map(state_rank).collect();
+            let mut last_stab: Vec<Option<usize>> = vec![None; nb];
+            let mut guard = 0;
+            while !session.step(&sim, &params).unwrap() {
+                for b in 0..nb {
+                    let r = state_rank(&session.states[b]);
+                    assert!(
+                        r >= last_rank[b],
+                        "block {b} moved backwards: {} -> {r} (seed {seed})",
+                        last_rank[b]
+                    );
+                    if let BlockState::Stabilizing(n) = session.states[b] {
+                        if let Some(prev) = last_stab[b] {
+                            assert!(n <= prev,
+                                    "stabilizing counter grew on block {b}");
+                        }
+                        last_stab[b] = Some(n);
+                    }
+                    last_rank[b] = r;
+                }
+                guard += 1;
+                assert!(guard < 4096, "session did not terminate");
+            }
+            assert!(session.is_done());
+            assert_eq!(session.phase(), SessionPhase::Done);
+        }
+    }
+}
+
+#[test]
+fn session_accounting_is_stable() {
+    let sim = SimBackend::new(42);
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false;
+    let params = vec![0.5f32; 8];
+    let prompt: Vec<i32> = (0..16).map(|i| 5 + i % 80).collect();
+    let mut session = DecodeSession::new(&sim, cfg, &prompt, 96).unwrap();
+    assert_eq!(session.phase(), SessionPhase::Prefill);
+    assert!(session.is_runnable());
+
+    let mut steps = 0;
+    while !session.step(&sim, &params).unwrap() {
+        steps += 1;
+        let p = session.progress();
+        assert_eq!(p.steps, steps, "steps() must count every working step");
+        assert_eq!(p.rounds + 1, steps, "rounds excludes the prefill");
+        assert!(p.forwards <= p.rounds, "at most one forward per round");
+        assert!(p.unmasked <= p.gen_len);
+        assert_eq!(session.phase(), SessionPhase::Decoding);
+    }
+    assert!(!session.is_runnable());
+    let final_progress = session.progress();
+    let r = session.finish();
+    assert_eq!(r.tokens.len(), 96, "early_stop off: full region decodes");
+    assert!(!r.tokens.contains(&MASK));
+    assert_eq!(r.unmasked, 96);
+    assert_eq!(final_progress.unmasked, 96);
+    assert_eq!(r.forwards, final_progress.forwards);
+    assert!(r.mix.full_forwards > 0, "d3llm must refresh");
+    assert!(r.mix.window_forwards > 0);
+}
+
+#[test]
+fn sim_sessions_are_reproducible() {
+    let run = || {
+        let sim = SimBackend::new(7);
+        let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+        cfg.early_stop = false;
+        let params = vec![0.5f32; 8];
+        let prompt: Vec<i32> = (0..20).map(|i| 5 + i % 77).collect();
+        let mut s = DecodeSession::new(&sim, cfg, &prompt, 64).unwrap();
+        while !s.step(&sim, &params).unwrap() {}
+        s.finish()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.forwards, b.forwards);
+    assert_eq!(a.rounds, b.rounds);
+}

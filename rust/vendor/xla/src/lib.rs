@@ -1,0 +1,330 @@
+//! Offline stand-in for the `xla-rs` PJRT bindings.
+//!
+//! The build environment has no crates.io registry and no libxla, so this
+//! crate mirrors the exact API surface `runtime::engine` uses — literals,
+//! host buffers, HLO-text module loading, client/executable lifecycle —
+//! with faithful host-side semantics (shapes, dtypes, tuple decomposition)
+//! but **no graph execution**: `execute`/`execute_b` return a descriptive
+//! error. Everything engine-dependent in the repo already skips politely
+//! when `artifacts/` is missing, and the deterministic `SimBackend`
+//! (`d3llm::decode::sim`) covers scheduler and state-machine behavior
+//! without a real accelerator. To run real artifacts, point the `xla`
+//! dependency in the workspace manifest at the actual `xla-rs` crate — the
+//! call sites compile against either.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(XlaError { msg: msg.into() })
+}
+
+// -------------------------------------------------------------- literals
+
+/// Element storage for a non-tuple literal.
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Supported element types (the repo's graphs are f32/i32 only).
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    #[doc(hidden)]
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+    #[doc(hidden)]
+    fn type_name() -> &'static str;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<f32>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn type_name() -> &'static str {
+        "f32"
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<i32>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn type_name() -> &'static str {
+        "i32"
+    }
+}
+
+/// Host-side literal: flat data plus dimensions (row-major).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(t: T) -> Literal {
+        Literal { data: T::wrap(vec![t]), dims: vec![] }
+    }
+
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { data: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        let n = parts.len() as i64;
+        Literal { data: LiteralData::Tuple(parts), dims: vec![n] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return err("reshape: cannot reshape a tuple literal");
+        }
+        if n as usize != self.element_count() {
+            return err(format!(
+                "reshape: {} elements into shape {:?}",
+                self.element_count(),
+                dims
+            ));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(parts) => Ok(parts),
+            _ => err("to_tuple: literal is not a tuple"),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| XlaError {
+            msg: format!("to_vec: literal is not {}", T::type_name()),
+        })
+    }
+}
+
+// --------------------------------------------------------------- buffers
+
+/// Device buffer; in this offline stand-in it is a host literal.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+// ------------------------------------------------------------ HLO loading
+
+/// Parsed-enough HLO module: the module name and the source text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    name: String,
+    text_len: usize,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file. Validates existence and extracts the
+    /// module name (`HloModule <name>`), matching xla-rs behavior closely
+    /// enough for manifest-driven loading.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => return err(format!("reading {path:?}: {e}")),
+        };
+        let name = text
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("HloModule"))
+            .map(|rest| {
+                rest.trim().split([' ', ',']).next().unwrap_or("").to_string()
+            })
+            .unwrap_or_else(|| {
+                path.file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| "module".to_string())
+            });
+        Ok(HloModuleProto { name, text_len: text.len() })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    name: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        let _ = proto.text_len;
+        XlaComputation { name: proto.name.clone() }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+// ------------------------------------------------------------ client/exec
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-offline-stub".to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { name: comp.name.clone() })
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        if data.len() != n {
+            return err(format!(
+                "buffer_from_host_buffer: {} elements vs shape {:?}",
+                data.len(),
+                dims
+            ));
+        }
+        let lit = Literal::vec1(data);
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let literal =
+            if dims.len() <= 1 { lit } else { lit.reshape(&dims)? };
+        Ok(PjRtBuffer { literal })
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    name: String,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn execute<T: Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(format!(
+            "offline xla stub cannot execute `{}`: link the real xla-rs \
+             crate (see rust/vendor/xla) to run compiled artifacts",
+            self.name
+        ))
+    }
+
+    pub fn execute_b<T: Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(format!(
+            "offline xla stub cannot execute `{}` (buffered): link the real \
+             xla-rs crate (see rust/vendor/xla) to run compiled artifacts",
+            self.name
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![
+            Literal::scalar(1i32),
+            Literal::vec1(&[0.5f32]),
+        ]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![1]);
+        assert!(Literal::scalar(1i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn buffer_validates_shape() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.buffer_from_host_buffer(&[1.0f32; 6], &[2, 3], None).is_ok());
+        assert!(c.buffer_from_host_buffer(&[1.0f32; 5], &[2, 3], None).is_err());
+    }
+
+    #[test]
+    fn execution_is_a_descriptive_error() {
+        let c = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation { name: "prefill_xla".into() };
+        let exe = c.compile(&comp).unwrap();
+        let e = exe.execute::<Literal>(&[]).unwrap_err();
+        assert!(e.msg.contains("prefill_xla"));
+    }
+}
