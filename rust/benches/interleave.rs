@@ -212,4 +212,73 @@ fn main() {
         "interleaving must deliver >= 1.5x aggregate throughput, got {ratio:.2}x"
     );
     println!("PASS: >= 1.5x aggregate throughput for 8 concurrent requests");
+
+    mixed_strategy_pool(&params);
+}
+
+/// Mixed-strategy pool: d3llm + ar + spec sessions interleave in one
+/// `SessionPool`, same-shape rounds coalesce into B>1 batched backend
+/// calls, and every per-request decode stays bit-identical to running
+/// that session alone (B=1) on the same sim seed.
+fn mixed_strategy_pool(params: &[f32]) {
+    let seed = 17u64;
+    let draft = vec![0.25f32; 8];
+    let mk = |s: Strategy| {
+        let mut c = DecodeCfg::preset(s);
+        c.early_stop = false;
+        c
+    };
+    let plan: [(Strategy, usize); 4] = [
+        (Strategy::D3llm, 96),
+        (Strategy::D3llm, 64),
+        (Strategy::Ar, 32),
+        (Strategy::Spec, 32),
+    ];
+
+    // B=1 references: each request alone on a fresh same-seed sim
+    let mut refs = Vec::new();
+    for (k, &(stg, gen_len)) in plan.iter().enumerate() {
+        let ref_sim = SimBackend::new(seed);
+        let mut s = DecodeSession::with_draft(&ref_sim, mk(stg),
+                                              &prompt_for(k), gen_len,
+                                              Some(&draft))
+            .expect("session");
+        while !s.step(&ref_sim, params).expect("step") {}
+        refs.push(s.finish());
+    }
+
+    // the pooled run, with real batched rounds
+    let sim = SimBackend::new(seed);
+    let mut pool: SessionPool<usize> = SessionPool::new();
+    for (k, &(stg, gen_len)) in plan.iter().enumerate() {
+        let s = DecodeSession::with_draft(&sim, mk(stg), &prompt_for(k),
+                                          gen_len, Some(&draft))
+            .expect("session");
+        pool.admit(format!("m{k}"), k, s);
+    }
+    let mut done: Vec<Option<d3llm::decode::GenResult>> =
+        (0..plan.len()).map(|_| None).collect();
+    while !pool.is_empty() {
+        for f in pool.step_round(&sim, params) {
+            done[f.tag] = Some(f.result.expect("mixed decode"));
+        }
+    }
+
+    assert!(
+        sim.window_batch_calls() > 0 && sim.max_window_batch() >= 2,
+        "mixed pool must coalesce same-shape rounds into B>1 calls"
+    );
+    for (k, r) in done.iter().enumerate() {
+        let r = r.as_ref().expect("all served");
+        assert_eq!(r.tokens, refs[k].tokens,
+                   "m{k}: batched pool diverged from B=1");
+        assert_eq!(r.forwards, refs[k].forwards, "m{k}: forwards diverged");
+    }
+    println!(
+        "PASS: mixed-strategy pool (d3llm+ar+spec) coalesced {} batched \
+         window calls (max B={}) with per-request decodes bit-identical \
+         to B=1",
+        sim.window_batch_calls(),
+        sim.max_window_batch()
+    );
 }

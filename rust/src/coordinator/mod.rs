@@ -17,11 +17,15 @@
 //!        v  per-request reply channel
 //!   connection writer
 //!
-//! Multi-block strategies (d3llm / d2f) decode as resumable sessions and
-//! interleave; the non-resumable baselines (ar / vanilla / fast-dllm /
-//! dparallel / spec) run inline between rounds, preserving their exact
-//! single-stream behavior. With `max_concurrent_sessions = 1` the worker
-//! degenerates to the classic batch=1 loop token-for-token.
+//! Every strategy (d3llm / d2f / ar / vanilla / fast-dllm / dparallel /
+//! spec) decodes as a resumable `DecodeSession` over the unified
+//! `DecodePolicy` API, so every request interleaves — one pool can even
+//! mix strategies per request — and `SessionPool::step_round` coalesces
+//! the same-shape forwards of a round into one batched backend call.
+//! (`spec` sessions need a draft checkpoint the worker does not load
+//! yet, so spec requests fail at admission — see the ROADMAP `--draft`
+//! item.) With `max_concurrent_sessions = 1` the worker degenerates to
+//! the classic batch=1 loop token-for-token.
 //!
 //! The engine worker pre-compiles the executables its strategy needs, so
 //! first-request latency is decode, not XLA compilation. Queue depth,
@@ -36,7 +40,6 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -92,8 +95,6 @@ pub struct ServerStats {
     pub steps_total: AtomicU64,
     /// Sessions ever admitted to the pool.
     pub admitted_total: AtomicU64,
-    /// Requests served inline (non-resumable strategies).
-    pub inline_total: AtomicU64,
     /// Configured interleaving width (set once at startup).
     pub max_concurrent: AtomicU64,
     /// Per-session progress snapshots, refreshed every worker cycle.
@@ -244,11 +245,26 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
     ))?;
     params.check(eng.manifest.model("main")?)?;
 
-    // pre-compile the strategy's executables once; every session reuses
-    // the same memoised executables and device-resident parameter buffer
-    let (prefill, dec) = decode::exec_names(&cfg.variant);
-    eng.warmup(&[prefill.as_str(), dec.as_str()])?;
-    eprintln!("[serve] engine ready");
+    // pre-compile every admissible strategy's executables once (any
+    // request may switch strategy per-request, and a compile inside the
+    // serving round would stall the whole interleaved pool). The
+    // configured strategy's executables stay fail-fast at startup; other
+    // strategies' names absent from the manifest are skipped, their
+    // requests will fail per-request instead.
+    let mut execs = decode::strategy_exec_names(cfg.strategy, &cfg.variant);
+    for s in Strategy::ALL {
+        if s == cfg.strategy {
+            continue;
+        }
+        for name in decode::strategy_exec_names(s, &cfg.variant) {
+            if !execs.contains(&name) && eng.manifest.exec(&name).is_ok() {
+                execs.push(name);
+            }
+        }
+    }
+    let exec_refs: Vec<&str> = execs.iter().map(|s| s.as_str()).collect();
+    eng.warmup(&exec_refs)?;
+    eprintln!("[serve] engine ready ({} executables warm)", exec_refs.len());
 
     let max_live = cfg.max_concurrent_sessions.max(1);
     let mut batcher: Batcher<Job> = Batcher::new(cfg.max_queue);
@@ -296,43 +312,21 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
             }
         }
 
-        // ---- admit queued jobs: resumable strategies join the pool,
-        //      the rest decode inline (classic one-shot path)
+        // ---- admit queued jobs: every strategy is a resumable policy
+        //      session, so everything joins the interleaving pool
         while pool.len() < max_live {
             let Some(queued) = batcher.pop() else { break };
             let queue_ms = queued.enqueued.elapsed().as_secs_f64() * 1e3;
             let job = queued.payload;
-            match request_cfg(&cfg, &job.req) {
-                Ok(dcfg) if dcfg.strategy.is_resumable() => {
-                    match admit_session(&eng, &tk, &dcfg, &job.req) {
-                        Ok(session) => {
-                            pool.admit(
-                                job.req.id.clone(),
-                                ActiveJob { reply: job.reply, queue_ms },
-                                session,
-                            );
-                        }
-                        Err(e) => reply_err(&stats, &job, &e),
-                    }
-                }
-                Ok(dcfg) => {
-                    stats.inline_total.fetch_add(1, Ordering::Relaxed);
-                    let line = match serve_inline(&eng, &dcfg, &tk, &params,
-                                                  &job.req, queue_ms) {
-                        Ok(r) => {
-                            record_served(&stats, &r);
-                            protocol::ok_response(&r)
-                        }
-                        Err(e) => {
-                            stats.errors.fetch_add(1, Ordering::Relaxed);
-                            protocol::err_response(&job.req.id,
-                                                   &format!("{e:#}"))
-                        }
-                    };
-                    let _ = job.reply.send(line);
-                    // at most one inline decode per cycle, so a burst of
-                    // non-resumable jobs can't starve the live sessions
-                    break;
+            let admitted = request_cfg(&cfg, &job.req)
+                .and_then(|dcfg| admit_session(&eng, &tk, &dcfg, &job.req));
+            match admitted {
+                Ok(session) => {
+                    pool.admit(
+                        job.req.id.clone(),
+                        ActiveJob { reply: job.reply, queue_ms },
+                        session,
+                    );
                 }
                 Err(e) => reply_err(&stats, &job, &e),
             }
@@ -387,8 +381,8 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                         gen_tokens: r.tokens.len(),
                         tokens: r.tokens,
                         queue_ms: f.tag.queue_ms,
-                        // engine time of this session's own steps, so it
-                        // is comparable with the inline path's decode_ms
+                        // engine time of this session's own steps (its
+                        // share of batched forwards included)
                         decode_ms: f.busy_secs * 1e3,
                     };
                     record_served(&stats, &resp);
@@ -422,33 +416,13 @@ fn record_served(stats: &ServerStats, r: &GenResponse) {
         .fetch_add(r.decode_ms as u64, Ordering::Relaxed);
 }
 
-/// Build a resumable session for one admitted request.
+/// Build a resumable session for one admitted request (any strategy;
+/// `Spec` needs a draft checkpoint the server does not load yet, so it
+/// fails here with a per-request error).
 fn admit_session(eng: &Engine, tk: &Tokenizer, dcfg: &DecodeCfg,
                  req: &GenRequest) -> Result<DecodeSession> {
     let (prompt, gen_len) = prepare_request(eng, tk, req)?;
     DecodeSession::new(eng, dcfg.clone(), &prompt, gen_len)
-}
-
-/// One-shot decode for the non-resumable baselines (ar / vanilla /
-/// fast-dllm / dparallel / spec): identical to the pre-interleaving
-/// engine-worker behavior.
-fn serve_inline(eng: &Engine, dcfg: &DecodeCfg, tk: &Tokenizer,
-                params: &ParamStore, req: &GenRequest, queue_ms: f64)
-                -> Result<GenResponse> {
-    let (prompt, gen_len) = prepare_request(eng, tk, req)?;
-    let t0 = Instant::now();
-    let r = decode::generate(eng, dcfg, &params.data, None, &prompt,
-                             gen_len)?;
-    Ok(GenResponse {
-        id: req.id.clone(),
-        text: tk.decode(&r.tokens),
-        tpf: r.tpf(),
-        forwards: r.forwards,
-        gen_tokens: r.tokens.len(),
-        tokens: r.tokens,
-        queue_ms,
-        decode_ms: t0.elapsed().as_secs_f64() * 1e3,
-    })
 }
 
 /// Blocking client helper (examples + integration tests).

@@ -123,7 +123,6 @@ pub fn stats_response(s: &super::ServerStats) -> String {
          Json::num(s.active_sessions.load(Relaxed) as f64)),
         ("steps", Json::num(s.steps_total.load(Relaxed) as f64)),
         ("admitted", Json::num(s.admitted_total.load(Relaxed) as f64)),
-        ("inline", Json::num(s.inline_total.load(Relaxed) as f64)),
         ("max_concurrent_sessions",
          Json::num(s.max_concurrent.load(Relaxed) as f64)),
         ("sessions", Json::Arr(sessions)),

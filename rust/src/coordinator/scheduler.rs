@@ -1,8 +1,9 @@
-//! Round-robin session scheduler: runs several in-flight multi-block
-//! decode sessions on one engine, one round each per cycle. This is the
-//! continuous-serving analog at the paper's batch=1 compute granularity —
-//! it bounds head-of-line blocking (a long request no longer delays a
-//! short one by its full decode time, only by one round ~ one forward).
+//! Round-robin session scheduler: runs several in-flight decode sessions
+//! (any strategy — every strategy is a resumable `DecodePolicy`) on one
+//! engine, one round each per cycle. This is the continuous-serving
+//! analog at the paper's batch=1 compute granularity — it bounds
+//! head-of-line blocking (a long request no longer delays a short one by
+//! its full decode time, only by one round ~ one forward).
 //!
 //! `SessionPool` is the reusable core: the coordinator's engine worker
 //! admits jobs into it between rounds (up to `max_concurrent_sessions`),
@@ -11,19 +12,37 @@
 //! every live session exactly once in admission order, so between two
 //! consecutive steps of any session, every other live session steps
 //! exactly once (per-session step gap <= pool size).
+//!
+//! ## Batched rounds
+//!
+//! One cycle runs in three phases: every runnable session *plans* its
+//! round (`DecodeSession::plan_round`), the planned forwards are
+//! *executed* — with same-shape forwards (same executable, same
+//! sequence/window length) coalesced into one `Backend::prefill_batch` /
+//! `decode_window_batch` call of B > 1 — and each output is *applied*
+//! back to its session in admission order. Plans are pure descriptions
+//! of forwards, so coalescing cannot change any session's trajectory:
+//! per-session outputs are bit-identical to the B=1 path (asserted in
+//! tests/scheduler_determinism.rs). If a batched call fails, the group
+//! falls back to per-session forwards so one bad request cannot poison
+//! its round-mates.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::decode::{Backend, DecodeCfg, DecodeSession, GenResult,
-                    SessionProgress};
+                    PrefillItem, RoundOut, RoundPlan, SessionProgress,
+                    WindowItem};
 
 /// One admitted request.
 pub struct InterleavedRequest {
     pub id: String,
     pub prompt: Vec<i32>,
     pub gen_len: usize,
+    /// Per-request decode config (strategy, thresholds). `None` uses the
+    /// pool-level default, so one pool can mix strategies freely.
+    pub cfg: Option<DecodeCfg>,
 }
 
 /// A session retired from the pool: either a finished decode or the error
@@ -32,8 +51,8 @@ pub struct Finished<T> {
     pub id: String,
     pub tag: T,
     pub result: Result<GenResult>,
-    /// Engine time this session's own steps took (excludes rounds spent
-    /// on other interleaved sessions).
+    /// Engine time this session's own steps took (its share of batched
+    /// forwards; excludes rounds spent on other interleaved sessions).
     pub busy_secs: f64,
 }
 
@@ -45,13 +64,37 @@ struct Entry<T> {
     busy_secs: f64,
 }
 
+/// What one session's round planned, held between the plan and apply
+/// phases of a cycle.
+enum Slot {
+    /// Not runnable this round (blocked) — skipped.
+    Idle,
+    /// Plan said finished: retire with the session's result.
+    Done,
+    /// Bookkeeping round: apply with `RoundOut::None`.
+    Book,
+    Full { exec: String, tokens: Vec<i32>, valid: Vec<f32> },
+    Window { exec: String, tokens: Vec<i32>, pos: Vec<i32>, valid: Vec<f32> },
+    /// Plan failed: retire with the error.
+    Failed(anyhow::Error),
+}
+
+/// Group `idx` under `key`, preserving first-seen (admission) order.
+fn add_group<K: PartialEq>(groups: &mut Vec<(K, Vec<usize>)>, key: K,
+                           idx: usize) {
+    match groups.iter_mut().find(|(k, _)| *k == key) {
+        Some((_, members)) => members.push(idx),
+        None => groups.push((key, vec![idx])),
+    }
+}
+
 /// Pool of live decode sessions, stepped round-robin in admission order.
 /// `T` is caller metadata carried alongside each session (reply channels,
 /// timing) and handed back on retirement.
 pub struct SessionPool<T> {
     entries: Vec<Entry<T>>,
     next_seq: u64,
-    /// Total `session.step()` calls issued by this pool.
+    /// Total session rounds issued by this pool.
     pub steps_total: u64,
     /// Total sessions ever admitted.
     pub admitted_total: u64,
@@ -114,18 +157,25 @@ impl<T> SessionPool<T> {
         seq
     }
 
-    /// Step every runnable session exactly once, in admission order.
-    /// Finished (or failed) sessions are retired and returned.
+    /// Step every runnable session exactly once, in admission order,
+    /// coalescing same-shape forwards into batched backend calls (see
+    /// module docs). Finished (or failed) sessions are retired and
+    /// returned in admission order.
+    // index loops: the plan phase borrows trace/steps_total alongside
+    // entries, which rules out iter_mut()
+    #[allow(clippy::needless_range_loop)]
     pub fn step_round(&mut self, backend: &dyn Backend, params: &[f32])
                       -> Vec<Finished<T>> {
-        let mut finished = Vec::new();
-        let mut i = 0;
-        while i < self.entries.len() {
+        let n = self.entries.len();
+
+        // ---- phase 1: plan (admission order; this is the fairness trace)
+        let mut slots: Vec<Slot> = Vec::with_capacity(n);
+        for i in 0..n {
             if !self.entries[i].session.is_runnable() {
                 // blocked (future async backends): skip this round; a
-                // *finished* session is retired by the step that finished
-                // it, so this never strands a completed decode
-                i += 1;
+                // *finished* session is retired by the round that
+                // finished it, so this never strands a completed decode
+                slots.push(Slot::Idle);
                 continue;
             }
             if self.record_trace {
@@ -133,31 +183,209 @@ impl<T> SessionPool<T> {
             }
             self.steps_total += 1;
             let t0 = Instant::now();
-            let stepped = self.entries[i].session.step(backend, params);
+            let plan = self.entries[i].session.plan_round(backend, params);
             self.entries[i].busy_secs += t0.elapsed().as_secs_f64();
-            match stepped {
-                Ok(true) => {
-                    let e = self.entries.remove(i);
-                    finished.push(Finished {
-                        id: e.id,
-                        tag: e.tag,
-                        result: Ok(e.session.finish()),
-                        busy_secs: e.busy_secs,
-                    });
+            slots.push(match plan {
+                Ok(RoundPlan::Finished) => Slot::Done,
+                Ok(RoundPlan::Bookkeeping) => Slot::Book,
+                Ok(RoundPlan::Full { exec, tokens, valid }) => {
+                    Slot::Full { exec, tokens, valid }
                 }
-                Ok(false) => i += 1,
-                Err(err) => {
-                    let e = self.entries.remove(i);
-                    finished.push(Finished {
-                        id: e.id,
-                        tag: e.tag,
-                        result: Err(err),
-                        busy_secs: e.busy_secs,
-                    });
+                Ok(RoundPlan::Window { exec, tokens, pos, valid }) => {
+                    Slot::Window { exec, tokens, pos, valid }
+                }
+                Err(e) => Slot::Failed(e),
+            });
+        }
+
+        // ---- phase 2: execute, coalescing same-shape forwards
+        // (group keys borrow the plan's exec name — no per-round clones)
+        let mut outs: Vec<Option<Result<RoundOut>>> =
+            (0..n).map(|_| None).collect();
+        let mut full_groups: Vec<((&str, usize), Vec<usize>)> = Vec::new();
+        let mut win_groups: Vec<((&str, usize), Vec<usize>)> = Vec::new();
+        for (i, s) in slots.iter().enumerate() {
+            match s {
+                Slot::Full { exec, tokens, .. } => {
+                    add_group(&mut full_groups,
+                              (exec.as_str(), tokens.len()), i);
+                }
+                Slot::Window { exec, tokens, .. } => {
+                    add_group(&mut win_groups,
+                              (exec.as_str(), tokens.len()), i);
+                }
+                _ => {}
+            }
+        }
+        for (_, members) in &full_groups {
+            self.run_full_group(backend, params, &slots, members, &mut outs);
+        }
+        for (_, members) in &win_groups {
+            self.run_window_group(backend, params, &slots, members,
+                                  &mut outs);
+        }
+
+        // ---- phase 3: apply outputs + retire, in admission order
+        let mut retire: Vec<(usize, Option<anyhow::Error>)> = Vec::new();
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Slot::Idle => {}
+                Slot::Done => retire.push((i, None)),
+                Slot::Failed(e) => retire.push((i, Some(e))),
+                Slot::Book => {
+                    let t0 = Instant::now();
+                    let r = self.entries[i].session.apply_round(
+                        RoundOut::None);
+                    self.entries[i].busy_secs += t0.elapsed().as_secs_f64();
+                    match r {
+                        Ok(true) => retire.push((i, None)),
+                        Ok(false) => {}
+                        Err(e) => retire.push((i, Some(e))),
+                    }
+                }
+                Slot::Full { .. } | Slot::Window { .. } => {
+                    match outs[i].take().expect("planned round has output") {
+                        Ok(out) => {
+                            let t0 = Instant::now();
+                            let r = self.entries[i].session.apply_round(out);
+                            self.entries[i].busy_secs +=
+                                t0.elapsed().as_secs_f64();
+                            match r {
+                                Ok(true) => retire.push((i, None)),
+                                Ok(false) => {}
+                                Err(e) => retire.push((i, Some(e))),
+                            }
+                        }
+                        Err(e) => retire.push((i, Some(e))),
+                    }
                 }
             }
         }
+
+        let mut finished = Vec::with_capacity(retire.len());
+        let mut removed = 0usize;
+        for (idx, err) in retire {
+            let e = self.entries.remove(idx - removed);
+            removed += 1;
+            finished.push(Finished {
+                id: e.id,
+                tag: e.tag,
+                result: match err {
+                    Some(err) => Err(err),
+                    None => Ok(e.session.finish()),
+                },
+                busy_secs: e.busy_secs,
+            });
+        }
         finished
+    }
+
+    /// Execute one group of same-shape full forwards (B=1 inline, B>1 via
+    /// `prefill_batch`; on batch failure, fall back to per-session calls).
+    ///
+    /// NOTE: deliberately a structural twin of `run_window_group` (the
+    /// window variant threads each session's cache through the items, so
+    /// a shared closure-generic helper would cost more in borrow
+    /// gymnastics than it saves) — keep the batch/fallback/crediting
+    /// logic of the two in sync when editing either.
+    fn run_full_group(&mut self, backend: &dyn Backend, params: &[f32],
+                      slots: &[Slot], members: &[usize],
+                      outs: &mut [Option<Result<RoundOut>>]) {
+        if members.len() >= 2 {
+            let (batched, share) = {
+                let items: Vec<PrefillItem<'_>> = members
+                    .iter()
+                    .map(|&i| {
+                        let Slot::Full { exec, tokens, valid } = &slots[i]
+                        else {
+                            unreachable!("full group holds full plans")
+                        };
+                        PrefillItem { exec, tokens, valid }
+                    })
+                    .collect();
+                let t0 = Instant::now();
+                let r = backend.prefill_batch(params, &items);
+                (r, t0.elapsed().as_secs_f64() / members.len() as f64)
+            };
+            if let Ok(many) = batched {
+                if many.len() == members.len() {
+                    for (&i, out) in members.iter().zip(many) {
+                        self.entries[i].session.credit_forward(share);
+                        self.entries[i].busy_secs += share;
+                        outs[i] = Some(Ok(RoundOut::Full(out)));
+                    }
+                    return;
+                }
+            }
+            // batched call failed (or returned the wrong arity): isolate
+            // failures by re-issuing per-session forwards below
+        }
+        for &i in members {
+            let Slot::Full { exec, tokens, valid } = &slots[i] else {
+                unreachable!("full group holds full plans")
+            };
+            let t0 = Instant::now();
+            let r = backend.prefill(exec, params, tokens, valid);
+            let dt = t0.elapsed().as_secs_f64();
+            self.entries[i].session.credit_forward(dt);
+            self.entries[i].busy_secs += dt;
+            outs[i] = Some(r.map(RoundOut::Full));
+        }
+    }
+
+    /// Execute one group of same-shape windowed forwards, each against
+    /// its own session's cache (B=1 inline, B>1 via `decode_window_batch`;
+    /// on batch failure, fall back to per-session calls). Structural twin
+    /// of `run_full_group` — see the note there.
+    fn run_window_group(&mut self, backend: &dyn Backend, params: &[f32],
+                        slots: &[Slot], members: &[usize],
+                        outs: &mut [Option<Result<RoundOut>>]) {
+        if members.len() >= 2 {
+            let (batched, share) = {
+                let items: Vec<WindowItem<'_>> = members
+                    .iter()
+                    .map(|&i| {
+                        let Slot::Window { exec, tokens, pos, valid } =
+                            &slots[i]
+                        else {
+                            unreachable!("window group holds window plans")
+                        };
+                        WindowItem {
+                            exec,
+                            tokens,
+                            pos,
+                            valid,
+                            cache: &self.entries[i].session.cache,
+                        }
+                    })
+                    .collect();
+                let t0 = Instant::now();
+                let r = backend.decode_window_batch(params, &items);
+                (r, t0.elapsed().as_secs_f64() / members.len() as f64)
+            };
+            if let Ok(many) = batched {
+                if many.len() == members.len() {
+                    for (&i, out) in members.iter().zip(many) {
+                        self.entries[i].session.credit_forward(share);
+                        self.entries[i].busy_secs += share;
+                        outs[i] = Some(Ok(RoundOut::Window(out)));
+                    }
+                    return;
+                }
+            }
+        }
+        for &i in members {
+            let Slot::Window { exec, tokens, pos, valid } = &slots[i] else {
+                unreachable!("window group holds window plans")
+            };
+            let t0 = Instant::now();
+            let r = backend.decode_window(exec, params, tokens, pos, valid,
+                                          &self.entries[i].session.cache);
+            let dt = t0.elapsed().as_secs_f64();
+            self.entries[i].session.credit_forward(dt);
+            self.entries[i].busy_secs += dt;
+            outs[i] = Some(r.map(RoundOut::Window));
+        }
     }
 }
 
@@ -168,14 +396,18 @@ impl<T> Default for SessionPool<T> {
 }
 
 /// Fair round-robin over all sessions until every request completes.
-/// Returns results in the input order.
+/// Accepts any strategy mix (per-request `cfg` overrides the pool
+/// default); `draft_params` is only needed when the mix contains
+/// `Strategy::Spec`. Returns results in the input order.
 pub fn run_interleaved(backend: &dyn Backend, cfg: &DecodeCfg,
-                       params: &[f32], requests: Vec<InterleavedRequest>)
+                       params: &[f32], draft_params: Option<&[f32]>,
+                       requests: Vec<InterleavedRequest>)
                        -> Result<Vec<(String, GenResult)>> {
     let mut pool: SessionPool<usize> = SessionPool::new();
     for (i, r) in requests.into_iter().enumerate() {
-        let session =
-            DecodeSession::new(backend, cfg.clone(), &r.prompt, r.gen_len)?;
+        let dcfg = r.cfg.unwrap_or_else(|| cfg.clone());
+        let session = DecodeSession::with_draft(backend, dcfg, &r.prompt,
+                                                r.gen_len, draft_params)?;
         pool.admit(r.id, i, session);
     }
     let mut done: Vec<(usize, String, GenResult)> = Vec::new();
@@ -227,9 +459,10 @@ mod tests {
                 id: format!("r{i}"),
                 prompt: p.clone(),
                 gen_len: 64,
+                cfg: None,
             })
             .collect();
-        let inter = run_interleaved(&eng, &cfg, &params, reqs).unwrap();
+        let inter = run_interleaved(&eng, &cfg, &params, None, reqs).unwrap();
 
         assert_eq!(inter.len(), 3);
         for ((id, r), seq) in inter.iter().zip(&seq_results) {

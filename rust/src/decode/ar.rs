@@ -1,65 +1,109 @@
 //! Autoregressive baseline (Qwen-2.5 analog): greedy decoding with an
 //! exact KV cache, one token per forward — the TPF = 1 reference point for
 //! the paper's speedup ratios.
+//!
+//! Expressed as a `DecodePolicy`: the prompt prefill is the first round's
+//! `Full` plan (excluded from TPF, like every strategy's prefill), and
+//! each subsequent round plans one `ar_step` window of width 1. Because
+//! the plan is just `(exec, [cur_tok], [cur_pos])`, the serving scheduler
+//! can coalesce the AR steps of several interleaved sessions into one
+//! B>1 `decode_window_batch` call.
 
 use anyhow::Result;
 
-use crate::model::{exec, KvCache};
-use crate::runtime::Engine;
 use crate::tokenizer::EOS;
 
-use super::GenResult;
+use super::backend::Backend;
+use super::policy::{mismatch, DecodePolicy, PolicyCtx, RoundOut, RoundPlan};
 
-/// Greedy AR decode. `prefix` selects the model family: "" for the main
-/// AR checkpoint, "draft_" for the draft model.
-pub fn decode_ar_with(eng: &Engine, prefix: &str, params: &[f32],
-                      prompt: &[i32], gen_len: usize) -> Result<GenResult> {
-    let c = eng.manifest.constants.clone();
-    let model_name = if prefix.is_empty() { "main" } else { "draft" };
-    let spec = eng.manifest.model(model_name)?.clone();
-    let prefill_exec = format!("{prefix}ar_prefill");
-    let step_exec = format!("{prefix}ar_step");
-    assert!(prompt.len() + gen_len <= c.s_max);
-
-    let mut res = GenResult::default();
-    let mut cache = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
-
-    // Exact prefix cache for prompt rows 0..p-2; the last prompt token is
-    // fed through the first ar_step so its row is computed exactly once.
-    let p = prompt.len();
-    let mut tokens = vec![0i32; c.s_max];
-    tokens[..p].copy_from_slice(prompt);
-    let valid: Vec<f32> =
-        (0..c.s_max).map(|i| if i < p { 1.0 } else { 0.0 }).collect();
-    let pre = exec::prefill(eng, &prefill_exec, params, &tokens, &valid)?;
-    cache.install_full(&pre.kcache, &pre.vcache, 0, p - 1);
-
-    let mut generated = Vec::with_capacity(gen_len);
-    let mut cur_tok = prompt[p - 1];
-    let mut cur_pos = p - 1;
-    for _ in 0..gen_len {
-        let out = exec::decode_window(eng, &step_exec, params, &[cur_tok],
-                                      &[cur_pos as i32], &[1.0], &cache)?;
-        res.forwards += 1;
-        res.mix.ar_steps += 1;
-        // freeze the exact KV row of the token just consumed
-        cache.commit_window_rows(&out.k_win, &out.v_win, 1, &[(0, cur_pos)]);
-        let next = out.argmax[0];
-        generated.push(next);
-        if next == EOS {
-            break;
-        }
-        cur_pos += 1;
-        cur_tok = next;
-    }
-
-    res.unmasked = generated.len();
-    res.tokens = generated;
-    res.mix.gen_tokens = res.unmasked;
-    Ok(res)
+pub struct ArPolicy {
+    prefilled: bool,
+    finished: bool,
+    cur_tok: i32,
+    cur_pos: usize,
+    /// Generation positions written so far (== tokens emitted).
+    produced: usize,
 }
 
-pub fn decode_ar(eng: &Engine, params: &[f32], prompt: &[i32],
-                 gen_len: usize) -> Result<GenResult> {
-    decode_ar_with(eng, "", params, prompt, gen_len)
+impl ArPolicy {
+    pub fn new() -> ArPolicy {
+        ArPolicy {
+            prefilled: false,
+            finished: false,
+            cur_tok: 0,
+            cur_pos: 0,
+            produced: 0,
+        }
+    }
+}
+
+impl Default for ArPolicy {
+    fn default() -> Self {
+        ArPolicy::new()
+    }
+}
+
+impl DecodePolicy for ArPolicy {
+    fn plan(&mut self, _backend: &dyn Backend, _params: &[f32],
+            ctx: &mut PolicyCtx<'_>) -> Result<RoundPlan> {
+        if !self.prefilled {
+            // Exact prefix cache for prompt rows 0..p-2; the last prompt
+            // token is fed through the first ar_step so its row is
+            // computed exactly once.
+            return Ok(RoundPlan::Full {
+                exec: "ar_prefill".to_string(),
+                tokens: ctx.st.prompt_prefix_tokens(),
+                valid: ctx.st.prompt_valid(),
+            });
+        }
+        if self.finished || self.produced >= ctx.st.gen_len {
+            return Ok(RoundPlan::Finished);
+        }
+        Ok(RoundPlan::Window {
+            exec: "ar_step".to_string(),
+            tokens: vec![self.cur_tok],
+            pos: vec![self.cur_pos as i32],
+            valid: vec![1.0],
+        })
+    }
+
+    fn apply(&mut self, ctx: &mut PolicyCtx<'_>, out: RoundOut)
+             -> Result<bool> {
+        match out {
+            RoundOut::Full(pre) => {
+                let p = ctx.st.prompt_len;
+                ctx.cache.install_full(&pre.kcache, &pre.vcache, 0, p - 1);
+                self.cur_tok = ctx.st.tokens[p - 1];
+                self.cur_pos = p - 1;
+                self.prefilled = true;
+                Ok(false)
+            }
+            RoundOut::Window(out) => {
+                ctx.res.forwards += 1;
+                ctx.res.mix.ar_steps += 1;
+                // freeze the exact KV row of the token just consumed
+                ctx.cache.commit_window_rows(&out.k_win, &out.v_win, 1,
+                                             &[(0, self.cur_pos)]);
+                let next = out.argmax[0];
+                ctx.st.tokens[ctx.st.gen_start() + self.produced] = next;
+                self.produced += 1;
+                if next == EOS || self.produced >= ctx.st.gen_len {
+                    self.finished = true;
+                    return Ok(true);
+                }
+                self.cur_pos += 1;
+                self.cur_tok = next;
+                Ok(false)
+            }
+            RoundOut::None => Err(mismatch("ar")),
+        }
+    }
+
+    fn prefilled(&self) -> bool {
+        self.prefilled
+    }
+
+    fn emitted_len(&self) -> Option<usize> {
+        Some(self.produced)
+    }
 }

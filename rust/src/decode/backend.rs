@@ -1,9 +1,9 @@
-//! Forward-provider abstraction for the resumable decode session.
+//! Forward-provider abstraction for the decode policies and sessions.
 //!
-//! `DecodeSession` (and therefore the serving scheduler) only needs two
-//! forwards — the full no-cache forward and the windowed cached forward —
-//! plus the compile-time geometry they were lowered with. Abstracting
-//! those behind `Backend` lets the same state machine run against:
+//! Every decode strategy needs exactly two forwards — the full no-cache
+//! forward and the windowed cached forward — plus the compile-time
+//! geometry they were lowered with. Abstracting those behind `Backend`
+//! lets the same policies and the same session driver run against:
 //!
 //!   * the real PJRT `Engine` (production serving), and
 //!   * the deterministic `SimBackend` (`decode::sim`) for scheduler and
@@ -11,6 +11,18 @@
 //!
 //! `&Engine` coerces to `&dyn Backend` at every existing call site, so the
 //! engine-facing code is unchanged apart from the signatures.
+//!
+//! ## Batched forwards
+//!
+//! `prefill_batch` / `decode_window_batch` run B same-shape forwards in
+//! one backend call. The serving scheduler (`SessionPool::step_round`)
+//! coalesces the per-round forwards of sessions whose rounds share a
+//! shape — (executable, sequence/window length) — into one such call. The
+//! default implementations loop over `prefill` / `decode_window`, so a
+//! backend without a lowered B>1 executable (today's `Engine`) keeps
+//! working unchanged; `SimBackend` overrides them with a genuinely
+//! batched single-pass implementation whose per-item outputs are
+//! bit-identical to the B=1 path.
 
 use anyhow::Result;
 
@@ -19,12 +31,29 @@ use crate::model::KvCache;
 use crate::runtime::manifest::{Constants, ModelSpec};
 use crate::runtime::Engine;
 
+/// One full-sequence forward of a batched `prefill_batch` call.
+pub struct PrefillItem<'a> {
+    pub exec: &'a str,
+    pub tokens: &'a [i32],
+    pub valid: &'a [f32],
+}
+
+/// One windowed cached forward of a batched `decode_window_batch` call.
+/// Each item carries its own session's cache (per-request state).
+pub struct WindowItem<'a> {
+    pub exec: &'a str,
+    pub tokens: &'a [i32],
+    pub pos: &'a [i32],
+    pub valid: &'a [f32],
+    pub cache: &'a KvCache,
+}
+
 pub trait Backend {
     /// Compile-time constants the executables were lowered with.
     fn constants(&self) -> &Constants;
 
-    /// Geometry of the main serving model (cache layout).
-    fn model_spec(&self) -> Result<&ModelSpec>;
+    /// Geometry of a serving model ("main", "draft", ...): cache layout.
+    fn model_spec(&self, name: &str) -> Result<&ModelSpec>;
 
     /// Full-sequence bidirectional forward (prompt prefill, KV refresh,
     /// stabilizing rounds). Output vectors are `s_max`-sized.
@@ -32,10 +61,33 @@ pub trait Backend {
                valid: &[f32]) -> Result<PrefillOut>;
 
     /// Windowed forward against the approximate KV cache (the hot path).
-    /// Output vectors are `window`-sized.
+    /// Output vectors match the executable's window length.
     fn decode_window(&self, exec: &str, params: &[f32], win_tokens: &[i32],
                      win_pos: &[i32], win_valid: &[f32], cache: &KvCache)
                      -> Result<DecodeOut>;
+
+    /// B same-shape full forwards in one call. Default: loop over
+    /// `prefill` (correct everywhere, batched nowhere).
+    fn prefill_batch(&self, params: &[f32], items: &[PrefillItem<'_>])
+                     -> Result<Vec<PrefillOut>> {
+        items
+            .iter()
+            .map(|it| self.prefill(it.exec, params, it.tokens, it.valid))
+            .collect()
+    }
+
+    /// B same-shape windowed forwards (each against its own cache) in one
+    /// call. Default: loop over `decode_window`.
+    fn decode_window_batch(&self, params: &[f32], items: &[WindowItem<'_>])
+                           -> Result<Vec<DecodeOut>> {
+        items
+            .iter()
+            .map(|it| {
+                self.decode_window(it.exec, params, it.tokens, it.pos,
+                                   it.valid, it.cache)
+            })
+            .collect()
+    }
 }
 
 impl Backend for Engine {
@@ -43,8 +95,8 @@ impl Backend for Engine {
         &self.manifest.constants
     }
 
-    fn model_spec(&self) -> Result<&ModelSpec> {
-        self.manifest.model("main")
+    fn model_spec(&self, name: &str) -> Result<&ModelSpec> {
+        self.manifest.model(name)
     }
 
     fn prefill(&self, exec_name: &str, params: &[f32], tokens: &[i32],
@@ -58,4 +110,8 @@ impl Backend for Engine {
         exec::decode_window(self, exec_name, params, win_tokens, win_pos,
                             win_valid, cache)
     }
+
+    // `Engine` inherits the loop-based batch defaults: the AOT layer has
+    // no B>1 executable yet (see ROADMAP), so batching degenerates to B
+    // sequential forwards with identical outputs.
 }

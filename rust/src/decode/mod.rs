@@ -1,8 +1,9 @@
 //! Decode strategies (paper §3.2 + every contender of §4.1).
 //!
-//! All strategies run against the same AOT executables and the same
-//! `SeqState`; they differ only in *which* forward they issue per round and
-//! *which* masked positions they unmask from its statistics:
+//! All strategies are `DecodePolicy` implementations (decode/policy.rs)
+//! over the same `Backend` forwards and the same `SeqState`; they differ
+//! only in *which* forward they plan per round and *which* masked
+//! positions they unmask from its statistics:
 //!
 //!   * `Ar`        — autoregressive baseline, exact KV cache (Qwen analog)
 //!   * `Vanilla`   — full no-cache forward, 1 token/step (LLaDA/Dream)
@@ -13,10 +14,16 @@
 //!   * `D3llm`     — entropy-based multi-block with the 5-state block
 //!                   machine, KV-refresh, early stop (the paper's method)
 //!   * `Spec`      — draft-model speculative decoding (EAGLE-3 analog)
+//!
+//! Every strategy decodes through the resumable `DecodeSession`, so every
+//! strategy interleaves in the serving coordinator and runs against the
+//! deterministic `SimBackend`; `generate` is the one-shot run-to-
+//! completion wrapper kept for the CLI / eval / bench paths.
 
 pub mod ar;
 pub mod backend;
 pub mod multi_block;
+pub mod policy;
 pub mod seq_state;
 pub mod session;
 pub mod sim;
@@ -25,15 +32,16 @@ pub mod spec;
 
 use anyhow::Result;
 
-pub use backend::Backend;
+pub use backend::{Backend, PrefillItem, WindowItem};
+pub use policy::{DecodePolicy, PolicyCtx, RoundOut, RoundPlan};
 pub use seq_state::SeqState;
 pub use session::{DecodeSession, SessionPhase, SessionProgress};
 pub use sim::SimBackend;
 
 use crate::metrics::ForwardMix;
-use crate::runtime::Engine;
+use crate::runtime::manifest::Constants;
 
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     Ar,
     Vanilla,
@@ -45,6 +53,21 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// Every strategy, in the paper's presentation order. The exhaustive
+    /// `match` in `name()` keeps this list honest — adding a variant
+    /// without extending both is a compile error there and a test failure
+    /// in `tests/policy_api.rs` (round-trip + session construction per
+    /// variant).
+    pub const ALL: [Strategy; 7] = [
+        Strategy::Ar,
+        Strategy::Vanilla,
+        Strategy::FastDllm,
+        Strategy::DParallel,
+        Strategy::D2f,
+        Strategy::D3llm,
+        Strategy::Spec,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             Strategy::Ar => "ar",
@@ -70,12 +93,21 @@ impl Strategy {
         })
     }
 
-    /// Whether this strategy decodes through the resumable multi-block
-    /// `DecodeSession` (and can therefore be interleaved by the serving
-    /// coordinator). Keep in sync when adding a strategy: a resumable
-    /// strategy not listed here silently loses interleaving.
-    pub fn is_resumable(&self) -> bool {
-        matches!(self, Strategy::D2f | Strategy::D3llm)
+    /// Sequence block granularity for this strategy's `SeqState`:
+    /// token-at-a-time strategies (exact-cache AR, speculative) have no
+    /// block structure — granularity 1 frees them from the
+    /// `gen_len % block == 0` constraint — while diffusion strategies use
+    /// the lowered block size. Exhaustive on purpose: a new strategy must
+    /// choose its granularity here.
+    pub fn block_granularity(&self, c: &Constants) -> usize {
+        match self {
+            Strategy::Ar | Strategy::Spec => 1,
+            Strategy::Vanilla
+            | Strategy::FastDllm
+            | Strategy::DParallel
+            | Strategy::D2f
+            | Strategy::D3llm => c.block,
+        }
     }
 }
 
@@ -189,8 +221,12 @@ pub struct GenResult {
     pub draft_forwards: usize,
     /// Forward mix for the GPU cost model.
     pub mix: ForwardMix,
+    /// Engine + host time attributable to this request: planning, its
+    /// share of (possibly batched) forwards, and unmask application.
+    /// Recorded by `DecodeSession` itself, so interleaved sessions report
+    /// it too; `generate` overwrites it with end-to-end elapsed time.
     pub wall_secs: f64,
-    /// Decode rounds (multi-block scheduling iterations).
+    /// Decode rounds (scheduling iterations; one main forward at most).
     pub rounds: usize,
 }
 
@@ -204,35 +240,20 @@ impl GenResult {
     }
 }
 
-/// Decode one request with the configured strategy.
+/// Decode one request with the configured strategy: a thin run-to-
+/// completion wrapper over `DecodeSession`, kept for CLI / eval / bench
+/// compatibility.
 ///
 /// `params` is the target checkpoint; `draft_params` is only used by
 /// `Strategy::Spec`.
-pub fn generate(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
+pub fn generate(backend: &dyn Backend, cfg: &DecodeCfg, params: &[f32],
                 draft_params: Option<&[f32]>, prompt: &[i32],
                 gen_len: usize) -> Result<GenResult> {
     let t0 = std::time::Instant::now();
-    let mut result = match cfg.strategy {
-        Strategy::Ar => ar::decode_ar(eng, params, prompt, gen_len)?,
-        Strategy::Spec => spec::decode_spec(
-            eng,
-            params,
-            draft_params.ok_or_else(|| {
-                anyhow::anyhow!("spec decoding needs --draft checkpoint")
-            })?,
-            prompt,
-            gen_len,
-            cfg.gamma,
-        )?,
-        Strategy::Vanilla | Strategy::FastDllm | Strategy::DParallel => {
-            single_block::decode_single_block(eng, cfg, params, prompt,
-                                              gen_len)?
-        }
-        Strategy::D2f | Strategy::D3llm => {
-            multi_block::decode_multi_block(eng, cfg, params, prompt,
-                                            gen_len)?
-        }
-    };
+    let mut session = DecodeSession::with_draft(backend, cfg.clone(), prompt,
+                                                gen_len, draft_params)?;
+    while !session.step(backend, params)? {}
+    let mut result = session.finish();
     result.wall_secs = t0.elapsed().as_secs_f64();
     Ok(result)
 }
@@ -240,6 +261,27 @@ pub fn generate(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
 /// Executable names for a hot-path variant.
 pub fn exec_names(variant: &str) -> (String, String) {
     (format!("prefill_{variant}"), format!("decode_{variant}"))
+}
+
+/// Every executable a strategy's sessions may request (the serving
+/// coordinator pre-compiles these so first-request latency is decode,
+/// not XLA compilation).
+pub fn strategy_exec_names(strategy: Strategy, variant: &str) -> Vec<String> {
+    let (prefill, dec) = exec_names(variant);
+    match strategy {
+        Strategy::Ar => vec!["ar_prefill".into(), "ar_step".into()],
+        Strategy::Spec => vec![
+            "ar_prefill".into(),
+            "ar_verify".into(),
+            "draft_ar_prefill".into(),
+            "draft_ar_step".into(),
+        ],
+        Strategy::Vanilla => vec![prefill],
+        Strategy::FastDllm
+        | Strategy::DParallel
+        | Strategy::D2f
+        | Strategy::D3llm => vec![prefill, dec],
+    }
 }
 
 #[cfg(test)]
@@ -281,6 +323,14 @@ mod tests {
         match cfg.metric {
             SelMetric::Entropy(t) => assert!((t - 0.8).abs() < 1e-6),
             _ => panic!("metric kind must be preserved"),
+        }
+    }
+
+    #[test]
+    fn strategy_exec_names_cover_every_variant() {
+        for s in Strategy::ALL {
+            let names = strategy_exec_names(s, "xla");
+            assert!(!names.is_empty(), "{} has no executables", s.name());
         }
     }
 }

@@ -14,17 +14,20 @@
 //! Otherwise the round is a windowed forward over the active span against
 //! the approximate cache.
 //!
-//! The round mechanics live in `DecodeSession` (decode/session.rs) so the
-//! coordinator can interleave several requests; this module holds the
-//! block state machine, the selection rule, and the one-request driver.
+//! `MultiBlockPolicy` implements the `DecodePolicy` plan/apply split: the
+//! round's forward is returned as a batchable plan, and the unmask /
+//! state-transition mechanics run in `apply`. This module holds the block
+//! state machine, the selection rule, and the one-request driver; the
+//! generic round loop lives in `DecodeSession` (decode/session.rs).
 
 use anyhow::Result;
 
 use crate::tokenizer::MASK;
 
 use super::backend::Backend;
+use super::policy::{mismatch, DecodePolicy, PolicyCtx, RoundOut, RoundPlan};
 use super::session::DecodeSession;
-use super::{DecodeCfg, GenResult, SeqState};
+use super::{exec_names, DecodeCfg, GenResult, SeqState};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum BlockState {
@@ -148,4 +151,254 @@ pub fn unmask_round(cfg: &DecodeCfg, st: &mut SeqState,
         }
     }
     newly_complete
+}
+
+// ----------------------------------------------------------------- policy
+
+/// Which forward the current round planned (so `apply` knows how to
+/// consume the output).
+enum Pending {
+    None,
+    Prefill,
+    Refresh,
+    Window { w_lo: usize, w_hi: usize, first: usize, span: usize },
+}
+
+pub struct MultiBlockPolicy {
+    states: Vec<BlockState>,
+    prefilled: bool,
+    pending: Pending,
+    max_active_blocks: usize,
+    window: usize,
+    prefill_exec: String,
+    decode_exec: String,
+}
+
+impl MultiBlockPolicy {
+    pub fn new(backend: &dyn Backend, cfg: &DecodeCfg, st: &SeqState)
+               -> MultiBlockPolicy {
+        let c = backend.constants();
+        let (prefill_exec, decode_exec) = exec_names(&cfg.variant);
+        let mut states = vec![BlockState::Inactive; st.n_blocks()];
+        if let Some(s0) = states.first_mut() {
+            *s0 = BlockState::FullyActivated; // prompt is "complete"
+        }
+        MultiBlockPolicy {
+            states,
+            prefilled: false,
+            pending: Pending::None,
+            max_active_blocks: c.window / c.block,
+            window: c.window,
+            prefill_exec,
+            decode_exec,
+        }
+    }
+
+    /// Post-round block transitions + termination check (identical for
+    /// full-refresh and windowed rounds).
+    fn finish_round(&mut self, ctx: &mut PolicyCtx<'_>) -> Result<bool> {
+        let cfg = ctx.cfg;
+        let nb = ctx.st.n_blocks();
+        for b in 0..nb {
+            let pred = if b == 0 { 1.0 } else { ctx.st.completion(b - 1) };
+            match self.states[b] {
+                BlockState::Inactive => {
+                    let first_inc =
+                        ctx.st.first_incomplete_block().unwrap_or(b);
+                    let fits = b < first_inc + self.max_active_blocks;
+                    let eos_done =
+                        cfg.early_stop && ctx.st.first_eos().is_some();
+                    if fits && !eos_done && pred >= cfg.block_add {
+                        self.states[b] = BlockState::Activated;
+                    }
+                }
+                BlockState::Activated => {
+                    if pred >= cfg.fully_at {
+                        self.states[b] = BlockState::FullyActivated;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        let finished = (cfg.early_stop && ctx.st.eos_settled())
+            || (ctx.st.all_decoded()
+                && self
+                    .states
+                    .iter()
+                    .all(|s| *s == BlockState::Completed))
+            || (ctx.st.all_decoded() && cfg.stabilize_rounds == 0);
+        if ctx.res.rounds > ctx.st.gen_len * 4 {
+            anyhow::bail!("decode session failed to make progress");
+        }
+        Ok(finished)
+    }
+}
+
+impl DecodePolicy for MultiBlockPolicy {
+    fn plan(&mut self, _backend: &dyn Backend, _params: &[f32],
+            ctx: &mut PolicyCtx<'_>) -> Result<RoundPlan> {
+        if !self.prefilled {
+            self.pending = Pending::Prefill;
+            return Ok(RoundPlan::Full {
+                exec: self.prefill_exec.clone(),
+                tokens: ctx.st.tokens.clone(),
+                valid: ctx.st.prompt_valid(),
+            });
+        }
+
+        let cfg = ctx.cfg;
+        let nb = ctx.st.n_blocks();
+        let any_stabilizing = self
+            .states
+            .iter()
+            .any(|s| matches!(s, BlockState::Stabilizing(_)));
+        // `ctx.res.rounds` was already advanced for this round by the
+        // session driver, so the periodic check sees the current round.
+        let periodic =
+            cfg.refresh_every > 0 && ctx.res.rounds % cfg.refresh_every == 0;
+
+        if any_stabilizing || periodic {
+            // full no-cache forward: decode + refresh every cached row
+            self.pending = Pending::Refresh;
+            return Ok(RoundPlan::Full {
+                exec: self.prefill_exec.clone(),
+                tokens: ctx.st.tokens.clone(),
+                valid: ctx.st.full_valid(),
+            });
+        }
+
+        // windowed forward over the active span
+        let first = match (0..nb).find(|&b| self.states[b].is_active()) {
+            Some(f) => f,
+            None => {
+                return match (0..nb)
+                    .find(|&b| self.states[b] == BlockState::Inactive)
+                {
+                    Some(b) => {
+                        self.states[b] = BlockState::Activated;
+                        self.pending = Pending::None;
+                        Ok(RoundPlan::Bookkeeping)
+                    }
+                    None => Ok(RoundPlan::Finished),
+                };
+            }
+        };
+        let last =
+            (0..nb).rev().find(|&b| self.states[b].is_active()).unwrap();
+        let span = (last - first + 1).min(self.max_active_blocks);
+        let (w_lo, _) = ctx.st.block_range(first);
+        let w_hi = ctx.st.block_range(first + span - 1).1;
+
+        let mut win_tokens = vec![0i32; self.window];
+        let mut win_pos = vec![0i32; self.window];
+        let mut win_valid = vec![0.0f32; self.window];
+        for (off, p) in (w_lo..w_hi).enumerate() {
+            win_tokens[off] = ctx.st.tokens[p];
+            win_pos[off] = p as i32;
+            win_valid[off] =
+                if ctx.cache.valid[p] > 0.0 { 0.0 } else { 1.0 };
+        }
+        self.pending = Pending::Window { w_lo, w_hi, first, span };
+        Ok(RoundPlan::Window {
+            exec: self.decode_exec.clone(),
+            tokens: win_tokens,
+            pos: win_pos,
+            valid: win_valid,
+        })
+    }
+
+    fn apply(&mut self, ctx: &mut PolicyCtx<'_>, out: RoundOut)
+             -> Result<bool> {
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        match (pending, out) {
+            (Pending::Prefill, RoundOut::Full(pre)) => {
+                ctx.cache.install_full(&pre.kcache, &pre.vcache, 0,
+                                       ctx.st.prompt_len);
+                self.prefilled = true;
+                Ok(false)
+            }
+            (Pending::None, RoundOut::None) => Ok(false),
+            (Pending::Refresh, RoundOut::Full(out)) => {
+                ctx.res.forwards += 1;
+                ctx.res.mix.full_forwards += 1;
+
+                let nb = ctx.st.n_blocks();
+                ctx.cache.install_full(&out.kcache, &out.vcache, 0,
+                                       ctx.st.prompt_len);
+                for b in 0..nb {
+                    let (lo, hi) = ctx.st.block_range(b);
+                    match self.states[b] {
+                        BlockState::Completed => {
+                            ctx.cache.install_full(&out.kcache, &out.vcache,
+                                                   lo, hi);
+                        }
+                        BlockState::Stabilizing(n) => {
+                            if n <= 1 {
+                                ctx.cache.install_full(&out.kcache,
+                                                       &out.vcache, lo, hi);
+                                self.states[b] = BlockState::Completed;
+                            } else {
+                                self.states[b] =
+                                    BlockState::Stabilizing(n - 1);
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                let stats = RoundStatsOwned {
+                    argmax: out.argmax,
+                    conf: out.conf,
+                    entropy: out.entropy,
+                    w_lo: 0,
+                    w_hi: ctx.st.s_max,
+                    absolute: true,
+                };
+                unmask_round(ctx.cfg, ctx.st, &mut self.states, &stats,
+                             None);
+                self.finish_round(ctx)
+            }
+            (Pending::Window { w_lo, w_hi, first, span },
+             RoundOut::Window(out)) => {
+                ctx.res.forwards += 1;
+                ctx.res.mix.window_forwards += 1;
+
+                let stats = RoundStatsOwned {
+                    argmax: out.argmax.clone(),
+                    conf: out.conf.clone(),
+                    entropy: out.entropy.clone(),
+                    w_lo,
+                    w_hi,
+                    absolute: false,
+                };
+                let completed =
+                    unmask_round(ctx.cfg, ctx.st, &mut self.states, &stats,
+                                 Some((first, first + span)));
+                if ctx.cfg.stabilize_rounds == 0 {
+                    for b in completed {
+                        let (lo, hi) = ctx.st.block_range(b);
+                        let pairs: Vec<(usize, usize)> =
+                            (lo..hi).map(|p| (p - w_lo, p)).collect();
+                        if pairs.iter().all(|&(off, _)| off < self.window) {
+                            ctx.cache.commit_window_rows(&out.k_win,
+                                                         &out.v_win,
+                                                         self.window,
+                                                         &pairs);
+                        }
+                        self.states[b] = BlockState::Completed;
+                    }
+                }
+                self.finish_round(ctx)
+            }
+            _ => Err(mismatch("multi-block")),
+        }
+    }
+
+    fn prefilled(&self) -> bool {
+        self.prefilled
+    }
+
+    fn block_states(&self) -> Option<&[BlockState]> {
+        Some(&self.states)
+    }
 }

@@ -1,0 +1,147 @@
+//! The unified decode-strategy interface: every contender of the paper's
+//! §4.1 comparison (AR, vanilla, Fast-dLLM, dParallel, D2F, d3LLM, spec)
+//! is a `DecodePolicy` — a resumable state machine that advances one
+//! *round* at a time over the shared per-request state (`SeqState` +
+//! primary `KvCache` + `GenResult`).
+//!
+//! A round is split in two so the serving scheduler can batch across
+//! sessions:
+//!
+//!   1. `plan` decides the round's *main forward* and returns it in
+//!      backend-call form (`RoundPlan`). Inherently sequential auxiliary
+//!      forwards — speculative draft proposals, a second model's prompt
+//!      prefill — are issued directly against the backend inside `plan`.
+//!   2. `apply` consumes the executed forward's output (`RoundOut`):
+//!      unmask decisions, cache commits, accounting. It returns `true`
+//!      when the request is finished.
+//!
+//! The generic driver (`DecodeSession`) owns phase/step/round/wall-time
+//! accounting and runs `plan` → execute → `apply`; with one session the
+//! forward runs inline (B=1), while `SessionPool::step_round` coalesces
+//! the same-shape plans of many runnable sessions into one batched
+//! backend call (`Backend::prefill_batch` / `decode_window_batch`).
+//! Because a plan is a pure description of a forward, batching cannot
+//! change any session's trajectory — per-session outputs are bit-identical
+//! to the B=1 path (asserted in `tests/scheduler_determinism.rs`).
+
+use anyhow::{anyhow, Result};
+
+use crate::model::exec::{DecodeOut, PrefillOut};
+use crate::model::KvCache;
+
+use super::ar::ArPolicy;
+use super::backend::Backend;
+use super::multi_block::{BlockState, MultiBlockPolicy};
+use super::single_block::{SingleBlockCachedPolicy, SingleBlockNoCachePolicy};
+use super::spec::SpecPolicy;
+use super::{DecodeCfg, GenResult, SeqState, Strategy};
+
+/// Mutable view of the session-owned state a policy operates on. The
+/// session (not the policy) owns these, so phase/progress introspection
+/// and result extraction are uniform across strategies.
+pub struct PolicyCtx<'a> {
+    pub cfg: &'a DecodeCfg,
+    pub st: &'a mut SeqState,
+    /// Primary (target-model) KV cache. Strategy-private caches (e.g.
+    /// the speculative draft cache) live inside the policy.
+    pub cache: &'a mut KvCache,
+    pub res: &'a mut GenResult,
+}
+
+/// The main forward one decode round wants, as owned backend-call
+/// buffers (owned so the scheduler can collect plans from many sessions
+/// and coalesce the same-shape ones into one batched call).
+pub enum RoundPlan {
+    /// Full-sequence forward (`Backend::prefill`): prompt prefill, KV
+    /// refresh, stabilizing and no-cache decode rounds.
+    Full { exec: String, tokens: Vec<i32>, valid: Vec<f32> },
+    /// Windowed forward (`Backend::decode_window`) against the session's
+    /// primary cache.
+    Window {
+        exec: String,
+        tokens: Vec<i32>,
+        pos: Vec<i32>,
+        valid: Vec<f32>,
+    },
+    /// Pure bookkeeping round — no forward; `apply` runs with
+    /// `RoundOut::None`.
+    Bookkeeping,
+    /// The request is finished; `apply` is not called.
+    Finished,
+}
+
+/// Output of the executed plan, handed back to `DecodePolicy::apply`.
+pub enum RoundOut {
+    Full(PrefillOut),
+    Window(DecodeOut),
+    None,
+}
+
+pub trait DecodePolicy {
+    /// Plan the next round's main forward (see module docs). `ctx.res`
+    /// accounting for auxiliary forwards (e.g. `draft_forwards`) happens
+    /// here; the main forward is accounted in `apply`.
+    fn plan(&mut self, backend: &dyn Backend, params: &[f32],
+            ctx: &mut PolicyCtx<'_>) -> Result<RoundPlan>;
+
+    /// Apply the executed forward. Returns `true` when the request is
+    /// finished.
+    fn apply(&mut self, ctx: &mut PolicyCtx<'_>, out: RoundOut)
+             -> Result<bool>;
+
+    /// Whether the prompt prefill has run. Policies without a distinct
+    /// prefill phase (vanilla's no-cache decode) report `true` from the
+    /// start. Drives `SessionPhase` and round counting: rounds are the
+    /// post-prefill `plan` calls.
+    fn prefilled(&self) -> bool {
+        true
+    }
+
+    /// Multi-block policies expose their block states for tests and
+    /// introspection; other strategies have none.
+    fn block_states(&self) -> Option<&[BlockState]> {
+        None
+    }
+
+    /// Token-at-a-time policies (AR, spec) report how many generation
+    /// positions they emitted so the session returns them *verbatim* —
+    /// including a model that legitimately argmaxes the MASK id — exactly
+    /// like the pre-refactor free functions. Diffusion policies return
+    /// `None` and keep the `SeqState::output()` semantics (truncate at
+    /// EOS, drop undecoded MASK placeholders).
+    fn emitted_len(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Error message shared by every policy's plan/apply mismatch arm.
+pub(crate) fn mismatch(strategy: &'static str) -> anyhow::Error {
+    anyhow!("{strategy} policy: applied output does not match the plan")
+}
+
+/// Build the policy for `cfg.strategy`. `st` is the freshly initialised
+/// sequence state (for block-geometry-dependent setup); `draft_params`
+/// is required by `Strategy::Spec` and ignored by everything else.
+pub fn make_policy(backend: &dyn Backend, cfg: &DecodeCfg, st: &SeqState,
+                   draft_params: Option<&[f32]>)
+                   -> Result<Box<dyn DecodePolicy>> {
+    Ok(match cfg.strategy {
+        Strategy::Ar => Box::new(ArPolicy::new()),
+        Strategy::Spec => {
+            let draft = draft_params.ok_or_else(|| {
+                anyhow!("spec decoding needs --draft checkpoint")
+            })?;
+            Box::new(SpecPolicy::new(backend, cfg, st, draft)?)
+        }
+        Strategy::Vanilla | Strategy::FastDllm | Strategy::DParallel => {
+            if cfg.use_cache {
+                Box::new(SingleBlockCachedPolicy::new(backend, cfg))
+            } else {
+                Box::new(SingleBlockNoCachePolicy::new(cfg))
+            }
+        }
+        Strategy::D2f | Strategy::D3llm => {
+            Box::new(MultiBlockPolicy::new(backend, cfg, st))
+        }
+    })
+}

@@ -60,6 +60,24 @@ impl SeqState {
             .collect()
     }
 
+    /// Attention validity covering only the prompt — the prefill view
+    /// shared by every strategy's prompt prefill.
+    pub fn prompt_valid(&self) -> Vec<f32> {
+        (0..self.s_max)
+            .map(|i| if i < self.prompt_len { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// Full-length token buffer holding only the prompt prefix (PAD
+    /// elsewhere): the AR-family prefill view, which must not see the
+    /// MASK placeholders of the generation region.
+    pub fn prompt_prefix_tokens(&self) -> Vec<i32> {
+        let mut tokens = vec![PAD; self.s_max];
+        tokens[..self.prompt_len]
+            .copy_from_slice(&self.tokens[..self.prompt_len]);
+        tokens
+    }
+
     /// Number of already-decoded tokens in block `b`.
     pub fn decoded_in_block(&self, b: usize) -> usize {
         let (lo, hi) = self.block_range(b);

@@ -1,20 +1,33 @@
-//! Resumable decode session: the multi-block engine exposed one round at a
-//! time, so the coordinator can interleave several in-flight requests on
-//! one engine (round-robin continuous serving) and stream partial tokens.
+//! Resumable decode session: the generic driver that advances *any*
+//! decode strategy one round at a time, so the coordinator can interleave
+//! several in-flight requests on one engine (round-robin continuous
+//! serving) and stream partial tokens.
 //!
-//! `decode_multi_block` is a thin driver over this type; the serving
-//! interleaver (`coordinator::scheduler::SessionPool`) is another. The
-//! session is generic over the forward provider (`decode::Backend`), so
-//! the identical state machine runs against the real PJRT engine or the
-//! deterministic `SimBackend` used by scheduler tests and benches.
+//! The session owns the per-request state every strategy shares — the
+//! sequence (`SeqState`), the primary KV cache, the `GenResult`
+//! accounting (steps, rounds, forwards, wall time) — and delegates the
+//! strategy mechanics to a `DecodePolicy` (`decode::policy`). One
+//! `step()` = plan the round's forward, execute it, apply the unmask
+//! decisions. The scheduler (`coordinator::scheduler::SessionPool`)
+//! drives `plan_round` / `apply_round` directly instead, so it can
+//! coalesce the same-shape forwards of many sessions into one batched
+//! backend call; both drivers produce bit-identical per-session results.
+//!
+//! The session is generic over the forward provider (`decode::Backend`),
+//! so the identical state machine runs against the real PJRT engine or
+//! the deterministic `SimBackend` used by scheduler tests and benches.
+
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::model::KvCache;
 
 use super::backend::Backend;
-use super::multi_block::{unmask_round, BlockState, RoundStatsOwned};
-use super::{exec_names, DecodeCfg, GenResult, SeqState};
+use super::multi_block::BlockState;
+use super::policy::{make_policy, DecodePolicy, PolicyCtx, RoundOut,
+                    RoundPlan};
+use super::{DecodeCfg, GenResult, SeqState};
 
 /// Coarse lifecycle phase, for scheduler accounting / introspection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,43 +63,41 @@ pub struct SessionProgress {
 pub struct DecodeSession {
     pub cfg: DecodeCfg,
     pub st: SeqState,
-    pub states: Vec<BlockState>,
+    /// Primary (target-model) cache; strategy-private caches live in the
+    /// policy.
     pub cache: KvCache,
     pub res: GenResult,
-    round: usize,
+    policy: Box<dyn DecodePolicy>,
     steps: usize,
-    prefilled: bool,
     done: bool,
-    prefill_exec: String,
-    decode_exec: String,
-    max_active_blocks: usize,
-    window: usize,
 }
 
 impl DecodeSession {
+    /// Build a session for any strategy except `Spec` (which needs draft
+    /// parameters — see `with_draft`).
     pub fn new(backend: &dyn Backend, cfg: DecodeCfg, prompt: &[i32],
                gen_len: usize) -> Result<DecodeSession> {
+        DecodeSession::with_draft(backend, cfg, prompt, gen_len, None)
+    }
+
+    /// Build a session for any strategy. `draft_params` is required by
+    /// `Strategy::Spec` and ignored by everything else.
+    pub fn with_draft(backend: &dyn Backend, cfg: DecodeCfg, prompt: &[i32],
+                      gen_len: usize, draft_params: Option<&[f32]>)
+                      -> Result<DecodeSession> {
         let c = backend.constants().clone();
-        let spec = backend.model_spec()?.clone();
-        let (prefill_exec, decode_exec) = exec_names(&cfg.variant);
-        let st = SeqState::new(prompt, gen_len, c.block, c.s_max);
-        let nb = st.n_blocks();
-        let mut states = vec![BlockState::Inactive; nb];
-        states[0] = BlockState::FullyActivated; // prompt is "complete"
+        let spec = backend.model_spec("main")?.clone();
+        let block = cfg.strategy.block_granularity(&c);
+        let st = SeqState::new(prompt, gen_len, block, c.s_max);
+        let policy = make_policy(backend, &cfg, &st, draft_params)?;
         Ok(DecodeSession {
-            cfg,
             cache: KvCache::new(spec.n_layers, st.s_max, spec.d_kv),
             st,
-            states,
+            cfg,
             res: GenResult::default(),
-            round: 0,
+            policy,
             steps: 0,
-            prefilled: false,
             done: false,
-            prefill_exec,
-            decode_exec,
-            max_active_blocks: c.window / c.block,
-            window: c.window,
         })
     }
 
@@ -104,7 +115,7 @@ impl DecodeSession {
     pub fn phase(&self) -> SessionPhase {
         if self.done {
             SessionPhase::Done
-        } else if !self.prefilled {
+        } else if !self.policy.prefilled() {
             SessionPhase::Prefill
         } else {
             SessionPhase::Decoding
@@ -118,7 +129,13 @@ impl DecodeSession {
 
     /// Decode rounds completed so far (prefill excluded).
     pub fn rounds(&self) -> usize {
-        self.round
+        self.res.rounds
+    }
+
+    /// Block states of a multi-block session (`None` for strategies
+    /// without block structure).
+    pub fn block_states(&self) -> Option<&[BlockState]> {
+        self.policy.block_states()
     }
 
     /// Cheap progress snapshot for stats/streaming.
@@ -127,7 +144,7 @@ impl DecodeSession {
             unmasked: self.st.unmasked_count(),
             gen_len: self.st.gen_len,
             steps: self.steps,
-            rounds: self.round,
+            rounds: self.res.rounds,
             forwards: self.res.forwards,
             full_forwards: self.res.mix.full_forwards,
             window_forwards: self.res.mix.window_forwards,
@@ -139,186 +156,128 @@ impl DecodeSession {
         self.st.output()
     }
 
-    /// Run one decode round. Returns true when the request is finished.
-    /// The first call performs the prompt prefill (not counted in TPF).
+    /// Plan this round's main forward (scheduler entry point; `step` is
+    /// the inline single-session driver). Advances step/round accounting;
+    /// a `Finished` plan retires the session without an `apply_round`.
+    pub fn plan_round(&mut self, backend: &dyn Backend, params: &[f32])
+                      -> Result<RoundPlan> {
+        if self.done {
+            return Ok(RoundPlan::Finished);
+        }
+        let t0 = Instant::now();
+        self.steps += 1;
+        if self.policy.prefilled() {
+            self.res.rounds += 1;
+        }
+        let mut ctx = PolicyCtx {
+            cfg: &self.cfg,
+            st: &mut self.st,
+            cache: &mut self.cache,
+            res: &mut self.res,
+        };
+        let plan = self.policy.plan(backend, params, &mut ctx);
+        self.res.wall_secs += t0.elapsed().as_secs_f64();
+        match plan {
+            Ok(RoundPlan::Finished) => {
+                self.done = true;
+                Ok(RoundPlan::Finished)
+            }
+            Ok(other) => Ok(other),
+            Err(e) => {
+                self.done = true;
+                Err(e)
+            }
+        }
+    }
+
+    /// Apply the executed forward for the round planned by `plan_round`.
+    /// Returns true when the request is finished.
+    pub fn apply_round(&mut self, out: RoundOut) -> Result<bool> {
+        let t0 = Instant::now();
+        let mut ctx = PolicyCtx {
+            cfg: &self.cfg,
+            st: &mut self.st,
+            cache: &mut self.cache,
+            res: &mut self.res,
+        };
+        let finished = self.policy.apply(&mut ctx, out);
+        self.res.wall_secs += t0.elapsed().as_secs_f64();
+        match finished {
+            Ok(true) => {
+                self.done = true;
+                Ok(true)
+            }
+            Ok(false) => Ok(false),
+            Err(e) => {
+                self.done = true;
+                Err(e)
+            }
+        }
+    }
+
+    /// Credit engine time spent on this session's share of a (possibly
+    /// batched) forward to its wall-time accounting.
+    pub fn credit_forward(&mut self, secs: f64) {
+        self.res.wall_secs += secs;
+    }
+
+    /// Run one decode round inline (B=1). Returns true when the request
+    /// is finished. The first call performs the prompt prefill (not
+    /// counted in TPF).
     pub fn step(&mut self, backend: &dyn Backend, params: &[f32])
                 -> Result<bool> {
         if self.done {
             return Ok(true);
         }
-        self.steps += 1;
-        if !self.prefilled {
-            let mut pv = vec![0.0f32; self.st.s_max];
-            for v in pv.iter_mut().take(self.st.prompt_len) {
-                *v = 1.0;
-            }
-            let pre = backend.prefill(&self.prefill_exec, params,
-                                      &self.st.tokens, &pv)?;
-            self.cache.install_full(&pre.kcache, &pre.vcache, 0,
-                                    self.st.prompt_len);
-            self.prefilled = true;
-            return Ok(false);
-        }
-
-        let cfg = self.cfg.clone();
-        let nb = self.st.n_blocks();
-        self.round += 1;
-        self.res.rounds += 1;
-
-        let any_stabilizing = self
-            .states
-            .iter()
-            .any(|s| matches!(s, BlockState::Stabilizing(_)));
-        let periodic =
-            cfg.refresh_every > 0 && self.round % cfg.refresh_every == 0;
-
-        if any_stabilizing || periodic {
-            // full no-cache forward: decode + refresh every cached row
-            let full_valid = self.st.full_valid();
-            let out = backend.prefill(&self.prefill_exec, params,
-                                      &self.st.tokens, &full_valid)?;
-            self.res.forwards += 1;
-            self.res.mix.full_forwards += 1;
-
-            self.cache.install_full(&out.kcache, &out.vcache, 0,
-                                    self.st.prompt_len);
-            for b in 0..nb {
-                let (lo, hi) = self.st.block_range(b);
-                match self.states[b] {
-                    BlockState::Completed => {
-                        self.cache.install_full(&out.kcache, &out.vcache,
-                                                lo, hi);
-                    }
-                    BlockState::Stabilizing(n) => {
-                        if n <= 1 {
-                            self.cache.install_full(&out.kcache, &out.vcache,
-                                                    lo, hi);
-                            self.states[b] = BlockState::Completed;
-                        } else {
-                            self.states[b] = BlockState::Stabilizing(n - 1);
-                        }
-                    }
-                    _ => {}
-                }
-            }
-            let stats = RoundStatsOwned {
-                argmax: out.argmax,
-                conf: out.conf,
-                entropy: out.entropy,
-                w_lo: 0,
-                w_hi: self.st.s_max,
-                absolute: true,
-            };
-            unmask_round(&cfg, &mut self.st, &mut self.states, &stats, None);
-        } else {
-            // windowed forward over the active span
-            let first = match (0..nb).find(|&b| self.states[b].is_active()) {
-                Some(f) => f,
-                None => {
-                    match (0..nb)
-                        .find(|&b| self.states[b] == BlockState::Inactive)
-                    {
-                        Some(b) => {
-                            self.states[b] = BlockState::Activated;
-                            return Ok(false);
-                        }
-                        None => {
+        match self.plan_round(backend, params)? {
+            RoundPlan::Finished => Ok(true),
+            RoundPlan::Bookkeeping => self.apply_round(RoundOut::None),
+            RoundPlan::Full { exec, tokens, valid } => {
+                let t0 = Instant::now();
+                let out =
+                    match backend.prefill(&exec, params, &tokens, &valid) {
+                        Ok(out) => out,
+                        Err(e) => {
                             self.done = true;
-                            return Ok(true);
+                            return Err(e);
                         }
-                    }
-                }
-            };
-            let last =
-                (0..nb).rev().find(|&b| self.states[b].is_active()).unwrap();
-            let span = (last - first + 1).min(self.max_active_blocks);
-            let (w_lo, _) = self.st.block_range(first);
-            let w_hi = self.st.block_range(first + span - 1).1;
-            let window = self.window;
-
-            let mut win_tokens = vec![0i32; window];
-            let mut win_pos = vec![0i32; window];
-            let mut win_valid = vec![0.0f32; window];
-            for (off, p) in (w_lo..w_hi).enumerate() {
-                win_tokens[off] = self.st.tokens[p];
-                win_pos[off] = p as i32;
-                win_valid[off] =
-                    if self.cache.valid[p] > 0.0 { 0.0 } else { 1.0 };
+                    };
+                self.credit_forward(t0.elapsed().as_secs_f64());
+                self.apply_round(RoundOut::Full(out))
             }
-            let out = backend.decode_window(&self.decode_exec, params,
-                                            &win_tokens, &win_pos,
-                                            &win_valid, &self.cache)?;
-            self.res.forwards += 1;
-            self.res.mix.window_forwards += 1;
-
-            let stats = RoundStatsOwned {
-                argmax: out.argmax.clone(),
-                conf: out.conf.clone(),
-                entropy: out.entropy.clone(),
-                w_lo,
-                w_hi,
-                absolute: false,
-            };
-            let completed = unmask_round(&cfg, &mut self.st,
-                                         &mut self.states, &stats,
-                                         Some((first, first + span)));
-            if cfg.stabilize_rounds == 0 {
-                for b in completed {
-                    let (lo, hi) = self.st.block_range(b);
-                    let pairs: Vec<(usize, usize)> =
-                        (lo..hi).map(|p| (p - w_lo, p)).collect();
-                    if pairs.iter().all(|&(off, _)| off < window) {
-                        self.cache.commit_window_rows(&out.k_win, &out.v_win,
-                                                      window, &pairs);
+            RoundPlan::Window { exec, tokens, pos, valid } => {
+                let t0 = Instant::now();
+                let out = match backend.decode_window(&exec, params, &tokens,
+                                                      &pos, &valid,
+                                                      &self.cache) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        self.done = true;
+                        return Err(e);
                     }
-                    self.states[b] = BlockState::Completed;
-                }
+                };
+                self.credit_forward(t0.elapsed().as_secs_f64());
+                self.apply_round(RoundOut::Window(out))
             }
         }
-
-        // transitions
-        for b in 0..nb {
-            let pred = if b == 0 { 1.0 } else { self.st.completion(b - 1) };
-            match self.states[b] {
-                BlockState::Inactive => {
-                    let first_inc =
-                        self.st.first_incomplete_block().unwrap_or(b);
-                    let fits = b < first_inc + self.max_active_blocks;
-                    let eos_done =
-                        cfg.early_stop && self.st.first_eos().is_some();
-                    if fits && !eos_done && pred >= cfg.block_add {
-                        self.states[b] = BlockState::Activated;
-                    }
-                }
-                BlockState::Activated => {
-                    if pred >= cfg.fully_at {
-                        self.states[b] = BlockState::FullyActivated;
-                    }
-                }
-                _ => {}
-            }
-        }
-
-        let finished = (cfg.early_stop && self.st.eos_settled())
-            || (self.st.all_decoded()
-                && self
-                    .states
-                    .iter()
-                    .all(|s| *s == BlockState::Completed))
-            || (self.st.all_decoded() && cfg.stabilize_rounds == 0);
-        if finished {
-            self.done = true;
-        }
-        if self.round > self.st.gen_len * 4 {
-            anyhow::bail!("decode session failed to make progress");
-        }
-        Ok(self.done)
     }
 
-    /// Consume the session into its final result.
+    /// Consume the session into its final result. Token-at-a-time
+    /// policies report their emitted count so the generated tokens are
+    /// returned verbatim (a model may legitimately argmax the MASK id);
+    /// diffusion policies use the `SeqState::output()` semantics.
     pub fn finish(mut self) -> GenResult {
-        self.res.tokens = self.st.output();
-        self.res.unmasked = self.st.unmasked_count();
+        match self.policy.emitted_len() {
+            Some(n) => {
+                let lo = self.st.gen_start();
+                self.res.tokens = self.st.tokens[lo..lo + n].to_vec();
+                self.res.unmasked = n;
+            }
+            None => {
+                self.res.tokens = self.st.output();
+                self.res.unmasked = self.st.unmasked_count();
+            }
+        }
         self.res.mix.gen_tokens = self.res.unmasked;
         self.res
     }

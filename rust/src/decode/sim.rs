@@ -12,8 +12,17 @@
 //!     window content), so threshold selection makes geometric progress
 //!     like a real model instead of degenerating to one token per round.
 //!
+//! The batched entry points (`prefill_batch` / `decode_window_batch`) are
+//! overridden with a single-pass implementation over the stacked batch —
+//! the sim analog of a lowered B>1 executable. Per-item outputs are pure
+//! functions of that item's inputs, so they are bit-identical to the B=1
+//! path; call/batch-size telemetry is recorded so scheduler tests can
+//! assert that round coalescing actually happened.
+//!
 //! No artifacts, no PJRT, no I/O: this is the CI-safe harness for every
 //! scheduler and block-state-machine property.
+
+use std::cell::Cell;
 
 use anyhow::{bail, Result};
 
@@ -21,7 +30,7 @@ use crate::model::exec::{DecodeOut, PrefillOut};
 use crate::model::KvCache;
 use crate::runtime::manifest::{Constants, ModelSpec};
 
-use super::backend::Backend;
+use super::backend::{Backend, PrefillItem, WindowItem};
 
 /// Geometry matching the shipped artifacts (see python/compile/config.py
 /// and the manifest loader's test fixture).
@@ -69,19 +78,68 @@ pub struct SimBackend {
     /// When set, roughly this fraction of positions argmax to EOS, for
     /// exercising the early-stop paths. Default: no EOS (full decodes).
     eos_rate: f64,
+    // ---- batched-call telemetry (Cell: the backend is used single-
+    // threaded behind `&dyn Backend`, like the RefCell-caching Engine)
+    prefill_batch_calls: Cell<usize>,
+    prefill_batch_items: Cell<usize>,
+    max_prefill_batch: Cell<usize>,
+    window_batch_calls: Cell<usize>,
+    window_batch_items: Cell<usize>,
+    max_window_batch: Cell<usize>,
 }
 
 impl SimBackend {
     pub fn new(seed: u64) -> SimBackend {
         let constants = sim_constants();
         let spec = sim_model_spec(&constants);
-        SimBackend { constants, spec, seed, eos_rate: 0.0 }
+        SimBackend {
+            constants,
+            spec,
+            seed,
+            eos_rate: 0.0,
+            prefill_batch_calls: Cell::new(0),
+            prefill_batch_items: Cell::new(0),
+            max_prefill_batch: Cell::new(0),
+            window_batch_calls: Cell::new(0),
+            window_batch_items: Cell::new(0),
+            max_window_batch: Cell::new(0),
+        }
     }
 
     /// Enable EOS predictions at roughly `rate` of positions.
     pub fn with_eos_rate(mut self, rate: f64) -> SimBackend {
         self.eos_rate = rate;
         self
+    }
+
+    /// Batched full-forward calls taken (each covering >= 1 items).
+    pub fn prefill_batch_calls(&self) -> usize {
+        self.prefill_batch_calls.get()
+    }
+
+    /// Total items routed through `prefill_batch`.
+    pub fn prefill_batch_items(&self) -> usize {
+        self.prefill_batch_items.get()
+    }
+
+    /// Largest B seen by `prefill_batch`.
+    pub fn max_prefill_batch(&self) -> usize {
+        self.max_prefill_batch.get()
+    }
+
+    /// Batched windowed-forward calls taken (each covering >= 1 items).
+    pub fn window_batch_calls(&self) -> usize {
+        self.window_batch_calls.get()
+    }
+
+    /// Total items routed through `decode_window_batch`.
+    pub fn window_batch_items(&self) -> usize {
+        self.window_batch_items.get()
+    }
+
+    /// Largest B seen by `decode_window_batch`.
+    pub fn max_window_batch(&self) -> usize {
+        self.max_window_batch.get()
     }
 
     #[inline]
@@ -135,19 +193,11 @@ impl SimBackend {
         );
         ((h >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
     }
-}
 
-impl Backend for SimBackend {
-    fn constants(&self) -> &Constants {
-        &self.constants
-    }
-
-    fn model_spec(&self) -> Result<&ModelSpec> {
-        Ok(&self.spec)
-    }
-
-    fn prefill(&self, _exec: &str, params: &[f32], tokens: &[i32],
-               valid: &[f32]) -> Result<PrefillOut> {
+    /// One full forward: the pure per-item function both `prefill` and
+    /// the batched path share (bit-identity between B=1 and B>1).
+    fn prefill_one(&self, params: &[f32], tokens: &[i32], valid: &[f32])
+                   -> Result<PrefillOut> {
         let s = self.constants.s_max;
         if tokens.len() != s || valid.len() != s {
             bail!("sim prefill: tokens/valid must be length {s}");
@@ -181,13 +231,29 @@ impl Backend for SimBackend {
         Ok(out)
     }
 
-    fn decode_window(&self, _exec: &str, params: &[f32], win_tokens: &[i32],
-                     win_pos: &[i32], win_valid: &[f32], cache: &KvCache)
-                     -> Result<DecodeOut> {
-        let w = self.constants.window;
-        if win_tokens.len() != w || win_pos.len() != w || win_valid.len() != w
-        {
-            bail!("sim decode: window inputs must be length {w}");
+    /// Window length the named executable was "lowered" with — mirrors
+    /// the real engine, which looks the shape up per executable, so a
+    /// policy that builds a wrong-length window fails in sim-based CI
+    /// too, not just on PJRT.
+    fn window_len_for(&self, exec: &str) -> usize {
+        match exec {
+            "ar_step" | "draft_ar_step" => 1,
+            "ar_verify" => self.constants.verify_w,
+            _ => self.constants.window, // decode_{xla,pallas}
+        }
+    }
+
+    /// One windowed forward, validated against the executable's window
+    /// length (`ar_step` is 1, `ar_verify` is `verify_w`, `decode_*` is
+    /// `window`).
+    fn decode_window_one(&self, exec: &str, params: &[f32],
+                         win_tokens: &[i32], win_pos: &[i32],
+                         win_valid: &[f32], cache: &KvCache)
+                         -> Result<DecodeOut> {
+        let w = win_tokens.len();
+        let want = self.window_len_for(exec);
+        if w != want || win_pos.len() != w || win_valid.len() != w {
+            bail!("sim decode: `{exec}` window inputs must be length {want}");
         }
         let ctx = self.context_hash(win_tokens, win_pos)
             ^ Self::mix(params.first().map(|p| p.to_bits() as u64)
@@ -216,6 +282,62 @@ impl Backend for SimBackend {
             }
         }
         Ok(out)
+    }
+}
+
+impl Backend for SimBackend {
+    fn constants(&self) -> &Constants {
+        &self.constants
+    }
+
+    fn model_spec(&self, _name: &str) -> Result<&ModelSpec> {
+        // one sim geometry serves every model family (main/draft)
+        Ok(&self.spec)
+    }
+
+    fn prefill(&self, _exec: &str, params: &[f32], tokens: &[i32],
+               valid: &[f32]) -> Result<PrefillOut> {
+        self.prefill_one(params, tokens, valid)
+    }
+
+    fn decode_window(&self, exec: &str, params: &[f32], win_tokens: &[i32],
+                     win_pos: &[i32], win_valid: &[f32], cache: &KvCache)
+                     -> Result<DecodeOut> {
+        self.decode_window_one(exec, params, win_tokens, win_pos, win_valid,
+                               cache)
+    }
+
+    /// Genuinely batched full forward: one pass over the stacked batch
+    /// (the sim analog of a lowered B>1 prefill executable).
+    fn prefill_batch(&self, params: &[f32], items: &[PrefillItem<'_>])
+                     -> Result<Vec<PrefillOut>> {
+        self.prefill_batch_calls.set(self.prefill_batch_calls.get() + 1);
+        self.prefill_batch_items
+            .set(self.prefill_batch_items.get() + items.len());
+        self.max_prefill_batch
+            .set(self.max_prefill_batch.get().max(items.len()));
+        items
+            .iter()
+            .map(|it| self.prefill_one(params, it.tokens, it.valid))
+            .collect()
+    }
+
+    /// Genuinely batched windowed forward: one pass over the stacked
+    /// batch, each lane against its own session cache.
+    fn decode_window_batch(&self, params: &[f32], items: &[WindowItem<'_>])
+                           -> Result<Vec<DecodeOut>> {
+        self.window_batch_calls.set(self.window_batch_calls.get() + 1);
+        self.window_batch_items
+            .set(self.window_batch_items.get() + items.len());
+        self.max_window_batch
+            .set(self.max_window_batch.get().max(items.len()));
+        items
+            .iter()
+            .map(|it| {
+                self.decode_window_one(it.exec, params, it.tokens, it.pos,
+                                       it.valid, it.cache)
+            })
+            .collect()
     }
 }
 
@@ -277,5 +399,65 @@ mod tests {
         let valid = vec![1.0f32; c.s_max];
         let out = sim.prefill("p", &[], &tokens, &valid).unwrap();
         assert!(out.argmax.contains(&c.eos_id));
+    }
+
+    #[test]
+    fn batched_outputs_are_bit_identical_to_single_calls() {
+        let sim = SimBackend::new(9);
+        let c = sim.constants().clone();
+        let spec = sim.model_spec("main").unwrap().clone();
+        let w = c.window;
+        let cache_a = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
+        let mut cache_b = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
+        cache_b.valid[0] = 1.0; // different cache state per lane
+        let ta: Vec<i32> = (0..w as i32).map(|i| 5 + i % 80).collect();
+        let tb: Vec<i32> = (0..w as i32).map(|i| 7 + i % 60).collect();
+        let pos: Vec<i32> = (0..w as i32).collect();
+        let valid = vec![1.0f32; w];
+        let params = [0.5f32];
+
+        let single_a = sim
+            .decode_window("d", &params, &ta, &pos, &valid, &cache_a)
+            .unwrap();
+        let single_b = sim
+            .decode_window("d", &params, &tb, &pos, &valid, &cache_b)
+            .unwrap();
+        let items = [
+            WindowItem { exec: "d", tokens: &ta, pos: &pos, valid: &valid,
+                         cache: &cache_a },
+            WindowItem { exec: "d", tokens: &tb, pos: &pos, valid: &valid,
+                         cache: &cache_b },
+        ];
+        let batched = sim.decode_window_batch(&params, &items).unwrap();
+        assert_eq!(batched.len(), 2);
+        assert_eq!(batched[0].argmax, single_a.argmax);
+        assert_eq!(batched[0].k_win, single_a.k_win);
+        assert_eq!(batched[1].argmax, single_b.argmax);
+        assert_eq!(batched[1].conf, single_b.conf);
+        assert_eq!(sim.window_batch_calls(), 1);
+        assert_eq!(sim.window_batch_items(), 2);
+        assert_eq!(sim.max_window_batch(), 2);
+    }
+
+    #[test]
+    fn window_length_follows_the_executable() {
+        // ar_step (w=1) and ar_verify (w=verify_w) shapes must both work
+        let sim = SimBackend::new(4);
+        let cache = KvCache::new(2, sim.constants().s_max, 4);
+        let one = sim
+            .decode_window("ar_step", &[0.1], &[5], &[0], &[1.0], &cache)
+            .unwrap();
+        assert_eq!(one.argmax.len(), 1);
+        let w = sim.constants().verify_w;
+        let toks = vec![5i32; w];
+        let pos: Vec<i32> = (0..w as i32).collect();
+        let v = vec![1.0f32; w];
+        let ver = sim
+            .decode_window("ar_verify", &[0.1], &toks, &pos, &v, &cache)
+            .unwrap();
+        assert_eq!(ver.argmax.len(), w);
+        assert!(sim
+            .decode_window("d", &[0.1], &[], &[], &[], &cache)
+            .is_err());
     }
 }

@@ -1,153 +1,193 @@
-//! Single-block decoding: vanilla (LLaDA/Dream) and Fast-dLLM-style
-//! confidence-threshold parallel decoding with the block-approximate
-//! KV cache. dParallel uses the same mechanics with a distilled
-//! checkpoint.
+//! Single-block decoding policies: vanilla (LLaDA/Dream) and
+//! Fast-dLLM-style confidence-threshold parallel decoding with the
+//! block-approximate KV cache. dParallel uses the same mechanics with a
+//! distilled checkpoint. Selected by `DecodeCfg::use_cache`:
+//!
+//!   * `SingleBlockNoCachePolicy` — one full no-cache forward per round,
+//!     threshold selection restricted to the first incomplete block
+//!     (semi-AR block diffusion); with the vanilla preset's unreachable
+//!     threshold this is exactly 1 token/step.
+//!   * `SingleBlockCachedPolicy` — prompt prefill into the approximate
+//!     cache, then per-block windowed forwards; a block's KV rows are
+//!     committed when it completes.
 
 use anyhow::Result;
 
-use crate::model::{exec, KvCache};
-use crate::runtime::Engine;
 use crate::tokenizer::MASK;
 
-use super::{exec_names, DecodeCfg, GenResult, SeqState};
+use super::backend::Backend;
+use super::policy::{mismatch, DecodePolicy, PolicyCtx, RoundOut, RoundPlan};
+use super::{exec_names, DecodeCfg};
 
-pub fn decode_single_block(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
-                           prompt: &[i32], gen_len: usize)
-                           -> Result<GenResult> {
-    let c = eng.manifest.constants.clone();
-    let spec = eng.manifest.model("main")?.clone();
-    let (prefill_exec, decode_exec) = exec_names(&cfg.variant);
-    let mut st = SeqState::new(prompt, gen_len, c.block, c.s_max);
-    let mut res = GenResult::default();
-
-    if cfg.use_cache {
-        decode_cached(eng, cfg, params, &mut st, &mut res, &spec,
-                      &prefill_exec, &decode_exec, c.window)?;
-    } else {
-        decode_nocache(eng, cfg, params, &mut st, &mut res, &prefill_exec)?;
+/// Threshold-select within `lo..hi` (offsets into `conf`/`entropy` via
+/// `base`): always at least the best-scoring masked position.
+fn select_in_block(cfg: &DecodeCfg, tokens: &[i32], lo: usize, hi: usize,
+                   base: usize, conf: &[f32], entropy: &[f32])
+                   -> Vec<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    let mut selected = Vec::new();
+    for p in lo..hi {
+        if tokens[p] != MASK {
+            continue;
+        }
+        let i = p - base;
+        let sc = cfg.metric.score(conf[i], entropy[i]);
+        if best.map(|(_, s)| sc > s).unwrap_or(true) {
+            best = Some((p, sc));
+        }
+        if cfg.metric.selects(conf[i], entropy[i]) {
+            selected.push(p);
+        }
     }
-
-    res.tokens = st.output();
-    res.unmasked = st.unmasked_count();
-    res.mix.gen_tokens = res.unmasked;
-    Ok(res)
+    if selected.is_empty() {
+        selected.push(best.expect("incomplete block has masks").0);
+    }
+    selected
 }
 
-/// Vanilla decoding: one full no-cache forward per unmasked token,
-/// restricted to the first incomplete block (semi-AR block diffusion).
-fn decode_nocache(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
-                  st: &mut SeqState, res: &mut GenResult,
-                  prefill_exec: &str) -> Result<()> {
-    let valid = st.full_valid();
-    while let Some(b) = st.first_incomplete_block() {
-        let out = exec::prefill(eng, prefill_exec, params, &st.tokens,
-                                &valid)?;
-        res.forwards += 1;
-        res.mix.full_forwards += 1;
-        res.rounds += 1;
+// --------------------------------------------------------------- no-cache
 
-        let (lo, hi) = st.block_range(b);
-        // threshold-select within the block; always unmask at least the best
-        let mut best: Option<(usize, f32)> = None;
-        let mut selected = Vec::new();
-        for i in lo..hi {
-            if st.tokens[i] != MASK {
-                continue;
-            }
-            let sc = cfg.metric.score(out.conf[i], out.entropy[i]);
-            if best.map(|(_, s)| sc > s).unwrap_or(true) {
-                best = Some((i, sc));
-            }
-            if cfg.metric.selects(out.conf[i], out.entropy[i]) {
-                selected.push(i);
-            }
-        }
-        if selected.is_empty() {
-            selected.push(best.expect("incomplete block has masks").0);
-        }
-        for i in selected {
-            st.tokens[i] = out.argmax[i];
-        }
-        if cfg.early_stop && st.eos_settled() {
-            break;
-        }
-    }
-    Ok(())
+pub struct SingleBlockNoCachePolicy {
+    prefill_exec: String,
 }
 
-/// Fast-dLLM-style: prefill the prompt once into the approximate cache,
-/// then per block decode through the windowed executable; the block's KV
-/// rows are committed when it completes.
-#[allow(clippy::too_many_arguments)]
-fn decode_cached(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
-                 st: &mut SeqState, res: &mut GenResult, spec: &crate::runtime::manifest::ModelSpec,
-                 prefill_exec: &str, decode_exec: &str, window: usize)
-                 -> Result<()> {
-    let mut cache = KvCache::new(spec.n_layers, st.s_max, spec.d_kv);
-    // prompt prefill (excluded from TPF for every method alike)
-    let mut pv = vec![0.0f32; st.s_max];
-    for v in pv.iter_mut().take(st.prompt_len) {
-        *v = 1.0;
+impl SingleBlockNoCachePolicy {
+    pub fn new(cfg: &DecodeCfg) -> SingleBlockNoCachePolicy {
+        let (prefill_exec, _) = exec_names(&cfg.variant);
+        SingleBlockNoCachePolicy { prefill_exec }
     }
-    let pre = exec::prefill(eng, prefill_exec, params, &st.tokens, &pv)?;
-    cache.install_full(&pre.kcache, &pre.vcache, 0, st.prompt_len);
+}
 
-    'blocks: while let Some(b) = st.first_incomplete_block() {
-        let (lo, hi) = st.block_range(b);
-        loop {
-            // window = current block in slots 0..block, rest invalid
-            let mut win_tokens = vec![0i32; window];
-            let mut win_pos = vec![0i32; window];
-            let mut win_valid = vec![0.0f32; window];
-            for (off, p) in (lo..hi).enumerate() {
-                win_tokens[off] = st.tokens[p];
-                win_pos[off] = p as i32;
-                win_valid[off] = 1.0;
-            }
-            let out = exec::decode_window(eng, decode_exec, params,
-                                          &win_tokens, &win_pos, &win_valid,
-                                          &cache)?;
-            res.forwards += 1;
-            res.mix.window_forwards += 1;
-            res.rounds += 1;
+impl DecodePolicy for SingleBlockNoCachePolicy {
+    fn plan(&mut self, _backend: &dyn Backend, _params: &[f32],
+            ctx: &mut PolicyCtx<'_>) -> Result<RoundPlan> {
+        if ctx.st.first_incomplete_block().is_none() {
+            return Ok(RoundPlan::Finished);
+        }
+        Ok(RoundPlan::Full {
+            exec: self.prefill_exec.clone(),
+            tokens: ctx.st.tokens.clone(),
+            valid: ctx.st.full_valid(),
+        })
+    }
 
-            let mut best: Option<(usize, f32)> = None;
-            let mut selected = Vec::new();
-            for off in 0..(hi - lo) {
-                let p = lo + off;
-                if st.tokens[p] != MASK {
-                    continue;
-                }
-                let sc = cfg.metric.score(out.conf[off], out.entropy[off]);
-                if best.map(|(_, s)| sc > s).unwrap_or(true) {
-                    best = Some((off, sc));
-                }
-                if cfg.metric.selects(out.conf[off], out.entropy[off]) {
-                    selected.push(off);
-                }
-            }
-            if selected.is_empty() {
-                selected.push(best.expect("block has masks").0);
-            }
-            for off in selected {
-                st.tokens[lo + off] = out.argmax[off];
-            }
+    fn apply(&mut self, ctx: &mut PolicyCtx<'_>, out: RoundOut)
+             -> Result<bool> {
+        let RoundOut::Full(out) = out else {
+            return Err(mismatch("vanilla"));
+        };
+        ctx.res.forwards += 1;
+        ctx.res.mix.full_forwards += 1;
+        let b = ctx.st.first_incomplete_block().expect("planned round");
+        let (lo, hi) = ctx.st.block_range(b);
+        for p in select_in_block(ctx.cfg, &ctx.st.tokens, lo, hi, 0,
+                                 &out.conf, &out.entropy) {
+            ctx.st.tokens[p] = out.argmax[p];
+        }
+        if ctx.cfg.early_stop && ctx.st.eos_settled() {
+            return Ok(true);
+        }
+        Ok(ctx.st.first_incomplete_block().is_none())
+    }
+}
 
-            if st.block_complete(b) {
-                // approximate commit: KV rows from this (last) forward
-                let pairs: Vec<(usize, usize)> =
-                    (0..(hi - lo)).map(|off| (off, lo + off)).collect();
-                cache.commit_window_rows(&out.k_win, &out.v_win, window,
-                                         &pairs);
-                if cfg.early_stop && st.eos_settled() {
-                    break 'blocks;
-                }
-                break;
-            }
-            if cfg.early_stop && st.eos_settled() {
-                break 'blocks;
-            }
+// ----------------------------------------------------------------- cached
+
+pub struct SingleBlockCachedPolicy {
+    prefilled: bool,
+    window: usize,
+    prefill_exec: String,
+    decode_exec: String,
+    /// Block planned this round: (index, lo, hi).
+    pending: Option<(usize, usize, usize)>,
+}
+
+impl SingleBlockCachedPolicy {
+    pub fn new(backend: &dyn Backend, cfg: &DecodeCfg)
+               -> SingleBlockCachedPolicy {
+        let (prefill_exec, decode_exec) = exec_names(&cfg.variant);
+        SingleBlockCachedPolicy {
+            prefilled: false,
+            window: backend.constants().window,
+            prefill_exec,
+            decode_exec,
+            pending: None,
         }
     }
-    Ok(())
+}
+
+impl DecodePolicy for SingleBlockCachedPolicy {
+    fn plan(&mut self, _backend: &dyn Backend, _params: &[f32],
+            ctx: &mut PolicyCtx<'_>) -> Result<RoundPlan> {
+        if !self.prefilled {
+            // prompt prefill (excluded from TPF for every method alike)
+            return Ok(RoundPlan::Full {
+                exec: self.prefill_exec.clone(),
+                tokens: ctx.st.tokens.clone(),
+                valid: ctx.st.prompt_valid(),
+            });
+        }
+        let Some(b) = ctx.st.first_incomplete_block() else {
+            return Ok(RoundPlan::Finished);
+        };
+        // window = current block in slots 0..block, rest invalid
+        let (lo, hi) = ctx.st.block_range(b);
+        let mut win_tokens = vec![0i32; self.window];
+        let mut win_pos = vec![0i32; self.window];
+        let mut win_valid = vec![0.0f32; self.window];
+        for (off, p) in (lo..hi).enumerate() {
+            win_tokens[off] = ctx.st.tokens[p];
+            win_pos[off] = p as i32;
+            win_valid[off] = 1.0;
+        }
+        self.pending = Some((b, lo, hi));
+        Ok(RoundPlan::Window {
+            exec: self.decode_exec.clone(),
+            tokens: win_tokens,
+            pos: win_pos,
+            valid: win_valid,
+        })
+    }
+
+    fn apply(&mut self, ctx: &mut PolicyCtx<'_>, out: RoundOut)
+             -> Result<bool> {
+        match out {
+            RoundOut::Full(pre) => {
+                ctx.cache.install_full(&pre.kcache, &pre.vcache, 0,
+                                       ctx.st.prompt_len);
+                self.prefilled = true;
+                Ok(false)
+            }
+            RoundOut::Window(out) => {
+                let (b, lo, hi) =
+                    self.pending.take().ok_or_else(|| mismatch("fast-dllm"))?;
+                ctx.res.forwards += 1;
+                ctx.res.mix.window_forwards += 1;
+                for p in select_in_block(ctx.cfg, &ctx.st.tokens, lo, hi, lo,
+                                         &out.conf, &out.entropy) {
+                    ctx.st.tokens[p] = out.argmax[p - lo];
+                }
+                if ctx.st.block_complete(b) {
+                    // approximate commit: KV rows from this (last) forward
+                    let pairs: Vec<(usize, usize)> =
+                        (0..(hi - lo)).map(|off| (off, lo + off)).collect();
+                    ctx.cache.commit_window_rows(&out.k_win, &out.v_win,
+                                                 self.window, &pairs);
+                    if ctx.cfg.early_stop && ctx.st.eos_settled() {
+                        return Ok(true);
+                    }
+                    return Ok(ctx.st.first_incomplete_block().is_none());
+                }
+                if ctx.cfg.early_stop && ctx.st.eos_settled() {
+                    return Ok(true);
+                }
+                Ok(false)
+            }
+            RoundOut::None => Err(mismatch("fast-dllm")),
+        }
+    }
+
+    fn prefilled(&self) -> bool {
+        self.prefilled
+    }
 }

@@ -8,120 +8,191 @@
 //! target's greedy decode — lossless parallelism, the property that lets
 //! speculative methods escape the accuracy-parallelism trade-off (§A.8).
 //!
+//! As a `DecodePolicy`: the gamma draft proposals are inherently
+//! sequential per-session work, so `plan` issues them directly against
+//! the backend (with the policy-owned draft cache and parameters) and
+//! returns the verify window as the round's batchable main forward — the
+//! scheduler can then verify several speculative sessions in one B>1
+//! `decode_window_batch` call.
+//!
 //! TPF counts target forwards only (the paper's convention for EAGLE-3);
 //! draft forwards are reported separately.
 
 use anyhow::Result;
 
-use crate::model::{exec, KvCache};
-use crate::runtime::Engine;
+use crate::model::KvCache;
 use crate::tokenizer::EOS;
 
-use super::GenResult;
+use super::backend::Backend;
+use super::policy::{mismatch, DecodePolicy, PolicyCtx, RoundOut, RoundPlan};
+use super::{DecodeCfg, SeqState};
 
-pub fn decode_spec(eng: &Engine, params: &[f32], draft_params: &[f32],
-                   prompt: &[i32], gen_len: usize, gamma: usize)
-                   -> Result<GenResult> {
-    let c = eng.manifest.constants.clone();
-    let spec_t = eng.manifest.model("main")?.clone();
-    let spec_d = eng.manifest.model("draft")?.clone();
-    let w = c.verify_w;
-    let gamma = gamma.min(w - 1).max(1);
-    let p = prompt.len();
-    assert!(p + gen_len <= c.s_max);
+pub struct SpecPolicy {
+    draft_params: Vec<f32>,
+    d_cache: KvCache,
+    gamma: usize,
+    /// Verify window width (`Constants::verify_w`).
+    w: usize,
+    prefilled: bool,
+    /// Last token whose KV row is not yet cached anywhere.
+    pending_tok: i32,
+    pending_pos: usize,
+    /// Generation positions written so far (== tokens emitted).
+    produced: usize,
+    /// This round's draft proposals (set by `plan`, read by `apply`).
+    proposals: Vec<i32>,
+}
 
-    let mut res = GenResult::default();
-    let mut t_cache = KvCache::new(spec_t.n_layers, c.s_max, spec_t.d_kv);
-    let mut d_cache = KvCache::new(spec_d.n_layers, c.s_max, spec_d.d_kv);
+impl SpecPolicy {
+    pub fn new(backend: &dyn Backend, cfg: &DecodeCfg, st: &SeqState,
+               draft_params: &[f32]) -> Result<SpecPolicy> {
+        let c = backend.constants();
+        let spec_d = backend.model_spec("draft")?.clone();
+        let w = c.verify_w;
+        Ok(SpecPolicy {
+            // owned copy per session: acceptable while draft checkpoints
+            // are test-sized; the ROADMAP `--draft` serving item should
+            // switch this (and `with_draft`) to a shared Arc before real
+            // draft models are loaded
+            draft_params: draft_params.to_vec(),
+            d_cache: KvCache::new(spec_d.n_layers, c.s_max, spec_d.d_kv),
+            gamma: cfg.gamma.min(w - 1).max(1),
+            w,
+            prefilled: false,
+            pending_tok: st.tokens[st.prompt_len - 1],
+            pending_pos: st.prompt_len - 1,
+            produced: 0,
+            proposals: Vec::new(),
+        })
+    }
+}
 
-    // exact prefix caches for rows 0..p-2 (the last prompt token flows
-    // through the first windowed forward of each model)
-    let mut tokens = vec![0i32; c.s_max];
-    tokens[..p].copy_from_slice(prompt);
-    let valid: Vec<f32> =
-        (0..c.s_max).map(|i| if i < p { 1.0 } else { 0.0 }).collect();
-    let pre_t = exec::prefill(eng, "ar_prefill", params, &tokens, &valid)?;
-    t_cache.install_full(&pre_t.kcache, &pre_t.vcache, 0, p - 1);
-    let pre_d =
-        exec::prefill(eng, "draft_ar_prefill", draft_params, &tokens, &valid)?;
-    d_cache.install_full(&pre_d.kcache, &pre_d.vcache, 0, p - 1);
+impl DecodePolicy for SpecPolicy {
+    fn plan(&mut self, backend: &dyn Backend, _params: &[f32],
+            ctx: &mut PolicyCtx<'_>) -> Result<RoundPlan> {
+        if !self.prefilled {
+            // exact prefix caches for rows 0..p-2 (the last prompt token
+            // flows through the first windowed forward of each model);
+            // the draft prefill is auxiliary, the target prefill is the
+            // round's main forward
+            let p = ctx.st.prompt_len;
+            let tokens = ctx.st.prompt_prefix_tokens();
+            let valid = ctx.st.prompt_valid();
+            let pre_d = backend.prefill("draft_ar_prefill",
+                                        &self.draft_params, &tokens, &valid)?;
+            self.d_cache.install_full(&pre_d.kcache, &pre_d.vcache, 0, p - 1);
+            return Ok(RoundPlan::Full {
+                exec: "ar_prefill".to_string(),
+                tokens,
+                valid,
+            });
+        }
+        if self.produced >= ctx.st.gen_len {
+            return Ok(RoundPlan::Finished);
+        }
 
-    // `pending`: last token whose KV row is not yet cached anywhere.
-    let mut pending = prompt[p - 1];
-    let mut pending_pos = p - 1;
-    let mut generated: Vec<i32> = Vec::with_capacity(gen_len);
-
-    'outer: while generated.len() < gen_len {
         // ---- draft proposes gamma tokens (committing its own exact rows)
-        let mut proposals = Vec::with_capacity(gamma);
-        let mut d_tok = pending;
-        let mut d_pos = pending_pos;
-        for _ in 0..gamma {
-            let out = exec::decode_window(eng, "draft_ar_step", draft_params,
-                                          &[d_tok], &[d_pos as i32], &[1.0],
-                                          &d_cache)?;
-            res.draft_forwards += 1;
-            d_cache.commit_window_rows(&out.k_win, &out.v_win, 1,
-                                       &[(0, d_pos)]);
+        self.proposals.clear();
+        let mut d_tok = self.pending_tok;
+        let mut d_pos = self.pending_pos;
+        for _ in 0..self.gamma {
+            let out = backend.decode_window("draft_ar_step",
+                                            &self.draft_params, &[d_tok],
+                                            &[d_pos as i32], &[1.0],
+                                            &self.d_cache)?;
+            ctx.res.draft_forwards += 1;
+            self.d_cache.commit_window_rows(&out.k_win, &out.v_win, 1,
+                                            &[(0, d_pos)]);
             let t = out.argmax[0];
-            proposals.push(t);
+            self.proposals.push(t);
             d_pos += 1;
             d_tok = t;
         }
 
-        // ---- target verifies in one windowed causal forward
+        // ---- the target verify window is the batchable main forward:
         // window = [pending, d1..dgamma], slot i predicts window[i+1]'s
-        // position; slot gamma-? produces the bonus/correction token.
-        let mut win_tokens = vec![0i32; w];
-        let mut win_pos = vec![0i32; w];
-        let mut win_valid = vec![0.0f32; w];
-        win_tokens[0] = pending;
-        win_pos[0] = pending_pos as i32;
+        // position; slot `accepted` produces the bonus/correction token.
+        let mut win_tokens = vec![0i32; self.w];
+        let mut win_pos = vec![0i32; self.w];
+        let mut win_valid = vec![0.0f32; self.w];
+        win_tokens[0] = self.pending_tok;
+        win_pos[0] = self.pending_pos as i32;
         win_valid[0] = 1.0;
-        for (j, &d) in proposals.iter().enumerate() {
+        for (j, &d) in self.proposals.iter().enumerate() {
             win_tokens[j + 1] = d;
-            win_pos[j + 1] = (pending_pos + 1 + j) as i32;
+            win_pos[j + 1] = (self.pending_pos + 1 + j) as i32;
             win_valid[j + 1] = 1.0;
         }
-        let out = exec::decode_window(eng, "ar_verify", params, &win_tokens,
-                                      &win_pos, &win_valid, &t_cache)?;
-        res.forwards += 1;
-        res.mix.window_forwards += 1;
-        res.rounds += 1;
-
-        // ---- greedy acceptance
-        let mut accepted = 0usize;
-        while accepted < gamma && out.argmax[accepted] == proposals[accepted] {
-            accepted += 1;
-        }
-        // target rows become exact cache entries for every consumed slot
-        let commit: Vec<(usize, usize)> = (0..=accepted)
-            .map(|j| (j, pending_pos + j))
-            .collect();
-        t_cache.commit_window_rows(&out.k_win, &out.v_win, w, &commit);
-
-        // accepted proposals stream out...
-        for &d in proposals.iter().take(accepted) {
-            generated.push(d);
-            if d == EOS || generated.len() >= gen_len {
-                break 'outer;
-            }
-        }
-        // ...plus the target's own token at the first mismatch (bonus)
-        let bonus = out.argmax[accepted];
-        generated.push(bonus);
-        if bonus == EOS {
-            break;
-        }
-
-        // draft cache: rows beyond the accepted prefix are stale
-        d_cache.invalidate_from(pending_pos + accepted + 1);
-        pending = bonus;
-        pending_pos += accepted + 1;
+        Ok(RoundPlan::Window {
+            exec: "ar_verify".to_string(),
+            tokens: win_tokens,
+            pos: win_pos,
+            valid: win_valid,
+        })
     }
 
-    res.unmasked = generated.len();
-    res.tokens = generated;
-    res.mix.gen_tokens = res.unmasked;
-    Ok(res)
+    fn apply(&mut self, ctx: &mut PolicyCtx<'_>, out: RoundOut)
+             -> Result<bool> {
+        match out {
+            RoundOut::Full(pre_t) => {
+                ctx.cache.install_full(&pre_t.kcache, &pre_t.vcache, 0,
+                                       ctx.st.prompt_len - 1);
+                self.prefilled = true;
+                Ok(false)
+            }
+            RoundOut::Window(out) => {
+                ctx.res.forwards += 1;
+                ctx.res.mix.window_forwards += 1;
+
+                // ---- greedy acceptance
+                let proposals = std::mem::take(&mut self.proposals);
+                let mut accepted = 0usize;
+                while accepted < proposals.len()
+                    && out.argmax[accepted] == proposals[accepted]
+                {
+                    accepted += 1;
+                }
+                // target rows become exact cache entries for every
+                // consumed slot
+                let commit: Vec<(usize, usize)> = (0..=accepted)
+                    .map(|j| (j, self.pending_pos + j))
+                    .collect();
+                ctx.cache.commit_window_rows(&out.k_win, &out.v_win, self.w,
+                                             &commit);
+
+                // accepted proposals stream out...
+                let g0 = ctx.st.gen_start();
+                for &d in proposals.iter().take(accepted) {
+                    ctx.st.tokens[g0 + self.produced] = d;
+                    self.produced += 1;
+                    if d == EOS || self.produced >= ctx.st.gen_len {
+                        return Ok(true);
+                    }
+                }
+                // ...plus the target's own token at the first mismatch
+                let bonus = out.argmax[accepted];
+                ctx.st.tokens[g0 + self.produced] = bonus;
+                self.produced += 1;
+                if bonus == EOS {
+                    return Ok(true);
+                }
+
+                // draft cache: rows beyond the accepted prefix are stale
+                self.d_cache
+                    .invalidate_from(self.pending_pos + accepted + 1);
+                self.pending_tok = bonus;
+                self.pending_pos += accepted + 1;
+                Ok(self.produced >= ctx.st.gen_len)
+            }
+            RoundOut::None => Err(mismatch("spec")),
+        }
+    }
+
+    fn prefilled(&self) -> bool {
+        self.prefilled
+    }
+
+    fn emitted_len(&self) -> Option<usize> {
+        Some(self.produced)
+    }
 }

@@ -1,0 +1,436 @@
+//! The `DecodePolicy` API contract, over the deterministic `SimBackend`:
+//!
+//!   * `Strategy` is a closed, round-trippable enum: `parse(name(s)) == s`
+//!     for every variant, and every variant constructs a resumable
+//!     `DecodeSession` (this replaces the deleted `is_resumable()` split —
+//!     a new strategy that cannot build a session fails here);
+//!   * the policy-driven Ar / Vanilla / FastDllm / Spec paths are pinned
+//!     token-for-token (and forward-for-forward) against reference
+//!     implementations that replicate the pre-refactor free-function
+//!     decode loops exactly.
+
+use d3llm::decode::{self, Backend, DecodeCfg, DecodeSession, GenResult,
+                    SelMetric, SeqState, SimBackend, Strategy};
+use d3llm::model::KvCache;
+use d3llm::tokenizer::{EOS, MASK};
+
+fn prompt_for(k: usize) -> Vec<i32> {
+    (0..(10 + k % 5)).map(|i| 5 + ((i + 3 * k) % 80) as i32).collect()
+}
+
+// ------------------------------------------------------------ strategy api
+
+#[test]
+fn strategy_names_round_trip_exhaustively() {
+    assert_eq!(Strategy::ALL.len(), 7, "keep ALL in sync with the enum");
+    let mut seen = Vec::new();
+    for s in Strategy::ALL {
+        assert_eq!(Strategy::parse(s.name()), Some(s), "{}", s.name());
+        assert!(!seen.contains(&s.name()), "duplicate name {}", s.name());
+        seen.push(s.name());
+    }
+    assert_eq!(Strategy::parse("bogus"), None);
+}
+
+#[test]
+fn every_strategy_builds_a_resumable_session() {
+    let sim = SimBackend::new(1);
+    let draft = vec![0.25f32; 8];
+    let prompt = prompt_for(0);
+    for s in Strategy::ALL {
+        let cfg = DecodeCfg::preset(s);
+        let session =
+            DecodeSession::with_draft(&sim, cfg, &prompt, 32, Some(&draft));
+        assert!(session.is_ok(), "{}: cannot build a session", s.name());
+        let session = session.unwrap();
+        assert!(session.is_runnable(), "{}", s.name());
+        assert!(!session.is_done(), "{}", s.name());
+    }
+    // spec is the only strategy that needs the draft checkpoint
+    for s in Strategy::ALL {
+        let built = DecodeSession::new(&sim, DecodeCfg::preset(s), &prompt,
+                                       32);
+        assert_eq!(built.is_err(), s == Strategy::Spec, "{}", s.name());
+    }
+}
+
+#[test]
+fn every_strategy_decodes_to_completion_on_the_sim() {
+    let sim = SimBackend::new(3);
+    let params = vec![0.5f32; 8];
+    let draft = vec![0.25f32; 8];
+    let prompt = prompt_for(1);
+    for s in Strategy::ALL {
+        let mut cfg = DecodeCfg::preset(s);
+        cfg.early_stop = false; // sim argmax never emits EOS by default
+        let r = decode::generate(&sim, &cfg, &params, Some(&draft), &prompt,
+                                 32)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", s.name()));
+        assert_eq!(r.tokens.len(), 32, "{}: incomplete", s.name());
+        assert!(!r.tokens.contains(&MASK), "{}", s.name());
+        assert!(r.forwards > 0, "{}", s.name());
+        assert!(r.wall_secs > 0.0, "{}: wall time not recorded", s.name());
+    }
+}
+
+// ---------------------------------------------------- legacy reference: ar
+
+/// Pre-refactor `decode_ar` (rust/src/decode/ar.rs at PR 1), ported
+/// verbatim from `&Engine` to `&dyn Backend`.
+fn legacy_ar(backend: &dyn Backend, params: &[f32], prompt: &[i32],
+             gen_len: usize) -> GenResult {
+    let c = backend.constants().clone();
+    let spec = backend.model_spec("main").unwrap().clone();
+    assert!(prompt.len() + gen_len <= c.s_max);
+
+    let mut res = GenResult::default();
+    let mut cache = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
+
+    let p = prompt.len();
+    let mut tokens = vec![0i32; c.s_max];
+    tokens[..p].copy_from_slice(prompt);
+    let valid: Vec<f32> =
+        (0..c.s_max).map(|i| if i < p { 1.0 } else { 0.0 }).collect();
+    let pre = backend.prefill("ar_prefill", params, &tokens, &valid).unwrap();
+    cache.install_full(&pre.kcache, &pre.vcache, 0, p - 1);
+
+    let mut generated = Vec::with_capacity(gen_len);
+    let mut cur_tok = prompt[p - 1];
+    let mut cur_pos = p - 1;
+    for _ in 0..gen_len {
+        let out = backend
+            .decode_window("ar_step", params, &[cur_tok], &[cur_pos as i32],
+                           &[1.0], &cache)
+            .unwrap();
+        res.forwards += 1;
+        res.mix.ar_steps += 1;
+        cache.commit_window_rows(&out.k_win, &out.v_win, 1, &[(0, cur_pos)]);
+        let next = out.argmax[0];
+        generated.push(next);
+        if next == EOS {
+            break;
+        }
+        cur_pos += 1;
+        cur_tok = next;
+    }
+
+    res.unmasked = generated.len();
+    res.tokens = generated;
+    res.mix.gen_tokens = res.unmasked;
+    res
+}
+
+// ------------------------------------------------- legacy: single block
+
+/// Pre-refactor `decode_single_block` (no-cache branch), ported verbatim.
+fn legacy_nocache(backend: &dyn Backend, cfg: &DecodeCfg, params: &[f32],
+                  prompt: &[i32], gen_len: usize) -> GenResult {
+    let c = backend.constants().clone();
+    let (prefill_exec, _) = decode::exec_names(&cfg.variant);
+    let mut st = SeqState::new(prompt, gen_len, c.block, c.s_max);
+    let mut res = GenResult::default();
+
+    let valid = st.full_valid();
+    while let Some(b) = st.first_incomplete_block() {
+        let out = backend
+            .prefill(&prefill_exec, params, &st.tokens, &valid)
+            .unwrap();
+        res.forwards += 1;
+        res.mix.full_forwards += 1;
+        res.rounds += 1;
+
+        let (lo, hi) = st.block_range(b);
+        let mut best: Option<(usize, f32)> = None;
+        let mut selected = Vec::new();
+        for i in lo..hi {
+            if st.tokens[i] != MASK {
+                continue;
+            }
+            let sc = cfg.metric.score(out.conf[i], out.entropy[i]);
+            if best.map(|(_, s)| sc > s).unwrap_or(true) {
+                best = Some((i, sc));
+            }
+            if cfg.metric.selects(out.conf[i], out.entropy[i]) {
+                selected.push(i);
+            }
+        }
+        if selected.is_empty() {
+            selected.push(best.expect("incomplete block has masks").0);
+        }
+        for i in selected {
+            st.tokens[i] = out.argmax[i];
+        }
+        if cfg.early_stop && st.eos_settled() {
+            break;
+        }
+    }
+
+    res.tokens = st.output();
+    res.unmasked = st.unmasked_count();
+    res.mix.gen_tokens = res.unmasked;
+    res
+}
+
+/// Pre-refactor `decode_single_block` (cached branch), ported verbatim.
+fn legacy_cached(backend: &dyn Backend, cfg: &DecodeCfg, params: &[f32],
+                 prompt: &[i32], gen_len: usize) -> GenResult {
+    let c = backend.constants().clone();
+    let spec = backend.model_spec("main").unwrap().clone();
+    let (prefill_exec, decode_exec) = decode::exec_names(&cfg.variant);
+    let window = c.window;
+    let mut st = SeqState::new(prompt, gen_len, c.block, c.s_max);
+    let mut res = GenResult::default();
+
+    let mut cache = KvCache::new(spec.n_layers, st.s_max, spec.d_kv);
+    let mut pv = vec![0.0f32; st.s_max];
+    for v in pv.iter_mut().take(st.prompt_len) {
+        *v = 1.0;
+    }
+    let pre = backend
+        .prefill(&prefill_exec, params, &st.tokens, &pv)
+        .unwrap();
+    cache.install_full(&pre.kcache, &pre.vcache, 0, st.prompt_len);
+
+    'blocks: while let Some(b) = st.first_incomplete_block() {
+        let (lo, hi) = st.block_range(b);
+        loop {
+            let mut win_tokens = vec![0i32; window];
+            let mut win_pos = vec![0i32; window];
+            let mut win_valid = vec![0.0f32; window];
+            for (off, p) in (lo..hi).enumerate() {
+                win_tokens[off] = st.tokens[p];
+                win_pos[off] = p as i32;
+                win_valid[off] = 1.0;
+            }
+            let out = backend
+                .decode_window(&decode_exec, params, &win_tokens, &win_pos,
+                               &win_valid, &cache)
+                .unwrap();
+            res.forwards += 1;
+            res.mix.window_forwards += 1;
+            res.rounds += 1;
+
+            let mut best: Option<(usize, f32)> = None;
+            let mut selected = Vec::new();
+            for off in 0..(hi - lo) {
+                let p = lo + off;
+                if st.tokens[p] != MASK {
+                    continue;
+                }
+                let sc = cfg.metric.score(out.conf[off], out.entropy[off]);
+                if best.map(|(_, s)| sc > s).unwrap_or(true) {
+                    best = Some((off, sc));
+                }
+                if cfg.metric.selects(out.conf[off], out.entropy[off]) {
+                    selected.push(off);
+                }
+            }
+            if selected.is_empty() {
+                selected.push(best.expect("block has masks").0);
+            }
+            for off in selected {
+                st.tokens[lo + off] = out.argmax[off];
+            }
+
+            if st.block_complete(b) {
+                let pairs: Vec<(usize, usize)> =
+                    (0..(hi - lo)).map(|off| (off, lo + off)).collect();
+                cache.commit_window_rows(&out.k_win, &out.v_win, window,
+                                         &pairs);
+                if cfg.early_stop && st.eos_settled() {
+                    break 'blocks;
+                }
+                break;
+            }
+            if cfg.early_stop && st.eos_settled() {
+                break 'blocks;
+            }
+        }
+    }
+
+    res.tokens = st.output();
+    res.unmasked = st.unmasked_count();
+    res.mix.gen_tokens = res.unmasked;
+    res
+}
+
+// ------------------------------------------------------- legacy: spec
+
+/// Pre-refactor `decode_spec`, ported verbatim.
+fn legacy_spec(backend: &dyn Backend, params: &[f32], draft_params: &[f32],
+               prompt: &[i32], gen_len: usize, gamma: usize) -> GenResult {
+    let c = backend.constants().clone();
+    let spec_t = backend.model_spec("main").unwrap().clone();
+    let spec_d = backend.model_spec("draft").unwrap().clone();
+    let w = c.verify_w;
+    let gamma = gamma.min(w - 1).max(1);
+    let p = prompt.len();
+    assert!(p + gen_len <= c.s_max);
+
+    let mut res = GenResult::default();
+    let mut t_cache = KvCache::new(spec_t.n_layers, c.s_max, spec_t.d_kv);
+    let mut d_cache = KvCache::new(spec_d.n_layers, c.s_max, spec_d.d_kv);
+
+    let mut tokens = vec![0i32; c.s_max];
+    tokens[..p].copy_from_slice(prompt);
+    let valid: Vec<f32> =
+        (0..c.s_max).map(|i| if i < p { 1.0 } else { 0.0 }).collect();
+    let pre_t =
+        backend.prefill("ar_prefill", params, &tokens, &valid).unwrap();
+    t_cache.install_full(&pre_t.kcache, &pre_t.vcache, 0, p - 1);
+    let pre_d = backend
+        .prefill("draft_ar_prefill", draft_params, &tokens, &valid)
+        .unwrap();
+    d_cache.install_full(&pre_d.kcache, &pre_d.vcache, 0, p - 1);
+
+    let mut pending = prompt[p - 1];
+    let mut pending_pos = p - 1;
+    let mut generated: Vec<i32> = Vec::with_capacity(gen_len);
+
+    'outer: while generated.len() < gen_len {
+        let mut proposals = Vec::with_capacity(gamma);
+        let mut d_tok = pending;
+        let mut d_pos = pending_pos;
+        for _ in 0..gamma {
+            let out = backend
+                .decode_window("draft_ar_step", draft_params, &[d_tok],
+                               &[d_pos as i32], &[1.0], &d_cache)
+                .unwrap();
+            res.draft_forwards += 1;
+            d_cache.commit_window_rows(&out.k_win, &out.v_win, 1,
+                                       &[(0, d_pos)]);
+            let t = out.argmax[0];
+            proposals.push(t);
+            d_pos += 1;
+            d_tok = t;
+        }
+
+        let mut win_tokens = vec![0i32; w];
+        let mut win_pos = vec![0i32; w];
+        let mut win_valid = vec![0.0f32; w];
+        win_tokens[0] = pending;
+        win_pos[0] = pending_pos as i32;
+        win_valid[0] = 1.0;
+        for (j, &d) in proposals.iter().enumerate() {
+            win_tokens[j + 1] = d;
+            win_pos[j + 1] = (pending_pos + 1 + j) as i32;
+            win_valid[j + 1] = 1.0;
+        }
+        let out = backend
+            .decode_window("ar_verify", params, &win_tokens, &win_pos,
+                           &win_valid, &t_cache)
+            .unwrap();
+        res.forwards += 1;
+        res.mix.window_forwards += 1;
+        res.rounds += 1;
+
+        let mut accepted = 0usize;
+        while accepted < gamma && out.argmax[accepted] == proposals[accepted]
+        {
+            accepted += 1;
+        }
+        let commit: Vec<(usize, usize)> =
+            (0..=accepted).map(|j| (j, pending_pos + j)).collect();
+        t_cache.commit_window_rows(&out.k_win, &out.v_win, w, &commit);
+
+        for &d in proposals.iter().take(accepted) {
+            generated.push(d);
+            if d == EOS || generated.len() >= gen_len {
+                break 'outer;
+            }
+        }
+        let bonus = out.argmax[accepted];
+        generated.push(bonus);
+        if bonus == EOS {
+            break;
+        }
+
+        d_cache.invalidate_from(pending_pos + accepted + 1);
+        pending = bonus;
+        pending_pos += accepted + 1;
+    }
+
+    res.unmasked = generated.len();
+    res.tokens = generated;
+    res.mix.gen_tokens = res.unmasked;
+    res
+}
+
+// ------------------------------------------------------------ equivalence
+
+fn assert_same(id: &str, new: &GenResult, old: &GenResult) {
+    assert_eq!(new.tokens, old.tokens, "{id}: tokens diverged");
+    assert_eq!(new.unmasked, old.unmasked, "{id}: unmasked diverged");
+    assert_eq!(new.forwards, old.forwards, "{id}: forwards diverged");
+    assert_eq!(new.draft_forwards, old.draft_forwards, "{id}");
+    assert_eq!(new.mix.ar_steps, old.mix.ar_steps, "{id}");
+    assert_eq!(new.mix.full_forwards, old.mix.full_forwards, "{id}");
+    assert_eq!(new.mix.window_forwards, old.mix.window_forwards, "{id}");
+}
+
+#[test]
+fn policy_ar_matches_legacy_free_function() {
+    for seed in [1u64, 7, 42] {
+        let sim = SimBackend::new(seed);
+        let params = vec![0.5f32; 8];
+        let prompt = prompt_for(seed as usize);
+        let old = legacy_ar(&sim, &params, &prompt, 40);
+        let new = decode::generate(&sim, &DecodeCfg::preset(Strategy::Ar),
+                                   &params, None, &prompt, 40)
+            .unwrap();
+        assert_same(&format!("ar/{seed}"), &new, &old);
+    }
+}
+
+#[test]
+fn policy_vanilla_matches_legacy_free_function() {
+    for seed in [2u64, 9] {
+        let sim = SimBackend::new(seed);
+        let params = vec![0.5f32; 8];
+        let prompt = prompt_for(seed as usize);
+        let cfg = DecodeCfg::preset(Strategy::Vanilla);
+        let old = legacy_nocache(&sim, &cfg, &params, &prompt, 64);
+        let new =
+            decode::generate(&sim, &cfg, &params, None, &prompt, 64).unwrap();
+        assert_same(&format!("vanilla/{seed}"), &new, &old);
+        // vanilla's defining invariant: exactly one token per forward
+        assert_eq!(new.forwards, 64);
+    }
+}
+
+#[test]
+fn policy_fast_dllm_matches_legacy_free_function() {
+    for seed in [3u64, 11, 27] {
+        let sim = SimBackend::new(seed);
+        let params = vec![0.5f32; 8];
+        let prompt = prompt_for(seed as usize);
+        for threshold in [0.85f32, 0.5] {
+            let mut cfg = DecodeCfg::preset(Strategy::FastDllm);
+            cfg.early_stop = false;
+            cfg.metric = SelMetric::Conf(threshold);
+            let old = legacy_cached(&sim, &cfg, &params, &prompt, 96);
+            let new = decode::generate(&sim, &cfg, &params, None, &prompt,
+                                       96)
+                .unwrap();
+            assert_same(&format!("fast-dllm/{seed}/{threshold}"), &new,
+                        &old);
+        }
+    }
+}
+
+#[test]
+fn policy_spec_matches_legacy_free_function() {
+    for seed in [4u64, 13] {
+        let sim = SimBackend::new(seed);
+        let params = vec![0.5f32; 8];
+        let draft = vec![0.25f32; 8];
+        let prompt = prompt_for(seed as usize);
+        let cfg = DecodeCfg::preset(Strategy::Spec);
+        let old = legacy_spec(&sim, &params, &draft, &prompt, 48, cfg.gamma);
+        let new = decode::generate(&sim, &cfg, &params, Some(&draft),
+                                   &prompt, 48)
+            .unwrap();
+        assert_same(&format!("spec/{seed}"), &new, &old);
+        assert!(new.draft_forwards > 0);
+    }
+}

@@ -5,12 +5,15 @@
 //!   * round-robin fairness bounds per-session step gaps;
 //!   * `max_concurrent_sessions = 1` reproduces the classic batch=1
 //!     sequential decode token-for-token (and so does any pool width,
-//!     since a session's trajectory is schedule-independent).
+//!     since a session's trajectory is schedule-independent);
+//!   * `step_round` coalesces same-shape rounds into one B>1 batched
+//!     backend call with outputs bit-identical to the B=1 path, and a
+//!     pool can mix strategies (d3llm + ar + spec) freely.
 
 use d3llm::coordinator::scheduler::{run_interleaved, InterleavedRequest,
                                     SessionPool};
 use d3llm::decode::multi_block::decode_multi_block;
-use d3llm::decode::{DecodeCfg, DecodeSession, GenResult, SimBackend,
+use d3llm::decode::{self, DecodeCfg, DecodeSession, GenResult, SimBackend,
                     Strategy};
 
 fn test_cfg() -> DecodeCfg {
@@ -33,6 +36,7 @@ fn mixed_requests() -> Vec<InterleavedRequest> {
             id: format!("r{k}"),
             prompt: prompt_for(k),
             gen_len,
+            cfg: None,
         })
         .collect()
 }
@@ -56,7 +60,7 @@ fn mixed_gen_lens_all_complete() {
     let sim = SimBackend::new(11);
     let params = vec![0.5f32; 8];
     let results =
-        run_interleaved(&sim, &test_cfg(), &params, mixed_requests())
+        run_interleaved(&sim, &test_cfg(), &params, None, mixed_requests())
             .unwrap();
     assert_eq!(results.len(), 8);
     let lens = [32usize, 128, 64, 96, 32, 128, 96, 64];
@@ -157,7 +161,7 @@ fn interleaving_width_does_not_change_any_request() {
     let params = vec![0.5f32; 8];
     let reference = sequential_reference(&sim, &params);
     let interleaved =
-        run_interleaved(&sim, &test_cfg(), &params, mixed_requests())
+        run_interleaved(&sim, &test_cfg(), &params, None, mixed_requests())
             .unwrap();
     for ((id_a, a), (id_b, b)) in interleaved.iter().zip(&reference) {
         assert_eq!(id_a, id_b);
@@ -195,4 +199,90 @@ fn per_session_failure_does_not_poison_the_pool() {
     assert_eq!(retired[0].id, "r0");
     assert_eq!(retired[1].id, "r1");
     assert!(retired.iter().all(|f| f.result.is_ok()));
+}
+
+#[test]
+fn step_round_coalesces_same_shape_rounds_into_one_batched_call() {
+    let sim = SimBackend::new(31);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    let mut pool: SessionPool<()> = SessionPool::new();
+    for k in 0..3 {
+        let s =
+            DecodeSession::new(&sim, cfg.clone(), &prompt_for(k), 64).unwrap();
+        pool.admit(format!("r{k}"), (), s);
+    }
+    // round 1: three prompt prefills share (exec, s_max) -> one B=3 call
+    pool.step_round(&sim, &params);
+    assert_eq!(sim.prefill_batch_calls(), 1, "prefills must coalesce");
+    assert_eq!(sim.max_prefill_batch(), 3);
+    // round 2: three same-shape windowed rounds -> one B=3 call
+    pool.step_round(&sim, &params);
+    assert_eq!(sim.window_batch_calls(), 1, "windows must coalesce");
+    assert_eq!(sim.max_window_batch(), 3);
+}
+
+/// Acceptance: a pool can mix `{D3llm, Ar, Spec}` sessions, same-shape
+/// rounds batch (B>1), and every per-session output is bit-identical to
+/// the single-session B=1 path on the same sim seed.
+#[test]
+fn mixed_strategy_pool_matches_b1_bit_for_bit() {
+    let seed = 23u64;
+    let sim = SimBackend::new(seed);
+    let params = vec![0.5f32; 8];
+    let draft = vec![0.25f32; 8];
+    let mk = |s: Strategy| {
+        let mut c = DecodeCfg::preset(s);
+        c.early_stop = false; // sim argmax never emits EOS by default
+        c
+    };
+    // two d3llm sessions guarantee >= 2 runnable sessions sharing round
+    // shape; ar and spec ride along with their own window shapes
+    let plan: [(Strategy, usize); 5] = [
+        (Strategy::D3llm, 64),
+        (Strategy::D3llm, 96),
+        (Strategy::Ar, 32),
+        (Strategy::Ar, 48),
+        (Strategy::Spec, 32),
+    ];
+    let reqs: Vec<InterleavedRequest> = plan
+        .iter()
+        .enumerate()
+        .map(|(k, &(s, gen_len))| InterleavedRequest {
+            id: format!("m{k}"),
+            prompt: prompt_for(k),
+            gen_len,
+            cfg: Some(mk(s)),
+        })
+        .collect();
+    let pooled = run_interleaved(&sim, &test_cfg(), &params, Some(&draft),
+                                 reqs)
+        .unwrap();
+    assert_eq!(pooled.len(), plan.len());
+    assert!(sim.window_batch_calls() >= 1,
+            "no decode_window_batch call was issued");
+    assert!(sim.max_window_batch() >= 2,
+            "same-shape rounds were not coalesced into B>1");
+    assert!(sim.max_prefill_batch() >= 2,
+            "same-shape prefills were not coalesced into B>1");
+
+    // B=1 reference: each request alone through `generate` on a fresh
+    // sim with the same seed (the sim is a pure function of the seed and
+    // the call inputs, so this is the exact single-session path)
+    let ref_sim = SimBackend::new(seed);
+    for (k, (id, r)) in pooled.iter().enumerate() {
+        let (strategy, gen_len) = plan[k];
+        let reference = decode::generate(&ref_sim, &mk(strategy), &params,
+                                         Some(&draft), &prompt_for(k),
+                                         gen_len)
+            .unwrap();
+        assert_eq!(r.tokens, reference.tokens,
+                   "{id}: batched pool diverged from B=1");
+        assert_eq!(r.forwards, reference.forwards, "{id}");
+        assert_eq!(r.draft_forwards, reference.draft_forwards, "{id}");
+        assert_eq!(r.rounds, reference.rounds, "{id}");
+        // interleaved sessions must report their own wall time now
+        assert!(r.wall_secs > 0.0, "{id}: wall_secs not recorded");
+        assert_eq!(r.tokens.len(), gen_len, "{id}: incomplete decode");
+    }
 }

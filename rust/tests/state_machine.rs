@@ -202,19 +202,24 @@ fn session_block_states_only_move_forward() {
             let mut session =
                 DecodeSession::new(&sim, cfg, &prompt, 128).unwrap();
             let nb = session.st.n_blocks();
-            let mut last_rank: Vec<u8> =
-                session.states.iter().map(state_rank).collect();
+            let mut last_rank: Vec<u8> = session
+                .block_states()
+                .expect("multi-block session exposes block states")
+                .iter()
+                .map(state_rank)
+                .collect();
             let mut last_stab: Vec<Option<usize>> = vec![None; nb];
             let mut guard = 0;
             while !session.step(&sim, &params).unwrap() {
+                let states = session.block_states().unwrap();
                 for b in 0..nb {
-                    let r = state_rank(&session.states[b]);
+                    let r = state_rank(&states[b]);
                     assert!(
                         r >= last_rank[b],
                         "block {b} moved backwards: {} -> {r} (seed {seed})",
                         last_rank[b]
                     );
-                    if let BlockState::Stabilizing(n) = session.states[b] {
+                    if let BlockState::Stabilizing(n) = states[b] {
                         if let Some(prev) = last_stab[b] {
                             assert!(n <= prev,
                                     "stabilizing counter grew on block {b}");
