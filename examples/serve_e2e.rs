@@ -39,6 +39,8 @@ fn main() -> anyhow::Result<()> {
         variant: args.str_or("variant", "xla"),
         max_queue: 256,
         max_concurrent_sessions: args.usize_or("max-sessions", 4),
+        draft: None,
+        kv_budget_mb: 256,
         decode: None,
     };
     std::thread::spawn(move || {

@@ -66,6 +66,8 @@ fn run_once(ckpt: &str, port: u16, width: usize, prompts: &[String])
         variant: "xla".into(),
         max_queue: 256,
         max_concurrent_sessions: width,
+        draft: None,
+        kv_budget_mb: 256,
         decode: None,
     };
     std::thread::spawn(move || {

@@ -1,0 +1,199 @@
+//! `cargo bench --bench kv_pool` — paged KV-cache pool vs. dense
+//! per-session allocation, fully deterministic (SimBackend, no
+//! artifacts).
+//!
+//! Two acceptance bars, both asserted:
+//!
+//!   1. **Capacity**: at a fixed byte budget sized to hold exactly
+//!      `DENSE_CAP` dense `[L, S_max, d_kv]` sessions, the paged pool
+//!      admits >= 2x as many concurrent sessions — memory scales with
+//!      live tokens (prompt + gen span) instead of `S_max`, and
+//!      same-prefix sessions share their prompt pages.
+//!   2. **Prefix sharing**: under a shared-system-prompt workload every
+//!      session after the first adopts the registered prompt pages and
+//!      skips its prompt-prefill forward entirely — measured as backend
+//!      prefill-call reduction vs. the dense baseline.
+//!
+//! Throughout, every pooled session's decode output is asserted
+//! bit-identical (tokens + forwards) to the dense-cache baseline, so the
+//! capacity and prefill wins are free of behavior drift. The bench also
+//! reports the incremental-refresh ratio (pages skipped vs. rewritten by
+//! d3llm's periodic KV refresh).
+
+use d3llm::coordinator::scheduler::SessionPool;
+use d3llm::decode::{Backend, DecodeCfg, DecodeSession, GenResult,
+                    SimBackend, Strategy};
+use d3llm::model::kv_pool::{is_pool_exhausted, KvPoolCfg, SharedKvPool};
+
+/// Dense sessions the shared budget is sized for.
+const DENSE_CAP: usize = 4;
+const GEN_LEN: usize = 64;
+
+/// Shared system prompt: two full 32-row pages, so the whole prefix is
+/// adoptable and no partial-page CoW margin applies.
+fn shared_prompt() -> Vec<i32> {
+    (0..64).map(|i| 5 + (i * 7 % 80) as i32).collect()
+}
+
+fn cfg() -> DecodeCfg {
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false;
+    cfg
+}
+
+fn main() {
+    let sim = SimBackend::new(41);
+    let params = vec![0.5f32; 8];
+    let c = sim.constants().clone();
+    let spec = sim.model_spec("main").unwrap().clone();
+
+    let pool_cfg = {
+        let base = KvPoolCfg {
+            layers: spec.n_layers,
+            d_kv: spec.d_kv,
+            s_max: c.s_max,
+            page_rows: c.block,
+            budget_bytes: 0,
+        };
+        let budget = DENSE_CAP * base.dense_session_bytes();
+        KvPoolCfg { budget_bytes: budget, ..base }
+    };
+    let dense_bytes = pool_cfg.dense_session_bytes();
+    let budget_bytes = pool_cfg.budget_bytes;
+    let page_bytes = pool_cfg.page_bytes();
+    let kv = SharedKvPool::new(pool_cfg);
+
+    println!("== paged KV pool vs dense per-session allocation ==");
+    println!(
+        "budget {budget_bytes} B = {DENSE_CAP} dense sessions of \
+         {dense_bytes} B; {} pages of {} rows ({page_bytes} B each)",
+        kv.max_pages(),
+        c.block
+    );
+
+    // ---- dense baseline: one request end to end, counting its backend
+    // prefill forwards (prompt prefill + periodic KV refreshes)
+    let prompt = shared_prompt();
+    let p0 = sim.prefill_calls();
+    let dense_ref = {
+        let mut s =
+            DecodeSession::new(&sim, cfg(), &prompt, GEN_LEN).unwrap();
+        while !s.step(&sim, &params).unwrap() {}
+        s.finish()
+    };
+    let dense_prefills = sim.prefill_calls() - p0;
+    println!(
+        "dense baseline: {} tokens, {} forwards, {dense_prefills} backend \
+         prefill calls per request",
+        dense_ref.tokens.len(),
+        dense_ref.forwards
+    );
+
+    // ---- capacity: admit same-workload sessions until the budget is
+    // exhausted. The first session is stepped once so its prompt pages
+    // register; the rest adopt them (continuous-serving admission order).
+    let mut sched: SessionPool<usize> =
+        SessionPool::new().with_kv_pool(kv.clone());
+    let first = DecodeSession::with_pool(&sim, cfg(), &prompt, GEN_LEN,
+                                         None, &kv)
+        .expect("first session admits");
+    sched.admit("s0".into(), 0, first);
+    let fin = sched.step_round(&sim, &params); // prefill + registration
+    assert!(fin.is_empty());
+
+    let mut admitted = 1usize;
+    loop {
+        match DecodeSession::with_pool(&sim, cfg(), &prompt, GEN_LEN, None,
+                                       &kv) {
+            Ok(s) => {
+                sched.admit(format!("s{admitted}"), admitted, s);
+                admitted += 1;
+            }
+            Err(e) => {
+                assert!(is_pool_exhausted(&e),
+                        "admission must fail only on budget: {e:#}");
+                break;
+            }
+        }
+        assert!(admitted <= 256, "admission never saturated");
+    }
+    let usage = kv.usage();
+    println!(
+        "capacity at fixed budget: dense {DENSE_CAP} sessions vs paged \
+         {admitted} sessions ({:.2}x; {} / {} pages committed)",
+        admitted as f64 / DENSE_CAP as f64,
+        usage.in_use + usage.reserved,
+        usage.max_pages
+    );
+    assert!(
+        admitted >= 2 * DENSE_CAP,
+        "paged pool must hold >= 2x the dense session count at the same \
+         budget ({admitted} vs {DENSE_CAP})"
+    );
+
+    // ---- run the whole fleet to completion; every session must match
+    // the dense baseline bit for bit
+    let p1 = sim.prefill_calls();
+    let mut done: Vec<Option<GenResult>> =
+        (0..admitted).map(|_| None).collect();
+    while !sched.is_empty() {
+        for f in sched.step_round(&sim, &params) {
+            done[f.tag] = Some(f.result.expect("pooled decode"));
+        }
+    }
+    let pooled_prefills = sim.prefill_calls() - p1;
+    for (i, r) in done.iter().enumerate() {
+        let r = r.as_ref().expect("all served");
+        assert_eq!(r.tokens, dense_ref.tokens,
+                   "s{i}: paged decode diverged from the dense baseline");
+        assert_eq!(r.forwards, dense_ref.forwards, "s{i}: forwards");
+    }
+
+    // ---- prefix sharing: every session after the first skipped its
+    // prompt prefill (the fleet after the p1 snapshot holds the first
+    // session's refreshes but not its already-spent prompt prefill)
+    let stats = kv.stats();
+    assert_eq!(stats.prefill_skips as usize, admitted - 1,
+               "every warm session must skip its prompt prefill");
+    let expected = admitted * dense_prefills - (admitted - 1) - 1;
+    assert_eq!(pooled_prefills, expected,
+               "prefill forwards: expected {expected}, got \
+                {pooled_prefills}");
+    let saved = admitted * dense_prefills - (pooled_prefills + 1);
+    println!(
+        "prefix sharing: {} prompt-prefill forwards skipped of {} total \
+         dense-equivalent prefill calls ({:.1}% reduction, hit rate \
+         {}/{} pages)",
+        stats.prefill_skips,
+        admitted * dense_prefills,
+        100.0 * saved as f64 / (admitted * dense_prefills) as f64,
+        stats.prefix_hits,
+        stats.prefix_hits + stats.prefix_misses
+    );
+    assert!(saved >= admitted - 1);
+
+    // ---- incremental refresh: d3llm's periodic KV refresh must have
+    // skipped current pages (prompt + settled blocks) instead of
+    // rewriting every row
+    assert!(stats.pages_refreshed > 0, "refresh rounds install pages");
+    assert!(
+        stats.refresh_skips > 0,
+        "incremental refresh must skip current pages"
+    );
+    println!(
+        "incremental refresh: {} pages rewritten, {} skipped \
+         ({:.1}% of page-installs avoided); cow copies {}, evictions {}",
+        stats.pages_refreshed,
+        stats.refresh_skips,
+        100.0 * stats.refresh_skips as f64
+            / (stats.pages_refreshed + stats.refresh_skips) as f64,
+        stats.cow_copies,
+        stats.evictions
+    );
+
+    println!(
+        "PASS: >= 2x session capacity at fixed budget ({admitted} vs \
+         {DENSE_CAP}) with measured prefill reduction and bit-identical \
+         decode output"
+    );
+}

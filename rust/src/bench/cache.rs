@@ -1,7 +1,10 @@
 //! Eval-result cache: every (checkpoint, strategy, threshold, task, n,
-//! seed, variant) evaluation is stored in results/eval_cache.json so
-//! tables, curves and radar charts share sweep data instead of re-decoding,
-//! and interrupted bench runs resume where they stopped.
+//! seed, variant, refresh cadence, block geometry) evaluation is stored
+//! in results/eval_cache.json so tables, curves and radar charts share
+//! sweep data instead of re-decoding, and interrupted bench runs resume
+//! where they stopped. Entries written under older key schemas (which
+//! omitted the refresh cadence and block size, letting ablation sweeps
+//! collide) are invalidated on open.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -86,28 +89,48 @@ pub struct EvalCache {
     dirty: usize,
 }
 
+/// `|`-separated fields in the current key schema; entries with any
+/// other count are stale (pre-refresh/block keys) and dropped on open.
+const KEY_FIELDS: usize = 10;
+
 impl EvalCache {
     pub fn open(path: impl Into<PathBuf>) -> EvalCache {
         let path = path.into();
         let mut map = BTreeMap::new();
+        let mut stale = 0usize;
         if let Ok(text) = std::fs::read_to_string(&path) {
             if let Ok(Json::Obj(entries)) = json::parse(&text) {
                 for (k, v) in entries {
+                    if k.split('|').count() != KEY_FIELDS {
+                        stale += 1; // old key schema: invalidate
+                        continue;
+                    }
                     if let Ok(r) = EvalRecord::from_json(&v) {
                         map.insert(k, r);
                     }
                 }
             }
         }
+        if stale > 0 {
+            eprintln!(
+                "[cache] dropped {stale} eval entries written under an \
+                 older key schema (missing refresh/block fields)"
+            );
+        }
         EvalCache { path, map, dirty: 0 }
     }
 
-    /// Canonical cache key.
+    /// Canonical cache key. `refresh_every` (KV-refresh cadence) and
+    /// `block` (decode block size) are part of the identity: sweeps
+    /// differing only in refresh cadence or block geometry used to
+    /// collide on one entry.
     #[allow(clippy::too_many_arguments)]
     pub fn key(ckpt: &str, strategy: &str, threshold: f32, task: &str,
-               n: usize, seed: u64, variant: &str, strict: bool) -> String {
+               n: usize, seed: u64, variant: &str, strict: bool,
+               refresh_every: usize, block: usize) -> String {
         format!(
-            "{ckpt}|{strategy}|{threshold:.4}|{task}|{n}|{seed}|{variant}|{}",
+            "{ckpt}|{strategy}|{threshold:.4}|{task}|{n}|{seed}|{variant}|{}\
+             |r{refresh_every}|b{block}",
             strict as u8
         )
     }
@@ -171,14 +194,52 @@ mod tests {
         {
             let mut c = EvalCache::open(&path);
             c.put(EvalCache::key("x", "d3llm", 0.45, "gsm8k", 10, 1, "xla",
-                                 false), rec.clone());
+                                 false, 8, 32), rec.clone());
             c.save().unwrap();
         }
         let c = EvalCache::open(&path);
         let k = EvalCache::key("x", "d3llm", 0.45, "gsm8k", 10, 1, "xla",
-                               false);
+                               false, 8, 32);
         let got = c.get(&k).unwrap();
         assert!((got.acc - 72.5).abs() < 1e-9);
         assert_eq!(got.window_forwards, 110);
+    }
+
+    #[test]
+    fn refresh_and_block_are_part_of_the_key() {
+        let a = EvalCache::key("x", "d3llm", 0.45, "gsm8k", 10, 1, "xla",
+                               false, 8, 32);
+        let b = EvalCache::key("x", "d3llm", 0.45, "gsm8k", 10, 1, "xla",
+                               false, 4, 32);
+        let c = EvalCache::key("x", "d3llm", 0.45, "gsm8k", 10, 1, "xla",
+                               false, 8, 16);
+        assert_ne!(a, b, "refresh cadence must split cache entries");
+        assert_ne!(a, c, "block geometry must split cache entries");
+        assert_eq!(a.split('|').count(), KEY_FIELDS);
+    }
+
+    #[test]
+    fn stale_key_schema_is_invalidated_on_open() {
+        let dir = std::env::temp_dir().join("d3llm_cache_migrate_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let rec = EvalRecord {
+            acc: 1.0, tpf: 1.0, tps_cpu: 1.0, gen_tokens: 1, forwards: 1,
+            full_forwards: 1, window_forwards: 0, ar_steps: 0,
+            wall_secs: 1.0,
+        };
+        {
+            let mut c = EvalCache::open(&path);
+            // an old 8-field key (pre refresh/block) alongside a current one
+            c.put("x|d3llm|0.4500|gsm8k|10|1|xla|0".to_string(),
+                  rec.clone());
+            c.put(EvalCache::key("x", "d3llm", 0.45, "gsm8k", 10, 1, "xla",
+                                 false, 8, 32), rec.clone());
+            c.save().unwrap();
+        }
+        let c = EvalCache::open(&path);
+        assert_eq!(c.len(), 1, "stale-schema entry must be dropped");
+        assert!(c.get("x|d3llm|0.4500|gsm8k|10|1|xla|0").is_none());
     }
 }

@@ -57,8 +57,15 @@ pub fn eval_point(ctx: &BenchCtx, m: &MethodSpec, task: Family,
                   threshold: f32, n: usize, seed: u64, strict: bool)
                   -> Result<EvalRecord> {
     let variant = "xla";
+    let mut cfg = DecodeCfg::preset(m.strategy);
+    cfg.variant = variant.to_string();
+    if threshold > 0.0 {
+        cfg = cfg.with_threshold(threshold);
+    }
+    let block = ctx.eng.manifest.constants.block;
     let key = EvalCache::key(&m.ckpt, m.strategy.name(), threshold,
-                             task.name(), n, seed, variant, strict);
+                             task.name(), n, seed, variant, strict,
+                             cfg.refresh_every, block);
     if let Some(rec) = ctx.cache.borrow().get(&key) {
         return Ok(rec.clone());
     }
@@ -68,11 +75,6 @@ pub fn eval_point(ctx: &BenchCtx, m: &MethodSpec, task: Family,
     } else {
         None
     };
-    let mut cfg = DecodeCfg::preset(m.strategy);
-    cfg.variant = variant.to_string();
-    if threshold > 0.0 {
-        cfg = cfg.with_threshold(threshold);
-    }
     let samples = data::eval_set(&ctx.tk, task, n, seed);
     let out = evaluate(&ctx.eng, &cfg, &params.data,
                        draft.as_ref().map(|d| d.data.as_slice()), &ctx.tk,
@@ -94,8 +96,9 @@ pub fn eval_point(ctx: &BenchCtx, m: &MethodSpec, task: Family,
 pub fn eval_custom(ctx: &BenchCtx, ckpt: &str, cfg: &DecodeCfg, tag: &str,
                    task: Family, threshold: f32, n: usize, seed: u64)
                    -> Result<EvalRecord> {
+    let block = ctx.eng.manifest.constants.block;
     let key = EvalCache::key(ckpt, tag, threshold, task.name(), n, seed,
-                             &cfg.variant, false);
+                             &cfg.variant, false, cfg.refresh_every, block);
     if let Some(rec) = ctx.cache.borrow().get(&key) {
         return Ok(rec.clone());
     }

@@ -40,6 +40,8 @@ pub struct ServiceConfig {
     /// Interleaving width of the engine worker (live sessions; 1 = the
     /// classic batch=1 serving loop).
     pub max_concurrent_sessions: usize,
+    /// Shared paged KV pool budget in MiB (0 = dense per-session caches).
+    pub kv_budget_mb: usize,
     pub decode: DecodeCfg,
 }
 
@@ -52,6 +54,7 @@ impl Default for ServiceConfig {
             draft_ckpt: None,
             max_queue: 256,
             max_concurrent_sessions: 4,
+            kv_budget_mb: 256,
             decode: DecodeCfg::preset(Strategy::D3llm),
         }
     }
@@ -178,6 +181,7 @@ impl ServiceConfig {
                 "max_concurrent_sessions",
                 d.max_concurrent_sessions,
             ),
+            kv_budget_mb: get_usize(j, "kv_budget_mb", d.kv_budget_mb),
             decode,
         };
         validate_service_limits(cfg.max_queue,
@@ -203,6 +207,7 @@ impl ServiceConfig {
             ("max_queue", Json::num(self.max_queue as f64)),
             ("max_concurrent_sessions",
              Json::num(self.max_concurrent_sessions as f64)),
+            ("kv_budget_mb", Json::num(self.kv_budget_mb as f64)),
             ("decode", decode_to_json(&self.decode)),
         ])
     }
@@ -226,6 +231,7 @@ mod tests {
         assert_eq!(c2.port, c.port);
         assert_eq!(c2.max_queue, c.max_queue);
         assert_eq!(c2.max_concurrent_sessions, c.max_concurrent_sessions);
+        assert_eq!(c2.kv_budget_mb, c.kv_budget_mb);
         assert_eq!(c2.decode.strategy, c.decode.strategy);
         assert_eq!(c2.decode.refresh_every, c.decode.refresh_every);
     }

@@ -85,6 +85,13 @@ impl<T> Batcher<T> {
         self.heap.pop()
     }
 
+    /// Borrow the job `pop` would return next, without disturbing its
+    /// queue position or enqueue timestamp (admission checks that may
+    /// decide to leave it queued).
+    pub fn peek(&self) -> Option<&QueuedJob<T>> {
+        self.heap.peek()
+    }
+
     /// At capacity: the next `push` would be rejected.
     pub fn is_full(&self) -> bool {
         self.heap.len() >= self.max_queue
@@ -217,6 +224,18 @@ mod tests {
         assert!(b.push(2, 1));
         assert!(b.is_full());
         assert_eq!(b.enqueued_total, 2);
+    }
+
+    #[test]
+    fn peek_matches_pop_and_preserves_order() {
+        let mut b = Batcher::new(4);
+        b.push("lo", 0);
+        b.push("hi", 3);
+        assert_eq!(b.peek().unwrap().payload, "hi");
+        // peeking does not consume or reorder
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.pop().unwrap().payload, "hi");
+        assert_eq!(b.peek().unwrap().payload, "lo");
     }
 
     #[test]

@@ -22,10 +22,18 @@
 //! `DecodePolicy` API, so every request interleaves — one pool can even
 //! mix strategies per request — and `SessionPool::step_round` coalesces
 //! the same-shape forwards of a round into one batched backend call.
-//! (`spec` sessions need a draft checkpoint the worker does not load
-//! yet, so spec requests fail at admission — see the ROADMAP `--draft`
-//! item.) With `max_concurrent_sessions = 1` the worker degenerates to
-//! the classic batch=1 loop token-for-token.
+//! `spec` requests are admitted when the worker was started with a
+//! `--draft` checkpoint (`ServerCfg::draft`); without one they fail
+//! per-request. With `max_concurrent_sessions = 1` the worker
+//! degenerates to the classic batch=1 loop token-for-token.
+//!
+//! With `kv_budget_mb > 0` the worker serves over a shared paged KV pool
+//! (`model::kv_pool`): admission checks the page budget (jobs wait
+//! queued under page pressure instead of failing), same-prefix requests
+//! adopt already-prefilled pages — skipping their prompt-prefill forward
+//! on a full-prefix hit — and retirement releases pages back to the
+//! pool, keeping prefix-indexed ones reclaimable for future hits. Pool
+//! occupancy and hit rates are exported through `{"cmd":"stats"}`.
 //!
 //! The engine worker pre-compiles the executables its strategy needs, so
 //! first-request latency is decode, not XLA compilation. Queue depth,
@@ -45,6 +53,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::decode::{self, DecodeCfg, DecodeSession, SessionProgress,
                     Strategy};
+use crate::model::kv_pool::{KvPoolCfg, SharedKvPool};
 use crate::model::ParamStore;
 use crate::runtime::Engine;
 use crate::tokenizer::Tokenizer;
@@ -65,6 +74,12 @@ pub struct ServerCfg {
     /// Interleaving width: how many resumable decode sessions the engine
     /// worker keeps live at once (1 = classic batch=1 serving).
     pub max_concurrent_sessions: usize,
+    /// Draft checkpoint name (under checkpoints/) for speculative
+    /// decoding; `None` leaves `spec` requests unadmittable.
+    pub draft: Option<String>,
+    /// Shared paged KV pool budget in MiB; 0 serves with dense
+    /// per-session caches (the pre-pool behavior).
+    pub kv_budget_mb: usize,
     /// full decode configuration; per-request `strategy` switches presets,
     /// otherwise this config is used verbatim
     pub decode: Option<crate::decode::DecodeCfg>,
@@ -97,6 +112,23 @@ pub struct ServerStats {
     pub admitted_total: AtomicU64,
     /// Configured interleaving width (set once at startup).
     pub max_concurrent: AtomicU64,
+    // ---- paged KV pool gauges (all zero when serving dense)
+    /// Page-budget ceiling of the shared KV pool.
+    pub kv_pages_total: AtomicU64,
+    /// Pages referenced by live sessions (gauge).
+    pub kv_pages_in_use: AtomicU64,
+    /// Retired-but-prefix-indexed pages kept for future hits (gauge).
+    pub kv_pages_reclaimable: AtomicU64,
+    /// Prompt pages adopted from the prefix index (counter).
+    pub kv_prefix_hits: AtomicU64,
+    /// Prompt-prefill forwards skipped via full-prefix hits (counter).
+    pub kv_prefill_skips: AtomicU64,
+    /// Pages rewritten by KV-refresh installs (counter).
+    pub kv_pages_refreshed: AtomicU64,
+    /// Pages skipped by incremental refresh (counter).
+    pub kv_refresh_skips: AtomicU64,
+    /// Copy-on-write page copies (counter).
+    pub kv_cow_copies: AtomicU64,
     /// Per-session progress snapshots, refreshed every worker cycle.
     pub sessions: Mutex<Vec<(String, SessionProgress)>>,
 }
@@ -233,6 +265,16 @@ fn prepare_request(eng: &Engine, tk: &Tokenizer, req: &GenRequest)
     Ok((prompt, gen_len))
 }
 
+/// Admission decision for the peeked queue head.
+enum Verdict {
+    /// Build and admit a session now (resolved request geometry).
+    Admit(DecodeCfg, Vec<i32>, usize),
+    /// Malformed or unserveable request: pop and answer the error.
+    Reject(anyhow::Error),
+    /// Valid but no page budget yet: leave queued, stop admitting.
+    Wait,
+}
+
 fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                  stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>)
                  -> Result<()> {
@@ -244,6 +286,46 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
         &cfg.ckpt,
     ))?;
     params.check(eng.manifest.model("main")?)?;
+
+    // optional draft checkpoint: with it loaded, `spec` requests admit
+    // like any other strategy (DecodeSession::with_draft)
+    let draft_params = match &cfg.draft {
+        Some(name) => {
+            let ps = ParamStore::load(TrainCfg::ckpt_path(
+                std::path::Path::new("checkpoints"),
+                name,
+            ))?;
+            if let Ok(spec) = eng.manifest.model("draft") {
+                ps.check(spec)?;
+            }
+            eprintln!(
+                "[serve] draft checkpoint `{name}` loaded (spec decoding \
+                 enabled)"
+            );
+            Some(ps)
+        }
+        None => None,
+    };
+
+    // shared paged KV pool (page size = decode block, budget in MiB)
+    let kv_pool = if cfg.kv_budget_mb > 0 {
+        let spec = eng.manifest.model("main")?;
+        let pool_cfg = KvPoolCfg {
+            layers: spec.n_layers,
+            d_kv: spec.d_kv,
+            s_max: c.s_max,
+            page_rows: c.block,
+            budget_bytes: cfg.kv_budget_mb << 20,
+        };
+        let pool = SharedKvPool::new(pool_cfg);
+        eprintln!(
+            "[serve] paged KV pool: {} pages of {} rows ({} MiB budget)",
+            pool.max_pages(), c.block, cfg.kv_budget_mb
+        );
+        Some(pool)
+    } else {
+        None
+    };
 
     // pre-compile every admissible strategy's executables once (any
     // request may switch strategy per-request, and a compile inside the
@@ -268,7 +350,10 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
 
     let max_live = cfg.max_concurrent_sessions.max(1);
     let mut batcher: Batcher<Job> = Batcher::new(cfg.max_queue);
-    let mut pool: SessionPool<ActiveJob> = SessionPool::new();
+    let mut pool: SessionPool<ActiveJob> = match &kv_pool {
+        Some(kv) => SessionPool::new().with_kv_pool(kv.clone()),
+        None => SessionPool::new(),
+    };
     let mut disconnected = false;
 
     loop {
@@ -313,22 +398,99 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
         }
 
         // ---- admit queued jobs: every strategy is a resumable policy
-        //      session, so everything joins the interleaving pool
+        //      session, so everything joins the interleaving pool. The
+        //      queue head is *peeked* for the page-budget check, so a
+        //      request waiting for pages keeps its FIFO position and its
+        //      enqueue timestamp (strict head-of-line order within
+        //      priority — later small requests cannot starve it). A
+        //      waiting head re-resolves its geometry each cycle and an
+        //      admitted one probes the prefix index twice (can_admit +
+        //      PagedKv::admit) — both are O(prompt_len) on one request
+        //      per cycle, accepted to keep required_pages the single
+        //      source of truth inside the pool.
         while pool.len() < max_live {
-            let Some(queued) = batcher.pop() else { break };
-            let queue_ms = queued.enqueued.elapsed().as_secs_f64() * 1e3;
-            let job = queued.payload;
-            let admitted = request_cfg(&cfg, &job.req)
-                .and_then(|dcfg| admit_session(&eng, &tk, &dcfg, &job.req));
-            match admitted {
-                Ok(session) => {
-                    pool.admit(
-                        job.req.id.clone(),
-                        ActiveJob { reply: job.reply, queue_ms },
-                        session,
-                    );
+            let verdict = match batcher.peek() {
+                None => break,
+                Some(queued) => {
+                    let req = &queued.payload.req;
+                    match request_cfg(&cfg, req).and_then(|dcfg| {
+                        prepare_request(&eng, &tk, req)
+                            .map(|(prompt, gen_len)| (dcfg, prompt, gen_len))
+                    }) {
+                        Err(e) => Verdict::Reject(e),
+                        Ok((dcfg, prompt, gen_len)) => {
+                            match pool.kv_pool() {
+                                None => {
+                                    Verdict::Admit(dcfg, prompt, gen_len)
+                                }
+                                Some(kv) => {
+                                    // admission checks the page budget: a
+                                    // request that could never fit fails
+                                    // fast; one that can fit later stays
+                                    // queued (reclaimable pages are
+                                    // evicted on demand by the allocator,
+                                    // so they never block admission)
+                                    let geo = decode::kv_admission_geometry(
+                                        &dcfg, &c, prompt.len(), gen_len);
+                                    if kv.worst_case_pages(geo.prefix_rows,
+                                                           geo.span_rows)
+                                        > kv.max_pages()
+                                    {
+                                        Verdict::Reject(anyhow!(
+                                            "request span exceeds the kv \
+                                             pool budget"))
+                                    } else if !kv.can_admit(
+                                        &prompt, &geo.prefix_tag,
+                                        geo.prefix_rows, geo.span_rows,
+                                        geo.causal_prefix)
+                                    {
+                                        Verdict::Wait
+                                    } else {
+                                        Verdict::Admit(dcfg, prompt,
+                                                       gen_len)
+                                    }
+                                }
+                            }
+                        }
+                    }
                 }
-                Err(e) => reply_err(&stats, &job, &e),
+            };
+            match verdict {
+                // no page budget right now: leave the head queued (seq +
+                // queue-time intact) until sessions retire
+                Verdict::Wait => break,
+                Verdict::Reject(e) => {
+                    let queued = batcher.pop().expect("peeked head");
+                    reply_err(&stats, &queued.payload, &e);
+                }
+                Verdict::Admit(dcfg, prompt, gen_len) => {
+                    let queued = batcher.pop().expect("peeked head");
+                    let queue_ms =
+                        queued.enqueued.elapsed().as_secs_f64() * 1e3;
+                    let job = queued.payload;
+                    let draft =
+                        draft_params.as_ref().map(|d| d.data.as_slice());
+                    let admitted = match pool.kv_pool() {
+                        Some(kv) => {
+                            let kv = kv.clone();
+                            DecodeSession::with_pool(&eng, dcfg, &prompt,
+                                                     gen_len, draft, &kv)
+                        }
+                        None => DecodeSession::with_draft(&eng, dcfg,
+                                                          &prompt, gen_len,
+                                                          draft),
+                    };
+                    match admitted {
+                        Ok(session) => {
+                            pool.admit(
+                                job.req.id.clone(),
+                                ActiveJob { reply: job.reply, queue_ms },
+                                session,
+                            );
+                        }
+                        Err(e) => reply_err(&stats, &job, &e),
+                    }
+                }
             }
         }
 
@@ -344,6 +506,27 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
             .store(pool.admitted_total, Ordering::Relaxed);
         if let Ok(mut s) = stats.sessions.lock() {
             *s = pool.progress();
+        }
+        if let Some(kv) = pool.kv_pool() {
+            let u = kv.usage();
+            let ks = kv.stats();
+            stats.kv_pages_total.store(u.max_pages as u64,
+                                       Ordering::Relaxed);
+            stats.kv_pages_in_use.store(u.in_use as u64, Ordering::Relaxed);
+            stats
+                .kv_pages_reclaimable
+                .store(u.reclaimable as u64, Ordering::Relaxed);
+            stats.kv_prefix_hits.store(ks.prefix_hits, Ordering::Relaxed);
+            stats
+                .kv_prefill_skips
+                .store(ks.prefill_skips, Ordering::Relaxed);
+            stats
+                .kv_pages_refreshed
+                .store(ks.pages_refreshed, Ordering::Relaxed);
+            stats
+                .kv_refresh_skips
+                .store(ks.refresh_skips, Ordering::Relaxed);
+            stats.kv_cow_copies.store(ks.cow_copies, Ordering::Relaxed);
         }
 
         if pool.is_empty() {
@@ -414,15 +597,6 @@ fn record_served(stats: &ServerStats, r: &GenResponse) {
     stats
         .decode_ms_total
         .fetch_add(r.decode_ms as u64, Ordering::Relaxed);
-}
-
-/// Build a resumable session for one admitted request (any strategy;
-/// `Spec` needs a draft checkpoint the server does not load yet, so it
-/// fails here with a per-request error).
-fn admit_session(eng: &Engine, tk: &Tokenizer, dcfg: &DecodeCfg,
-                 req: &GenRequest) -> Result<DecodeSession> {
-    let (prompt, gen_len) = prepare_request(eng, tk, req)?;
-    DecodeSession::new(eng, dcfg.clone(), &prompt, gen_len)
 }
 
 /// Blocking client helper (examples + integration tests).

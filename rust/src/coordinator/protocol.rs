@@ -125,6 +125,23 @@ pub fn stats_response(s: &super::ServerStats) -> String {
         ("admitted", Json::num(s.admitted_total.load(Relaxed) as f64)),
         ("max_concurrent_sessions",
          Json::num(s.max_concurrent.load(Relaxed) as f64)),
+        // paged KV pool gauges (all zero when serving dense caches)
+        ("kv_pages_total",
+         Json::num(s.kv_pages_total.load(Relaxed) as f64)),
+        ("kv_pages_in_use",
+         Json::num(s.kv_pages_in_use.load(Relaxed) as f64)),
+        ("kv_pages_reclaimable",
+         Json::num(s.kv_pages_reclaimable.load(Relaxed) as f64)),
+        ("kv_prefix_hits",
+         Json::num(s.kv_prefix_hits.load(Relaxed) as f64)),
+        ("kv_prefill_skips",
+         Json::num(s.kv_prefill_skips.load(Relaxed) as f64)),
+        ("kv_pages_refreshed",
+         Json::num(s.kv_pages_refreshed.load(Relaxed) as f64)),
+        ("kv_refresh_skips",
+         Json::num(s.kv_refresh_skips.load(Relaxed) as f64)),
+        ("kv_cow_copies",
+         Json::num(s.kv_cow_copies.load(Relaxed) as f64)),
         ("sessions", Json::Arr(sessions)),
     ])
     .to_string()
@@ -215,10 +232,19 @@ mod tests {
                 ..Default::default()
             },
         ));
+        s.kv_pages_total.store(24, Ordering::Relaxed);
+        s.kv_pages_in_use.store(9, Ordering::Relaxed);
+        s.kv_prefix_hits.store(4, Ordering::Relaxed);
+        s.kv_prefill_skips.store(2, Ordering::Relaxed);
         let j = json::parse(&stats_response(&s)).unwrap();
         assert_eq!(j.get("served").unwrap().as_usize(), Some(5));
         assert_eq!(j.get("queue_depth").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("active_sessions").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("kv_pages_total").unwrap().as_usize(), Some(24));
+        assert_eq!(j.get("kv_pages_in_use").unwrap().as_usize(), Some(9));
+        assert_eq!(j.get("kv_prefix_hits").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("kv_prefill_skips").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("kv_cow_copies").unwrap().as_usize(), Some(0));
         assert_eq!(j.get("max_concurrent_sessions").unwrap().as_usize(),
                    Some(8));
         let sess = j.get("sessions").unwrap().as_arr().unwrap();

@@ -34,6 +34,7 @@ use anyhow::Result;
 use crate::decode::{Backend, DecodeCfg, DecodeSession, GenResult,
                     PrefillItem, RoundOut, RoundPlan, SessionProgress,
                     WindowItem};
+use crate::model::kv_pool::SharedKvPool;
 
 /// One admitted request.
 pub struct InterleavedRequest {
@@ -100,6 +101,10 @@ pub struct SessionPool<T> {
     pub admitted_total: u64,
     record_trace: bool,
     trace: Vec<u64>,
+    /// Shared paged KV pool the admitted sessions draw pages from, when
+    /// paged serving is enabled (admission budget checks + occupancy
+    /// stats; session retirement releases pages via `PagedKv::drop`).
+    kv: Option<SharedKvPool>,
 }
 
 impl<T> SessionPool<T> {
@@ -111,6 +116,7 @@ impl<T> SessionPool<T> {
             admitted_total: 0,
             record_trace: false,
             trace: Vec::new(),
+            kv: None,
         }
     }
 
@@ -119,6 +125,18 @@ impl<T> SessionPool<T> {
     pub fn with_trace(mut self) -> SessionPool<T> {
         self.record_trace = true;
         self
+    }
+
+    /// Attach the shared paged KV pool this scheduler's sessions draw
+    /// pages from.
+    pub fn with_kv_pool(mut self, kv: SharedKvPool) -> SessionPool<T> {
+        self.kv = Some(kv);
+        self
+    }
+
+    /// The attached paged KV pool, if paged serving is enabled.
+    pub fn kv_pool(&self) -> Option<&SharedKvPool> {
+        self.kv.as_ref()
     }
 
     pub fn len(&self) -> usize {
@@ -355,7 +373,7 @@ impl<T> SessionPool<T> {
                             tokens,
                             pos,
                             valid,
-                            cache: &self.entries[i].session.cache,
+                            cache: self.entries[i].session.cache.as_ref(),
                         }
                     })
                     .collect();
@@ -380,7 +398,8 @@ impl<T> SessionPool<T> {
             };
             let t0 = Instant::now();
             let r = backend.decode_window(exec, params, tokens, pos, valid,
-                                          &self.entries[i].session.cache);
+                                          self.entries[i].session.cache
+                                              .as_ref());
             let dt = t0.elapsed().as_secs_f64();
             self.entries[i].session.credit_forward(dt);
             self.entries[i].busy_secs += dt;
@@ -403,11 +422,41 @@ pub fn run_interleaved(backend: &dyn Backend, cfg: &DecodeCfg,
                        params: &[f32], draft_params: Option<&[f32]>,
                        requests: Vec<InterleavedRequest>)
                        -> Result<Vec<(String, GenResult)>> {
-    let mut pool: SessionPool<usize> = SessionPool::new();
+    run_interleaved_inner(backend, cfg, params, draft_params, requests,
+                          None)
+}
+
+/// `run_interleaved` over the shared paged KV pool: sessions hold
+/// page-table views, same-prefix requests share prefilled pages, and
+/// per-request results stay bit-identical to the dense-cache run on the
+/// deterministic `SimBackend`.
+pub fn run_interleaved_pooled(backend: &dyn Backend, cfg: &DecodeCfg,
+                              params: &[f32], draft_params: Option<&[f32]>,
+                              requests: Vec<InterleavedRequest>,
+                              kv: &SharedKvPool)
+                              -> Result<Vec<(String, GenResult)>> {
+    run_interleaved_inner(backend, cfg, params, draft_params, requests,
+                          Some(kv))
+}
+
+fn run_interleaved_inner(backend: &dyn Backend, cfg: &DecodeCfg,
+                         params: &[f32], draft_params: Option<&[f32]>,
+                         requests: Vec<InterleavedRequest>,
+                         kv: Option<&SharedKvPool>)
+                         -> Result<Vec<(String, GenResult)>> {
+    let mut pool: SessionPool<usize> = match kv {
+        Some(kv) => SessionPool::new().with_kv_pool(kv.clone()),
+        None => SessionPool::new(),
+    };
     for (i, r) in requests.into_iter().enumerate() {
         let dcfg = r.cfg.unwrap_or_else(|| cfg.clone());
-        let session = DecodeSession::with_draft(backend, dcfg, &r.prompt,
-                                                r.gen_len, draft_params)?;
+        let session = match kv {
+            Some(kv) => DecodeSession::with_pool(backend, dcfg, &r.prompt,
+                                                 r.gen_len, draft_params,
+                                                 kv)?,
+            None => DecodeSession::with_draft(backend, dcfg, &r.prompt,
+                                              r.gen_len, draft_params)?,
+        };
         pool.admit(r.id, i, session);
     }
     let mut done: Vec<(usize, String, GenResult)> = Vec::new();

@@ -72,7 +72,7 @@ impl DecodePolicy for ArPolicy {
         match out {
             RoundOut::Full(pre) => {
                 let p = ctx.st.prompt_len;
-                ctx.cache.install_full(&pre.kcache, &pre.vcache, 0, p - 1);
+                ctx.cache.install_full(&pre.kcache, &pre.vcache, 0, p - 1)?;
                 self.cur_tok = ctx.st.tokens[p - 1];
                 self.cur_pos = p - 1;
                 self.prefilled = true;
@@ -83,7 +83,7 @@ impl DecodePolicy for ArPolicy {
                 ctx.res.mix.ar_steps += 1;
                 // freeze the exact KV row of the token just consumed
                 ctx.cache.commit_window_rows(&out.k_win, &out.v_win, 1,
-                                             &[(0, self.cur_pos)]);
+                                             &[(0, self.cur_pos)])?;
                 let next = out.argmax[0];
                 ctx.st.tokens[ctx.st.gen_start() + self.produced] = next;
                 self.produced += 1;
@@ -101,6 +101,21 @@ impl DecodePolicy for ArPolicy {
 
     fn prefilled(&self) -> bool {
         self.prefilled
+    }
+
+    /// Full-prefix pool hit: rows 0..p-1 are already cached (from another
+    /// session's `ar_prefill`), so skip the forward and seed the stepping
+    /// state exactly as the prefill apply would have.
+    fn try_skip_prefill(&mut self, _backend: &dyn Backend,
+                        ctx: &mut PolicyCtx<'_>) -> Result<bool> {
+        let p = ctx.st.prompt_len;
+        if self.prefilled || p < 2 || !ctx.cache.prefix_ready(p - 1) {
+            return Ok(false);
+        }
+        self.cur_tok = ctx.st.tokens[p - 1];
+        self.cur_pos = p - 1;
+        self.prefilled = true;
+        Ok(true)
     }
 
     fn emitted_len(&self) -> Option<usize> {

@@ -12,6 +12,14 @@
 //! `&Engine` coerces to `&dyn Backend` at every existing call site, so the
 //! engine-facing code is unchanged apart from the signatures.
 //!
+//! ## Cache views
+//!
+//! The windowed forwards take the session cache as `&dyn KvView`, so a
+//! session backed by the dense `KvCache` and one backed by a `PagedKv`
+//! view into the shared `SharedKvPool` run through identical code. The
+//! `SimBackend` only reads `valid_count()`; the PJRT engine stages the
+//! view into dense buffers (`KvView::k_dense` et al.).
+//!
 //! ## Batched forwards
 //!
 //! `prefill_batch` / `decode_window_batch` run B same-shape forwards in
@@ -27,7 +35,7 @@
 use anyhow::Result;
 
 use crate::model::exec::{self, DecodeOut, PrefillOut};
-use crate::model::KvCache;
+use crate::model::KvView;
 use crate::runtime::manifest::{Constants, ModelSpec};
 use crate::runtime::Engine;
 
@@ -39,13 +47,13 @@ pub struct PrefillItem<'a> {
 }
 
 /// One windowed cached forward of a batched `decode_window_batch` call.
-/// Each item carries its own session's cache (per-request state).
+/// Each item carries its own session's cache view (per-request state).
 pub struct WindowItem<'a> {
     pub exec: &'a str,
     pub tokens: &'a [i32],
     pub pos: &'a [i32],
     pub valid: &'a [f32],
-    pub cache: &'a KvCache,
+    pub cache: &'a dyn KvView,
 }
 
 pub trait Backend {
@@ -63,7 +71,7 @@ pub trait Backend {
     /// Windowed forward against the approximate KV cache (the hot path).
     /// Output vectors match the executable's window length.
     fn decode_window(&self, exec: &str, params: &[f32], win_tokens: &[i32],
-                     win_pos: &[i32], win_valid: &[f32], cache: &KvCache)
+                     win_pos: &[i32], win_valid: &[f32], cache: &dyn KvView)
                      -> Result<DecodeOut>;
 
     /// B same-shape full forwards in one call. Default: loop over
@@ -106,7 +114,7 @@ impl Backend for Engine {
 
     fn decode_window(&self, exec_name: &str, params: &[f32],
                      win_tokens: &[i32], win_pos: &[i32], win_valid: &[f32],
-                     cache: &KvCache) -> Result<DecodeOut> {
+                     cache: &dyn KvView) -> Result<DecodeOut> {
         exec::decode_window(self, exec_name, params, win_tokens, win_pos,
                             win_valid, cache)
     }

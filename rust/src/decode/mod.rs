@@ -35,7 +35,8 @@ use anyhow::Result;
 pub use backend::{Backend, PrefillItem, WindowItem};
 pub use policy::{DecodePolicy, PolicyCtx, RoundOut, RoundPlan};
 pub use seq_state::SeqState;
-pub use session::{DecodeSession, SessionPhase, SessionProgress};
+pub use session::{kv_admission_geometry, DecodeSession,
+                  KvAdmissionGeometry, SessionPhase, SessionProgress};
 pub use sim::SimBackend;
 
 use crate::metrics::ForwardMix;

@@ -297,7 +297,7 @@ impl DecodePolicy for MultiBlockPolicy {
             win_tokens[off] = ctx.st.tokens[p];
             win_pos[off] = p as i32;
             win_valid[off] =
-                if ctx.cache.valid[p] > 0.0 { 0.0 } else { 1.0 };
+                if ctx.cache.is_valid(p) { 0.0 } else { 1.0 };
         }
         self.pending = Pending::Window { w_lo, w_hi, first, span };
         Ok(RoundPlan::Window {
@@ -314,7 +314,7 @@ impl DecodePolicy for MultiBlockPolicy {
         match (pending, out) {
             (Pending::Prefill, RoundOut::Full(pre)) => {
                 ctx.cache.install_full(&pre.kcache, &pre.vcache, 0,
-                                       ctx.st.prompt_len);
+                                       ctx.st.prompt_len)?;
                 self.prefilled = true;
                 Ok(false)
             }
@@ -325,18 +325,19 @@ impl DecodePolicy for MultiBlockPolicy {
 
                 let nb = ctx.st.n_blocks();
                 ctx.cache.install_full(&out.kcache, &out.vcache, 0,
-                                       ctx.st.prompt_len);
+                                       ctx.st.prompt_len)?;
                 for b in 0..nb {
                     let (lo, hi) = ctx.st.block_range(b);
                     match self.states[b] {
                         BlockState::Completed => {
                             ctx.cache.install_full(&out.kcache, &out.vcache,
-                                                   lo, hi);
+                                                   lo, hi)?;
                         }
                         BlockState::Stabilizing(n) => {
                             if n <= 1 {
                                 ctx.cache.install_full(&out.kcache,
-                                                       &out.vcache, lo, hi);
+                                                       &out.vcache, lo,
+                                                       hi)?;
                                 self.states[b] = BlockState::Completed;
                             } else {
                                 self.states[b] =
@@ -383,7 +384,7 @@ impl DecodePolicy for MultiBlockPolicy {
                             ctx.cache.commit_window_rows(&out.k_win,
                                                          &out.v_win,
                                                          self.window,
-                                                         &pairs);
+                                                         &pairs)?;
                         }
                         self.states[b] = BlockState::Completed;
                     }
@@ -396,6 +397,18 @@ impl DecodePolicy for MultiBlockPolicy {
 
     fn prefilled(&self) -> bool {
         self.prefilled
+    }
+
+    /// Full-prefix pool hit: the cache already holds every prompt row the
+    /// prefill would install, so skip the forward (its output is used for
+    /// nothing else) and go straight to decode rounds.
+    fn try_skip_prefill(&mut self, _backend: &dyn Backend,
+                        ctx: &mut PolicyCtx<'_>) -> Result<bool> {
+        if self.prefilled || !ctx.cache.prefix_ready(ctx.st.prompt_len) {
+            return Ok(false);
+        }
+        self.prefilled = true;
+        Ok(true)
     }
 
     fn block_states(&self) -> Option<&[BlockState]> {

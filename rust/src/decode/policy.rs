@@ -27,7 +27,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::model::exec::{DecodeOut, PrefillOut};
-use crate::model::KvCache;
+use crate::model::KvView;
 
 use super::ar::ArPolicy;
 use super::backend::Backend;
@@ -42,9 +42,11 @@ use super::{DecodeCfg, GenResult, SeqState, Strategy};
 pub struct PolicyCtx<'a> {
     pub cfg: &'a DecodeCfg,
     pub st: &'a mut SeqState,
-    /// Primary (target-model) KV cache. Strategy-private caches (e.g.
-    /// the speculative draft cache) live inside the policy.
-    pub cache: &'a mut KvCache,
+    /// Primary (target-model) KV cache view: the dense baseline or a
+    /// paged view into the shared pool — policies cannot tell them
+    /// apart. Strategy-private caches (e.g. the speculative draft cache)
+    /// live inside the policy.
+    pub cache: &'a mut dyn KvView,
     pub res: &'a mut GenResult,
 }
 
@@ -95,6 +97,21 @@ pub trait DecodePolicy {
     /// post-prefill `plan` calls.
     fn prefilled(&self) -> bool {
         true
+    }
+
+    /// Prefix-cache hook, called by the session once per round while the
+    /// prompt prefill is still pending. When the session cache already
+    /// holds every row the prefill forward would install (a paged view
+    /// that adopted the whole prompt prefix from the shared pool), the
+    /// policy completes its prefill bookkeeping *without* the forward and
+    /// returns `true`; the session then proceeds straight into decode
+    /// rounds with the exact accounting the post-prefill path would have
+    /// had. Sound for every strategy because prefill outputs are used
+    /// only to install those rows. Default: never skip (dense caches and
+    /// cold pools report `prefix_ready == false`).
+    fn try_skip_prefill(&mut self, _backend: &dyn Backend,
+                        _ctx: &mut PolicyCtx<'_>) -> Result<bool> {
+        Ok(false)
     }
 
     /// Multi-block policies expose their block states for tests and

@@ -4,7 +4,7 @@
 //! serving) and stream partial tokens.
 //!
 //! The session owns the per-request state every strategy shares — the
-//! sequence (`SeqState`), the primary KV cache, the `GenResult`
+//! sequence (`SeqState`), the primary KV cache view, the `GenResult`
 //! accounting (steps, rounds, forwards, wall time) — and delegates the
 //! strategy mechanics to a `DecodePolicy` (`decode::policy`). One
 //! `step()` = plan the round's forward, execute it, apply the unmask
@@ -12,6 +12,14 @@
 //! drives `plan_round` / `apply_round` directly instead, so it can
 //! coalesce the same-shape forwards of many sessions into one batched
 //! backend call; both drivers produce bit-identical per-session results.
+//!
+//! The primary cache is a `KvView`: `new`/`with_draft` build the dense
+//! baseline, `with_pool` builds a `PagedKv` page-table view into a shared
+//! `SharedKvPool` — memory scales with live tokens, same-prefix sessions
+//! adopt already-prefilled pages (skipping the prompt-prefill forward on
+//! a full-prefix hit via `DecodePolicy::try_skip_prefill`), and decode
+//! output stays bit-identical to the dense baseline on the deterministic
+//! `SimBackend`.
 //!
 //! The session is generic over the forward provider (`decode::Backend`),
 //! so the identical state machine runs against the real PJRT engine or
@@ -21,13 +29,15 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::model::KvCache;
+use crate::model::kv_pool::{PagedKv, SharedKvPool};
+use crate::model::{KvCache, KvView};
+use crate::runtime::manifest::Constants;
 
 use super::backend::Backend;
 use super::multi_block::BlockState;
 use super::policy::{make_policy, DecodePolicy, PolicyCtx, RoundOut,
                     RoundPlan};
-use super::{DecodeCfg, GenResult, SeqState};
+use super::{exec_names, DecodeCfg, GenResult, SeqState, Strategy};
 
 /// Coarse lifecycle phase, for scheduler accounting / introspection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,12 +70,70 @@ pub struct SessionProgress {
     pub window_forwards: usize,
 }
 
+/// KV-pool admission geometry of one request: how many prompt rows its
+/// prefill installs (the prefix-sharing domain), under which executable
+/// family, and how many sequence rows the session can ever touch. The
+/// single source of truth shared by session construction and the serving
+/// coordinator's admission budget check.
+pub struct KvAdmissionGeometry {
+    /// Rows `0..prefix_rows` are installed by the prompt prefill.
+    pub prefix_rows: usize,
+    /// Prefill executable family the rows come from (`ar_prefill` rows
+    /// are causal, `prefill_{variant}` rows bidirectional — they must
+    /// never share pages).
+    pub prefix_tag: String,
+    /// Upper bound on rows this session writes (page reservation).
+    pub span_rows: usize,
+    /// Causal prefill family: prefix pages are individually adoptable;
+    /// bidirectional families adopt all-or-nothing (see `kv_pool`).
+    pub causal_prefix: bool,
+}
+
+/// Compute the admission geometry for one request.
+pub fn kv_admission_geometry(cfg: &DecodeCfg, c: &Constants,
+                             prompt_len: usize, gen_len: usize)
+                             -> KvAdmissionGeometry {
+    match cfg.strategy {
+        // AR-family prefills install rows 0..p-1 (the last prompt token
+        // flows through the first windowed forward); the speculative
+        // verify window can commit target rows a few positions past the
+        // generation region
+        Strategy::Ar | Strategy::Spec => {
+            let extra =
+                if cfg.strategy == Strategy::Spec { c.verify_w } else { 0 };
+            KvAdmissionGeometry {
+                prefix_rows: prompt_len.saturating_sub(1),
+                prefix_tag: "ar_prefill".to_string(),
+                span_rows: (prompt_len + gen_len + extra).min(c.s_max),
+                causal_prefix: true,
+            }
+        }
+        // no-cache decoding never touches the cache: reserve nothing
+        Strategy::Vanilla | Strategy::FastDllm | Strategy::DParallel
+            if !cfg.use_cache =>
+        {
+            KvAdmissionGeometry {
+                prefix_rows: 0,
+                prefix_tag: String::new(),
+                span_rows: 0,
+                causal_prefix: false,
+            }
+        }
+        _ => KvAdmissionGeometry {
+            prefix_rows: prompt_len,
+            prefix_tag: exec_names(&cfg.variant).0,
+            span_rows: (prompt_len + gen_len).min(c.s_max),
+            causal_prefix: false,
+        },
+    }
+}
+
 pub struct DecodeSession {
     pub cfg: DecodeCfg,
     pub st: SeqState,
-    /// Primary (target-model) cache; strategy-private caches live in the
-    /// policy.
-    pub cache: KvCache,
+    /// Primary (target-model) cache view — dense baseline or paged pool
+    /// view; strategy-private caches live in the policy.
+    pub cache: Box<dyn KvView>,
     pub res: GenResult,
     policy: Box<dyn DecodePolicy>,
     steps: usize,
@@ -73,25 +141,59 @@ pub struct DecodeSession {
 }
 
 impl DecodeSession {
-    /// Build a session for any strategy except `Spec` (which needs draft
-    /// parameters — see `with_draft`).
+    /// Build a dense-cache session for any strategy except `Spec` (which
+    /// needs draft parameters — see `with_draft`).
     pub fn new(backend: &dyn Backend, cfg: DecodeCfg, prompt: &[i32],
                gen_len: usize) -> Result<DecodeSession> {
         DecodeSession::with_draft(backend, cfg, prompt, gen_len, None)
     }
 
-    /// Build a session for any strategy. `draft_params` is required by
-    /// `Strategy::Spec` and ignored by everything else.
+    /// Build a dense-cache session for any strategy. `draft_params` is
+    /// required by `Strategy::Spec` and ignored by everything else.
     pub fn with_draft(backend: &dyn Backend, cfg: DecodeCfg, prompt: &[i32],
                       gen_len: usize, draft_params: Option<&[f32]>)
                       -> Result<DecodeSession> {
+        DecodeSession::build(backend, cfg, prompt, gen_len, draft_params,
+                             None)
+    }
+
+    /// Build a session whose primary cache is a page-table view into the
+    /// shared pool: the prompt prefix is probed against the pool's prefix
+    /// index (a full hit will skip the prompt-prefill forward) and the
+    /// session's page span is reserved against the budget. Fails with a
+    /// `kv_pool::is_pool_exhausted` error when the budget cannot cover
+    /// the reservation.
+    pub fn with_pool(backend: &dyn Backend, cfg: DecodeCfg, prompt: &[i32],
+                     gen_len: usize, draft_params: Option<&[f32]>,
+                     pool: &SharedKvPool) -> Result<DecodeSession> {
+        DecodeSession::build(backend, cfg, prompt, gen_len, draft_params,
+                             Some(pool))
+    }
+
+    fn build(backend: &dyn Backend, cfg: DecodeCfg, prompt: &[i32],
+             gen_len: usize, draft_params: Option<&[f32]>,
+             pool: Option<&SharedKvPool>) -> Result<DecodeSession> {
         let c = backend.constants().clone();
         let spec = backend.model_spec("main")?.clone();
         let block = cfg.strategy.block_granularity(&c);
         let st = SeqState::new(prompt, gen_len, block, c.s_max);
         let policy = make_policy(backend, &cfg, &st, draft_params)?;
+        let cache: Box<dyn KvView> = match pool {
+            None => {
+                Box::new(KvCache::new(spec.n_layers, st.s_max, spec.d_kv))
+            }
+            Some(pool) => {
+                let geo = kv_admission_geometry(&cfg, &c, st.prompt_len,
+                                                gen_len);
+                Box::new(PagedKv::admit(pool,
+                                        &st.tokens[..st.prompt_len],
+                                        &geo.prefix_tag, geo.prefix_rows,
+                                        geo.span_rows,
+                                        geo.causal_prefix)?)
+            }
+        };
         Ok(DecodeSession {
-            cache: KvCache::new(spec.n_layers, st.s_max, spec.d_kv),
+            cache,
             st,
             cfg,
             res: GenResult::default(),
@@ -166,16 +268,41 @@ impl DecodeSession {
         }
         let t0 = Instant::now();
         self.steps += 1;
+        if !self.policy.prefilled() {
+            // paged prefix hit: adopt the shared prompt pages' rows
+            // instead of planning the prefill forward (no-op on dense
+            // caches and cold pools)
+            let skipped = {
+                let mut ctx = PolicyCtx {
+                    cfg: &self.cfg,
+                    st: &mut self.st,
+                    cache: &mut *self.cache,
+                    res: &mut self.res,
+                };
+                self.policy.try_skip_prefill(backend, &mut ctx)
+            };
+            match skipped {
+                Ok(true) => self.cache.note_prefill_skipped(),
+                Ok(false) => {}
+                Err(e) => {
+                    self.done = true;
+                    self.res.wall_secs += t0.elapsed().as_secs_f64();
+                    return Err(e);
+                }
+            }
+        }
         if self.policy.prefilled() {
             self.res.rounds += 1;
         }
-        let mut ctx = PolicyCtx {
-            cfg: &self.cfg,
-            st: &mut self.st,
-            cache: &mut self.cache,
-            res: &mut self.res,
+        let plan = {
+            let mut ctx = PolicyCtx {
+                cfg: &self.cfg,
+                st: &mut self.st,
+                cache: &mut *self.cache,
+                res: &mut self.res,
+            };
+            self.policy.plan(backend, params, &mut ctx)
         };
-        let plan = self.policy.plan(backend, params, &mut ctx);
         self.res.wall_secs += t0.elapsed().as_secs_f64();
         match plan {
             Ok(RoundPlan::Finished) => {
@@ -194,13 +321,15 @@ impl DecodeSession {
     /// Returns true when the request is finished.
     pub fn apply_round(&mut self, out: RoundOut) -> Result<bool> {
         let t0 = Instant::now();
-        let mut ctx = PolicyCtx {
-            cfg: &self.cfg,
-            st: &mut self.st,
-            cache: &mut self.cache,
-            res: &mut self.res,
+        let finished = {
+            let mut ctx = PolicyCtx {
+                cfg: &self.cfg,
+                st: &mut self.st,
+                cache: &mut *self.cache,
+                res: &mut self.res,
+            };
+            self.policy.apply(&mut ctx, out)
         };
-        let finished = self.policy.apply(&mut ctx, out);
         self.res.wall_secs += t0.elapsed().as_secs_f64();
         match finished {
             Ok(true) => {
@@ -223,7 +352,7 @@ impl DecodeSession {
 
     /// Run one decode round inline (B=1). Returns true when the request
     /// is finished. The first call performs the prompt prefill (not
-    /// counted in TPF).
+    /// counted in TPF) unless a prefix-cache hit makes it unnecessary.
     pub fn step(&mut self, backend: &dyn Backend, params: &[f32])
                 -> Result<bool> {
         if self.done {
@@ -249,7 +378,7 @@ impl DecodeSession {
                 let t0 = Instant::now();
                 let out = match backend.decode_window(&exec, params, &tokens,
                                                       &pos, &valid,
-                                                      &self.cache) {
+                                                      &*self.cache) {
                     Ok(out) => out,
                     Err(e) => {
                         self.done = true;

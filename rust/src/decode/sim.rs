@@ -27,7 +27,7 @@ use std::cell::Cell;
 use anyhow::{bail, Result};
 
 use crate::model::exec::{DecodeOut, PrefillOut};
-use crate::model::KvCache;
+use crate::model::KvView;
 use crate::runtime::manifest::{Constants, ModelSpec};
 
 use super::backend::{Backend, PrefillItem, WindowItem};
@@ -78,8 +78,13 @@ pub struct SimBackend {
     /// When set, roughly this fraction of positions argmax to EOS, for
     /// exercising the early-stop paths. Default: no EOS (full decodes).
     eos_rate: f64,
-    // ---- batched-call telemetry (Cell: the backend is used single-
-    // threaded behind `&dyn Backend`, like the RefCell-caching Engine)
+    // ---- telemetry (Cell: the backend is used single-threaded behind
+    // `&dyn Backend`, like the RefCell-caching Engine)
+    /// Individual full forwards computed (batch items included) — the
+    /// prefix-sharing benches measure skipped prompt prefills with this.
+    prefill_calls: Cell<usize>,
+    /// Individual windowed forwards computed (batch items included).
+    window_calls: Cell<usize>,
     prefill_batch_calls: Cell<usize>,
     prefill_batch_items: Cell<usize>,
     max_prefill_batch: Cell<usize>,
@@ -97,6 +102,8 @@ impl SimBackend {
             spec,
             seed,
             eos_rate: 0.0,
+            prefill_calls: Cell::new(0),
+            window_calls: Cell::new(0),
             prefill_batch_calls: Cell::new(0),
             prefill_batch_items: Cell::new(0),
             max_prefill_batch: Cell::new(0),
@@ -110,6 +117,17 @@ impl SimBackend {
     pub fn with_eos_rate(mut self, rate: f64) -> SimBackend {
         self.eos_rate = rate;
         self
+    }
+
+    /// Individual full forwards computed so far (batch items included).
+    pub fn prefill_calls(&self) -> usize {
+        self.prefill_calls.get()
+    }
+
+    /// Individual windowed forwards computed so far (batch items
+    /// included).
+    pub fn window_calls(&self) -> usize {
+        self.window_calls.get()
     }
 
     /// Batched full-forward calls taken (each covering >= 1 items).
@@ -198,6 +216,7 @@ impl SimBackend {
     /// the batched path share (bit-identity between B=1 and B>1).
     fn prefill_one(&self, params: &[f32], tokens: &[i32], valid: &[f32])
                    -> Result<PrefillOut> {
+        self.prefill_calls.set(self.prefill_calls.get() + 1);
         let s = self.constants.s_max;
         if tokens.len() != s || valid.len() != s {
             bail!("sim prefill: tokens/valid must be length {s}");
@@ -248,8 +267,9 @@ impl SimBackend {
     /// `window`).
     fn decode_window_one(&self, exec: &str, params: &[f32],
                          win_tokens: &[i32], win_pos: &[i32],
-                         win_valid: &[f32], cache: &KvCache)
+                         win_valid: &[f32], cache: &dyn KvView)
                          -> Result<DecodeOut> {
+        self.window_calls.set(self.window_calls.get() + 1);
         let w = win_tokens.len();
         let want = self.window_len_for(exec);
         if w != want || win_pos.len() != w || win_valid.len() != w {
@@ -301,7 +321,7 @@ impl Backend for SimBackend {
     }
 
     fn decode_window(&self, exec: &str, params: &[f32], win_tokens: &[i32],
-                     win_pos: &[i32], win_valid: &[f32], cache: &KvCache)
+                     win_pos: &[i32], win_valid: &[f32], cache: &dyn KvView)
                      -> Result<DecodeOut> {
         self.decode_window_one(exec, params, win_tokens, win_pos, win_valid,
                                cache)
@@ -344,6 +364,7 @@ impl Backend for SimBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::KvCache;
 
     #[test]
     fn outputs_are_deterministic() {
@@ -409,7 +430,7 @@ mod tests {
         let w = c.window;
         let cache_a = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
         let mut cache_b = KvCache::new(spec.n_layers, c.s_max, spec.d_kv);
-        cache_b.valid[0] = 1.0; // different cache state per lane
+        cache_b.mark_valid(0); // different cache state per lane
         let ta: Vec<i32> = (0..w as i32).map(|i| 5 + i % 80).collect();
         let tb: Vec<i32> = (0..w as i32).map(|i| 7 + i % 60).collect();
         let pos: Vec<i32> = (0..w as i32).collect();

@@ -154,7 +154,7 @@ impl DecodePolicy for SingleBlockCachedPolicy {
         match out {
             RoundOut::Full(pre) => {
                 ctx.cache.install_full(&pre.kcache, &pre.vcache, 0,
-                                       ctx.st.prompt_len);
+                                       ctx.st.prompt_len)?;
                 self.prefilled = true;
                 Ok(false)
             }
@@ -172,7 +172,7 @@ impl DecodePolicy for SingleBlockCachedPolicy {
                     let pairs: Vec<(usize, usize)> =
                         (0..(hi - lo)).map(|off| (off, lo + off)).collect();
                     ctx.cache.commit_window_rows(&out.k_win, &out.v_win,
-                                                 self.window, &pairs);
+                                                 self.window, &pairs)?;
                     if ctx.cfg.early_stop && ctx.st.eos_settled() {
                         return Ok(true);
                     }
@@ -189,5 +189,16 @@ impl DecodePolicy for SingleBlockCachedPolicy {
 
     fn prefilled(&self) -> bool {
         self.prefilled
+    }
+
+    /// Full-prefix pool hit: skip the prompt-prefill forward (see the
+    /// multi-block twin).
+    fn try_skip_prefill(&mut self, _backend: &dyn Backend,
+                        ctx: &mut PolicyCtx<'_>) -> Result<bool> {
+        if self.prefilled || !ctx.cache.prefix_ready(ctx.st.prompt_len) {
+            return Ok(false);
+        }
+        self.prefilled = true;
+        Ok(true)
     }
 }

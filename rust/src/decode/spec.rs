@@ -136,7 +136,7 @@ impl DecodePolicy for SpecPolicy {
         match out {
             RoundOut::Full(pre_t) => {
                 ctx.cache.install_full(&pre_t.kcache, &pre_t.vcache, 0,
-                                       ctx.st.prompt_len - 1);
+                                       ctx.st.prompt_len - 1)?;
                 self.prefilled = true;
                 Ok(false)
             }
@@ -158,7 +158,7 @@ impl DecodePolicy for SpecPolicy {
                     .map(|j| (j, self.pending_pos + j))
                     .collect();
                 ctx.cache.commit_window_rows(&out.k_win, &out.v_win, self.w,
-                                             &commit);
+                                             &commit)?;
 
                 // accepted proposals stream out...
                 let g0 = ctx.st.gen_start();
@@ -190,6 +190,25 @@ impl DecodePolicy for SpecPolicy {
 
     fn prefilled(&self) -> bool {
         self.prefilled
+    }
+
+    /// Full-prefix pool hit on the *target* cache: skip the target
+    /// prefill forward. The draft cache is session-private, so its
+    /// prefill still runs here as the same auxiliary forward `plan`
+    /// would have issued.
+    fn try_skip_prefill(&mut self, backend: &dyn Backend,
+                        ctx: &mut PolicyCtx<'_>) -> Result<bool> {
+        let p = ctx.st.prompt_len;
+        if self.prefilled || p < 2 || !ctx.cache.prefix_ready(p - 1) {
+            return Ok(false);
+        }
+        let tokens = ctx.st.prompt_prefix_tokens();
+        let valid = ctx.st.prompt_valid();
+        let pre_d = backend.prefill("draft_ar_prefill", &self.draft_params,
+                                    &tokens, &valid)?;
+        self.d_cache.install_full(&pre_d.kcache, &pre_d.vcache, 0, p - 1);
+        self.prefilled = true;
+        Ok(true)
     }
 
     fn emitted_len(&self) -> Option<usize> {

@@ -67,6 +67,7 @@ fn print_help() {
                 [--n N] [--threshold X] [--strict] [--variant xla|pallas]\n\
            serve --ckpt C [--port 7070]          start the serving coordinator\n\
                 [--max-sessions N] [--max-queue N] [--config svc.json]\n\
+                [--draft D] [--kv-budget-mb MB (0 = dense caches)]\n\
            bench --exp EXP [--n N] [--fast]      regenerate a table/figure\n\
                  (table1..table11, curves, radar, figure1, perf, all)"
     );
@@ -246,6 +247,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_concurrent_sessions: args.usize_or(
             "max-sessions",
             svc.as_ref().map(|s| s.max_concurrent_sessions).unwrap_or(4),
+        ),
+        // draft checkpoint enables speculative (`spec`) serving
+        draft: args
+            .get("draft")
+            .map(|s| s.to_string())
+            .or_else(|| svc.as_ref().and_then(|s| s.draft_ckpt.clone())),
+        kv_budget_mb: args.usize_or(
+            "kv-budget-mb",
+            svc.as_ref().map(|s| s.kv_budget_mb).unwrap_or(256),
         ),
         // an explicit --strategy flag wins over the config file's decode
         // block; without the flag the config's tuned decode applies

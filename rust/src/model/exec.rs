@@ -4,7 +4,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::model::kv_cache::KvCache;
+use crate::model::kv_cache::KvView;
 use crate::runtime::engine::{
     scalar_f32_out, to_vec_f32, to_vec_i32, ArgData, Engine, TypedArgs,
 };
@@ -72,23 +72,29 @@ pub fn prefill(eng: &Engine, exec: &str, params: &[f32], tokens: &[i32],
 }
 
 /// Windowed forward against the KV cache (`decode_{variant}`, `ar_step`,
-/// `ar_verify`, `draft_ar_step`): the serving hot path.
+/// `ar_verify`, `draft_ar_step`): the serving hot path. Accepts any
+/// [`KvView`]: the dense cache hands over its buffers borrow-only, the
+/// paged view gathers its pages into a dense staging copy (until a
+/// paged-attention executable that takes page tables directly lands in
+/// the AOT layer).
 pub fn decode_window(eng: &Engine, exec: &str, params: &[f32],
                      win_tokens: &[i32], win_pos: &[i32], win_valid: &[f32],
-                     cache: &KvCache) -> Result<DecodeOut> {
+                     cache: &dyn KvView) -> Result<DecodeOut> {
     let spec = eng.manifest.exec(exec)?.clone();
     let w = spec.inputs[1].shape[0];
     if win_tokens.len() != w || win_pos.len() != w || win_valid.len() != w {
         bail!("decode: window inputs must be length {w}");
     }
+    let (ck, cv, cvalid) =
+        (cache.k_dense(), cache.v_dense(), cache.valid_dense());
     let out = if eng.buffered() {
         eng.run_buffered(exec, params, &[
             ArgData::I32(win_tokens, &spec.inputs[1].shape),
             ArgData::I32(win_pos, &spec.inputs[2].shape),
             ArgData::F32(win_valid, &spec.inputs[3].shape),
-            ArgData::F32(&cache.k, &spec.inputs[4].shape),
-            ArgData::F32(&cache.v, &spec.inputs[5].shape),
-            ArgData::F32(&cache.valid, &spec.inputs[6].shape),
+            ArgData::F32(ck.as_ref(), &spec.inputs[4].shape),
+            ArgData::F32(cv.as_ref(), &spec.inputs[5].shape),
+            ArgData::F32(cvalid.as_ref(), &spec.inputs[6].shape),
         ])?
     } else {
         let args = TypedArgs::new()
@@ -96,9 +102,9 @@ pub fn decode_window(eng: &Engine, exec: &str, params: &[f32],
             .i32(win_tokens, &[w])?
             .i32(win_pos, &[w])?
             .f32(win_valid, &[w])?
-            .f32(&cache.k, &spec.inputs[4].shape)?
-            .f32(&cache.v, &spec.inputs[5].shape)?
-            .f32(&cache.valid, &[cache.seq])?;
+            .f32(ck.as_ref(), &spec.inputs[4].shape)?
+            .f32(cv.as_ref(), &spec.inputs[5].shape)?
+            .f32(cvalid.as_ref(), &[cache.capacity()])?;
         eng.run(exec, args)?
     };
     Ok(DecodeOut {

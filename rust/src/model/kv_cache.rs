@@ -1,11 +1,96 @@
-//! Host-side mirror of the block-approximate KV cache (paper §3.2).
+//! KV-cache storage interfaces plus the dense per-session implementation.
 //!
-//! Layout matches the AOT executables: k/v are [L, S_max, H*Dh] row-major,
-//! `valid` marks which cache rows the decode window may attend to. Cache
-//! entries are *approximate*: a row is computed under whatever view of the
-//! sequence existed when it was produced, and the KV-refresh mechanism
-//! (a full `prefill` forward) rewrites all rows with the current view.
+//! The decode layer reads and writes caches only through [`KvView`], so
+//! two storage backends coexist behind one API:
+//!
+//!   * [`KvCache`] — the original dense `[L, S_max, d_kv]` mirror, the
+//!     reference ("dense baseline") implementation; every row is
+//!     allocated up front regardless of how many are live.
+//!   * [`crate::model::kv_pool::PagedKv`] — a page-table view into the
+//!     shared [`crate::model::kv_pool::SharedKvPool`], where memory
+//!     scales with live tokens and same-prefix sessions share
+//!     already-prefilled pages copy-on-write.
+//!
+//! Layout matches the AOT executables: k/v are `[L, S_max, d_kv]`
+//! row-major, `valid` marks which cache rows the decode window may attend
+//! to. Cache entries are *approximate*: a row is computed under whatever
+//! view of the sequence existed when it was produced, and the KV-refresh
+//! mechanism (a full `prefill` forward, paper §3.2) rewrites rows with
+//! the current view.
 
+use std::borrow::Cow;
+
+use anyhow::Result;
+
+/// Uniform cache interface shared by the dense [`KvCache`] and the paged
+/// [`crate::model::kv_pool::PagedKv`] view. The mutating entry points
+/// return `Result` because a paged view can exhaust the pool's page
+/// budget mid-operation; the dense implementation never fails.
+///
+/// The `*_dense` getters exist for backends that feed the cache to an
+/// executable as one contiguous buffer (the PJRT engine): the dense cache
+/// borrows its storage at zero cost, the paged view gathers its pages
+/// into an owned staging buffer (until a paged-attention executable that
+/// consumes page tables directly lands in the AOT layer).
+pub trait KvView {
+    fn layers(&self) -> usize;
+
+    /// Sequence-row capacity (`s_max`).
+    fn capacity(&self) -> usize;
+
+    fn d_kv(&self) -> usize;
+
+    /// Number of valid rows. O(1) everywhere: both implementations keep
+    /// a maintained counter (the simulated backend mixes this into every
+    /// windowed forward, so it is on the hot path).
+    fn valid_count(&self) -> usize;
+
+    fn is_valid(&self, pos: usize) -> bool;
+
+    /// Dense `[L, S, d_kv]` key rows (borrowed for dense storage,
+    /// gathered for paged storage).
+    fn k_dense(&self) -> Cow<'_, [f32]>;
+
+    /// Dense `[L, S, d_kv]` value rows.
+    fn v_dense(&self) -> Cow<'_, [f32]>;
+
+    /// Dense `[S]` row-validity mask.
+    fn valid_dense(&self) -> Cow<'_, [f32]>;
+
+    /// Install rows from a full-sequence forward (`prefill` output, shape
+    /// `[L, S, d_kv]`) for positions `pos0..pos1`, marking them valid.
+    /// This is both prompt prefill and the KV-refresh path; the paged
+    /// implementation makes the refresh *incremental* by skipping pages
+    /// whose rows are already current (see `kv_pool`).
+    fn install_full(&mut self, k_full: &[f32], v_full: &[f32], pos0: usize,
+                    pos1: usize) -> Result<()>;
+
+    /// Commit window rows (decode output k_win/v_win, shape
+    /// `[L, W, d_kv]`) into the cache: window offset `off` -> absolute
+    /// position `pos`.
+    fn commit_window_rows(&mut self, k_win: &[f32], v_win: &[f32], w: usize,
+                          pairs: &[(usize, usize)]) -> Result<()>;
+
+    /// Invalidate rows at and after `pos` (used when re-planning).
+    fn invalidate_from(&mut self, pos: usize) -> Result<()>;
+
+    /// True when every row `0..rows` is already valid — the prefix-
+    /// adoption probe behind prompt-prefill skipping. `rows == 0` is
+    /// defined as *not* ready so callers cannot accidentally "skip" a
+    /// prefill that installs nothing.
+    fn prefix_ready(&self, rows: usize) -> bool {
+        rows > 0 && (0..rows).all(|p| self.is_valid(p))
+    }
+
+    /// Bookkeeping hook invoked when a session skipped its prompt-prefill
+    /// forward thanks to a prefix-cache hit. No-op on dense caches.
+    fn note_prefill_skipped(&mut self) {}
+}
+
+/// Dense host-side mirror of the block-approximate KV cache: one
+/// full-capacity buffer per session. Kept as the reference baseline the
+/// paged pool is pinned against (`tests/kv_pool.rs`) and for
+/// strategy-private caches (the speculative draft cache).
 #[derive(Clone)]
 pub struct KvCache {
     pub layers: usize,
@@ -13,7 +98,10 @@ pub struct KvCache {
     pub d_kv: usize,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
-    pub valid: Vec<f32>,
+    valid: Vec<f32>,
+    /// Maintained count of valid rows (O(1) `valid_count`; the old O(S)
+    /// scan ran once per simulated forward).
+    valid_rows: usize,
 }
 
 impl KvCache {
@@ -25,6 +113,7 @@ impl KvCache {
             k: vec![0.0; layers * seq * d_kv],
             v: vec![0.0; layers * seq * d_kv],
             valid: vec![0.0; seq],
+            valid_rows: 0,
         }
     }
 
@@ -32,6 +121,7 @@ impl KvCache {
         self.k.fill(0.0);
         self.v.fill(0.0);
         self.valid.fill(0.0);
+        self.valid_rows = 0;
     }
 
     #[inline]
@@ -39,9 +129,28 @@ impl KvCache {
         (layer * self.seq + pos) * self.d_kv
     }
 
-    /// Number of valid cache rows.
+    /// Number of valid cache rows (maintained counter).
     pub fn valid_count(&self) -> usize {
-        self.valid.iter().filter(|&&x| x > 0.0).count()
+        self.valid_rows
+    }
+
+    pub fn is_valid(&self, pos: usize) -> bool {
+        self.valid[pos] > 0.0
+    }
+
+    /// Row-validity mask as a dense slice (executable input layout).
+    pub fn valid_slice(&self) -> &[f32] {
+        &self.valid
+    }
+
+    /// Mark one row valid without writing its k/v content (test and
+    /// tooling hook; keeps the maintained counter consistent, which
+    /// direct field writes would not).
+    pub fn mark_valid(&mut self, pos: usize) {
+        if self.valid[pos] == 0.0 {
+            self.valid[pos] = 1.0;
+            self.valid_rows += 1;
+        }
     }
 
     /// Install rows from a full-sequence forward (`prefill` output, shape
@@ -50,16 +159,14 @@ impl KvCache {
     pub fn install_full(&mut self, k_full: &[f32], v_full: &[f32],
                         pos0: usize, pos1: usize) {
         debug_assert_eq!(k_full.len(), self.k.len());
-        let d = self.d_kv;
         for l in 0..self.layers {
             let a = self.row(l, pos0);
             let b = self.row(l, pos1);
             self.k[a..b].copy_from_slice(&k_full[a..b]);
             self.v[a..b].copy_from_slice(&v_full[a..b]);
         }
-        let _ = d;
         for p in pos0..pos1 {
-            self.valid[p] = 1.0;
+            self.mark_valid(p);
         }
     }
 
@@ -79,15 +186,69 @@ impl KvCache {
             }
         }
         for &(_, pos) in pairs {
-            self.valid[pos] = 1.0;
+            self.mark_valid(pos);
         }
     }
 
     /// Invalidate rows at and after `pos` (used when re-planning).
     pub fn invalidate_from(&mut self, pos: usize) {
         for p in pos..self.seq {
-            self.valid[p] = 0.0;
+            if self.valid[p] > 0.0 {
+                self.valid[p] = 0.0;
+                self.valid_rows -= 1;
+            }
         }
+    }
+}
+
+impl KvView for KvCache {
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
+    fn capacity(&self) -> usize {
+        self.seq
+    }
+
+    fn d_kv(&self) -> usize {
+        self.d_kv
+    }
+
+    fn valid_count(&self) -> usize {
+        KvCache::valid_count(self)
+    }
+
+    fn is_valid(&self, pos: usize) -> bool {
+        KvCache::is_valid(self, pos)
+    }
+
+    fn k_dense(&self) -> Cow<'_, [f32]> {
+        Cow::Borrowed(&self.k)
+    }
+
+    fn v_dense(&self) -> Cow<'_, [f32]> {
+        Cow::Borrowed(&self.v)
+    }
+
+    fn valid_dense(&self) -> Cow<'_, [f32]> {
+        Cow::Borrowed(&self.valid)
+    }
+
+    fn install_full(&mut self, k_full: &[f32], v_full: &[f32], pos0: usize,
+                    pos1: usize) -> Result<()> {
+        KvCache::install_full(self, k_full, v_full, pos0, pos1);
+        Ok(())
+    }
+
+    fn commit_window_rows(&mut self, k_win: &[f32], v_win: &[f32], w: usize,
+                          pairs: &[(usize, usize)]) -> Result<()> {
+        KvCache::commit_window_rows(self, k_win, v_win, w, pairs);
+        Ok(())
+    }
+
+    fn invalidate_from(&mut self, pos: usize) -> Result<()> {
+        KvCache::invalidate_from(self, pos);
+        Ok(())
     }
 }
 
@@ -117,5 +278,39 @@ mod tests {
 
         c.invalidate_from(4);
         assert_eq!(c.valid_count(), 4);
+    }
+
+    #[test]
+    fn valid_counter_stays_consistent() {
+        let mut c = KvCache::new(1, 6, 2);
+        c.mark_valid(2);
+        c.mark_valid(2); // idempotent
+        assert_eq!(c.valid_count(), 1);
+        assert!(c.is_valid(2) && !c.is_valid(3));
+        let full = vec![0.5f32; 12]; // [L=1, S=6, d=2]
+        // overlapping install must not double count
+        c.install_full(&full, &full, 1, 4);
+        assert_eq!(c.valid_count(), 3);
+        c.invalidate_from(0);
+        assert_eq!(c.valid_count(), 0);
+        c.invalidate_from(0); // idempotent
+        assert_eq!(c.valid_count(), 0);
+    }
+
+    #[test]
+    fn view_trait_matches_inherent_api() {
+        let mut c = KvCache::new(1, 4, 2);
+        let full = vec![1.0f32; 8];
+        {
+            let view: &mut dyn KvView = &mut c;
+            view.install_full(&full, &full, 0, 2).unwrap();
+            assert_eq!(view.valid_count(), 2);
+            assert!(view.prefix_ready(2));
+            assert!(!view.prefix_ready(3));
+            assert!(!view.prefix_ready(0), "empty prefix is never ready");
+            assert_eq!(view.k_dense().len(), 8);
+            assert_eq!(view.valid_dense()[..2], [1.0, 1.0]);
+        }
+        assert_eq!(c.valid_count(), 2);
     }
 }

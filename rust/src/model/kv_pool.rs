@@ -1,0 +1,1203 @@
+//! Paged KV-cache pool with prompt-prefix sharing and incremental
+//! refresh.
+//!
+//! The dense per-session [`super::KvCache`] allocates `[L, S_max, d_kv]`
+//! for every admitted session, so serving memory scales with
+//! `max_concurrent_sessions x S_max` and same-prefix sessions redo
+//! identical prefill forwards. This module replaces that with a shared
+//! pool of fixed-size *pages* (aligned to the decode block size) under a
+//! configurable byte budget; each session holds a [`PagedKv`] page-table
+//! view implementing [`KvView`]:
+//!
+//!   * **Memory scales with live tokens.** Pages are allocated lazily as
+//!     rows are installed/committed; a session reserves only the pages
+//!     its `prompt + gen` span can touch, not `S_max`.
+//!   * **Prefix sharing.** At admission the prompt is chain-hashed per
+//!     page (the hash of page *i* covers tokens `0..end_i`, plus the
+//!     prefill executable family and cache geometry). For *causal*
+//!     prefill families (`ar_prefill`) a page hit is individually sound
+//!     — causal rows depend only on the tokens the chain hash certifies
+//!     — so partial prefixes share page by page. For *bidirectional*
+//!     families (`prefill_{variant}`) a row depends on the whole visible
+//!     prompt, so adoption is all-or-nothing: pages are adopted only
+//!     when every prompt page hits (the full prompt matches). In either
+//!     case a full-prefix hit also skips the prompt-prefill forward
+//!     entirely — sound because every decode policy uses the prefill
+//!     output only to install those very rows.
+//!   * **Copy-on-write.** A write to a page referenced by more than one
+//!     session — or to any prefix-registered page, whose pristine content
+//!     must stay adoptable — copies it first. Sessions can never observe
+//!     each other's decode commits, and a prompt page survives in the
+//!     index even after its registrant decodes past it or retires.
+//!   * **Incremental refresh.** Each view keeps per-page generation
+//!     counters: `touch` advances when a page's row content changes
+//!     (commits / invalidation), `install` records the generation of its
+//!     last full-forward install. A KV-refresh `install_full` rewrites
+//!     only pages whose install generation lags their touch generation or
+//!     whose range still has invalid rows; fully-current pages (the
+//!     prompt, long-completed blocks) are skipped instead of rewritten.
+//!   * **Reclaimable pages.** When a session retires, its prefix-indexed
+//!     pages are kept (ref count 0) so future same-prefix sessions still
+//!     hit; they are evicted LRU-first whenever the allocator needs a
+//!     physical page, so they never block admission.
+//!
+//! On the deterministic `SimBackend`, a paged session's decode output is
+//! bit-identical to the dense baseline for every strategy
+//! (`tests/kv_pool.rs` pins this): KV row values are pure functions of
+//! (layer, position, token), rows are only installed for finalized
+//! tokens, and the row-validity set evolves identically. On a real
+//! engine, prefix sharing and refresh skipping are approximations in
+//! exactly the spirit of the paper's block-approximate cache (§3.2).
+//!
+//! Everything is single-threaded behind the engine worker (like the
+//! `RefCell`-caching `Engine`), so the pool is shared via `Rc<RefCell>`.
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::kv_cache::KvView;
+
+/// Marker embedded in every budget-exhaustion error so callers can
+/// distinguish "no page budget, retry later" from hard failures without
+/// typed downcasts (the vendored `anyhow` has none).
+pub const POOL_EXHAUSTED: &str = "kv pool exhausted";
+
+/// True when `e` is a page-budget exhaustion error from this module.
+pub fn is_pool_exhausted(e: &anyhow::Error) -> bool {
+    e.chain().any(|m| m.contains(POOL_EXHAUSTED))
+}
+
+/// Pool geometry + budget. One pool serves one model geometry (the
+/// serving coordinator builds it from the "main" `ModelSpec`).
+#[derive(Debug, Clone)]
+pub struct KvPoolCfg {
+    pub layers: usize,
+    pub d_kv: usize,
+    /// Sequence capacity of every view (`s_max`).
+    pub s_max: usize,
+    /// Rows per page; align to the decode block size so block commits
+    /// land on whole pages.
+    pub page_rows: usize,
+    /// Byte budget for page storage; `max_pages = budget / page_bytes`.
+    pub budget_bytes: usize,
+}
+
+impl KvPoolCfg {
+    /// Bytes of one page: k + v (`[L, R, d_kv]` f32 each) + valid (`[R]`).
+    pub fn page_bytes(&self) -> usize {
+        (2 * self.layers * self.page_rows * self.d_kv + self.page_rows) * 4
+    }
+
+    pub fn max_pages(&self) -> usize {
+        self.budget_bytes / self.page_bytes()
+    }
+
+    /// Pages covering `rows` sequence rows.
+    pub fn span_pages(&self, rows: usize) -> usize {
+        rows.div_ceil(self.page_rows)
+    }
+
+    /// Bytes one dense [`super::KvCache`] session costs — the baseline
+    /// the capacity bench compares against.
+    pub fn dense_session_bytes(&self) -> usize {
+        (2 * self.layers * self.s_max * self.d_kv + self.s_max) * 4
+    }
+}
+
+/// Pool-lifetime counters (monotonic; exported through the serving stats
+/// protocol).
+#[derive(Debug, Clone, Default)]
+pub struct KvPoolStats {
+    /// Prompt pages adopted from the prefix index at admission.
+    pub prefix_hits: u64,
+    /// Prompt pages probed but absent from the index.
+    pub prefix_misses: u64,
+    /// Prompt-prefill forwards skipped entirely (full-prefix hits).
+    pub prefill_skips: u64,
+    /// Pages copied on write (shared-page isolation).
+    pub cow_copies: u64,
+    /// Pages (re)written by `install_full` calls.
+    pub pages_refreshed: u64,
+    /// Pages skipped by `install_full` because their rows were current —
+    /// the incremental-refresh win.
+    pub refresh_skips: u64,
+    /// Reclaimable (retired but still prefix-indexed) pages evicted to
+    /// satisfy allocations.
+    pub evictions: u64,
+    /// Admissions rejected for lack of page budget.
+    pub admit_rejects: u64,
+    /// Mid-decode page allocations that failed (budget exhausted beyond
+    /// the admission reservation).
+    pub alloc_fails: u64,
+}
+
+/// Point-in-time occupancy snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct KvPoolUsage {
+    /// Budget ceiling in pages.
+    pub max_pages: usize,
+    /// Pages referenced by at least one live session.
+    pub in_use: usize,
+    /// Pages promised to admitted sessions but not yet allocated.
+    pub reserved: usize,
+    /// Retired-but-indexed pages kept for prefix hits (evictable).
+    pub reclaimable: usize,
+    /// Physical pages ever allocated (<= max_pages).
+    pub allocated: usize,
+}
+
+struct Page {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    valid: Vec<f32>,
+    valid_rows: usize,
+    refs: u32,
+    /// Prefix-index key this page is registered under, if any.
+    hash: Option<u64>,
+    lru: u64,
+}
+
+impl Page {
+    fn new(layers: usize, page_rows: usize, d_kv: usize) -> Page {
+        let n = layers * page_rows * d_kv;
+        Page {
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            valid: vec![0.0; page_rows],
+            valid_rows: 0,
+            refs: 0,
+            hash: None,
+            lru: 0,
+        }
+    }
+
+    fn clear(&mut self) {
+        self.k.fill(0.0);
+        self.v.fill(0.0);
+        self.valid.fill(0.0);
+        self.valid_rows = 0;
+        self.refs = 0;
+        self.hash = None;
+    }
+}
+
+struct PoolInner {
+    cfg: KvPoolCfg,
+    max_pages: usize,
+    pages: Vec<Page>,
+    /// Cleared pages ready for reuse.
+    free: Vec<usize>,
+    /// refs == 0 but still prefix-indexed: content kept, evictable.
+    reclaim: Vec<usize>,
+    /// Prefix chain-hash -> page holding those prompt rows.
+    index: HashMap<u64, usize>,
+    /// Pages referenced by >= 1 live view.
+    in_use: usize,
+    /// Admission reservations not yet drawn down.
+    reserved: usize,
+    lru_clock: u64,
+    stats: KvPoolStats,
+}
+
+impl PoolInner {
+    /// Logical headroom: reclaimable pages do not count against it (the
+    /// allocator evicts them on demand), so admission "considers
+    /// reclaimable pages" by construction.
+    fn free_capacity(&self) -> usize {
+        self.max_pages - self.in_use - self.reserved
+    }
+
+    fn touch_lru(&mut self, pid: usize) {
+        self.lru_clock += 1;
+        self.pages[pid].lru = self.lru_clock;
+    }
+
+    /// Acquire a cleared physical page: recycle, grow, or evict the
+    /// least-recently-used reclaimable page. `None` only when the slab is
+    /// at `max_pages` with nothing reclaimable — which the capacity
+    /// accounting in `take_page`/`admit` rules out before calling.
+    fn acquire_physical(&mut self) -> Option<usize> {
+        if let Some(pid) = self.free.pop() {
+            return Some(pid);
+        }
+        if self.pages.len() < self.max_pages {
+            let p = Page::new(self.cfg.layers, self.cfg.page_rows,
+                              self.cfg.d_kv);
+            self.pages.push(p);
+            return Some(self.pages.len() - 1);
+        }
+        self.evict_one_reclaim()
+    }
+
+    /// Evict the LRU reclaimable page (unregister + clear) and hand it
+    /// back for reuse.
+    fn evict_one_reclaim(&mut self) -> Option<usize> {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, &pid) in self.reclaim.iter().enumerate() {
+            let lru = self.pages[pid].lru;
+            if best.map(|(_, b)| lru < b).unwrap_or(true) {
+                best = Some((i, lru));
+            }
+        }
+        let (i, _) = best?;
+        let pid = self.reclaim.swap_remove(i);
+        if let Some(h) = self.pages[pid].hash {
+            if self.index.get(&h) == Some(&pid) {
+                self.index.remove(&h);
+            }
+        }
+        self.pages[pid].clear();
+        self.stats.evictions += 1;
+        Some(pid)
+    }
+
+    /// Drop one view reference; at zero the page either becomes
+    /// reclaimable (still prefix-indexed) or returns to the free list.
+    fn release_page(&mut self, pid: usize) {
+        self.pages[pid].refs -= 1;
+        if self.pages[pid].refs > 0 {
+            return;
+        }
+        self.in_use -= 1;
+        let indexed = self.pages[pid]
+            .hash
+            .map(|h| self.index.get(&h) == Some(&pid))
+            .unwrap_or(false);
+        if indexed {
+            self.lru_clock += 1;
+            self.pages[pid].lru = self.lru_clock;
+            self.reclaim.push(pid);
+        } else {
+            self.pages[pid].clear();
+            self.free.push(pid);
+        }
+    }
+}
+
+// ------------------------------------------------------------- hashing
+
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Seed covering everything that must match for two prefills to install
+/// identical rows: the prefill executable family (an `ar_prefill` row is
+/// causal, a `prefill_xla` row bidirectional) and the cache geometry.
+fn prefix_seed(tag: &str, layers: usize, d_kv: usize, page_rows: usize)
+               -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in tag.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    for v in [layers as u64, d_kv as u64, page_rows as u64] {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Per-page chain hashes over `tokens[..prefix_rows]`: the hash of page
+/// `i` covers all tokens up to that page's end, so a hit certifies the
+/// *entire* prefix through page `i` matches — required for bidirectional
+/// prefills, whose rows depend on the whole visible prompt. 64-bit
+/// collisions are accepted (same trade as content-hash page dedup in
+/// production paged-attention servers).
+fn chain_hashes(seed: u64, tokens: &[i32], prefix_rows: usize,
+                page_rows: usize) -> Vec<(usize, u64)> {
+    let mut out = Vec::new();
+    if prefix_rows == 0 {
+        return out;
+    }
+    debug_assert!(tokens.len() >= prefix_rows);
+    let mut h = seed;
+    for slot in 0..prefix_rows.div_ceil(page_rows) {
+        let lo = slot * page_rows;
+        let hi = ((slot + 1) * page_rows).min(prefix_rows);
+        for &t in &tokens[lo..hi] {
+            h ^= t as u32 as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        // mix the covered-row count so a partial page cannot alias the
+        // full page with the same leading tokens
+        out.push((slot, mix64(h ^ (((hi - lo) as u64) << 40)
+                              ^ slot as u64)));
+    }
+    out
+}
+
+/// Pages a session needs admitted: its whole span, minus pages adopted
+/// from live sessions, plus one copy-on-write margin when the prompt
+/// prefix ends mid-page — that partial page is (or becomes) registered
+/// in the prefix index, so the session's first decode commit into it
+/// always copies, leaving the pristine prefix page adoptable.
+/// Reclaimable-page adoptions still count toward the requirement — they
+/// move back to in-use. Non-causal (bidirectional) prefixes adopt
+/// all-or-nothing, so their hits only reduce the requirement when every
+/// prefix page is present.
+fn required_pages(inner: &PoolInner, hashes: &[(usize, u64)],
+                  prefix_rows: usize, span_rows: usize, causal: bool)
+                  -> usize {
+    let span_slots = inner.cfg.span_pages(span_rows);
+    let mut live_hits = 0usize;
+    let mut hits = 0usize;
+    for &(_, h) in hashes {
+        if let Some(&pid) = inner.index.get(&h) {
+            hits += 1;
+            if inner.pages[pid].refs > 0 {
+                live_hits += 1;
+            }
+        }
+    }
+    if !causal && hits < hashes.len() {
+        live_hits = 0; // partial bidirectional hit: nothing is adopted
+    }
+    let margin = usize::from(!hashes.is_empty()
+        && prefix_rows % inner.cfg.page_rows != 0);
+    span_slots - live_hits + margin
+}
+
+// ---------------------------------------------------------------- pool
+
+/// Shared handle to one paged KV pool (single-threaded interior
+/// mutability, like the engine's executable cache).
+#[derive(Clone)]
+pub struct SharedKvPool {
+    inner: Rc<RefCell<PoolInner>>,
+}
+
+impl SharedKvPool {
+    pub fn new(cfg: KvPoolCfg) -> SharedKvPool {
+        let max_pages = cfg.max_pages();
+        SharedKvPool {
+            inner: Rc::new(RefCell::new(PoolInner {
+                max_pages,
+                pages: Vec::new(),
+                free: Vec::new(),
+                reclaim: Vec::new(),
+                index: HashMap::new(),
+                in_use: 0,
+                reserved: 0,
+                lru_clock: 0,
+                stats: KvPoolStats::default(),
+                cfg,
+            })),
+        }
+    }
+
+    pub fn cfg(&self) -> KvPoolCfg {
+        self.inner.borrow().cfg.clone()
+    }
+
+    pub fn max_pages(&self) -> usize {
+        self.inner.borrow().max_pages
+    }
+
+    /// Pages covering `rows` sequence rows (admission sizing helper).
+    pub fn span_pages(&self, rows: usize) -> usize {
+        self.inner.borrow().cfg.span_pages(rows)
+    }
+
+    pub fn usage(&self) -> KvPoolUsage {
+        let p = self.inner.borrow();
+        KvPoolUsage {
+            max_pages: p.max_pages,
+            in_use: p.in_use,
+            reserved: p.reserved,
+            reclaimable: p.reclaim.len(),
+            allocated: p.pages.len(),
+        }
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        self.inner.borrow().stats.clone()
+    }
+
+    /// Worst-case pages one session of this geometry can ever hold
+    /// (no-hit reservation): the admission hard-reject bound — a request
+    /// exceeding this against `max_pages` can never be served.
+    pub fn worst_case_pages(&self, prefix_rows: usize, span_rows: usize)
+                            -> usize {
+        let p = self.inner.borrow();
+        p.cfg.span_pages(span_rows)
+            + usize::from(prefix_rows > 0
+                          && prefix_rows % p.cfg.page_rows != 0)
+    }
+
+    /// Admission probe (no side effects): would a session with this
+    /// prompt/geometry get its page reservation? Reclaimable pages never
+    /// block admission — the allocator evicts them on demand. `causal`
+    /// marks a causal prefill family (per-page adoption; bidirectional
+    /// families adopt all-or-nothing).
+    pub fn can_admit(&self, prompt_tokens: &[i32], prefix_tag: &str,
+                     prefix_rows: usize, span_rows: usize, causal: bool)
+                     -> bool {
+        let p = self.inner.borrow();
+        if prefix_rows > prompt_tokens.len() || prefix_rows > span_rows
+            || span_rows > p.cfg.s_max
+        {
+            return false;
+        }
+        let seed = prefix_seed(prefix_tag, p.cfg.layers, p.cfg.d_kv,
+                               p.cfg.page_rows);
+        let hashes = chain_hashes(seed, &prompt_tokens[..prefix_rows],
+                                  prefix_rows, p.cfg.page_rows);
+        required_pages(&p, &hashes, prefix_rows, span_rows, causal)
+            <= p.free_capacity()
+    }
+
+    /// Evict up to `n` reclaimable pages (LRU first), returning how many
+    /// were evicted. Operator/test hook; normal allocation evicts lazily.
+    pub fn evict_reclaimable(&self, n: usize) -> usize {
+        let mut p = self.inner.borrow_mut();
+        let mut done = 0;
+        while done < n {
+            match p.evict_one_reclaim() {
+                Some(pid) => {
+                    p.free.push(pid);
+                    done += 1;
+                }
+                None => break,
+            }
+        }
+        done
+    }
+}
+
+// ---------------------------------------------------------------- view
+
+/// Per-session page-table view into a [`SharedKvPool`]; implements
+/// [`KvView`] so every decode policy runs unchanged over paged storage.
+pub struct PagedKv {
+    pool: SharedKvPool,
+    layers: usize,
+    s_max: usize,
+    d_kv: usize,
+    page_rows: usize,
+    table: Vec<Option<usize>>,
+    /// Maintained count of valid rows across the view.
+    valid_rows: usize,
+    /// Admission reservation not yet drawn down.
+    reserved_left: usize,
+    /// View-content generation; advanced whenever row content changes.
+    seq_gen: u64,
+    /// Generation at which each page slot's rows last changed.
+    slot_touch: Vec<u64>,
+    /// Generation of each page slot's last full-forward install.
+    slot_install: Vec<u64>,
+    /// Rows the prompt prefill will install (prefix-sharing domain).
+    prefix_rows: usize,
+    /// Prefix slots (+ chain hash) not yet registered in the pool index.
+    pending: Vec<(usize, u64)>,
+    /// Every prefix page was adopted at admission: the prompt-prefill
+    /// forward can be skipped.
+    prefill_cached: bool,
+}
+
+impl PagedKv {
+    /// Admit a session view: probe the prefix index over
+    /// `prompt_tokens[..prefix_rows]`, adopt hits (per page for causal
+    /// prefill families, all-or-nothing for bidirectional ones — see the
+    /// module docs), and reserve the pages the `span_rows`-row session
+    /// may still need. Fails with a [`POOL_EXHAUSTED`] error when the
+    /// budget cannot cover it.
+    pub fn admit(pool: &SharedKvPool, prompt_tokens: &[i32],
+                 prefix_tag: &str, prefix_rows: usize, span_rows: usize,
+                 causal: bool) -> Result<PagedKv> {
+        let mut p = pool.inner.borrow_mut();
+        let cfg = p.cfg.clone();
+        if prefix_rows > prompt_tokens.len() || prefix_rows > span_rows
+            || span_rows > cfg.s_max
+        {
+            bail!("paged kv admit: prefix {prefix_rows} / span {span_rows} \
+                   out of range (prompt {}, s_max {})",
+                  prompt_tokens.len(), cfg.s_max);
+        }
+        let seed = prefix_seed(prefix_tag, cfg.layers, cfg.d_kv,
+                               cfg.page_rows);
+        let hashes = chain_hashes(seed, &prompt_tokens[..prefix_rows],
+                                  prefix_rows, cfg.page_rows);
+        let required =
+            required_pages(&p, &hashes, prefix_rows, span_rows, causal);
+        if required > p.free_capacity() {
+            p.stats.admit_rejects += 1;
+            bail!("{POOL_EXHAUSTED}: session needs {required} pages, \
+                   {} free of {}", p.free_capacity(), p.max_pages);
+        }
+        p.reserved += required;
+
+        let table_slots = cfg.s_max.div_ceil(cfg.page_rows);
+        let mut view = PagedKv {
+            pool: pool.clone(),
+            layers: cfg.layers,
+            s_max: cfg.s_max,
+            d_kv: cfg.d_kv,
+            page_rows: cfg.page_rows,
+            table: vec![None; table_slots],
+            valid_rows: 0,
+            reserved_left: required,
+            seq_gen: 1,
+            slot_touch: vec![0; table_slots],
+            slot_install: vec![0; table_slots],
+            prefix_rows,
+            pending: Vec::new(),
+            prefill_cached: false,
+        };
+
+        // adopt prefix hits (live pages share; reclaimable pages revive,
+        // drawing from this session's reservation). Bidirectional
+        // prefixes adopt only on a full-prompt match: their row content
+        // depends on the whole visible prompt, so a partially matching
+        // prefix would splice rows computed under someone else's suffix.
+        let adoptable = causal
+            || hashes.iter().all(|(_, h)| p.index.contains_key(h));
+        let mut hits = 0usize;
+        for &(slot, h) in &hashes {
+            let hit = p.index.get(&h).copied().filter(|_| adoptable);
+            let Some(pid) = hit else {
+                view.pending.push((slot, h));
+                continue;
+            };
+            if p.pages[pid].refs == 0 {
+                p.reclaim.retain(|&x| x != pid);
+                p.in_use += 1;
+                p.reserved -= 1;
+                view.reserved_left -= 1;
+            }
+            p.touch_lru(pid);
+            p.pages[pid].refs += 1;
+            view.valid_rows += p.pages[pid].valid_rows;
+            view.table[slot] = Some(pid);
+            hits += 1;
+        }
+        p.stats.prefix_hits += hits as u64;
+        p.stats.prefix_misses += (hashes.len() - hits) as u64;
+        view.prefill_cached = !hashes.is_empty() && hits == hashes.len();
+        Ok(view)
+    }
+
+    /// Whether the whole prompt prefix was adopted at admission (the
+    /// prompt-prefill forward is skippable).
+    pub fn prefill_cached(&self) -> bool {
+        self.prefill_cached
+    }
+
+    /// The pool this view draws from.
+    pub fn pool(&self) -> &SharedKvPool {
+        &self.pool
+    }
+
+    /// Pages currently referenced by this view.
+    pub fn pages_held(&self) -> usize {
+        self.table.iter().filter(|e| e.is_some()).count()
+    }
+
+    /// Draw one fresh page, preferring this session's admission
+    /// reservation; beyond it, overflow into the pool's free capacity.
+    fn take_page(&mut self) -> Result<usize> {
+        let mut p = self.pool.inner.borrow_mut();
+        if self.reserved_left > 0 {
+            p.reserved -= 1;
+            self.reserved_left -= 1;
+        } else if p.free_capacity() == 0 {
+            p.stats.alloc_fails += 1;
+            bail!("{POOL_EXHAUSTED}: mid-decode page allocation \
+                   (in_use {}, reserved {}, max {})",
+                  p.in_use, p.reserved, p.max_pages);
+        }
+        let pid = p.acquire_physical().expect("capacity accounted");
+        p.in_use += 1;
+        p.pages[pid].refs = 1;
+        p.touch_lru(pid);
+        Ok(pid)
+    }
+
+    /// Make `slot` writable by this view: allocate on first touch; copy
+    /// on write when the page is shared with another session *or*
+    /// registered in the prefix index (the pristine prompt page must stay
+    /// adoptable — the registrant's own decode commits copy too).
+    fn ensure_writable(&mut self, slot: usize) -> Result<usize> {
+        let Some(pid) = self.table[slot] else {
+            let pid = self.take_page()?;
+            self.table[slot] = Some(pid);
+            return Ok(pid);
+        };
+        let needs_cow = {
+            let mut p = self.pool.inner.borrow_mut();
+            if p.pages[pid].refs > 1 {
+                true
+            } else {
+                match p.pages[pid].hash {
+                    Some(h) if p.index.get(&h) == Some(&pid) => true,
+                    Some(_) => {
+                        // stale hash (index superseded): plain private page
+                        p.pages[pid].hash = None;
+                        false
+                    }
+                    None => false,
+                }
+            }
+        };
+        if !needs_cow {
+            return Ok(pid);
+        }
+        let new_pid = self.take_page()?;
+        let mut p = self.pool.inner.borrow_mut();
+        // clone-based copy keeps the borrow simple; pages are small
+        // (one decode block of rows)
+        let (k, v, valid, rows) = {
+            let old = &p.pages[pid];
+            (old.k.clone(), old.v.clone(), old.valid.clone(),
+             old.valid_rows)
+        };
+        {
+            let np = &mut p.pages[new_pid];
+            np.k = k;
+            np.v = v;
+            np.valid = valid;
+            np.valid_rows = rows;
+        }
+        // drop our reference to the original: a registered page with no
+        // remaining referents becomes reclaimable, still adoptable
+        p.release_page(pid);
+        p.stats.cow_copies += 1;
+        self.table[slot] = Some(new_pid);
+        Ok(new_pid)
+    }
+
+    /// Register still-pending prefix pages whose prompt rows are now
+    /// fully installed, making them adoptable by future sessions.
+    fn register_ready_prefix_pages(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let r = self.page_rows;
+        let mut still = Vec::new();
+        for &(slot, h) in &self.pending {
+            let Some(pid) = self.table[slot] else {
+                still.push((slot, h));
+                continue;
+            };
+            let lo = slot * r;
+            let hi = ((slot + 1) * r).min(self.prefix_rows);
+            let mut p = self.pool.inner.borrow_mut();
+            let ready =
+                (lo..hi).all(|pos| p.pages[pid].valid[pos - lo] > 0.0);
+            if !ready {
+                still.push((slot, h));
+                continue;
+            }
+            if p.pages[pid].refs == 1 && p.pages[pid].hash.is_none()
+                && !p.index.contains_key(&h)
+            {
+                p.pages[pid].hash = Some(h);
+                p.index.insert(h, pid);
+            }
+        }
+        self.pending = still;
+    }
+
+    #[inline]
+    fn slot_of(&self, pos: usize) -> usize {
+        pos / self.page_rows
+    }
+}
+
+impl KvView for PagedKv {
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
+    fn capacity(&self) -> usize {
+        self.s_max
+    }
+
+    fn d_kv(&self) -> usize {
+        self.d_kv
+    }
+
+    fn valid_count(&self) -> usize {
+        self.valid_rows
+    }
+
+    fn is_valid(&self, pos: usize) -> bool {
+        match self.table[self.slot_of(pos)] {
+            Some(pid) => {
+                self.pool.inner.borrow().pages[pid].valid
+                    [pos % self.page_rows] > 0.0
+            }
+            None => false,
+        }
+    }
+
+    fn k_dense(&self) -> Cow<'_, [f32]> {
+        let (l, s, d, r) = (self.layers, self.s_max, self.d_kv,
+                            self.page_rows);
+        let mut out = vec![0.0f32; l * s * d];
+        let p = self.pool.inner.borrow();
+        for (slot, entry) in self.table.iter().enumerate() {
+            let Some(pid) = entry else { continue };
+            let pg = &p.pages[*pid];
+            let rows = r.min(s - slot * r);
+            for layer in 0..l {
+                let src = layer * r * d;
+                let dst = (layer * s + slot * r) * d;
+                out[dst..dst + rows * d]
+                    .copy_from_slice(&pg.k[src..src + rows * d]);
+            }
+        }
+        Cow::Owned(out)
+    }
+
+    fn v_dense(&self) -> Cow<'_, [f32]> {
+        let (l, s, d, r) = (self.layers, self.s_max, self.d_kv,
+                            self.page_rows);
+        let mut out = vec![0.0f32; l * s * d];
+        let p = self.pool.inner.borrow();
+        for (slot, entry) in self.table.iter().enumerate() {
+            let Some(pid) = entry else { continue };
+            let pg = &p.pages[*pid];
+            let rows = r.min(s - slot * r);
+            for layer in 0..l {
+                let src = layer * r * d;
+                let dst = (layer * s + slot * r) * d;
+                out[dst..dst + rows * d]
+                    .copy_from_slice(&pg.v[src..src + rows * d]);
+            }
+        }
+        Cow::Owned(out)
+    }
+
+    fn valid_dense(&self) -> Cow<'_, [f32]> {
+        let (s, r) = (self.s_max, self.page_rows);
+        let mut out = vec![0.0f32; s];
+        let p = self.pool.inner.borrow();
+        for (slot, entry) in self.table.iter().enumerate() {
+            let Some(pid) = entry else { continue };
+            let rows = r.min(s - slot * r);
+            out[slot * r..slot * r + rows]
+                .copy_from_slice(&p.pages[*pid].valid[..rows]);
+        }
+        Cow::Owned(out)
+    }
+
+    fn install_full(&mut self, k_full: &[f32], v_full: &[f32], pos0: usize,
+                    pos1: usize) -> Result<()> {
+        let (l, s, d, r) = (self.layers, self.s_max, self.d_kv,
+                            self.page_rows);
+        if k_full.len() != l * s * d || v_full.len() != l * s * d {
+            bail!("paged install_full: expected [L, S, d_kv] buffers");
+        }
+        if pos0 >= pos1 {
+            return Ok(());
+        }
+        if pos1 > s {
+            bail!("paged install_full: range {pos0}..{pos1} beyond s_max {s}");
+        }
+        for slot in self.slot_of(pos0)..=self.slot_of(pos1 - 1) {
+            let lo = pos0.max(slot * r);
+            let hi = pos1.min((slot + 1) * r);
+            // incremental refresh: skip a page whose covered rows are all
+            // installed and untouched since its last full install
+            let fresh = match self.table[slot] {
+                Some(pid) => {
+                    self.slot_install[slot] >= self.slot_touch[slot] && {
+                        let p = self.pool.inner.borrow();
+                        let pg = &p.pages[pid];
+                        (lo..hi).all(|pos| pg.valid[pos - slot * r] > 0.0)
+                    }
+                }
+                None => false,
+            };
+            if fresh {
+                self.pool.inner.borrow_mut().stats.refresh_skips += 1;
+                continue;
+            }
+            let pid = self.ensure_writable(slot)?;
+            let mut newly = 0usize;
+            {
+                let mut p = self.pool.inner.borrow_mut();
+                let pg = &mut p.pages[pid];
+                for pos in lo..hi {
+                    let row = pos - slot * r;
+                    for layer in 0..l {
+                        let src = (layer * s + pos) * d;
+                        let dst = (layer * r + row) * d;
+                        pg.k[dst..dst + d]
+                            .copy_from_slice(&k_full[src..src + d]);
+                        pg.v[dst..dst + d]
+                            .copy_from_slice(&v_full[src..src + d]);
+                    }
+                    if pg.valid[row] == 0.0 {
+                        pg.valid[row] = 1.0;
+                        pg.valid_rows += 1;
+                        newly += 1;
+                    }
+                }
+                p.stats.pages_refreshed += 1;
+            }
+            self.valid_rows += newly;
+            self.seq_gen += 1;
+            self.slot_install[slot] = self.seq_gen;
+            self.slot_touch[slot] = self.seq_gen;
+        }
+        self.register_ready_prefix_pages();
+        Ok(())
+    }
+
+    fn commit_window_rows(&mut self, k_win: &[f32], v_win: &[f32], w: usize,
+                          pairs: &[(usize, usize)]) -> Result<()> {
+        let (l, d, r) = (self.layers, self.d_kv, self.page_rows);
+        if k_win.len() != l * w * d || v_win.len() != l * w * d {
+            bail!("paged commit: expected [L, W, d_kv] buffers");
+        }
+        if pairs.is_empty() {
+            return Ok(());
+        }
+        // group by page so each shared page is copied at most once
+        let mut by_slot: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
+        for &(off, pos) in pairs {
+            if off >= w || pos >= self.s_max {
+                bail!("paged commit: off {off} / pos {pos} out of range");
+            }
+            let slot = pos / r;
+            match by_slot.iter_mut().find(|(s, _)| *s == slot) {
+                Some((_, v)) => v.push((off, pos)),
+                None => by_slot.push((slot, vec![(off, pos)])),
+            }
+        }
+        self.seq_gen += 1;
+        let gen = self.seq_gen;
+        for (slot, items) in by_slot {
+            let pid = self.ensure_writable(slot)?;
+            let mut newly = 0usize;
+            {
+                let mut p = self.pool.inner.borrow_mut();
+                let pg = &mut p.pages[pid];
+                for (off, pos) in items {
+                    let row = pos - slot * r;
+                    for layer in 0..l {
+                        let src = (layer * w + off) * d;
+                        let dst = (layer * r + row) * d;
+                        pg.k[dst..dst + d]
+                            .copy_from_slice(&k_win[src..src + d]);
+                        pg.v[dst..dst + d]
+                            .copy_from_slice(&v_win[src..src + d]);
+                    }
+                    if pg.valid[row] == 0.0 {
+                        pg.valid[row] = 1.0;
+                        pg.valid_rows += 1;
+                        newly += 1;
+                    }
+                }
+            }
+            self.valid_rows += newly;
+            self.slot_touch[slot] = gen;
+        }
+        Ok(())
+    }
+
+    fn invalidate_from(&mut self, pos: usize) -> Result<()> {
+        let r = self.page_rows;
+        self.seq_gen += 1;
+        let gen = self.seq_gen;
+        for slot in self.slot_of(pos.min(self.s_max - 1))..self.table.len() {
+            let Some(pid) = self.table[slot] else { continue };
+            let lo = pos.max(slot * r);
+            let hi = ((slot + 1) * r).min(self.s_max);
+            if lo >= hi {
+                continue;
+            }
+            let any = {
+                let p = self.pool.inner.borrow();
+                let pg = &p.pages[pid];
+                (lo..hi).any(|q| pg.valid[q - slot * r] > 0.0)
+            };
+            if !any {
+                continue;
+            }
+            let pid = self.ensure_writable(slot)?;
+            let mut dropped = 0usize;
+            {
+                let mut p = self.pool.inner.borrow_mut();
+                let pg = &mut p.pages[pid];
+                for q in lo..hi {
+                    let row = q - slot * r;
+                    if pg.valid[row] > 0.0 {
+                        pg.valid[row] = 0.0;
+                        pg.valid_rows -= 1;
+                        dropped += 1;
+                    }
+                }
+            }
+            self.valid_rows -= dropped;
+            self.slot_touch[slot] = gen;
+        }
+        Ok(())
+    }
+
+    fn note_prefill_skipped(&mut self) {
+        self.pool.inner.borrow_mut().stats.prefill_skips += 1;
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        let mut p = self.pool.inner.borrow_mut();
+        p.reserved -= self.reserved_left;
+        for entry in &self.table {
+            if let Some(pid) = *entry {
+                p.release_page(pid);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(pages: usize) -> KvPoolCfg {
+        let c = KvPoolCfg {
+            layers: 2,
+            d_kv: 4,
+            s_max: 128,
+            page_rows: 32,
+            budget_bytes: 0,
+        };
+        KvPoolCfg { budget_bytes: pages * c.page_bytes(), ..c }
+    }
+
+    fn full(pool_cfg: &KvPoolCfg, base: f32) -> Vec<f32> {
+        (0..pool_cfg.layers * pool_cfg.s_max * pool_cfg.d_kv)
+            .map(|i| base + i as f32)
+            .collect()
+    }
+
+    #[test]
+    fn pages_allocate_lazily_and_release_on_drop() {
+        let c = cfg(8);
+        let pool = SharedKvPool::new(c.clone());
+        assert_eq!(pool.max_pages(), 8);
+        {
+            let mut v = PagedKv::admit(&pool, &[], "x", 0, 96, false).unwrap();
+            assert_eq!(pool.usage().reserved, 3);
+            assert_eq!(pool.usage().in_use, 0);
+            let kf = full(&c, 0.0);
+            v.install_full(&kf, &kf, 0, 40).unwrap();
+            assert_eq!(v.valid_count(), 40);
+            assert!(v.is_valid(39) && !v.is_valid(40));
+            let u = pool.usage();
+            assert_eq!(u.in_use, 2); // rows 0..40 -> 2 pages
+            assert_eq!(u.reserved, 1);
+            // dense gather matches installed content
+            let k = v.k_dense();
+            assert_eq!(k[7 * c.d_kv], kf[7 * c.d_kv]);
+            assert_eq!(v.valid_dense()[39], 1.0);
+            assert_eq!(v.valid_dense()[40], 0.0);
+        }
+        // drop released everything (no hashes registered: prefix 0)
+        let u = pool.usage();
+        assert_eq!(u.in_use, 0);
+        assert_eq!(u.reserved, 0);
+        assert_eq!(u.reclaimable, 0);
+    }
+
+    #[test]
+    fn prefix_sharing_adopts_and_skips() {
+        let c = cfg(16);
+        let pool = SharedKvPool::new(c.clone());
+        let prompt: Vec<i32> = (0..40).map(|i| 5 + i % 11).collect();
+        let kf = full(&c, 1.0);
+
+        let mut a =
+            PagedKv::admit(&pool, &prompt, "prefill_xla", 40, 104, false).unwrap();
+        assert!(!a.prefill_cached());
+        a.install_full(&kf, &kf, 0, 40).unwrap(); // prefill: registers pages
+        assert_eq!(pool.stats().prefix_misses, 2);
+
+        // same prompt, same tag: both prefix pages adopted
+        let b =
+            PagedKv::admit(&pool, &prompt, "prefill_xla", 40, 104, false).unwrap();
+        assert!(b.prefill_cached());
+        assert_eq!(pool.stats().prefix_hits, 2);
+        assert_eq!(b.valid_count(), 40);
+        assert!(b.prefix_ready(40));
+        // adopted rows carry A's content
+        assert_eq!(b.k_dense()[..4], a.k_dense()[..4]);
+
+        // different tag (e.g. the causal ar_prefill family) must miss
+        let d = PagedKv::admit(&pool, &prompt, "ar_prefill", 40, 104, false)
+            .unwrap();
+        assert!(!d.prefill_cached());
+    }
+
+    #[test]
+    fn cow_isolates_shared_pages() {
+        let c = cfg(16);
+        let pool = SharedKvPool::new(c.clone());
+        let prompt: Vec<i32> = (0..40).map(|i| 7 + i % 9).collect();
+        let kf = full(&c, 2.0);
+        let mut a =
+            PagedKv::admit(&pool, &prompt, "t", 40, 104, false).unwrap();
+        a.install_full(&kf, &kf, 0, 40).unwrap();
+        let mut b =
+            PagedKv::admit(&pool, &prompt, "t", 40, 104, false).unwrap();
+        assert!(b.prefill_cached());
+
+        // B commits a decode row into the shared partial page (rows 32..40
+        // prompt + row 41 commit lands in slot 1)
+        let w = 4;
+        let kw: Vec<f32> =
+            (0..c.layers * w * c.d_kv).map(|i| 900.0 + i as f32).collect();
+        b.commit_window_rows(&kw, &kw, w, &[(0, 41)]).unwrap();
+        assert_eq!(pool.stats().cow_copies, 1);
+        assert!(b.is_valid(41));
+        assert!(!a.is_valid(41), "CoW must isolate A from B's commit");
+        // A's copy of row 33 is untouched; B kept the adopted content
+        assert_eq!(a.k_dense()[33 * c.d_kv], b.k_dense()[33 * c.d_kv]);
+    }
+
+    #[test]
+    fn incremental_refresh_skips_current_pages() {
+        let c = cfg(16);
+        let pool = SharedKvPool::new(c.clone());
+        let mut v = PagedKv::admit(&pool, &[], "t", 0, 128, false).unwrap();
+        let kf = full(&c, 3.0);
+        v.install_full(&kf, &kf, 0, 64).unwrap();
+        assert_eq!(pool.stats().pages_refreshed, 2);
+        assert_eq!(pool.stats().refresh_skips, 0);
+
+        // re-install over the same rows: both pages are current -> skipped
+        v.install_full(&kf, &kf, 0, 64).unwrap();
+        assert_eq!(pool.stats().pages_refreshed, 2);
+        assert_eq!(pool.stats().refresh_skips, 2);
+
+        // a commit touches page 1; the next refresh rewrites only it
+        let w = 4;
+        let kw = vec![5.0f32; c.layers * w * c.d_kv];
+        v.commit_window_rows(&kw, &kw, w, &[(0, 40)]).unwrap();
+        v.install_full(&kf, &kf, 0, 64).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.pages_refreshed, 3, "only the touched page rewrites");
+        assert_eq!(s.refresh_skips, 3);
+        // the refresh restored the full-forward value at row 40
+        assert_eq!(v.k_dense()[40 * c.d_kv], kf[40 * c.d_kv]);
+    }
+
+    #[test]
+    fn budget_exhaustion_reclaim_and_eviction() {
+        let c = cfg(4);
+        let pool = SharedKvPool::new(c.clone());
+        let prompt: Vec<i32> = (0..20).map(|i| 3 + i).collect();
+        let kf = full(&c, 4.0);
+
+        // span 96 rows -> 3 pages + 1 CoW margin (partial prompt page):
+        // fits exactly
+        let mut a = PagedKv::admit(&pool, &prompt, "t", 20, 96, false).unwrap();
+        a.install_full(&kf, &kf, 0, 20).unwrap();
+        // a second session cannot fit alongside it
+        let err = PagedKv::admit(&pool, &prompt, "t", 20, 96, false).unwrap_err();
+        assert!(is_pool_exhausted(&err), "{err:#}");
+        assert!(pool.stats().admit_rejects >= 1);
+        assert!(!pool.can_admit(&prompt, "t", 20, 96, false));
+
+        drop(a); // prefix page becomes reclaimable, reservation returns
+        assert_eq!(pool.usage().reclaimable, 1);
+        assert!(pool.can_admit(&prompt, "t", 20, 96, false));
+
+        // a different-prefix session drawing its full reservation must
+        // evict the reclaimable page to satisfy the last allocation
+        let other: Vec<i32> = (0..20).map(|i| 90 + i).collect();
+        let mut b = PagedKv::admit(&pool, &other, "t", 20, 96, false).unwrap();
+        assert!(!b.prefill_cached());
+        b.install_full(&kf, &kf, 0, 20).unwrap();
+        let kw = vec![1.0f32; c.layers * 4 * c.d_kv];
+        // row 25 CoWs b's own registered prompt page; 40/72 take fresh
+        // pages — the last allocation exhausts the slab and evicts
+        b.commit_window_rows(&kw, &kw, 4, &[(0, 25), (1, 40), (2, 72)])
+            .unwrap();
+        assert!(pool.stats().cow_copies >= 1);
+        assert!(pool.stats().evictions >= 1);
+        // the evicted hash is gone: a third same-as-A session misses
+        drop(b);
+        let d = PagedKv::admit(&pool, &prompt, "t", 20, 96, false).unwrap();
+        assert!(!d.prefill_cached());
+    }
+
+    #[test]
+    fn bidirectional_partial_prefix_adopts_nothing() {
+        let c = cfg(32);
+        let pool = SharedKvPool::new(c.clone());
+        let kf = full(&c, 8.0);
+        // 40-token prompt: slot 0 full, slot 1 partial
+        let base: Vec<i32> = (0..40).map(|i| 5 + i % 60).collect();
+        let mut a =
+            PagedKv::admit(&pool, &base, "prefill_xla", 40, 104, false)
+                .unwrap();
+        a.install_full(&kf, &kf, 0, 40).unwrap();
+
+        // same first page, different tail: a bidirectional prefill's rows
+        // depend on the whole prompt, so nothing may be adopted
+        let mut tail: Vec<i32> = base[..32].to_vec();
+        tail.extend((0..8).map(|i| 70 + i % 9));
+        let v = PagedKv::admit(&pool, &tail, "prefill_xla", 40, 104, false)
+            .unwrap();
+        assert_eq!(v.valid_count(), 0, "partial bidirectional hit adopted");
+        assert!(!v.prefill_cached());
+
+        // the full-prompt match still adopts everything
+        let w = PagedKv::admit(&pool, &base, "prefill_xla", 40, 104, false)
+            .unwrap();
+        assert!(w.prefill_cached());
+        assert_eq!(w.valid_count(), 40);
+
+        // a causal family shares the matching page individually
+        let mut b =
+            PagedKv::admit(&pool, &base, "ar_prefill", 40, 104, true)
+                .unwrap();
+        b.install_full(&kf, &kf, 0, 40).unwrap();
+        let d = PagedKv::admit(&pool, &tail, "ar_prefill", 40, 104, true)
+            .unwrap();
+        assert_eq!(d.valid_count(), 32, "causal prefix shares per page");
+        assert!(!d.prefill_cached());
+    }
+
+    #[test]
+    fn worst_case_pages_matches_requirements() {
+        let pool = SharedKvPool::new(cfg(4));
+        // page-aligned span fills the pool exactly: admittable
+        assert_eq!(pool.worst_case_pages(32, 128), 4);
+        // partial prefix adds the CoW margin
+        assert_eq!(pool.worst_case_pages(20, 96), 4);
+        assert_eq!(pool.worst_case_pages(0, 96), 3);
+    }
+
+    #[test]
+    fn invalidate_updates_counts_and_generations() {
+        let c = cfg(8);
+        let pool = SharedKvPool::new(c.clone());
+        let mut v = PagedKv::admit(&pool, &[], "t", 0, 128, false).unwrap();
+        let kf = full(&c, 6.0);
+        v.install_full(&kf, &kf, 0, 80).unwrap();
+        assert_eq!(v.valid_count(), 80);
+        v.invalidate_from(50).unwrap();
+        assert_eq!(v.valid_count(), 50);
+        assert!(v.is_valid(49) && !v.is_valid(50));
+        // invalidated pages are stale again: refresh rewrites them
+        let before = pool.stats().pages_refreshed;
+        v.install_full(&kf, &kf, 0, 80).unwrap();
+        let s = pool.stats();
+        // slot 0 (rows 0..32) untouched -> skipped; slots 1,2 rewritten
+        assert_eq!(s.pages_refreshed, before + 2);
+        assert_eq!(v.valid_count(), 80);
+    }
+}

@@ -1,10 +1,14 @@
-//! Host-side model layer: parameter lifecycle, KV cache mirror, and typed
-//! wrappers over the AOT executables.
+//! Host-side model layer: parameter lifecycle, KV cache storage (dense
+//! mirror + shared paged pool), and typed wrappers over the AOT
+//! executables.
 
 pub mod exec;
 pub mod kv_cache;
+pub mod kv_pool;
 pub mod params;
 
 pub use exec::{DecodeOut, PrefillOut, TrainOut, TrajectoryOut};
-pub use kv_cache::KvCache;
+pub use kv_cache::{KvCache, KvView};
+pub use kv_pool::{KvPoolCfg, KvPoolStats, KvPoolUsage, PagedKv,
+                  SharedKvPool};
 pub use params::{OptState, ParamStore};

@@ -1,0 +1,330 @@
+//! Paged KV pool vs. dense cache: the bit-identity, isolation and budget
+//! pins behind the pool refactor. Everything runs on the deterministic
+//! `SimBackend` (no artifacts): sim KV rows are pure functions of
+//! (layer, position, token) and rows are only installed for finalized
+//! tokens, so a paged session must reproduce the dense baseline
+//! token-for-token and forward-for-forward.
+
+use d3llm::coordinator::scheduler::{run_interleaved, run_interleaved_pooled,
+                                    InterleavedRequest, SessionPool};
+use d3llm::decode::{Backend, DecodeCfg, DecodeSession, GenResult,
+                    SimBackend, Strategy};
+use d3llm::model::kv_pool::{is_pool_exhausted, KvPoolCfg, SharedKvPool};
+
+fn pool_for(sim: &SimBackend, pages: usize) -> SharedKvPool {
+    let c = sim.constants().clone();
+    let spec = sim.model_spec("main").unwrap().clone();
+    let cfg = KvPoolCfg {
+        layers: spec.n_layers,
+        d_kv: spec.d_kv,
+        s_max: c.s_max,
+        page_rows: c.block,
+        budget_bytes: 0,
+    };
+    let budget = pages * cfg.page_bytes();
+    SharedKvPool::new(KvPoolCfg { budget_bytes: budget, ..cfg })
+}
+
+fn prompt(k: usize) -> Vec<i32> {
+    (0..14).map(|i| 5 + ((i + 3 * k) % 80) as i32).collect()
+}
+
+fn run_dense(sim: &SimBackend, cfg: &DecodeCfg, prompt: &[i32],
+             gen_len: usize, draft: Option<&[f32]>, params: &[f32])
+             -> GenResult {
+    let mut s = DecodeSession::with_draft(sim, cfg.clone(), prompt, gen_len,
+                                          draft)
+        .expect("dense session");
+    while !s.step(sim, params).expect("dense step") {}
+    s.finish()
+}
+
+fn run_pooled(sim: &SimBackend, cfg: &DecodeCfg, prompt: &[i32],
+              gen_len: usize, draft: Option<&[f32]>, params: &[f32],
+              pool: &SharedKvPool) -> GenResult {
+    let mut s = DecodeSession::with_pool(sim, cfg.clone(), prompt, gen_len,
+                                         draft, pool)
+        .expect("pooled session");
+    while !s.step(sim, params).expect("pooled step") {}
+    s.finish()
+}
+
+/// Every strategy decodes token-for-token identically over a paged view
+/// (cold pool: no sharing in play, pure storage-layer equivalence).
+#[test]
+fn paged_matches_dense_for_every_strategy() {
+    let params = vec![0.5f32; 8];
+    let draft = vec![0.25f32; 8];
+    let sim = SimBackend::new(23);
+    for s in Strategy::ALL {
+        let mut cfg = DecodeCfg::preset(s);
+        cfg.early_stop = false;
+        let p = prompt(1);
+        let dense = run_dense(&sim, &cfg, &p, 64, Some(&draft), &params);
+        let pool = pool_for(&sim, 64);
+        let paged =
+            run_pooled(&sim, &cfg, &p, 64, Some(&draft), &params, &pool);
+        assert_eq!(paged.tokens, dense.tokens, "{} tokens", s.name());
+        assert_eq!(paged.forwards, dense.forwards, "{} forwards", s.name());
+        assert_eq!(paged.unmasked, dense.unmasked, "{} unmasked", s.name());
+        assert_eq!(paged.mix.full_forwards, dense.mix.full_forwards,
+                   "{} full forwards", s.name());
+        assert_eq!(paged.mix.window_forwards, dense.mix.window_forwards,
+                   "{} window forwards", s.name());
+        // everything the session held went back to the pool
+        let u = pool.usage();
+        assert_eq!(u.in_use, 0, "{} leaked pages", s.name());
+        assert_eq!(u.reserved, 0, "{} leaked reservation", s.name());
+    }
+}
+
+/// Early-stop paths (EOS mid-block) stay equivalent too.
+#[test]
+fn paged_matches_dense_with_early_stop() {
+    let params = vec![0.5f32; 8];
+    let sim = SimBackend::new(5).with_eos_rate(0.05);
+    for s in [Strategy::D3llm, Strategy::FastDllm, Strategy::Ar] {
+        let cfg = DecodeCfg::preset(s);
+        let p = prompt(2);
+        let dense = run_dense(&sim, &cfg, &p, 64, None, &params);
+        let pool = pool_for(&sim, 64);
+        let paged = run_pooled(&sim, &cfg, &p, 64, None, &params, &pool);
+        assert_eq!(paged.tokens, dense.tokens, "{}", s.name());
+        assert_eq!(paged.forwards, dense.forwards, "{}", s.name());
+    }
+}
+
+/// A warm same-prompt session adopts the registered prompt pages, skips
+/// its prompt-prefill forward, and still decodes bit-identically.
+#[test]
+fn warm_prefix_hit_skips_prefill_and_stays_bit_identical() {
+    let params = vec![0.5f32; 8];
+    let sim = SimBackend::new(31);
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false;
+    let p = prompt(4);
+    let pool = pool_for(&sim, 64);
+
+    // session A warms the prefix cache
+    let a = run_pooled(&sim, &cfg, &p, 64, None, &params, &pool);
+    assert_eq!(pool.stats().prefill_skips, 0);
+
+    // dense reference for the same request (sim outputs are pure
+    // functions of call inputs, so one backend serves all runs)
+    let before_dense = sim.prefill_calls();
+    let dense = run_dense(&sim, &cfg, &p, 64, None, &params);
+    let dense_prefills = sim.prefill_calls() - before_dense;
+
+    // warm pooled session: one fewer backend prefill, identical result
+    let before_pooled = sim.prefill_calls();
+    let b = run_pooled(&sim, &cfg, &p, 64, None, &params, &pool);
+    let pooled_prefills = sim.prefill_calls() - before_pooled;
+
+    assert_eq!(b.tokens, dense.tokens);
+    assert_eq!(b.tokens, a.tokens, "same request must decode the same");
+    assert_eq!(b.forwards, dense.forwards,
+               "prefill is outside TPF accounting");
+    assert_eq!(pool.stats().prefill_skips, 1);
+    assert_eq!(pooled_prefills + 1, dense_prefills,
+               "exactly the prompt prefill forward is saved");
+}
+
+/// Two same-prefix sessions interleaving in one scheduler share prompt
+/// pages copy-on-write: different strategies diverge freely with no
+/// cross-talk, each matching its own dense reference.
+#[test]
+fn cow_isolation_under_interleaving() {
+    let params = vec![0.5f32; 8];
+    let sim = SimBackend::new(47);
+    let p = prompt(7);
+    let mk = |s: Strategy| {
+        let mut c = DecodeCfg::preset(s);
+        c.early_stop = false;
+        c
+    };
+
+    // dense references, one per strategy, same prompt
+    let dense_a = run_dense(&sim, &mk(Strategy::D3llm), &p, 64, None,
+                            &params);
+    let dense_b = run_dense(&sim, &mk(Strategy::FastDllm), &p, 64, None,
+                            &params);
+
+    let kv = pool_for(&sim, 64);
+    let mut sched: SessionPool<usize> =
+        SessionPool::new().with_kv_pool(kv.clone());
+    let a = DecodeSession::with_pool(&sim, mk(Strategy::D3llm), &p, 64,
+                                     None, &kv)
+        .unwrap();
+    sched.admit("a".into(), 0, a);
+    // step once so A's prefill installs + registers the prompt pages,
+    // then admit the same-prompt B mid-flight (continuous serving)
+    let fin = sched.step_round(&sim, &params);
+    assert!(fin.is_empty());
+    let b = DecodeSession::with_pool(&sim, mk(Strategy::FastDllm), &p, 64,
+                                     None, &kv)
+        .unwrap();
+    sched.admit("b".into(), 1, b);
+
+    let mut done: Vec<Option<GenResult>> = vec![None, None];
+    while !sched.is_empty() {
+        for f in sched.step_round(&sim, &params) {
+            done[f.tag] = Some(f.result.expect("decode"));
+        }
+    }
+    let got_a = done[0].take().unwrap();
+    let got_b = done[1].take().unwrap();
+    assert_eq!(got_a.tokens, dense_a.tokens, "A diverged under sharing");
+    assert_eq!(got_b.tokens, dense_b.tokens, "B diverged under sharing");
+    assert_eq!(got_a.forwards, dense_a.forwards);
+    assert_eq!(got_b.forwards, dense_b.forwards);
+
+    let s = kv.stats();
+    assert_eq!(s.prefill_skips, 1, "B's prompt prefill was skipped");
+    assert!(s.cow_copies >= 1,
+            "a shared prompt page must be copied on first divergent write");
+}
+
+/// Budget exhaustion: admission fails cleanly once the pool cannot cover
+/// a session's reservation, retirement frees the budget again, and a
+/// session that could never fit is told so.
+#[test]
+fn budget_exhaustion_blocks_and_release_unblocks() {
+    let params = vec![0.5f32; 8];
+    let sim = SimBackend::new(3);
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false;
+    // prompt 14 + gen 64 = 78 rows -> 3 pages of 32, plus one CoW margin
+    // for the partial prompt page; budget fits two sessions, not three
+    let kv = pool_for(&sim, 8);
+    let p = prompt(0);
+    let s1 = DecodeSession::with_pool(&sim, cfg.clone(), &p, 64, None, &kv)
+        .unwrap();
+    let s2 = DecodeSession::with_pool(&sim, cfg.clone(), &prompt(1), 64,
+                                      None, &kv)
+        .unwrap();
+    let err = DecodeSession::with_pool(&sim, cfg.clone(), &prompt(2), 64,
+                                       None, &kv)
+        .unwrap_err();
+    assert!(is_pool_exhausted(&err), "{err:#}");
+    assert!(kv.stats().admit_rejects >= 1);
+
+    // retire one session -> its reservation and pages come back
+    drop(s1);
+    let s3 = DecodeSession::with_pool(&sim, cfg.clone(), &prompt(2), 64,
+                                      None, &kv);
+    assert!(s3.is_ok(), "release must unblock admission");
+
+    // a request larger than the whole budget can never be admitted
+    let too_big =
+        DecodeSession::with_pool(&sim, cfg.clone(), &p, 128, None, &kv);
+    assert!(too_big.is_err());
+
+    drop(s2);
+    drop(s3);
+    let mut s4 = DecodeSession::with_pool(&sim, cfg, &p, 64, None, &kv)
+        .unwrap();
+    while !s4.step(&sim, &params).unwrap() {}
+    let u = kv.usage();
+    assert!(u.in_use >= 1, "live session holds pages");
+}
+
+/// Retired sessions leave their prefix pages reclaimable: later
+/// same-prompt sessions still hit, and the allocator evicts them (LRU)
+/// under pressure instead of failing.
+#[test]
+fn reclaimable_pages_serve_hits_then_evict_under_pressure() {
+    let params = vec![0.5f32; 8];
+    let sim = SimBackend::new(13);
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false;
+    // exactly one session's worth of pages (3-page span + CoW margin)
+    let kv = pool_for(&sim, 4);
+    let p = prompt(9);
+
+    let a = run_pooled(&sim, &cfg, &p, 64, None, &params, &kv);
+    // A retired; its prompt page stays reclaimable in the prefix index
+    assert!(kv.usage().reclaimable >= 1);
+    // the operator eviction hook bounds what it can evict
+    assert_eq!(kv.evict_reclaimable(0), 0);
+
+    // warm hit against a fully retired session's pages
+    let b = run_pooled(&sim, &cfg, &p, 64, None, &params, &kv);
+    assert_eq!(b.tokens, a.tokens);
+    assert_eq!(kv.stats().prefill_skips, 1);
+
+    // pressure: a different-prompt session drawing its full reservation
+    // exhausts the slab and must evict the reclaimable prefix page
+    let mut c = DecodeSession::with_pool(&sim, cfg.clone(), &prompt(20), 64,
+                                         None, &kv)
+        .unwrap();
+    while !c.step(&sim, &params).unwrap() {}
+    assert!(kv.stats().evictions >= 1,
+            "allocation under pressure must evict reclaimable pages");
+    drop(c);
+    // the evicted prefix is gone: the next same-as-A session misses
+    let d = run_pooled(&sim, &cfg, &p, 64, None, &params, &kv);
+    assert_eq!(d.tokens, a.tokens);
+    assert_eq!(kv.stats().prefill_skips, 1, "no further skips after evict");
+}
+
+/// `run_interleaved_pooled` (the coordinator-style pooled entry point)
+/// serves a mixed-strategy request batch identically to the dense
+/// `run_interleaved`, with prefix sharing live across the batch.
+#[test]
+fn run_interleaved_pooled_matches_dense() {
+    let params = vec![0.5f32; 8];
+    let draft = vec![0.25f32; 8];
+    let sim = SimBackend::new(61);
+    let cfg = {
+        let mut c = DecodeCfg::preset(Strategy::D3llm);
+        c.early_stop = false;
+        c
+    };
+    let mk_reqs = || -> Vec<InterleavedRequest> {
+        let mut ar = DecodeCfg::preset(Strategy::Ar);
+        ar.early_stop = false;
+        vec![
+            InterleavedRequest { id: "p0".into(), prompt: prompt(3),
+                                 gen_len: 64, cfg: None },
+            InterleavedRequest { id: "p1".into(), prompt: prompt(3),
+                                 gen_len: 32, cfg: None },
+            InterleavedRequest { id: "p2".into(), prompt: prompt(8),
+                                 gen_len: 32, cfg: Some(ar) },
+        ]
+    };
+    let dense = run_interleaved(&sim, &cfg, &params, Some(&draft), mk_reqs())
+        .unwrap();
+    let kv = pool_for(&sim, 64);
+    let pooled = run_interleaved_pooled(&sim, &cfg, &params, Some(&draft),
+                                        mk_reqs(), &kv)
+        .unwrap();
+    assert_eq!(dense.len(), pooled.len());
+    for ((di, dr), (pi, pr)) in dense.iter().zip(&pooled) {
+        assert_eq!(di, pi);
+        assert_eq!(dr.tokens, pr.tokens, "{di}");
+        assert_eq!(dr.forwards, pr.forwards, "{di}");
+    }
+    // all sessions were admitted together (cold pool), so no prefill was
+    // skipped, but pages are fully released afterwards
+    let u = kv.usage();
+    assert_eq!(u.in_use + u.reserved, 0);
+}
+
+/// The d3llm KV-refresh rewrites only stale pages over the paged view;
+/// the prompt and long-completed blocks are skipped.
+#[test]
+fn kv_refresh_is_incremental_over_the_pool() {
+    let params = vec![0.5f32; 8];
+    let sim = SimBackend::new(11);
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false;
+    assert!(cfg.refresh_every > 0, "d3llm preset refreshes periodically");
+    let kv = pool_for(&sim, 64);
+    let _ = run_pooled(&sim, &cfg, &prompt(5), 96, None, &params, &kv);
+    let s = kv.stats();
+    assert!(s.pages_refreshed > 0, "refresh rounds must install pages");
+    assert!(s.refresh_skips > 0,
+            "incremental refresh must skip current pages \
+             (refreshed {}, skipped {})",
+            s.pages_refreshed, s.refresh_skips);
+}

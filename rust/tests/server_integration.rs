@@ -42,6 +42,10 @@ fn server_serves_generates_and_shuts_down() {
         variant: "xla".into(),
         max_queue: 16,
         max_concurrent_sessions: 4,
+        // paged KV serving on a small budget: exercises pool admission,
+        // prefix sharing and page release end to end
+        draft: None,
+        kv_budget_mb: 64,
         decode: None,
     };
     let handle = std::thread::spawn(move || {
