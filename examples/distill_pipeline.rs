@@ -1,7 +1,8 @@
 //! The full distillation pipeline on a small budget, end to end:
 //!
 //!   1. pretrain a tiny diffusion teacher (random masking),
-//!   2. extract its pseudo-trajectories (on-device scan),
+//!   2. extract its pseudo-trajectories (teacher sessions interleaved
+//!      through the scheduler pool),
 //!   3. distill a student with the paper's recipe (trajectory order +
 //!      curriculum noise + curriculum window),
 //!   4. compare teacher vs student TPF/accuracy under the same d3LLM

@@ -1,0 +1,219 @@
+//! `cargo bench --bench distill` — pooled (interleaved) teacher
+//! pseudo-trajectory extraction vs. the sequential width-1 baseline,
+//! fully deterministic (SimBackend, no artifacts).
+//!
+//! Both schedules run the identical corpus and issue the *identical
+//! per-sample forwards* (the teacher scan is schedule-independent, see
+//! tests/props.rs). Costs are charged on the repo's calibrated H100 cost
+//! model: the B same-shape forwards of one interleaved round execute as
+//! one batched forward costing `t * batch_factor(B, beta)` instead of
+//! `t * B` serialized. The bench asserts the >= 1.5x modeled-throughput
+//! acceptance bar at 8 concurrent extraction sessions and emits a BENCH
+//! json line for CI trend tracking.
+//!
+//! A second phase re-runs extraction over a corpus whose prompts repeat,
+//! bound to a `SharedKvPool`: the repeated prompts adopt the first
+//! cohort's teacher pages, skip their prompt-prefill forwards entirely,
+//! and still produce bit-identical ranks.
+
+use std::collections::HashMap;
+
+use d3llm::coordinator::scheduler::SessionPool;
+use d3llm::data::{train_corpus, Family, Sample};
+use d3llm::decode::{Backend, SessionPhase, SessionProgress, SimBackend};
+use d3llm::metrics::{batch_factor, GpuCostModel, DEFAULT_BATCH_BETA, H100};
+use d3llm::model::{KvPoolCfg, SharedKvPool};
+use d3llm::tokenizer::Tokenizer;
+use d3llm::trajectory::{teacher_session, EXTRACT_VARIANT};
+
+const N: usize = 16;
+const WIDTH: usize = 8;
+
+fn corpus(sim: &SimBackend, n: usize) -> Vec<Sample> {
+    let tk = Tokenizer::new(sim.constants().vocab).unwrap();
+    train_corpus(&tk, &[(Family::Gsm8k, 0.5), (Family::Math, 0.5)], n, 3)
+}
+
+/// Sequential width-1 baseline: each teacher scan runs end-to-end before
+/// the next starts; every forward (prompt prefill included) is batch=1.
+fn run_sequential(sim: &SimBackend, corpus: &[Sample], teacher: &[f32],
+                  m: &GpuCostModel) -> (f64, Vec<Vec<i32>>, usize) {
+    let mut clock = 0.0;
+    let mut ranks = Vec::new();
+    let mut forwards = 0usize;
+    for s in corpus {
+        let mut sess =
+            teacher_session(sim, s, EXTRACT_VARIANT, None).expect("session");
+        loop {
+            let prefill = sess.phase() == SessionPhase::Prefill;
+            let (f0, w0) =
+                (sess.res.mix.full_forwards, sess.res.mix.window_forwards);
+            let done = sess.step(sim, teacher).expect("step");
+            let fulls = (sess.res.mix.full_forwards - f0)
+                + usize::from(prefill);
+            let wins = sess.res.mix.window_forwards - w0;
+            clock += m.t_full * fulls as f64 + m.t_window * wins as f64;
+            if done {
+                break;
+            }
+        }
+        let r = sess.finish();
+        forwards += r.forwards + 1; // + prompt prefill
+        ranks.push(r.unmask_ranks.expect("trajectory ranks"));
+    }
+    (clock, ranks, forwards)
+}
+
+/// Interleaved extraction: up to `width` teacher scans in flight, one
+/// round each per cycle; each round's same-shape forwards are charged as
+/// one batched forward. With `kv`, sessions bind to the shared page pool.
+fn run_interleaved(sim: &SimBackend, corpus: &[Sample], teacher: &[f32],
+                   m: &GpuCostModel, beta: f64, width: usize,
+                   kv: Option<&SharedKvPool>)
+                   -> (f64, Vec<Vec<i32>>, usize) {
+    let mut pool: SessionPool<usize> = SessionPool::new();
+    let mut prev: HashMap<String, SessionProgress> = HashMap::new();
+    let mut ranks: Vec<Option<Vec<i32>>> =
+        (0..corpus.len()).map(|_| None).collect();
+    let mut forwards = 0usize;
+    let mut clock = 0.0;
+    let mut next = 0usize;
+    while next < corpus.len() || !pool.is_empty() {
+        while pool.len() < width && next < corpus.len() {
+            let s = teacher_session(sim, &corpus[next], EXTRACT_VARIANT, kv)
+                .expect("admit");
+            let id = format!("t{next}");
+            prev.insert(id.clone(), s.progress());
+            pool.admit(id, next, s);
+            next += 1;
+        }
+        let finished = pool.step_round(sim, teacher);
+        let after: HashMap<String, SessionProgress> =
+            pool.progress().into_iter().collect();
+        let (mut b_full, mut b_win) = (0usize, 0usize);
+        for (id, p) in &after {
+            let q = &prev[id];
+            if p.rounds == q.rounds {
+                b_full += 1; // prompt-prefill round
+            } else {
+                b_full += p.full_forwards - q.full_forwards;
+                b_win += p.window_forwards - q.window_forwards;
+            }
+        }
+        for f in &finished {
+            let q = &prev[&f.id];
+            let r = f.result.as_ref().expect("sim extraction");
+            b_full += r.mix.full_forwards - q.full_forwards;
+            b_win += r.mix.window_forwards - q.window_forwards;
+        }
+        clock += m.t_full * batch_factor(b_full, beta)
+            + m.t_window * batch_factor(b_win, beta);
+        for f in finished {
+            let r = f.result.expect("sim extraction");
+            forwards += r.forwards + 1; // + prompt prefill (or its skip)
+            ranks[f.tag] = Some(r.unmask_ranks.expect("trajectory ranks"));
+        }
+        prev = after;
+    }
+    (clock, ranks.into_iter().map(|r| r.expect("all extracted")).collect(),
+     forwards)
+}
+
+fn main() {
+    let m = H100;
+    let beta = DEFAULT_BATCH_BETA;
+
+    println!(
+        "== pooled vs sequential teacher trajectory extraction: {N} \
+         samples, width {WIDTH} ==",
+    );
+    println!(
+        "cost model {} (t_full {:.1} ms, t_window {:.1} ms), batch beta \
+         {beta}",
+        m.name,
+        m.t_full * 1e3,
+        m.t_window * 1e3
+    );
+
+    let sim = SimBackend::new(7);
+    let samples = corpus(&sim, N);
+    let teacher = vec![0.42f32; 64];
+
+    let (seq_make, seq_ranks, seq_forwards) =
+        run_sequential(&sim, &samples, &teacher, &m);
+    let sim2 = SimBackend::new(7);
+    let (int_make, int_ranks, int_forwards) =
+        run_interleaved(&sim2, &samples, &teacher, &m, beta, WIDTH, None);
+
+    // identical per-sample work: the schedule must not change any scan
+    assert_eq!(seq_ranks, int_ranks,
+               "interleaving changed a teacher trajectory");
+    assert_eq!(seq_forwards, int_forwards,
+               "schedules diverged: {seq_forwards} vs {int_forwards}");
+    assert!(sim2.max_window_batch() >= 2,
+            "pooled extraction must coalesce same-shape rounds");
+
+    let tokens = (N * sim.constants().gen_train) as f64;
+    let thr_seq = tokens / seq_make;
+    let thr_int = tokens / int_make;
+    println!(
+        "sequential   makespan {seq_make:7.2} s   {thr_seq:7.1} ranks/s"
+    );
+    println!(
+        "interleaved  makespan {int_make:7.2} s   {thr_int:7.1} ranks/s"
+    );
+    let ratio = thr_int / thr_seq;
+    println!(
+        "modeled extraction throughput: {ratio:.2}x ({seq_forwards} \
+         forwards either way)"
+    );
+    assert!(
+        ratio >= 1.5,
+        "pooled extraction must deliver >= 1.5x modeled throughput at \
+         {WIDTH} concurrent, got {ratio:.2}x"
+    );
+    println!(
+        "BENCH {{\"bench\":\"distill\",\"samples\":{N},\"width\":{WIDTH},\
+         \"seq_makespan_s\":{seq_make:.4},\"pooled_makespan_s\":\
+         {int_make:.4},\"speedup\":{ratio:.3}}}"
+    );
+    println!("PASS: >= 1.5x modeled extraction throughput at {WIDTH} wide");
+
+    shared_prefix_phase(&m, beta);
+}
+
+/// Repeated prompts + `SharedKvPool`: the second cohort adopts the first
+/// cohort's teacher pages, skips its prompt prefills, and reproduces the
+/// identical ranks.
+fn shared_prefix_phase(m: &GpuCostModel, beta: f64) {
+    let sim = SimBackend::new(7);
+    let spec = sim.model_spec("main").expect("sim spec").clone();
+    let c = sim.constants().clone();
+    let mut samples = corpus(&sim, WIDTH);
+    let repeat = samples.clone();
+    samples.extend(repeat);
+
+    let kv = SharedKvPool::new(KvPoolCfg {
+        layers: spec.n_layers,
+        d_kv: spec.d_kv,
+        s_max: c.s_max,
+        page_rows: c.block,
+        budget_bytes: 1 << 20,
+    });
+    let teacher = vec![0.42f32; 64];
+    let (_, ranks, _) =
+        run_interleaved(&sim, &samples, &teacher, m, beta, WIDTH, Some(&kv));
+    for i in 0..WIDTH {
+        assert_eq!(ranks[i], ranks[i + WIDTH],
+                   "shared-prefix extraction diverged on sample {i}");
+    }
+    let skips = kv.stats().prefill_skips;
+    assert_eq!(sim.prefill_calls(), WIDTH,
+               "repeated prompts must not re-run the prompt prefill");
+    assert!(skips >= WIDTH as u64,
+            "expected >= {WIDTH} prefill skips, saw {skips}");
+    println!(
+        "PASS: shared-prefix extraction skipped {skips} prompt prefills \
+         with bit-identical ranks"
+    );
+}

@@ -34,7 +34,7 @@ use anyhow::Result;
 use crate::decode::{Backend, DecodeCfg, DecodeSession, GenResult,
                     PrefillItem, RoundOut, RoundPlan, SessionProgress,
                     WindowItem};
-use crate::model::kv_pool::SharedKvPool;
+use crate::model::kv_pool::{is_pool_exhausted, SharedKvPool};
 
 /// One admitted request.
 pub struct InterleavedRequest {
@@ -469,12 +469,89 @@ fn run_interleaved_inner(backend: &dyn Backend, cfg: &DecodeCfg,
     Ok(done.into_iter().map(|(_, id, r)| (id, r)).collect())
 }
 
+/// Drive `n` jobs through a bounded-width interleaved pool: sessions are
+/// admitted from `make(index)` as slots free up (at most `width` live at
+/// once), every round coalesces same-shape forwards into batched backend
+/// calls, and results come back in job order. This is the batch-workload
+/// twin of the serving engine worker — evaluation
+/// (`eval::evaluate`) and pooled teacher-trajectory extraction
+/// (`trajectory::extract_all`) both run on it, so they get round
+/// coalescing and (when `make` binds sessions to a `SharedKvPool`)
+/// prefix sharing for free.
+///
+/// A `make` failure with a pool-exhausted error pauses admission for the
+/// cycle while live sessions drain pages; any other failure (or an
+/// exhausted pool with nothing live to drain) aborts the run.
+pub fn run_pool_bounded<F>(backend: &dyn Backend, params: &[f32], n: usize,
+                           width: usize, mut make: F)
+                           -> Result<Vec<GenResult>>
+where
+    F: FnMut(usize) -> Result<DecodeSession>,
+{
+    let width = width.max(1);
+    let mut out: Vec<Option<GenResult>> = (0..n).map(|_| None).collect();
+    let mut pool: SessionPool<usize> = SessionPool::new();
+    let mut next = 0usize;
+    while next < n || !pool.is_empty() {
+        while pool.len() < width && next < n {
+            match make(next) {
+                Ok(session) => {
+                    pool.admit(format!("job{next}"), next, session);
+                    next += 1;
+                }
+                Err(e) if is_pool_exhausted(&e) && !pool.is_empty() => {
+                    break; // retry once live sessions release pages
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        for f in pool.step_round(backend, params) {
+            out[f.tag] = Some(f.result?);
+        }
+    }
+    Ok(out
+        .into_iter()
+        .map(|r| r.expect("bounded pool finishes every job"))
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::decode::Strategy;
+    use crate::decode::{SimBackend, Strategy};
     use crate::model::ParamStore;
     use crate::runtime::Engine;
+
+    #[test]
+    fn bounded_pool_matches_sequential_and_respects_width() {
+        let sim = SimBackend::new(9);
+        let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+        cfg.early_stop = false;
+        let params = vec![0.5f32; 8];
+        let prompts: Vec<Vec<i32>> = (0..5)
+            .map(|k| (0..12).map(|i| 5 + (i + 3 * k) % 70).collect())
+            .collect();
+
+        let mut refs = Vec::new();
+        for p in &prompts {
+            refs.push(
+                crate::decode::generate(&sim, &cfg, &params, None, p, 64)
+                    .unwrap(),
+            );
+        }
+        let pooled = run_pool_bounded(&sim, &params, prompts.len(), 2, |i| {
+            DecodeSession::new(&sim, cfg.clone(), &prompts[i], 64)
+        })
+        .unwrap();
+        assert_eq!(pooled.len(), refs.len());
+        for (i, (r, s)) in pooled.iter().zip(&refs).enumerate() {
+            assert_eq!(r.tokens, s.tokens, "job {i} diverged");
+            assert_eq!(r.forwards, s.forwards, "job {i} forwards diverged");
+        }
+        // width 2 over 5 jobs must still coalesce same-shape rounds
+        assert!(sim.window_batch_calls() > 0 && sim.max_window_batch() >= 2,
+                "bounded pool should batch same-shape rounds");
+    }
 
     #[test]
     fn interleaved_matches_sequential() {

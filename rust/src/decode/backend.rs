@@ -34,7 +34,8 @@
 
 use anyhow::Result;
 
-use crate::model::exec::{self, DecodeOut, PrefillOut};
+use crate::model::exec::{self, DecodeOut, PrefillOut, TrainOut,
+                         TrajectoryOut};
 use crate::model::KvView;
 use crate::runtime::manifest::{Constants, ModelSpec};
 use crate::runtime::Engine;
@@ -96,6 +97,33 @@ pub trait Backend {
             })
             .collect()
     }
+
+    // ---- training-side forwards -----------------------------------------
+    //
+    // The full paper pipeline (teacher pretraining, pseudo-trajectory
+    // extraction, distillation) runs through these, so training and eval
+    // are backend-agnostic just like decoding: the PJRT `Engine` executes
+    // the fused AOT graphs, `SimBackend` a deterministic closed-form
+    // update (tests/distill_e2e.rs pins the end-to-end pipeline on it).
+
+    /// Fused fwd+bwd+AdamW step over a `[B, s_train]` batch
+    /// (`train_diff` / `train_ar` / `draft_train_ar`). Returns updated
+    /// parameters, optimiser moments and the scalar loss.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(&self, exec: &str, params: &[f32], m: &[f32], v: &[f32],
+                  step: i32, tokens: &[i32], labels: &[i32],
+                  loss_mask: &[f32], attn_valid: &[f32], lr: f32,
+                  ent_weight: f32) -> Result<TrainOut>;
+
+    /// Batched whole-scan teacher decoding-order extraction over
+    /// `[B, s_train]` rows: unmask exactly one token per step (earliest
+    /// incomplete block, highest confidence) and record each position's
+    /// unmask step. This is the exact on-device reference; the default
+    /// extraction path (`trajectory::extract_all`) instead runs teacher
+    /// sessions through the serving scheduler so extraction batches and
+    /// shares prefix KV like any other workload.
+    fn trajectory(&self, params: &[f32], tokens: &[i32], attn_valid: &[f32],
+                  gen_mask: &[f32]) -> Result<TrajectoryOut>;
 }
 
 impl Backend for Engine {
@@ -122,4 +150,17 @@ impl Backend for Engine {
     // `Engine` inherits the loop-based batch defaults: the AOT layer has
     // no B>1 executable yet (see ROADMAP), so batching degenerates to B
     // sequential forwards with identical outputs.
+
+    fn train_step(&self, exec_name: &str, params: &[f32], m: &[f32],
+                  v: &[f32], step: i32, tokens: &[i32], labels: &[i32],
+                  loss_mask: &[f32], attn_valid: &[f32], lr: f32,
+                  ent_weight: f32) -> Result<TrainOut> {
+        exec::train_step(self, exec_name, params, m, v, step, tokens,
+                         labels, loss_mask, attn_valid, lr, ent_weight)
+    }
+
+    fn trajectory(&self, params: &[f32], tokens: &[i32], attn_valid: &[f32],
+                  gen_mask: &[f32]) -> Result<TrajectoryOut> {
+        exec::trajectory(self, params, tokens, attn_valid, gen_mask)
+    }
 }

@@ -120,6 +120,14 @@ pub trait DecodePolicy {
         None
     }
 
+    /// Teacher-extraction policies (`trajectory::TeacherTrajectoryPolicy`)
+    /// report the scan step at which each generation offset was unmasked;
+    /// the session moves them into `GenResult::unmask_ranks` at `finish`.
+    /// Decode strategies have no ranks and return `None`.
+    fn take_unmask_ranks(&mut self) -> Option<Vec<i32>> {
+        None
+    }
+
     /// Token-at-a-time policies (AR, spec) report how many generation
     /// positions they emitted so the session returns them *verbatim* —
     /// including a model that legitimately argmaxes the MASK id — exactly

@@ -174,17 +174,45 @@ impl DecodeSession {
              gen_len: usize, draft_params: Option<&[f32]>,
              pool: Option<&SharedKvPool>) -> Result<DecodeSession> {
         let c = backend.constants().clone();
-        let spec = backend.model_spec("main")?.clone();
         let block = cfg.strategy.block_granularity(&c);
         let st = SeqState::new(prompt, gen_len, block, c.s_max);
         let policy = make_policy(backend, &cfg, &st, draft_params)?;
+        DecodeSession::assemble(backend, cfg, st, policy, pool, None)
+    }
+
+    /// Build a session driven by a caller-supplied policy — the hook the
+    /// pooled teacher-trajectory extraction uses to run through the same
+    /// scheduler as serving decodes. `geo` overrides the strategy-derived
+    /// KV admission geometry when a pool is given (a custom policy's
+    /// cache footprint is not derivable from `cfg.strategy`).
+    pub fn with_policy(backend: &dyn Backend, cfg: DecodeCfg, prompt: &[i32],
+                       gen_len: usize, policy: Box<dyn DecodePolicy>,
+                       pool: Option<&SharedKvPool>,
+                       geo: Option<KvAdmissionGeometry>)
+                       -> Result<DecodeSession> {
+        let c = backend.constants().clone();
+        let block = cfg.strategy.block_granularity(&c);
+        let st = SeqState::new(prompt, gen_len, block, c.s_max);
+        DecodeSession::assemble(backend, cfg, st, policy, pool, geo)
+    }
+
+    /// Shared tail of every constructor: bind the cache (dense, or a
+    /// paged view admitted under `geo` / the strategy-derived geometry)
+    /// and assemble the session around the prepared state + policy.
+    fn assemble(backend: &dyn Backend, cfg: DecodeCfg, st: SeqState,
+                policy: Box<dyn DecodePolicy>, pool: Option<&SharedKvPool>,
+                geo: Option<KvAdmissionGeometry>) -> Result<DecodeSession> {
+        let c = backend.constants().clone();
+        let spec = backend.model_spec("main")?.clone();
         let cache: Box<dyn KvView> = match pool {
             None => {
                 Box::new(KvCache::new(spec.n_layers, st.s_max, spec.d_kv))
             }
             Some(pool) => {
-                let geo = kv_admission_geometry(&cfg, &c, st.prompt_len,
-                                                gen_len);
+                let geo = geo.unwrap_or_else(|| {
+                    kv_admission_geometry(&cfg, &c, st.prompt_len,
+                                          st.gen_len)
+                });
                 Box::new(PagedKv::admit(pool,
                                         &st.tokens[..st.prompt_len],
                                         &geo.prefix_tag, geo.prefix_rows,
@@ -396,6 +424,7 @@ impl DecodeSession {
     /// returned verbatim (a model may legitimately argmax the MASK id);
     /// diffusion policies use the `SeqState::output()` semantics.
     pub fn finish(mut self) -> GenResult {
+        self.res.unmask_ranks = self.policy.take_unmask_ranks();
         match self.policy.emitted_len() {
             Some(n) => {
                 let lo = self.st.gen_start();

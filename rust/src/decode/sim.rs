@@ -26,9 +26,9 @@ use std::cell::Cell;
 
 use anyhow::{bail, Result};
 
-use crate::model::exec::{DecodeOut, PrefillOut};
+use crate::model::exec::{DecodeOut, PrefillOut, TrainOut, TrajectoryOut};
 use crate::model::KvView;
-use crate::runtime::manifest::{Constants, ModelSpec};
+use crate::runtime::manifest::{Constants, ModelSpec, TensorSpec};
 
 use super::backend::{Backend, PrefillItem, WindowItem};
 
@@ -55,6 +55,12 @@ pub fn sim_constants() -> Constants {
     }
 }
 
+/// Simulated parameter count: small but nonzero so the full training
+/// pipeline (`ParamStore::init` -> `train_step` -> checkpoint round-trip)
+/// runs on the sim geometry. The decode forwards only fingerprint the
+/// parameter vector, so any length keeps working there.
+pub const SIM_PARAMS: usize = 64;
+
 fn sim_model_spec(c: &Constants) -> ModelSpec {
     ModelSpec {
         name: "sim".to_string(),
@@ -66,8 +72,14 @@ fn sim_model_spec(c: &Constants) -> ModelSpec {
         vocab: c.vocab,
         s_max: c.s_max,
         d_kv: 4,
-        total_params: 0,
-        param_layout: Vec::new(),
+        total_params: SIM_PARAMS,
+        param_layout: vec![TensorSpec {
+            name: "sim.w".to_string(),
+            shape: vec![SIM_PARAMS],
+            offset: 0,
+            size: SIM_PARAMS,
+            init: "normal".to_string(),
+        }],
     }
 }
 
@@ -91,6 +103,10 @@ pub struct SimBackend {
     window_batch_calls: Cell<usize>,
     window_batch_items: Cell<usize>,
     max_window_batch: Cell<usize>,
+    /// Fused train steps executed.
+    train_steps: Cell<usize>,
+    /// Sample rows routed through the on-device-style `trajectory` scan.
+    trajectory_rows: Cell<usize>,
 }
 
 impl SimBackend {
@@ -110,6 +126,8 @@ impl SimBackend {
             window_batch_calls: Cell::new(0),
             window_batch_items: Cell::new(0),
             max_window_batch: Cell::new(0),
+            train_steps: Cell::new(0),
+            trajectory_rows: Cell::new(0),
         }
     }
 
@@ -158,6 +176,17 @@ impl SimBackend {
     /// Largest B seen by `decode_window_batch`.
     pub fn max_window_batch(&self) -> usize {
         self.max_window_batch.get()
+    }
+
+    /// Fused train steps executed so far.
+    pub fn train_steps(&self) -> usize {
+        self.train_steps.get()
+    }
+
+    /// Sample rows routed through the whole-scan `trajectory` entry point
+    /// so far (the pooled extraction path does not use it).
+    pub fn trajectory_rows(&self) -> usize {
+        self.trajectory_rows.get()
     }
 
     #[inline]
@@ -248,6 +277,21 @@ impl SimBackend {
             }
         }
         Ok(out)
+    }
+
+    /// Uniform fraction in [0, 1) from a mixed hash.
+    #[inline]
+    fn unit(h: u64) -> f64 {
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Closed-form training target for parameter `i`: the deterministic
+    /// fixed point `train_step` pulls every parameter toward. Training
+    /// "fits" when the residual to these targets vanishes.
+    #[inline]
+    fn param_target(&self, i: usize) -> f32 {
+        (Self::unit(Self::mix(self.seed ^ 0x7261_494E ^ ((i as u64) << 17)))
+            * 0.2) as f32
     }
 
     /// Window length the named executable was "lowered" with — mirrors
@@ -359,6 +403,131 @@ impl Backend for SimBackend {
             })
             .collect()
     }
+
+    /// Deterministic closed-form train step. Every parameter is pulled
+    /// toward a seed-derived fixed point (`param_target`), and the loss is
+    /// the residual to those targets scaled by a batch-content modulation,
+    /// so:
+    ///
+    ///   * training is resumable and order-independent — the update is a
+    ///     pure function of (params, lr), not of the step counter;
+    ///   * loss decreases monotonically in expectation and deterministically
+    ///     re-runs to the identical parameter vector;
+    ///   * different batches (recipes, trajectories, curricula) produce
+    ///     different loss curves through the batch fingerprint.
+    fn train_step(&self, _exec: &str, params: &[f32], m: &[f32], v: &[f32],
+                  _step: i32, tokens: &[i32], labels: &[i32],
+                  loss_mask: &[f32], attn_valid: &[f32], lr: f32,
+                  ent_weight: f32) -> Result<TrainOut> {
+        let s = self.constants.s_train;
+        let bs = tokens.len();
+        if bs == 0 || bs % s != 0 || labels.len() != bs
+            || loss_mask.len() != bs || attn_valid.len() != bs
+        {
+            bail!("sim train_step: batch buffers must be b*{s} aligned");
+        }
+        if m.len() != params.len() || v.len() != params.len() {
+            bail!("sim train_step: optimiser state must match params");
+        }
+        self.train_steps.set(self.train_steps.get() + 1);
+
+        // batch fingerprint -> mild deterministic loss modulation
+        let mut bh: u64 = 0xcbf29ce484222325 ^ self.seed;
+        for (&t, &l) in tokens.iter().zip(labels.iter()) {
+            bh ^= (t as u64) ^ ((l as u64) << 32);
+            bh = bh.wrapping_mul(0x100000001b3);
+        }
+        let modulation = 0.9 + 0.2 * Self::unit(Self::mix(bh));
+        let masked = loss_mask.iter().filter(|&&x| x > 0.0).count();
+        let mask_frac = masked as f64 / bs as f64;
+
+        let rate = (lr as f64 * 100.0).clamp(0.01, 0.5) as f32;
+        let n = params.len();
+        let mut out = TrainOut {
+            params: Vec::with_capacity(n),
+            m: Vec::with_capacity(n),
+            v: Vec::with_capacity(n),
+            loss: 0.0,
+        };
+        let mut resid = 0.0f64;
+        for i in 0..n {
+            let g = params[i] - self.param_target(i);
+            resid += (g as f64) * (g as f64);
+            out.params.push(params[i] - rate * g);
+            out.m.push(0.9 * m[i] + 0.1 * g);
+            out.v.push(0.99 * v[i] + 0.01 * g * g);
+        }
+        let resid = if n > 0 { resid / n as f64 } else { 0.0 };
+        out.loss = (modulation * (0.2 + mask_frac) * (resid * 400.0 + 0.08)
+            + ent_weight as f64 * 0.02) as f32;
+        Ok(out)
+    }
+
+    /// Deterministic whole-scan teacher extraction, mirroring the
+    /// on-device `trajectory` executable step for step: each scan step
+    /// takes the head statistics of the current sequence view, picks the
+    /// highest-confidence masked position inside the earliest incomplete
+    /// block of the generation region, unmasks it with its argmax token
+    /// and records the step as that position's rank.
+    fn trajectory(&self, params: &[f32], tokens: &[i32], attn_valid: &[f32],
+                  gen_mask: &[f32]) -> Result<TrajectoryOut> {
+        let c = &self.constants;
+        let s = c.s_train;
+        if tokens.is_empty() || tokens.len() % s != 0
+            || attn_valid.len() != tokens.len()
+            || gen_mask.len() != tokens.len()
+        {
+            bail!("sim trajectory: inputs must be b*{s} aligned");
+        }
+        let b = tokens.len() / s;
+        self.trajectory_rows.set(self.trajectory_rows.get() + b);
+        let phash = Self::mix(
+            params.first().map(|p| p.to_bits() as u64).unwrap_or(0)
+                ^ params.len() as u64,
+        );
+        let mut rank = vec![c.rank_never; b * s];
+        let mut toks = tokens.to_vec();
+        for bi in 0..b {
+            let av = &attn_valid[bi * s..(bi + 1) * s];
+            let gm = &gen_mask[bi * s..(bi + 1) * s];
+            let vmask: Vec<i32> =
+                av.iter().map(|&x| i32::from(x > 0.0)).collect();
+            let Some(gen_start) = gm.iter().position(|&g| g > 0.0) else {
+                continue; // padding row of a partial chunk: nothing to scan
+            };
+            for step in 0..c.gen_train as i32 {
+                let row = &mut toks[bi * s..(bi + 1) * s];
+                let ctx = self.context_hash(row, &vmask) ^ phash;
+                // earliest incomplete block among masked gen positions,
+                // then the highest-confidence masked position inside it
+                let mut cur_block = usize::MAX;
+                for i in gen_start..s {
+                    if gm[i] > 0.0 && row[i] == c.mask_id {
+                        cur_block = cur_block.min((i - gen_start) / c.block);
+                    }
+                }
+                if cur_block == usize::MAX {
+                    break; // every gen position unmasked
+                }
+                let mut best: Option<(usize, f32, i32)> = None;
+                for i in gen_start..s {
+                    if gm[i] <= 0.0 || row[i] != c.mask_id
+                        || (i - gen_start) / c.block != cur_block
+                    {
+                        continue;
+                    }
+                    let (a, conf, _) = self.stats_at(ctx, i, row[i]);
+                    if best.map(|(_, bc, _)| conf > bc).unwrap_or(true) {
+                        best = Some((i, conf, a));
+                    }
+                }
+                let (i, _, a) = best.expect("incomplete block has masks");
+                row[i] = a;
+                rank[bi * s + i] = step;
+            }
+        }
+        Ok(TrajectoryOut { rank, final_tokens: toks })
+    }
 }
 
 #[cfg(test)]
@@ -458,6 +627,98 @@ mod tests {
         assert_eq!(sim.window_batch_calls(), 1);
         assert_eq!(sim.window_batch_items(), 2);
         assert_eq!(sim.max_window_batch(), 2);
+    }
+
+    #[test]
+    fn train_step_is_deterministic_and_reduces_loss() {
+        let sim = SimBackend::new(6);
+        let c = sim.constants().clone();
+        let spec = sim.model_spec("main").unwrap().clone();
+        assert!(spec.total_params > 0, "sim must have trainable params");
+        let n = spec.total_params;
+        let bs = c.b_train * c.s_train;
+        let tokens = vec![5i32; bs];
+        let labels = vec![6i32; bs];
+        let mut mask = vec![0.0f32; bs];
+        for x in mask.iter_mut().take(bs / 3) {
+            *x = 1.0;
+        }
+        let valid = vec![1.0f32; bs];
+
+        let mut p = vec![0.3f32; n];
+        let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let first = sim
+            .train_step("train_diff", &p, &m, &v, 1, &tokens, &labels,
+                        &mask, &valid, 3e-3, 0.0)
+            .unwrap();
+        let again = sim
+            .train_step("train_diff", &p, &m, &v, 1, &tokens, &labels,
+                        &mask, &valid, 3e-3, 0.0)
+            .unwrap();
+        assert_eq!(first.params, again.params, "update must be deterministic");
+        assert_eq!(first.loss, again.loss);
+
+        let mut last = first.loss;
+        p = first.params;
+        m = first.m;
+        v = first.v;
+        for step in 2..=20 {
+            let out = sim
+                .train_step("train_diff", &p, &m, &v, step, &tokens,
+                            &labels, &mask, &valid, 3e-3, 0.0)
+                .unwrap();
+            p = out.params;
+            m = out.m;
+            v = out.v;
+            last = out.loss;
+        }
+        assert!(last < first.loss,
+                "loss must fall on a fixed batch: {} -> {last}", first.loss);
+        assert_eq!(sim.train_steps(), 21);
+    }
+
+    #[test]
+    fn trajectory_ranks_are_a_gen_region_permutation() {
+        let sim = SimBackend::new(12);
+        let c = sim.constants().clone();
+        let s = c.s_train;
+        let p = 11usize;
+        let mut tokens = vec![1i32; s]; // MASK everywhere
+        for (i, t) in tokens.iter_mut().enumerate().take(p) {
+            *t = 5 + i as i32;
+        }
+        let mut attn_valid = vec![0.0f32; s];
+        let mut gen_mask = vec![0.0f32; s];
+        for i in 0..p + c.gen_train {
+            attn_valid[i] = 1.0;
+        }
+        for i in p..p + c.gen_train {
+            gen_mask[i] = 1.0;
+        }
+        let a = sim
+            .trajectory(&[0.4], &tokens, &attn_valid, &gen_mask)
+            .unwrap();
+        let b = sim
+            .trajectory(&[0.4], &tokens, &attn_valid, &gen_mask)
+            .unwrap();
+        assert_eq!(a.rank, b.rank, "scan must be deterministic");
+        // gen ranks are a permutation of 0..gen_train; elsewhere NEVER
+        let mut gen_ranks: Vec<i32> = a.rank[p..p + c.gen_train].to_vec();
+        gen_ranks.sort();
+        assert_eq!(gen_ranks, (0..c.gen_train as i32).collect::<Vec<_>>());
+        for i in 0..p {
+            assert_eq!(a.rank[i], c.rank_never);
+        }
+        // final tokens: every gen position unmasked
+        for i in p..p + c.gen_train {
+            assert_ne!(a.final_tokens[i], c.mask_id);
+        }
+        // a different teacher re-rolls the decoding order
+        let other = sim
+            .trajectory(&[0.9], &tokens, &attn_valid, &gen_mask)
+            .unwrap();
+        assert_ne!(a.rank, other.rank, "teacher params must steer the scan");
+        assert_eq!(sim.trajectory_rows(), 3);
     }
 
     #[test]

@@ -1,12 +1,29 @@
 //! Evaluation: run a decode strategy over an eval set and score it.
+//!
+//! Eval decodes are routed through the interleaved scheduler
+//! (`coordinator::scheduler::run_pool_bounded`): up to
+//! [`DEFAULT_EVAL_WIDTH`] sessions in flight, with each round's
+//! same-shape forwards coalesced into one batched backend call — so
+//! evaluation gets the serving stack's batched throughput for free while
+//! per-sample decodes stay bit-identical to the sequential path (session
+//! trajectories are schedule-independent; see
+//! `tests/scheduler_determinism.rs`).
 
 use anyhow::Result;
 
+use crate::coordinator::scheduler::run_pool_bounded;
 use crate::data::{check, Family, Sample};
-use crate::decode::{self, DecodeCfg};
+use crate::decode::{Backend, DecodeCfg, DecodeSession};
 use crate::metrics::{ForwardMix, RunMetrics};
-use crate::runtime::Engine;
 use crate::tokenizer::Tokenizer;
+
+/// Default number of eval sessions in flight. Bounds resident cache
+/// memory at `width` dense `KvCache` buffers; on a backend without a
+/// lowered B>1 executable (today's `Engine`) the batched calls fall back
+/// to loops, so the width costs memory without throughput until that
+/// executable lands — pass width 1 to `evaluate_pooled` to reproduce
+/// classic sequential evaluation exactly.
+pub const DEFAULT_EVAL_WIDTH: usize = 8;
 
 /// Per-task generation length (tokens, block multiple).
 pub fn gen_len_for(family: Family, block: usize, gen_max: usize) -> usize {
@@ -26,17 +43,33 @@ pub struct EvalOutcome {
     pub mix: ForwardMix,
 }
 
-/// Evaluate `cfg` with checkpoint `params` over `samples`.
+/// Evaluate `cfg` with checkpoint `params` over `samples`, interleaving
+/// [`DEFAULT_EVAL_WIDTH`] decode sessions through the scheduler.
 /// `strict` enables the "+"-style step-verifying checker.
-pub fn evaluate(eng: &Engine, cfg: &DecodeCfg, params: &[f32],
+pub fn evaluate(backend: &dyn Backend, cfg: &DecodeCfg, params: &[f32],
                 draft_params: Option<&[f32]>, tk: &Tokenizer,
                 samples: &[Sample], strict: bool) -> Result<EvalOutcome> {
-    let c = eng.manifest.constants.clone();
-    let mut out = EvalOutcome::default();
-    for s in samples {
+    evaluate_pooled(backend, cfg, params, draft_params, tk, samples, strict,
+                    DEFAULT_EVAL_WIDTH)
+}
+
+/// `evaluate` with an explicit interleaving width (width 1 reproduces
+/// classic sequential evaluation token-for-token).
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_pooled(backend: &dyn Backend, cfg: &DecodeCfg,
+                       params: &[f32], draft_params: Option<&[f32]>,
+                       tk: &Tokenizer, samples: &[Sample], strict: bool,
+                       width: usize) -> Result<EvalOutcome> {
+    let c = backend.constants().clone();
+    let results = run_pool_bounded(backend, params, samples.len(), width,
+                                   |i| {
+        let s = &samples[i];
         let gen_len = gen_len_for(s.family, c.block, c.gen_max);
-        let r = decode::generate(eng, cfg, params, draft_params, &s.prompt,
-                                 gen_len)?;
+        DecodeSession::with_draft(backend, cfg.clone(), &s.prompt, gen_len,
+                                  draft_params)
+    })?;
+    let mut out = EvalOutcome::default();
+    for (s, r) in samples.iter().zip(&results) {
         let ok = check(tk, s, &r.tokens, strict);
         out.metrics.samples += 1;
         out.metrics.correct += ok as usize;

@@ -85,6 +85,25 @@ fn load_ckpt(name: &str) -> Result<ParamStore> {
     ParamStore::load(TrainCfg::ckpt_path(ckpt_dir(), name))
 }
 
+/// Run one training job and persist its loss curve — the single entry
+/// point shared by `train` (single run) and `train-all` (preset plan),
+/// with uniform completion logging.
+fn run_training(eng: &Engine, cfg: &TrainCfg) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let out = train::train(eng, cfg, ckpt_dir())?;
+    let log_path = format!("results/loss_{}.csv", cfg.name);
+    train::save_log(&out.log, &log_path)?;
+    let last = out.log.last().map(|l| l.loss).unwrap_or(f32::NAN);
+    eprintln!(
+        "[train:{}] {} steps, final loss {last:.4} ({:.1}s); curve -> \
+         {log_path}",
+        cfg.name,
+        cfg.steps,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 fn info(_args: &Args) -> Result<()> {
     let eng = engine()?;
     let c = &eng.manifest.constants;
@@ -141,9 +160,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.teacher = None;
     }
     let eng = engine()?;
-    let out = train::train(&eng, &cfg, ckpt_dir())?;
-    train::save_log(&out.log, format!("results/loss_{}.csv", cfg.name))?;
-    Ok(())
+    run_training(&eng, &cfg)
 }
 
 fn cmd_train_all(args: &Args) -> Result<()> {
@@ -156,8 +173,7 @@ fn cmd_train_all(args: &Args) -> Result<()> {
             eprintln!("[train-all] skip `{}` (exists)", cfg.name);
             continue;
         }
-        let out = train::train(&eng, &cfg, ckpt_dir())?;
-        train::save_log(&out.log, format!("results/loss_{}.csv", cfg.name))?;
+        run_training(&eng, &cfg)?;
     }
     Ok(())
 }

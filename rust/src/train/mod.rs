@@ -1,5 +1,8 @@
-//! Training / distillation driver: drives the fused AOT train-step
-//! executables from Rust. Python never sees a weight.
+//! Training / distillation driver: drives the fused train-step forwards
+//! through the `Backend` abstraction, so the identical pipeline runs on
+//! the PJRT `Engine` (AOT executables; Python never sees a weight) and on
+//! the deterministic `SimBackend` (closed-form update; end-to-end CI
+//! coverage in `tests/distill_e2e.rs`).
 
 pub mod presets;
 
@@ -8,8 +11,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::{train_corpus, Family, Sample};
-use crate::model::{exec, OptState, ParamStore};
-use crate::runtime::Engine;
+use crate::decode::Backend;
+use crate::model::{OptState, ParamStore};
 use crate::tokenizer::Tokenizer;
 use crate::trajectory::{self, build_noisy, Curriculum, Recipe};
 use crate::util::rng::Rng;
@@ -58,10 +61,10 @@ pub struct TrainOutcome {
 }
 
 /// Run one training job; saves the checkpoint and returns the loss log.
-pub fn train(eng: &Engine, cfg: &TrainCfg, ckpt_dir: &Path)
+pub fn train(backend: &dyn Backend, cfg: &TrainCfg, ckpt_dir: &Path)
              -> Result<TrainOutcome> {
-    let c = eng.manifest.constants.clone();
-    let spec = eng.manifest.model(&cfg.model)?.clone();
+    let c = backend.constants().clone();
+    let spec = backend.model_spec(&cfg.model)?.clone();
     let tk = Tokenizer::new(c.vocab)?;
 
     let exec_name = match (cfg.recipe, cfg.model.as_str()) {
@@ -87,7 +90,9 @@ pub fn train(eng: &Engine, cfg: &TrainCfg, ckpt_dir: &Path)
         None => ParamStore::init(&spec, cfg.seed ^ 0x1111),
     };
 
-    // ---- pseudo-trajectories (cached per teacher+corpus)
+    // ---- pseudo-trajectories (cached per teacher+corpus; the cache
+    // lives next to the checkpoints so runs stay hermetic, and the
+    // extraction sessions interleave through the serving scheduler)
     let ranks = if cfg.recipe == Recipe::PseudoTraj {
         let tname = cfg
             .teacher
@@ -96,10 +101,10 @@ pub fn train(eng: &Engine, cfg: &TrainCfg, ckpt_dir: &Path)
         let teacher = ParamStore::load(TrainCfg::ckpt_path(ckpt_dir, tname))?;
         teacher.check(&spec)?;
         Some(trajectory::extract_all(
-            eng,
+            backend,
             &teacher.data,
             &corpus,
-            trajectory::default_cache_dir(),
+            ckpt_dir.join("traj-cache"),
             tname,
         )?)
     } else {
@@ -147,10 +152,9 @@ pub fn train(eng: &Engine, cfg: &TrainCfg, ckpt_dir: &Path)
             attn_valid.extend(ex.attn_valid);
         }
 
-        let out = exec::train_step(
-            eng, exec_name, &params.data, &opt.m, &opt.v, step as i32,
-            &tokens, &labels, &loss_mask, &attn_valid, cfg.lr,
-            cfg.ent_weight,
+        let out = backend.train_step(
+            exec_name, &params.data, &opt.m, &opt.v, step as i32, &tokens,
+            &labels, &loss_mask, &attn_valid, cfg.lr, cfg.ent_weight,
         )?;
         params.data = out.params;
         opt.m = out.m;

@@ -1,0 +1,199 @@
+//! Pooled teacher decoding-order extraction (paper §3.1).
+//!
+//! The teacher scan — unmask exactly one token per step, restricted to
+//! the earliest incomplete block, picking the highest-confidence masked
+//! position — is expressed as a `DecodePolicy`, so extraction runs as
+//! ordinary resumable sessions through the serving scheduler
+//! (`coordinator::scheduler::run_pool_bounded`) instead of a bespoke
+//! sequential loop:
+//!
+//!   * many samples interleave round-robin, and the same-shape forwards
+//!     of one round (every trajectory session plans the identical
+//!     prefill / window shape) coalesce into batched
+//!     `Backend::prefill_batch` / `decode_window_batch` calls;
+//!   * sessions can bind to a `SharedKvPool`, so samples sharing a
+//!     prompt prefix adopt already-prefilled teacher pages and a
+//!     full-prefix hit skips the prompt-prefill forward entirely;
+//!   * the per-sample scan is schedule-independent — width-1 extraction
+//!     is token-for-token identical to interleaved extraction
+//!     (`tests/props.rs` pins it).
+//!
+//! The scan decodes on the serving hot path: one prompt prefill into the
+//! session cache, then one windowed forward per unmask step with the
+//! whole generation region in the window. With the window covering the
+//! gen region (`gen_train <= window`, the compiled geometry) and only
+//! prompt rows cached, this is the block-approximate-cache view of the
+//! exact on-device scan (`Backend::trajectory`, kept as the reference
+//! path in `extract_on_device`).
+
+use anyhow::{bail, Result};
+
+use crate::data::Sample;
+use crate::decode::policy::mismatch;
+use crate::decode::{exec_names, Backend, DecodeCfg, DecodePolicy,
+                    DecodeSession, KvAdmissionGeometry, PolicyCtx,
+                    RoundOut, RoundPlan, Strategy};
+use crate::model::kv_pool::SharedKvPool;
+use crate::tokenizer::MASK;
+
+/// Executable variant the extraction sessions decode with.
+pub const EXTRACT_VARIANT: &str = "xla";
+
+/// Teacher scan as a resumable decode policy: prompt prefill, then one
+/// windowed forward per scan step, each unmasking the single
+/// highest-confidence masked position of the earliest incomplete block
+/// and recording the step as that position's rank. No early stop — the
+/// teacher "continues generation beyond the EOS token" (§3.1) so every
+/// generation position receives a rank.
+pub struct TeacherTrajectoryPolicy {
+    prefilled: bool,
+    window: usize,
+    rank_never: i32,
+    prefill_exec: String,
+    decode_exec: String,
+    /// Per-generation-offset unmask step (RANK_NEVER until unmasked).
+    ranks: Vec<i32>,
+    step_no: i32,
+}
+
+impl TeacherTrajectoryPolicy {
+    pub fn new(backend: &dyn Backend, cfg: &DecodeCfg, gen_len: usize)
+               -> Result<TeacherTrajectoryPolicy> {
+        let c = backend.constants();
+        if gen_len > c.window {
+            bail!("trajectory extraction needs gen region ({gen_len}) <= \
+                   decode window ({})", c.window);
+        }
+        let (prefill_exec, decode_exec) = exec_names(&cfg.variant);
+        Ok(TeacherTrajectoryPolicy {
+            prefilled: false,
+            window: c.window,
+            rank_never: c.rank_never,
+            prefill_exec,
+            decode_exec,
+            ranks: vec![c.rank_never; gen_len],
+            step_no: 0,
+        })
+    }
+}
+
+impl DecodePolicy for TeacherTrajectoryPolicy {
+    fn plan(&mut self, _backend: &dyn Backend, _params: &[f32],
+            ctx: &mut PolicyCtx<'_>) -> Result<RoundPlan> {
+        if !self.prefilled {
+            // prompt prefill into the session cache (shareable pages)
+            return Ok(RoundPlan::Full {
+                exec: self.prefill_exec.clone(),
+                tokens: ctx.st.tokens.clone(),
+                valid: ctx.st.prompt_valid(),
+            });
+        }
+        // the scan runs exactly gen_len steps; the step cap also bounds a
+        // pathological checkpoint whose argmax is the MASK id itself
+        if self.step_no as usize >= ctx.st.gen_len
+            || ctx.st.first_incomplete_block().is_none()
+        {
+            return Ok(RoundPlan::Finished);
+        }
+        // window = the whole generation region against the prompt cache
+        let lo = ctx.st.gen_start();
+        let mut win_tokens = vec![0i32; self.window];
+        let mut win_pos = vec![0i32; self.window];
+        let mut win_valid = vec![0.0f32; self.window];
+        for off in 0..ctx.st.gen_len {
+            win_tokens[off] = ctx.st.tokens[lo + off];
+            win_pos[off] = (lo + off) as i32;
+            win_valid[off] = 1.0;
+        }
+        Ok(RoundPlan::Window {
+            exec: self.decode_exec.clone(),
+            tokens: win_tokens,
+            pos: win_pos,
+            valid: win_valid,
+        })
+    }
+
+    fn apply(&mut self, ctx: &mut PolicyCtx<'_>, out: RoundOut)
+             -> Result<bool> {
+        match out {
+            RoundOut::Full(pre) => {
+                ctx.cache.install_full(&pre.kcache, &pre.vcache, 0,
+                                       ctx.st.prompt_len)?;
+                self.prefilled = true;
+                Ok(false)
+            }
+            RoundOut::Window(out) => {
+                ctx.res.forwards += 1;
+                ctx.res.mix.window_forwards += 1;
+                let b = ctx
+                    .st
+                    .first_incomplete_block()
+                    .ok_or_else(|| mismatch("trajectory"))?;
+                let (blo, bhi) = ctx.st.block_range(b);
+                let lo = ctx.st.gen_start();
+                let mut best: Option<(usize, f32)> = None;
+                for p in blo..bhi {
+                    if ctx.st.tokens[p] != MASK {
+                        continue;
+                    }
+                    let conf = out.conf[p - lo];
+                    if best.map(|(_, bc)| conf > bc).unwrap_or(true) {
+                        best = Some((p, conf));
+                    }
+                }
+                let (p, _) = best.expect("incomplete block has masks");
+                ctx.st.tokens[p] = out.argmax[p - lo];
+                if self.ranks[p - lo] == self.rank_never {
+                    self.ranks[p - lo] = self.step_no;
+                }
+                self.step_no += 1;
+                Ok(self.step_no as usize >= ctx.st.gen_len
+                    || ctx.st.first_incomplete_block().is_none())
+            }
+            RoundOut::None => Err(mismatch("trajectory")),
+        }
+    }
+
+    fn prefilled(&self) -> bool {
+        self.prefilled
+    }
+
+    /// Full-prefix pool hit: skip the prompt-prefill forward (see the
+    /// single-/multi-block twins).
+    fn try_skip_prefill(&mut self, _backend: &dyn Backend,
+                        ctx: &mut PolicyCtx<'_>) -> Result<bool> {
+        if self.prefilled || !ctx.cache.prefix_ready(ctx.st.prompt_len) {
+            return Ok(false);
+        }
+        self.prefilled = true;
+        Ok(true)
+    }
+
+    fn take_unmask_ranks(&mut self) -> Option<Vec<i32>> {
+        Some(std::mem::take(&mut self.ranks))
+    }
+}
+
+/// Build one teacher-extraction session for `sample`, optionally bound to
+/// a shared KV pool (same-prompt samples then share prefilled prompt
+/// pages). The session's cache footprint is the prompt prefix only — the
+/// scan never commits generation rows.
+pub fn teacher_session(backend: &dyn Backend, sample: &Sample,
+                       variant: &str, kv: Option<&SharedKvPool>)
+                       -> Result<DecodeSession> {
+    let c = backend.constants();
+    let gen_len = c.gen_train;
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.variant = variant.to_string();
+    cfg.early_stop = false;
+    let policy =
+        Box::new(TeacherTrajectoryPolicy::new(backend, &cfg, gen_len)?);
+    let geo = KvAdmissionGeometry {
+        prefix_rows: sample.prompt.len(),
+        prefix_tag: exec_names(variant).0,
+        span_rows: sample.prompt.len(),
+        causal_prefix: false,
+    };
+    DecodeSession::with_policy(backend, cfg, &sample.prompt, gen_len,
+                               policy, kv, Some(geo))
+}

@@ -1,40 +1,85 @@
 //! Pseudo-trajectory pipeline (paper §3.1): teacher decoding-order
-//! extraction (with a disk cache), the noisy-sequence construction
-//! equation, and the curriculum schedules.
+//! extraction (pooled through the serving scheduler, with a disk cache),
+//! the noisy-sequence construction equation, and the curriculum
+//! schedules.
 
 pub mod curriculum;
+pub mod extract;
 pub mod noisy;
 
 use std::io::{Read, Write};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::scheduler::run_pool_bounded;
 use crate::data::Sample;
-use crate::model::exec;
-use crate::runtime::Engine;
+use crate::decode::Backend;
+use crate::model::kv_pool::{KvPoolCfg, SharedKvPool};
+use crate::runtime::manifest::Constants;
 use crate::tokenizer::MASK;
 use crate::util::fnv1a;
 
 pub use curriculum::Curriculum;
+pub use extract::{teacher_session, TeacherTrajectoryPolicy,
+                  EXTRACT_VARIANT};
 pub use noisy::{build_noisy, NoisyExample, Recipe};
 
 /// Teacher decoding ranks for one sample: rank[i] = step at which the
 /// teacher unmasked training-sequence position i (RANK_NEVER elsewhere).
 pub type Ranks = Vec<i32>;
 
-/// Extract pseudo-trajectories for a corpus, batched through the on-device
-/// `trajectory` executable. Results are cached on disk keyed by
-/// (teacher checkpoint, corpus) content hashes — extraction runs once per
-/// teacher and is reused by every distillation variant.
-pub fn extract_all(eng: &Engine, teacher: &[f32], samples: &[Sample],
-                   cache_dir: impl AsRef<Path>, label: &str)
-                   -> Result<Vec<Ranks>> {
-    let c = eng.manifest.constants.clone();
-    let (b, s) = (c.b_traj, c.s_train);
+/// On-disk cache schema magic. Bumped whenever the rank layout or the
+/// key derivation changes; files carrying any other magic are stale and
+/// are invalidated on open (mirrors the `EvalCache` schema handling).
+const CACHE_MAGIC: &[u8; 8] = b"D3TRAJ02";
 
-    let key = cache_key(teacher, samples);
-    let path = cache_dir.as_ref().join(format!("traj_{label}_{key:016x}.bin"));
+/// Extract pseudo-trajectories for a corpus by running teacher-scan
+/// sessions through the interleaved scheduler: up to `b_traj` samples in
+/// flight, same-shape rounds coalesced into batched backend calls, and
+/// all sessions bound to one run-scoped `SharedKvPool` so samples that
+/// repeat a prompt adopt each other's teacher pages and skip the prompt
+/// prefill. Results are cached on disk keyed by the teacher parameters,
+/// the corpus prompts and the compile geometry — extraction runs once
+/// per teacher and is reused by every distillation variant.
+pub fn extract_all(backend: &dyn Backend, teacher: &[f32],
+                   samples: &[Sample], cache_dir: impl AsRef<Path>,
+                   label: &str) -> Result<Vec<Ranks>> {
+    let c = backend.constants().clone();
+    let width = c.b_traj.max(1);
+    let spec = backend.model_spec("main")?.clone();
+    // extraction sessions reserve prompt pages only; budget the in-flight
+    // width with 4x slack so retired prefixes stay adoptable (LRU beyond)
+    let mut kcfg = KvPoolCfg {
+        layers: spec.n_layers,
+        d_kv: spec.d_kv,
+        s_max: c.s_max,
+        page_rows: c.block.max(1),
+        budget_bytes: 0,
+    };
+    kcfg.budget_bytes =
+        kcfg.page_bytes() * 4 * width * kcfg.span_pages(c.s_train).max(1);
+    let kv = SharedKvPool::new(kcfg);
+    extract_all_pooled(backend, teacher, samples, cache_dir, label, width,
+                       Some(&kv))
+}
+
+/// `extract_all` with an explicit interleaving width and (optionally) a
+/// shared KV pool: samples sharing a prompt prefix then adopt each
+/// other's prefilled teacher pages, and a full-prefix hit skips the
+/// prompt-prefill forward. Width-1 output is token-for-token identical
+/// to any wider schedule (`tests/props.rs`).
+pub fn extract_all_pooled(backend: &dyn Backend, teacher: &[f32],
+                          samples: &[Sample], cache_dir: impl AsRef<Path>,
+                          label: &str, width: usize,
+                          kv: Option<&SharedKvPool>) -> Result<Vec<Ranks>> {
+    let c = backend.constants().clone();
+    let s = c.s_train;
+
+    invalidate_stale(cache_dir.as_ref(), label);
+    let key = cache_key(&c, EXTRACT_VARIANT, teacher, samples);
+    let path =
+        cache_dir.as_ref().join(format!("traj_{label}_{key:016x}.bin"));
     if path.exists() {
         if let Ok(cached) = load_cache(&path, samples.len(), s) {
             eprintln!("[traj] cache hit: {path:?}");
@@ -42,8 +87,48 @@ pub fn extract_all(eng: &Engine, teacher: &[f32], samples: &[Sample],
         }
     }
 
-    let mut out: Vec<Ranks> = Vec::with_capacity(samples.len());
+    for sample in samples {
+        let p = sample.prompt.len();
+        if p + c.gen_train > s {
+            bail!("prompt too long for trajectory extraction: {p}");
+        }
+    }
+
     let t0 = std::time::Instant::now();
+    let results =
+        run_pool_bounded(backend, teacher, samples.len(), width, |i| {
+            teacher_session(backend, &samples[i], EXTRACT_VARIANT, kv)
+        })?;
+
+    let mut out: Vec<Ranks> = Vec::with_capacity(samples.len());
+    for (sample, r) in samples.iter().zip(results) {
+        let ranks = r.unmask_ranks.ok_or_else(|| {
+            anyhow!("trajectory session returned no ranks")
+        })?;
+        let p = sample.prompt.len();
+        let mut row = vec![c.rank_never; s];
+        row[p..p + ranks.len()].copy_from_slice(&ranks);
+        out.push(row);
+    }
+    eprintln!(
+        "[traj] extracted {} trajectories ({width} wide) in {:.1}s",
+        out.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    save_cache(&path, &out)?;
+    Ok(out)
+}
+
+/// Exact on-device reference path: the batched whole-scan `trajectory`
+/// executable (`Backend::trajectory`), chunked at `b_traj`. Uncached —
+/// the pooled `extract_all` is the production path; this one exists for
+/// cross-checks and for backends whose compiled scan is cheaper than
+/// per-step forwards.
+pub fn extract_on_device(backend: &dyn Backend, teacher: &[f32],
+                         samples: &[Sample]) -> Result<Vec<Ranks>> {
+    let c = backend.constants().clone();
+    let (b, s) = (c.b_traj.max(1), c.s_train);
+    let mut out: Vec<Ranks> = Vec::with_capacity(samples.len());
     for chunk in samples.chunks(b) {
         let mut tokens = vec![MASK; b * s];
         let mut attn_valid = vec![0.0f32; b * s];
@@ -61,36 +146,70 @@ pub fn extract_all(eng: &Engine, teacher: &[f32], samples: &[Sample],
                 gen_mask[bi * s + i] = 1.0;
             }
         }
-        let r = exec::trajectory(eng, teacher, &tokens, &attn_valid,
-                                 &gen_mask)?;
+        let r = backend.trajectory(teacher, &tokens, &attn_valid,
+                                   &gen_mask)?;
         for (bi, _) in chunk.iter().enumerate() {
             out.push(r.rank[bi * s..(bi + 1) * s].to_vec());
         }
     }
-    eprintln!(
-        "[traj] extracted {} trajectories in {:.1}s",
-        out.len(),
-        t0.elapsed().as_secs_f64()
-    );
-    save_cache(&path, &out)?;
     Ok(out)
 }
 
-fn cache_key(teacher: &[f32], samples: &[Sample]) -> u64 {
-    // params: hash a strided sample (hashing 400k floats fully is fine too,
-    // but this keeps corpus rebuilds cheap)
-    let mut h = 0xD3u64;
-    for (i, x) in teacher.iter().enumerate() {
-        if i % 97 == 0 {
-            h = h.rotate_left(13) ^ x.to_bits() as u64;
-        }
+/// Cache identity: schema version, compile geometry (sequence/window
+/// shapes, batch, vocab, block, exec family), the *full* teacher
+/// parameter vector, and every corpus prompt. The old key hashed only
+/// every 97th teacher float and the first 64 prompts, so two teachers
+/// (or two corpora) could silently collide on one cache file.
+fn cache_key(c: &Constants, variant: &str, teacher: &[f32],
+             samples: &[Sample]) -> u64 {
+    let mut h = 0xD3u64 ^ u64::from(CACHE_MAGIC[7]);
+    for g in [c.s_train, c.gen_train, c.b_traj, c.vocab, c.block, c.window]
+    {
+        h = h.rotate_left(9) ^ g as u64;
     }
-    for s in samples.iter().take(64) {
+    h = h.rotate_left(9) ^ fnv1a(variant.as_bytes());
+    let mut th: u64 = 0xcbf29ce484222325;
+    for x in teacher {
+        th ^= x.to_bits() as u64;
+        th = th.wrapping_mul(0x100000001b3);
+    }
+    h = h.rotate_left(13) ^ th;
+    for s in samples {
         let bytes: Vec<u8> =
             s.prompt.iter().flat_map(|t| t.to_le_bytes()).collect();
         h = h.rotate_left(7) ^ fnv1a(&bytes);
     }
-    h ^ (samples.len() as u64) << 48
+    h ^ ((samples.len() as u64) << 48)
+}
+
+/// Drop `traj_{label}_*.bin` files written under an older schema magic
+/// (or corrupted beyond recognition) so stale ranks can never be served
+/// after a layout change.
+fn invalidate_stale(cache_dir: &Path, label: &str) {
+    let prefix = format!("traj_{label}_");
+    let Ok(entries) = std::fs::read_dir(cache_dir) else { return };
+    let mut dropped = 0usize;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !name.starts_with(&prefix) || !name.ends_with(".bin") {
+            continue;
+        }
+        let mut magic = [0u8; 8];
+        let fresh = std::fs::File::open(entry.path())
+            .and_then(|mut f| f.read_exact(&mut magic))
+            .is_ok()
+            && &magic == CACHE_MAGIC;
+        if !fresh && std::fs::remove_file(entry.path()).is_ok() {
+            dropped += 1;
+        }
+    }
+    if dropped > 0 {
+        eprintln!(
+            "[traj] dropped {dropped} stale-schema cache file(s) under \
+             {cache_dir:?}"
+        );
+    }
 }
 
 fn save_cache(path: &Path, ranks: &[Ranks]) -> Result<()> {
@@ -98,7 +217,7 @@ fn save_cache(path: &Path, ranks: &[Ranks]) -> Result<()> {
         std::fs::create_dir_all(parent)?;
     }
     let mut f = std::fs::File::create(path)?;
-    f.write_all(b"D3TRAJ01")?;
+    f.write_all(CACHE_MAGIC)?;
     f.write_all(&(ranks.len() as u32).to_le_bytes())?;
     for r in ranks {
         let bytes: Vec<u8> = r.iter().flat_map(|x| x.to_le_bytes()).collect();
@@ -112,7 +231,7 @@ fn load_cache(path: &Path, n: usize, s: usize) -> Result<Vec<Ranks>> {
         .with_context(|| format!("opening {path:?}"))?;
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
-    if &magic != b"D3TRAJ01" {
+    if &magic != CACHE_MAGIC {
         bail!("bad trajectory cache magic");
     }
     let mut len4 = [0u8; 4];
@@ -136,7 +255,89 @@ fn load_cache(path: &Path, n: usize, s: usize) -> Result<Vec<Ranks>> {
         .collect())
 }
 
-/// Default trajectory cache directory.
-pub fn default_cache_dir() -> PathBuf {
-    PathBuf::from("data/cache")
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+
+    use super::*;
+    use crate::data::{train_corpus, Family};
+    use crate::decode::SimBackend;
+    use crate::tokenizer::Tokenizer;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("d3llm_traj_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn corpus(sim: &SimBackend, n: usize, seed: u64) -> Vec<Sample> {
+        let tk = Tokenizer::new(sim.constants().vocab).unwrap();
+        train_corpus(&tk, &[(Family::Gsm8k, 1.0)], n, seed)
+    }
+
+    #[test]
+    fn pooled_extraction_caches_and_reloads_on_sim() {
+        let sim = SimBackend::new(14);
+        let c = sim.constants().clone();
+        let corpus = corpus(&sim, 6, 3);
+        let teacher = vec![0.37f32; 64];
+        let dir = tmp_dir("cache_roundtrip");
+
+        let first =
+            extract_all(&sim, &teacher, &corpus, &dir, "test").unwrap();
+        assert_eq!(first.len(), corpus.len());
+        // gen ranks are a permutation; prompt ranks are NEVER
+        for (sample, row) in corpus.iter().zip(&first) {
+            let p = sample.prompt.len();
+            let mut gen: Vec<i32> = row[p..p + c.gen_train].to_vec();
+            gen.sort();
+            assert_eq!(gen, (0..c.gen_train as i32).collect::<Vec<_>>());
+            assert!(row[..p].iter().all(|&r| r == c.rank_never));
+        }
+
+        let calls_before = sim.prefill_calls() + sim.window_calls();
+        let second =
+            extract_all(&sim, &teacher, &corpus, &dir, "test").unwrap();
+        assert_eq!(first, second, "cache must return identical ranks");
+        assert_eq!(sim.prefill_calls() + sim.window_calls(), calls_before,
+                   "cache hit must not re-run any forward");
+    }
+
+    #[test]
+    fn cache_key_separates_teachers_and_corpora() {
+        let sim = SimBackend::new(2);
+        let c = sim.constants().clone();
+        let corpus_a = corpus(&sim, 4, 1);
+        let corpus_b = corpus(&sim, 4, 2);
+        let ta = vec![0.5f32; 64];
+        let mut tb = ta.clone();
+        tb[63] = 0.5000001; // old strided hash skipped this float
+        let ka = cache_key(&c, EXTRACT_VARIANT, &ta, &corpus_a);
+        assert_ne!(ka, cache_key(&c, EXTRACT_VARIANT, &tb, &corpus_a),
+                   "every teacher float must be part of the key");
+        assert_ne!(ka, cache_key(&c, EXTRACT_VARIANT, &ta, &corpus_b),
+                   "corpus identity must be part of the key");
+        assert_ne!(ka, cache_key(&c, "pallas", &ta, &corpus_a),
+                   "exec family must be part of the key");
+        let mut c2 = c.clone();
+        c2.s_train += 1;
+        assert_ne!(ka, cache_key(&c2, EXTRACT_VARIANT, &ta, &corpus_a),
+                   "compile geometry must be part of the key");
+    }
+
+    #[test]
+    fn stale_schema_cache_is_invalidated_on_open() {
+        let sim = SimBackend::new(4);
+        let corpus = corpus(&sim, 3, 7);
+        let teacher = vec![0.2f32; 64];
+        let dir = tmp_dir("stale_schema");
+        // a v1-schema leftover under the same label
+        let stale = dir.join("traj_test_00000000deadbeef.bin");
+        std::fs::write(&stale, b"D3TRAJ01junkjunkjunk").unwrap();
+
+        let out = extract_all(&sim, &teacher, &corpus, &dir, "test").unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(!stale.exists(), "stale-schema file must be dropped");
+    }
 }
