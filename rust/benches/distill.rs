@@ -172,11 +172,11 @@ fn main() {
         "pooled extraction must deliver >= 1.5x modeled throughput at \
          {WIDTH} concurrent, got {ratio:.2}x"
     );
-    println!(
-        "BENCH {{\"bench\":\"distill\",\"samples\":{N},\"width\":{WIDTH},\
+    d3llm::util::emit_bench_json("distill", &format!(
+        "{{\"bench\":\"distill\",\"samples\":{N},\"width\":{WIDTH},\
          \"seq_makespan_s\":{seq_make:.4},\"pooled_makespan_s\":\
          {int_make:.4},\"speedup\":{ratio:.3}}}"
-    );
+    ));
     println!("PASS: >= 1.5x modeled extraction throughput at {WIDTH} wide");
 
     shared_prefix_phase(&m, beta);

@@ -211,6 +211,13 @@ fn main() {
         ratio >= 1.5,
         "interleaving must deliver >= 1.5x aggregate throughput, got {ratio:.2}x"
     );
+    d3llm::util::emit_bench_json("interleave", &format!(
+        "{{\"bench\":\"interleave\",\"requests\":{},\
+         \"seq_makespan_s\":{seq_make:.4},\
+         \"interleaved_makespan_s\":{int_make:.4},\
+         \"speedup\":{ratio:.3}}}",
+        LENS.len()
+    ));
     println!("PASS: >= 1.5x aggregate throughput for 8 concurrent requests");
 
     mixed_strategy_pool(&params);

@@ -53,7 +53,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::decode::{self, DecodeCfg, DecodeSession, SessionProgress,
                     Strategy};
-use crate::model::kv_pool::{KvPoolCfg, SharedKvPool};
+use crate::model::kv_pool::{is_pool_exhausted, KvPoolCfg, SharedKvPool};
 use crate::model::ParamStore;
 use crate::runtime::Engine;
 use crate::tokenizer::Tokenizer;
@@ -404,10 +404,10 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
         //      enqueue timestamp (strict head-of-line order within
         //      priority — later small requests cannot starve it). A
         //      waiting head re-resolves its geometry each cycle and an
-        //      admitted one probes the prefix index twice (can_admit +
-        //      PagedKv::admit) — both are O(prompt_len) on one request
-        //      per cycle, accepted to keep required_pages the single
-        //      source of truth inside the pool.
+        //      admitted one probes the prefix index up to three times
+        //      (required_pages_for + can_admit + PagedKv::admit) — each
+        //      O(prompt_len) on one request per cycle, accepted to keep
+        //      required_pages the single source of truth inside the pool.
         while pool.len() < max_live {
             let verdict = match batcher.peek() {
                 None => break,
@@ -429,11 +429,24 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                                     // fast; one that can fit later stays
                                     // queued (reclaimable pages are
                                     // evicted on demand by the allocator,
-                                    // so they never block admission)
+                                    // so they never block admission). The
+                                    // never-fits bound charges the pages
+                                    // the request would actually draw —
+                                    // prefix pages expected to be adopted
+                                    // from an indexed chain are credited
+                                    // (`required_pages_for`), so prefix-
+                                    // heavy requests whose no-sharing
+                                    // worst case exceeds the budget still
+                                    // admit while their chain is indexed;
+                                    // if the chain is evicted the bound
+                                    // degrades to the worst case on the
+                                    // next cycle's re-probe.
                                     let geo = decode::kv_admission_geometry(
                                         &dcfg, &c, prompt.len(), gen_len);
-                                    if kv.worst_case_pages(geo.prefix_rows,
-                                                           geo.span_rows)
+                                    if kv.required_pages_for(
+                                        &prompt, &geo.prefix_tag,
+                                        geo.prefix_rows, geo.span_rows,
+                                        geo.causal_prefix)
                                         > kv.max_pages()
                                     {
                                         Verdict::Reject(anyhow!(
@@ -464,10 +477,12 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                     reply_err(&stats, &queued.payload, &e);
                 }
                 Verdict::Admit(dcfg, prompt, gen_len) => {
-                    let queued = batcher.pop().expect("peeked head");
-                    let queue_ms =
-                        queued.enqueued.elapsed().as_secs_f64() * 1e3;
-                    let job = queued.payload;
+                    // build the session BEFORE popping the queue head, so
+                    // a page-budget failure between the `can_admit` probe
+                    // and `PagedKv::admit` (e.g. the prefix chain was
+                    // evicted mid-round and the requirement grew) leaves
+                    // the request queued with its FIFO slot and enqueue
+                    // timestamp intact instead of killing it
                     let draft =
                         draft_params.as_ref().map(|d| d.data.as_slice());
                     let admitted = match pool.kv_pool() {
@@ -482,13 +497,29 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                     };
                     match admitted {
                         Ok(session) => {
+                            let queued =
+                                batcher.pop().expect("peeked head");
+                            let queue_ms = queued.enqueued.elapsed()
+                                .as_secs_f64() * 1e3;
+                            let job = queued.payload;
                             pool.admit(
                                 job.req.id.clone(),
                                 ActiveJob { reply: job.reply, queue_ms },
                                 session,
                             );
                         }
-                        Err(e) => reply_err(&stats, &job, &e),
+                        Err(e) if is_pool_exhausted(&e)
+                            && !pool.is_empty() =>
+                        {
+                            // conservative fallback: wait for live
+                            // sessions to release pages, then re-probe
+                            break;
+                        }
+                        Err(e) => {
+                            let queued =
+                                batcher.pop().expect("peeked head");
+                            reply_err(&stats, &queued.payload, &e);
+                        }
                     }
                 }
             }

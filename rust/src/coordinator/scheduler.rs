@@ -23,9 +23,13 @@
 //! back to its session in admission order. Plans are pure descriptions
 //! of forwards, so coalescing cannot change any session's trajectory:
 //! per-session outputs are bit-identical to the B=1 path (asserted in
-//! tests/scheduler_determinism.rs). If a batched call fails, the group
-//! falls back to per-session forwards so one bad request cannot poison
-//! its round-mates.
+//! tests/scheduler_determinism.rs). Each `WindowItem` of a coalesced
+//! round carries that session's `KvView`, so a batched round hands the
+//! backend B per-session *page tables* (read paged-natively, see
+//! `decode::backend`), never B dense cache copies. If a batched call
+//! fails, the group falls back to per-session forwards so one bad
+//! request cannot poison its round-mates (window-group isolation is
+//! pinned in tests/scheduler_determinism.rs).
 
 use std::time::Instant;
 

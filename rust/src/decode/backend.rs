@@ -16,9 +16,13 @@
 //!
 //! The windowed forwards take the session cache as `&dyn KvView`, so a
 //! session backed by the dense `KvCache` and one backed by a `PagedKv`
-//! view into the shared `SharedKvPool` run through identical code. The
-//! `SimBackend` only reads `valid_count()`; the PJRT engine stages the
-//! view into dense buffers (`KvView::k_dense` et al.).
+//! view into the shared `SharedKvPool` run through identical code. Both
+//! backends read the cache paged-natively (`KvView::page_args` /
+//! `for_each_page`): `SimBackend` fingerprints the page table in place
+//! (O(live-pages) per step), and the PJRT engine stages only the pages
+//! that changed since its reusable scratch last held them
+//! (`Engine::kv_stage`) — dense caches are still handed over borrow-only,
+//! and neither path re-gathers `[L, S_max, d_kv]` per forward.
 //!
 //! ## Batched forwards
 //!
@@ -48,7 +52,9 @@ pub struct PrefillItem<'a> {
 }
 
 /// One windowed cached forward of a batched `decode_window_batch` call.
-/// Each item carries its own session's cache view (per-request state).
+/// Each item carries its own session's cache view (per-request state):
+/// a coalesced round hands the backend B per-session page tables, not B
+/// dense cache copies — the backend reads each view paged-natively.
 pub struct WindowItem<'a> {
     pub exec: &'a str,
     pub tokens: &'a [i32],

@@ -319,10 +319,21 @@ impl SimBackend {
         if w != want || win_pos.len() != w || win_valid.len() != w {
             bail!("sim decode: `{exec}` window inputs must be length {want}");
         }
+        // Paged-native cache read: the valid-row count is derived from
+        // the view's page table (sum of per-page valid counters,
+        // O(live-pages) per step — `KvView::for_each_page`), not from a
+        // dense `[S_max]` mask. The sum equals `valid_count()` by
+        // construction on both storage backends, so outputs stay
+        // bit-identical to the dense baseline while the sim reads pages
+        // in place exactly like the engine's staged path.
+        let mut cache_rows = 0usize;
+        cache.for_each_page(&mut |pg| cache_rows += pg.valid_rows);
+        debug_assert_eq!(cache_rows, cache.valid_count(),
+                         "page-table valid sum diverged from the counter");
         let ctx = self.context_hash(win_tokens, win_pos)
             ^ Self::mix(params.first().map(|p| p.to_bits() as u64)
                 .unwrap_or(0) ^ params.len() as u64)
-            ^ Self::mix(cache.valid_count() as u64);
+            ^ Self::mix(cache_rows as u64);
         let (l, d) = (self.spec.n_layers, self.spec.d_kv);
         let mut out = DecodeOut {
             argmax: vec![0; w],

@@ -3,11 +3,13 @@
 //! unpacks outputs into plain Rust vectors.
 
 use anyhow::{bail, Result};
+use xla::Literal;
 
 use crate::model::kv_cache::KvView;
 use crate::runtime::engine::{
     scalar_f32_out, to_vec_f32, to_vec_i32, ArgData, Engine, TypedArgs,
 };
+use crate::runtime::manifest::ExecSpec;
 
 /// Output of `prefill` / `ar_prefill`: full-sequence caches + head stats.
 pub struct PrefillOut {
@@ -73,10 +75,15 @@ pub fn prefill(eng: &Engine, exec: &str, params: &[f32], tokens: &[i32],
 
 /// Windowed forward against the KV cache (`decode_{variant}`, `ar_step`,
 /// `ar_verify`, `draft_ar_step`): the serving hot path. Accepts any
-/// [`KvView`]: the dense cache hands over its buffers borrow-only, the
-/// paged view gathers its pages into a dense staging copy (until a
-/// paged-attention executable that takes page tables directly lands in
-/// the AOT layer).
+/// [`KvView`]: the dense cache hands over its buffers borrow-only; a
+/// paged view is read through its page table (`KvView::page_rows` /
+/// `for_each_page`, allocation-free) into
+/// the engine's reusable staging scratch, which copies only pages that
+/// changed since the scratch last held them (`Engine::kv_stage`) — the
+/// old per-call full-cache `k_dense()` gather is gone from this path.
+/// The HLO exec interface is unchanged: the executable still consumes
+/// dense `[L, S_max, d_kv]` buffers until a true paged-attention
+/// executable lands in the AOT layer (python/compile).
 pub fn decode_window(eng: &Engine, exec: &str, params: &[f32],
                      win_tokens: &[i32], win_pos: &[i32], win_valid: &[f32],
                      cache: &dyn KvView) -> Result<DecodeOut> {
@@ -85,27 +92,29 @@ pub fn decode_window(eng: &Engine, exec: &str, params: &[f32],
     if win_tokens.len() != w || win_pos.len() != w || win_valid.len() != w {
         bail!("decode: window inputs must be length {w}");
     }
-    let (ck, cv, cvalid) =
-        (cache.k_dense(), cache.v_dense(), cache.valid_dense());
-    let out = if eng.buffered() {
-        eng.run_buffered(exec, params, &[
-            ArgData::I32(win_tokens, &spec.inputs[1].shape),
-            ArgData::I32(win_pos, &spec.inputs[2].shape),
-            ArgData::F32(win_valid, &spec.inputs[3].shape),
-            ArgData::F32(ck.as_ref(), &spec.inputs[4].shape),
-            ArgData::F32(cv.as_ref(), &spec.inputs[5].shape),
-            ArgData::F32(cvalid.as_ref(), &spec.inputs[6].shape),
-        ])?
+    // Every cache argument is validated against the manifest shape on
+    // BOTH call paths (buffered and literal); a view whose capacity
+    // diverges from the lowered S_max fails here with one clear error
+    // instead of a path-dependent shape mismatch downstream.
+    let s_exec: usize =
+        spec.inputs[6].shape.iter().product::<usize>().max(1);
+    if cache.capacity() != s_exec {
+        bail!("decode `{exec}`: cache capacity {} != executable S_max \
+               {s_exec} (manifest valid-mask shape {:?})",
+              cache.capacity(), spec.inputs[6].shape);
+    }
+    let out = if cache.page_rows().is_some() {
+        // paged-native read: stage only the pages that changed since the
+        // scratch last held them (allocation-free steady state)
+        let mut stage = eng.kv_stage();
+        stage.stage(cache)?;
+        run_decode(eng, exec, &spec, params, win_tokens, win_pos,
+                   win_valid, &stage.k, &stage.v, &stage.valid)?
     } else {
-        let args = TypedArgs::new()
-            .f32(params, &spec.inputs[0].shape)?
-            .i32(win_tokens, &[w])?
-            .i32(win_pos, &[w])?
-            .f32(win_valid, &[w])?
-            .f32(ck.as_ref(), &spec.inputs[4].shape)?
-            .f32(cv.as_ref(), &spec.inputs[5].shape)?
-            .f32(cvalid.as_ref(), &[cache.capacity()])?;
-        eng.run(exec, args)?
+        let (ck, cv, cvalid) =
+            (cache.k_dense(), cache.v_dense(), cache.valid_dense());
+        run_decode(eng, exec, &spec, params, win_tokens, win_pos,
+                   win_valid, ck.as_ref(), cv.as_ref(), cvalid.as_ref())?
     };
     Ok(DecodeOut {
         argmax: to_vec_i32(&out[0], &spec.outputs[0])?,
@@ -114,6 +123,36 @@ pub fn decode_window(eng: &Engine, exec: &str, params: &[f32],
         k_win: to_vec_f32(&out[3], &spec.outputs[3])?,
         v_win: to_vec_f32(&out[4], &spec.outputs[4])?,
     })
+}
+
+/// Shared tail of `decode_window`: issue the forward with the staged (or
+/// borrowed) dense cache image. Both the buffered and the literal path
+/// take every shape from the manifest spec.
+#[allow(clippy::too_many_arguments)]
+fn run_decode(eng: &Engine, exec: &str, spec: &ExecSpec, params: &[f32],
+              win_tokens: &[i32], win_pos: &[i32], win_valid: &[f32],
+              ck: &[f32], cv: &[f32], cvalid: &[f32])
+              -> Result<Vec<Literal>> {
+    if eng.buffered() {
+        eng.run_buffered(exec, params, &[
+            ArgData::I32(win_tokens, &spec.inputs[1].shape),
+            ArgData::I32(win_pos, &spec.inputs[2].shape),
+            ArgData::F32(win_valid, &spec.inputs[3].shape),
+            ArgData::F32(ck, &spec.inputs[4].shape),
+            ArgData::F32(cv, &spec.inputs[5].shape),
+            ArgData::F32(cvalid, &spec.inputs[6].shape),
+        ])
+    } else {
+        let args = TypedArgs::new()
+            .f32(params, &spec.inputs[0].shape)?
+            .i32(win_tokens, &spec.inputs[1].shape)?
+            .i32(win_pos, &spec.inputs[2].shape)?
+            .f32(win_valid, &spec.inputs[3].shape)?
+            .f32(ck, &spec.inputs[4].shape)?
+            .f32(cv, &spec.inputs[5].shape)?
+            .f32(cvalid, &spec.inputs[6].shape)?;
+        eng.run(exec, args)
+    }
 }
 
 /// Fused fwd+bwd+AdamW step (`train_diff` / `train_ar` / `draft_train_ar`).

@@ -22,16 +22,75 @@ use std::borrow::Cow;
 
 use anyhow::Result;
 
+/// One page of a KV view, exposed borrow-only to backend read paths
+/// ([`KvView::for_each_page`]). Layout is the pool's page layout: `k`/`v`
+/// are `[L, page_rows, d_kv]` row-major, `valid` is `[page_rows]`.
+pub struct KvPage<'a> {
+    /// Page slot: this page covers sequence rows
+    /// `slot * page_rows .. slot * page_rows + rows`.
+    pub slot: usize,
+    /// Sequence rows the page covers (`page_rows`, clipped at capacity).
+    pub rows: usize,
+    /// Valid rows in this page (maintained counter).
+    pub valid_rows: usize,
+    /// Stable physical-page identity, unique across pools for the
+    /// lifetime of the process (a recycled page gets a fresh id).
+    pub id: u64,
+    /// Content version: bumped whenever the page's k/v/valid rows change.
+    /// `0` means untracked — readers must treat the content as changed.
+    pub stamp: u64,
+    /// `[L, page_rows, d_kv]` key rows.
+    pub k: &'a [f32],
+    /// `[L, page_rows, d_kv]` value rows.
+    pub v: &'a [f32],
+    /// `[page_rows]` row-validity mask.
+    pub valid: &'a [f32],
+}
+
+/// Page-table description of a paged view: which slots hold live pages,
+/// each page's identity/version and valid-row count — the argument form
+/// a future paged-attention executable consumes directly, and the
+/// introspection/telemetry view today. Hot-path reads go through
+/// [`KvView::page_rows`] (branch) + [`KvView::for_each_page`] (borrow-
+/// only visit) so no table description is allocated per forward.
+#[derive(Debug, Clone, Default)]
+pub struct KvPageArgs {
+    /// Rows per page of the view's layout.
+    pub page_rows: usize,
+    /// Slots holding live pages, ascending.
+    pub slots: Vec<usize>,
+    /// Physical page ids, parallel to `slots`.
+    pub ids: Vec<u64>,
+    /// Content stamps, parallel to `slots`.
+    pub stamps: Vec<u64>,
+    /// Per-page valid-row counts, parallel to `slots`.
+    pub valid_rows: Vec<usize>,
+}
+
+impl KvPageArgs {
+    /// Total valid rows across the table — the O(live-pages) analog of a
+    /// dense `[S]` mask scan.
+    pub fn valid_total(&self) -> usize {
+        self.valid_rows.iter().sum()
+    }
+}
+
 /// Uniform cache interface shared by the dense [`KvCache`] and the paged
 /// [`crate::model::kv_pool::PagedKv`] view. The mutating entry points
 /// return `Result` because a paged view can exhaust the pool's page
 /// budget mid-operation; the dense implementation never fails.
 ///
-/// The `*_dense` getters exist for backends that feed the cache to an
-/// executable as one contiguous buffer (the PJRT engine): the dense cache
-/// borrows its storage at zero cost, the paged view gathers its pages
-/// into an owned staging buffer (until a paged-attention executable that
-/// consumes page tables directly lands in the AOT layer).
+/// Backends read the cache through two paths:
+///
+///   * the `*_dense` getters hand the cache over as one contiguous
+///     buffer — zero-cost borrows for dense storage, a full gather for a
+///     paged view (kept as the reference read path, off the hot path);
+///   * the paged-native path — `page_args` + `for_each_page` — exposes
+///     the live pages in place, O(live-pages) per read. The simulated
+///     backend fingerprints the cache through it, and the PJRT engine
+///     stages only changed pages into a reusable scratch
+///     ([`KvStaging`]) instead of re-gathering `[L, S_max, d_kv]` per
+///     forward.
 pub trait KvView {
     fn layers(&self) -> usize;
 
@@ -56,6 +115,42 @@ pub trait KvView {
 
     /// Dense `[S]` row-validity mask.
     fn valid_dense(&self) -> Cow<'_, [f32]>;
+
+    /// Rows per page of the paged layout, `None` for dense storage — the
+    /// allocation-free "is this view paged?" probe backends use before
+    /// committing to the paged read path (the hot path must not build a
+    /// [`KvPageArgs`] just to branch).
+    fn page_rows(&self) -> Option<usize> {
+        None
+    }
+
+    /// Page-table description (owned, allocating) for telemetry, tests
+    /// and future on-device page-table arguments; `None` for dense
+    /// storage (read it borrow-only via the `*_dense` getters). Hot
+    /// paths branch on [`KvView::page_rows`] and read via
+    /// [`KvView::for_each_page`] instead.
+    fn page_args(&self) -> Option<KvPageArgs> {
+        None
+    }
+
+    /// Visit the live pages in ascending slot order (the paged-native
+    /// read path). The default presents the whole dense buffer as one
+    /// untracked pseudo-page (`stamp == 0`, borrow-only for dense
+    /// storage); the paged view overrides with its table, O(live-pages).
+    fn for_each_page(&self, f: &mut dyn FnMut(KvPage<'_>)) {
+        let (k, v, valid) = (self.k_dense(), self.v_dense(),
+                             self.valid_dense());
+        f(KvPage {
+            slot: 0,
+            rows: self.capacity(),
+            valid_rows: self.valid_count(),
+            id: u64::MAX,
+            stamp: 0,
+            k: k.as_ref(),
+            v: v.as_ref(),
+            valid: valid.as_ref(),
+        });
+    }
 
     /// Install rows from a full-sequence forward (`prefill` output, shape
     /// `[L, S, d_kv]`) for positions `pos0..pos1`, marking them valid.
@@ -252,6 +347,176 @@ impl KvView for KvCache {
     }
 }
 
+// ---------------------------------------------------------------- staging
+
+/// Cumulative counters of one [`KvStaging`] scratch (bench + stats).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvStageStats {
+    /// `stage` calls taken (one per staged windowed forward).
+    pub stage_calls: u64,
+    /// Pages whose content was copied into the scratch.
+    pub pages_copied: u64,
+    /// Pages skipped because the scratch already held that exact
+    /// (id, stamp) content at that slot — the reuse win.
+    pub pages_reused: u64,
+    /// Slots zeroed because the staged view no longer holds a page there.
+    pub dead_slots_zeroed: u64,
+    /// Bytes written into the scratch (copies + dead-slot zeroing). The
+    /// dense-gather equivalent is `stage_calls * dense_bytes` where
+    /// `dense_bytes = (2 * L * S_max * d_kv + S_max) * 4`.
+    pub bytes_copied: u64,
+}
+
+/// Reusable bounded staging scratch for paged KV views: the engine-side
+/// replacement for the per-forward `k_dense()` gather. One scratch is
+/// reused across rounds and sessions; `stage` brings it to the exact
+/// dense image of the given view (`k`/`v`/`valid` bit-identical to
+/// `k_dense()`/`v_dense()`/`valid_dense()`), copying **only** pages whose
+/// (identity, content stamp) differ from what the scratch already holds
+/// at that slot. Steady state is allocation-free: buffers are sized once
+/// per geometry, and the round marker avoids per-call bookkeeping
+/// allocations.
+///
+/// Shared prompt pages (CoW-adopted, never written) keep their identity
+/// and stamp across sessions, so interleaved same-prefix sessions
+/// re-stage only their private tail pages — the staged-bytes bar in
+/// `benches/kv_pool.rs` holds the >= 4x reduction vs. the dense gather
+/// at 8 concurrent shared-prefix sessions.
+#[derive(Default)]
+pub struct KvStaging {
+    layers: usize,
+    s_max: usize,
+    d_kv: usize,
+    page_rows: usize,
+    /// `[L, S_max, d_kv]` staged keys (dense image of the last view).
+    pub k: Vec<f32>,
+    /// `[L, S_max, d_kv]` staged values.
+    pub v: Vec<f32>,
+    /// `[S_max]` staged row-validity mask.
+    pub valid: Vec<f32>,
+    /// Per-slot (page id, content stamp) the scratch currently holds.
+    slots: Vec<Option<(u64, u64)>>,
+    /// Round marker per slot (`== round` -> seen by the current stage).
+    seen: Vec<u64>,
+    round: u64,
+    stats: KvStageStats,
+}
+
+impl KvStaging {
+    pub fn new() -> KvStaging {
+        KvStaging::default()
+    }
+
+    pub fn stats(&self) -> KvStageStats {
+        self.stats
+    }
+
+    /// (Re)size for a view geometry; a change resets the scratch (full
+    /// zero + forgotten slot state). No-op on the steady-state hot path.
+    fn ensure_geometry(&mut self, layers: usize, s_max: usize, d_kv: usize,
+                       page_rows: usize) {
+        if (self.layers, self.s_max, self.d_kv, self.page_rows)
+            == (layers, s_max, d_kv, page_rows)
+        {
+            return;
+        }
+        self.layers = layers;
+        self.s_max = s_max;
+        self.d_kv = d_kv;
+        self.page_rows = page_rows;
+        let n = layers * s_max * d_kv;
+        self.k.clear();
+        self.k.resize(n, 0.0);
+        self.v.clear();
+        self.v.resize(n, 0.0);
+        self.valid.clear();
+        self.valid.resize(s_max, 0.0);
+        let nslots = if page_rows == 0 { 0 } else {
+            s_max.div_ceil(page_rows)
+        };
+        self.slots.clear();
+        self.slots.resize(nslots, None);
+        self.seen.clear();
+        self.seen.resize(nslots, 0);
+        self.round = 0;
+    }
+
+    /// Bring the scratch to the dense image of `cache` (a paged view:
+    /// `page_rows` must be `Some`). After this returns, `self.k/v/valid`
+    /// are bit-identical to the view's dense getters, at the cost of
+    /// copying only the pages that changed since the scratch last held
+    /// them. Rows of slots with no live page are zero (`valid` == 0
+    /// masks them for the executable; k/v of a freshly-dead slot are
+    /// zeroed too so the image stays exactly the dense gather).
+    pub fn stage(&mut self, cache: &dyn KvView) -> Result<()> {
+        let Some(page_rows) = cache.page_rows() else {
+            anyhow::bail!("kv staging: view has no page table (dense \
+                           views are read borrow-only)");
+        };
+        self.ensure_geometry(cache.layers(), cache.capacity(),
+                             cache.d_kv(), page_rows);
+        self.stats.stage_calls += 1;
+        self.round += 1;
+        let round = self.round;
+        let (l, s, d, r) = (self.layers, self.s_max, self.d_kv,
+                            self.page_rows);
+        // split-borrow the buffers so the visitor closure can write them
+        // while `self`'s bookkeeping fields stay separately borrowed
+        let (kbuf, vbuf, valid_buf) =
+            (&mut self.k, &mut self.v, &mut self.valid);
+        let (slots, seen, stats) =
+            (&mut self.slots, &mut self.seen, &mut self.stats);
+        cache.for_each_page(&mut |pg| {
+            let slot = pg.slot;
+            if slot >= slots.len() {
+                return; // defensive: out-of-range slot
+            }
+            seen[slot] = round;
+            if pg.stamp != 0 && slots[slot] == Some((pg.id, pg.stamp)) {
+                stats.pages_reused += 1;
+                return; // identical content already staged here
+            }
+            let rows = pg.rows.min(s - slot * r);
+            for layer in 0..l {
+                let src = layer * r * d;
+                let dst = (layer * s + slot * r) * d;
+                kbuf[dst..dst + rows * d]
+                    .copy_from_slice(&pg.k[src..src + rows * d]);
+                vbuf[dst..dst + rows * d]
+                    .copy_from_slice(&pg.v[src..src + rows * d]);
+            }
+            valid_buf[slot * r..slot * r + rows]
+                .copy_from_slice(&pg.valid[..rows]);
+            slots[slot] = Some((pg.id, pg.stamp));
+            stats.pages_copied += 1;
+            stats.bytes_copied += ((2 * l * d + 1) * rows * 4) as u64;
+        });
+        // zero slots the previous image held but this view does not
+        for slot in 0..self.slots.len() {
+            if self.seen[slot] == round || self.slots[slot].is_none() {
+                continue;
+            }
+            let rows = r.min(s - slot * r);
+            for layer in 0..l {
+                let dst = (layer * s + slot * r) * d;
+                self.k[dst..dst + rows * d].fill(0.0);
+                self.v[dst..dst + rows * d].fill(0.0);
+            }
+            self.valid[slot * r..slot * r + rows].fill(0.0);
+            self.slots[slot] = None;
+            self.stats.dead_slots_zeroed += 1;
+            self.stats.bytes_copied += ((2 * l * d + 1) * rows * 4) as u64;
+        }
+        Ok(())
+    }
+
+    /// Bytes one dense `[L, S_max, d_kv]` gather of the current geometry
+    /// costs — the per-forward baseline `stage` is measured against.
+    pub fn dense_gather_bytes(&self) -> u64 {
+        ((2 * self.layers * self.d_kv + 1) * self.s_max * 4) as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +560,28 @@ mod tests {
         assert_eq!(c.valid_count(), 0);
         c.invalidate_from(0); // idempotent
         assert_eq!(c.valid_count(), 0);
+    }
+
+    #[test]
+    fn dense_views_read_as_one_untracked_pseudo_page() {
+        let mut c = KvCache::new(2, 8, 3);
+        let full: Vec<f32> = (0..2 * 8 * 3).map(|i| i as f32).collect();
+        c.install_full(&full, &full, 0, 5);
+        assert!(c.page_args().is_none(), "dense views have no page table");
+        let mut pages = 0usize;
+        let mut rows = 0usize;
+        c.for_each_page(&mut |pg| {
+            pages += 1;
+            rows += pg.valid_rows;
+            assert_eq!(pg.slot, 0);
+            assert_eq!(pg.rows, 8);
+            assert_eq!(pg.stamp, 0, "dense pseudo-page is untracked");
+            assert_eq!(pg.k.len(), 2 * 8 * 3);
+            assert_eq!(pg.valid[4], 1.0);
+            assert_eq!(pg.valid[5], 0.0);
+        });
+        assert_eq!(pages, 1);
+        assert_eq!(rows, c.valid_count());
     }
 
     #[test]

@@ -40,6 +40,12 @@
 //!     pages are kept (ref count 0) so future same-prefix sessions still
 //!     hit; they are evicted LRU-first whenever the allocator needs a
 //!     physical page, so they never block admission.
+//!   * **Paged-native reads.** Backends read a view through its page
+//!     table (`KvView::page_args` / `for_each_page`), O(live-pages) per
+//!     windowed forward: the sim fingerprints pages in place, the engine
+//!     stages only pages whose (uid, stamp) changed since its reusable
+//!     scratch last held them (`super::kv_cache::KvStaging`). The dense
+//!     `k_dense()` gather remains only as the reference read path.
 //!
 //! On the deterministic `SimBackend`, a paged session's decode output is
 //! bit-identical to the dense baseline for every strategy
@@ -56,10 +62,21 @@ use std::borrow::Cow;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
-use super::kv_cache::KvView;
+use super::kv_cache::{KvPage, KvPageArgs, KvView};
+
+/// Process-wide physical-page identity source: ids stay unique across
+/// pools and across recycling, so a staging scratch keyed by (id, stamp)
+/// can never confuse two pages — even pages of different pools staged
+/// through one scratch.
+static PAGE_UID: AtomicU64 = AtomicU64::new(1);
+
+fn next_page_uid() -> u64 {
+    PAGE_UID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Marker embedded in every budget-exhaustion error so callers can
 /// distinguish "no page budget, retry later" from hard failures without
@@ -130,6 +147,10 @@ pub struct KvPoolStats {
     pub evictions: u64,
     /// Admissions rejected for lack of page budget.
     pub admit_rejects: u64,
+    /// Prefix-index hits discarded because the indexed page's own chain
+    /// hash no longer matched at install time (index superseded between
+    /// the admission probe and adoption).
+    pub stale_hash_skips: u64,
     /// Mid-decode page allocations that failed (budget exhausted beyond
     /// the admission reservation).
     pub alloc_fails: u64,
@@ -159,6 +180,13 @@ struct Page {
     /// Prefix-index key this page is registered under, if any.
     hash: Option<u64>,
     lru: u64,
+    /// Process-unique physical identity; refreshed on recycling so a
+    /// reader caching (uid, stamp) can never mistake a recycled page for
+    /// the one it staged earlier.
+    uid: u64,
+    /// Content version: bumped on every k/v/valid mutation. Starts at 1
+    /// (`0` is the KvPage "untracked" sentinel).
+    stamp: u64,
 }
 
 impl Page {
@@ -172,6 +200,8 @@ impl Page {
             refs: 0,
             hash: None,
             lru: 0,
+            uid: next_page_uid(),
+            stamp: 1,
         }
     }
 
@@ -182,6 +212,8 @@ impl Page {
         self.valid_rows = 0;
         self.refs = 0;
         self.hash = None;
+        self.uid = next_page_uid();
+        self.stamp = 1;
     }
 }
 
@@ -334,6 +366,23 @@ fn chain_hashes(seed: u64, tokens: &[i32], prefix_rows: usize,
     out
 }
 
+/// Resolve a prefix-index hit, re-verifying that the indexed page still
+/// carries the chain hash it is indexed under. The index and the page's
+/// own `hash` field are kept consistent by construction, but adoption is
+/// the one place where trusting a stale mapping would splice another
+/// prompt's rows into a session — so the hit is re-verified at install
+/// time instead of assumed (the admission probe and the actual adoption
+/// happen in different rounds under peek-based admission, with
+/// `evict_reclaimable` free to recycle pages in between).
+fn verified_hit(inner: &PoolInner, h: u64) -> Option<usize> {
+    let pid = *inner.index.get(&h)?;
+    if inner.pages[pid].hash == Some(h) {
+        Some(pid)
+    } else {
+        None
+    }
+}
+
 /// Pages a session needs admitted: its whole span, minus pages adopted
 /// from live sessions, plus one copy-on-write margin when the prompt
 /// prefix ends mid-page — that partial page is (or becomes) registered
@@ -350,7 +399,7 @@ fn required_pages(inner: &PoolInner, hashes: &[(usize, u64)],
     let mut live_hits = 0usize;
     let mut hits = 0usize;
     for &(_, h) in hashes {
-        if let Some(&pid) = inner.index.get(&h) {
+        if let Some(pid) = verified_hit(inner, h) {
             hits += 1;
             if inner.pages[pid].refs > 0 {
                 live_hits += 1;
@@ -362,7 +411,9 @@ fn required_pages(inner: &PoolInner, hashes: &[(usize, u64)],
     }
     let margin = usize::from(!hashes.is_empty()
         && prefix_rows % inner.cfg.page_rows != 0);
-    span_slots - live_hits + margin
+    // saturating: a caller probing an out-of-range geometry (prefix
+    // beyond span) reads "free", and admit's range checks reject it
+    span_slots.saturating_sub(live_hits) + margin
 }
 
 // ---------------------------------------------------------------- pool
@@ -422,14 +473,39 @@ impl SharedKvPool {
     }
 
     /// Worst-case pages one session of this geometry can ever hold
-    /// (no-hit reservation): the admission hard-reject bound — a request
-    /// exceeding this against `max_pages` can never be served.
+    /// (no-hit reservation). NOTE: as a hard-reject bound this
+    /// over-charges prefix-heavy workloads — a request whose worst case
+    /// exceeds `max_pages` may still be servable when its prompt pages
+    /// are adopted from an indexed chain. Admission should bound against
+    /// [`SharedKvPool::required_pages_for`], which accounts the expected
+    /// shared-prefix adoption under the current index (re-evaluated per
+    /// cycle, so an evicted chain degrades to this worst case instead of
+    /// admitting on stale expectations).
     pub fn worst_case_pages(&self, prefix_rows: usize, span_rows: usize)
                             -> usize {
         let p = self.inner.borrow();
         p.cfg.span_pages(span_rows)
             + usize::from(prefix_rows > 0
                           && prefix_rows % p.cfg.page_rows != 0)
+    }
+
+    /// Pages this request would draw from the budget if admitted right
+    /// now: the span reservation minus prefix pages expected to be
+    /// adopted from live sessions under the current index (hash-verified,
+    /// exactly the accounting `PagedKv::admit` applies). Between this
+    /// probe and the actual admit the index can change — callers must
+    /// treat an exhausted `admit` as "wait and re-probe", not as a hard
+    /// failure (the serving coordinator leaves the request queued).
+    pub fn required_pages_for(&self, prompt_tokens: &[i32],
+                              prefix_tag: &str, prefix_rows: usize,
+                              span_rows: usize, causal: bool) -> usize {
+        let p = self.inner.borrow();
+        let prefix_rows = prefix_rows.min(prompt_tokens.len());
+        let seed = prefix_seed(prefix_tag, p.cfg.layers, p.cfg.d_kv,
+                               p.cfg.page_rows);
+        let hashes = chain_hashes(seed, &prompt_tokens[..prefix_rows],
+                                  prefix_rows, p.cfg.page_rows);
+        required_pages(&p, &hashes, prefix_rows, span_rows, causal)
     }
 
     /// Admission probe (no side effects): would a session with this
@@ -557,11 +633,21 @@ impl PagedKv {
         // prefixes adopt only on a full-prompt match: their row content
         // depends on the whole visible prompt, so a partially matching
         // prefix would splice rows computed under someone else's suffix.
+        // Every hit is re-verified against the page's own chain hash at
+        // install time (`verified_hit`): a mapping superseded between the
+        // admission probe and this adoption is treated as a miss, never
+        // adopted.
         let adoptable = causal
-            || hashes.iter().all(|(_, h)| p.index.contains_key(h));
+            || hashes.iter().all(|(_, h)| verified_hit(&p, *h).is_some());
         let mut hits = 0usize;
         for &(slot, h) in &hashes {
-            let hit = p.index.get(&h).copied().filter(|_| adoptable);
+            if p.index.contains_key(&h) && verified_hit(&p, h).is_none() {
+                // superseded mapping: treat as a miss and self-heal the
+                // index so the slot can be re-registered by this prefill
+                p.index.remove(&h);
+                p.stats.stale_hash_skips += 1;
+            }
+            let hit = verified_hit(&p, h).filter(|_| adoptable);
             let Some(pid) = hit else {
                 view.pending.push((slot, h));
                 continue;
@@ -664,6 +750,7 @@ impl PagedKv {
             np.v = v;
             np.valid = valid;
             np.valid_rows = rows;
+            np.stamp += 1; // fresh uid + new content: readers must recopy
         }
         // drop our reference to the original: a registered page with no
         // remaining referents becomes reclaimable, still adoptable
@@ -789,6 +876,51 @@ impl KvView for PagedKv {
         Cow::Owned(out)
     }
 
+    /// Allocation-free paged-layout probe: marks the view
+    /// paged-native-readable to backends.
+    fn page_rows(&self) -> Option<usize> {
+        Some(self.page_rows)
+    }
+
+    /// Page-table description: O(live pages), no row data copied.
+    fn page_args(&self) -> Option<KvPageArgs> {
+        let p = self.pool.inner.borrow();
+        let mut args = KvPageArgs {
+            page_rows: self.page_rows,
+            ..KvPageArgs::default()
+        };
+        for (slot, entry) in self.table.iter().enumerate() {
+            let Some(pid) = entry else { continue };
+            let pg = &p.pages[*pid];
+            args.slots.push(slot);
+            args.ids.push(pg.uid);
+            args.stamps.push(pg.stamp);
+            args.valid_rows.push(pg.valid_rows);
+        }
+        Some(args)
+    }
+
+    /// Visit live pages in place — zero-copy: the callback borrows the
+    /// pool's page buffers directly for the duration of each call.
+    fn for_each_page(&self, f: &mut dyn FnMut(KvPage<'_>)) {
+        let (s, r) = (self.s_max, self.page_rows);
+        let p = self.pool.inner.borrow();
+        for (slot, entry) in self.table.iter().enumerate() {
+            let Some(pid) = entry else { continue };
+            let pg = &p.pages[*pid];
+            f(KvPage {
+                slot,
+                rows: r.min(s - slot * r),
+                valid_rows: pg.valid_rows,
+                id: pg.uid,
+                stamp: pg.stamp,
+                k: &pg.k,
+                v: &pg.v,
+                valid: &pg.valid,
+            });
+        }
+    }
+
     fn install_full(&mut self, k_full: &[f32], v_full: &[f32], pos0: usize,
                     pos1: usize) -> Result<()> {
         let (l, s, d, r) = (self.layers, self.s_max, self.d_kv,
@@ -842,6 +974,7 @@ impl KvView for PagedKv {
                         newly += 1;
                     }
                 }
+                pg.stamp += 1;
                 p.stats.pages_refreshed += 1;
             }
             self.valid_rows += newly;
@@ -898,6 +1031,7 @@ impl KvView for PagedKv {
                         newly += 1;
                     }
                 }
+                pg.stamp += 1;
             }
             self.valid_rows += newly;
             self.slot_touch[slot] = gen;
@@ -937,6 +1071,7 @@ impl KvView for PagedKv {
                         dropped += 1;
                     }
                 }
+                pg.stamp += 1;
             }
             self.valid_rows -= dropped;
             self.slot_touch[slot] = gen;
@@ -1179,6 +1314,180 @@ mod tests {
         // partial prefix adds the CoW margin
         assert_eq!(pool.worst_case_pages(20, 96), 4);
         assert_eq!(pool.worst_case_pages(0, 96), 3);
+    }
+
+    #[test]
+    fn page_args_track_table_identity_and_stamps() {
+        let c = cfg(16);
+        let pool = SharedKvPool::new(c.clone());
+        let mut v = PagedKv::admit(&pool, &[], "t", 0, 128, false).unwrap();
+        let kf = full(&c, 7.0);
+        v.install_full(&kf, &kf, 0, 40).unwrap();
+
+        let a1 = v.page_args().expect("paged views expose a page table");
+        assert_eq!(a1.slots, vec![0, 1]);
+        assert_eq!(a1.page_rows, c.page_rows);
+        assert_eq!(a1.valid_total(), v.valid_count());
+        assert!(a1.stamps.iter().all(|&s| s > 0), "stamps are tracked");
+
+        // a commit into slot 1 bumps only that page's stamp; identities
+        // are stable (no CoW: the pages are private and unregistered)
+        let w = 4;
+        let kw = vec![5.0f32; c.layers * w * c.d_kv];
+        v.commit_window_rows(&kw, &kw, w, &[(0, 33)]).unwrap();
+        let a2 = v.page_args().unwrap();
+        assert_eq!(a2.ids, a1.ids, "private pages keep their identity");
+        assert_eq!(a2.stamps[0], a1.stamps[0], "untouched page unchanged");
+        assert!(a2.stamps[1] > a1.stamps[1], "touched page must re-stamp");
+
+        // page visiting agrees with the table description
+        let mut seen = Vec::new();
+        v.for_each_page(&mut |pg| seen.push((pg.slot, pg.id, pg.stamp)));
+        let described: Vec<(usize, u64, u64)> = a2
+            .slots
+            .iter()
+            .zip(a2.ids.iter())
+            .zip(a2.stamps.iter())
+            .map(|((&s, &i), &t)| (s, i, t))
+            .collect();
+        assert_eq!(seen, described);
+    }
+
+    #[test]
+    fn staging_matches_dense_gather_and_reuses_unchanged_pages() {
+        use super::super::kv_cache::KvStaging;
+
+        let c = cfg(16);
+        let pool = SharedKvPool::new(c.clone());
+        let mut v = PagedKv::admit(&pool, &[], "t", 0, 128, false).unwrap();
+        let kf = full(&c, 9.0);
+        v.install_full(&kf, &kf, 0, 40).unwrap();
+
+        let mut st = KvStaging::new();
+        st.stage(&v).unwrap();
+        assert_eq!(st.k.as_slice(), v.k_dense().as_ref());
+        assert_eq!(st.v.as_slice(), v.v_dense().as_ref());
+        assert_eq!(st.valid.as_slice(), v.valid_dense().as_ref());
+        let s1 = st.stats();
+        assert_eq!(s1.pages_copied, 2);
+
+        // unchanged view: every page reuses, zero new bytes staged
+        st.stage(&v).unwrap();
+        let s2 = st.stats();
+        assert_eq!(s2.pages_copied, 2);
+        assert_eq!(s2.pages_reused, 2);
+        assert_eq!(s2.bytes_copied, s1.bytes_copied);
+
+        // one commit re-stamps one page: exactly one page recopies and
+        // the staged image still equals the dense gather bit for bit
+        let w = 4;
+        let kw = vec![5.0f32; c.layers * w * c.d_kv];
+        v.commit_window_rows(&kw, &kw, w, &[(0, 33)]).unwrap();
+        st.stage(&v).unwrap();
+        let s3 = st.stats();
+        assert_eq!(s3.pages_copied, 3, "only the touched page recopies");
+        assert_eq!(st.k.as_slice(), v.k_dense().as_ref());
+        assert_eq!(st.valid.as_slice(), v.valid_dense().as_ref());
+
+        // a different view with disjoint pages through the same scratch:
+        // its pages stage, the previous view's slots are zeroed
+        let mut u = PagedKv::admit(&pool, &[], "t", 0, 128, false).unwrap();
+        u.install_full(&kf, &kf, 64, 80).unwrap();
+        st.stage(&u).unwrap();
+        assert_eq!(st.k.as_slice(), u.k_dense().as_ref(),
+                   "dead slots must zero back to the dense image");
+        assert_eq!(st.valid.as_slice(), u.valid_dense().as_ref());
+        assert!(st.stats().dead_slots_zeroed >= 2);
+
+        // dense views are read borrow-only, never staged
+        let dense = super::super::KvCache::new(c.layers, c.s_max, c.d_kv);
+        assert!(st.stage(&dense).is_err());
+    }
+
+    #[test]
+    fn shared_prompt_pages_reuse_across_interleaved_stagings() {
+        use super::super::kv_cache::KvStaging;
+
+        let c = cfg(32);
+        let pool = SharedKvPool::new(c.clone());
+        let prompt: Vec<i32> = (0..32).map(|i| 5 + i % 11).collect();
+        let kf = full(&c, 2.0);
+        let mut a =
+            PagedKv::admit(&pool, &prompt, "t", 32, 96, false).unwrap();
+        a.install_full(&kf, &kf, 0, 32).unwrap(); // registers the prefix
+        let b = PagedKv::admit(&pool, &prompt, "t", 32, 96, false).unwrap();
+        assert!(b.prefill_cached());
+
+        // interleaved staging A, B, A, B: the shared prompt page keeps
+        // its (id, stamp) across views, so only first-touch copies
+        let mut st = KvStaging::new();
+        st.stage(&a).unwrap();
+        let after_a = st.stats().pages_copied;
+        st.stage(&b).unwrap();
+        let s = st.stats();
+        assert_eq!(s.pages_copied, after_a,
+                   "the shared prompt page must not recopy for B");
+        assert!(s.pages_reused >= 1);
+        st.stage(&a).unwrap();
+        st.stage(&b).unwrap();
+        assert_eq!(st.stats().pages_copied, after_a,
+                   "steady state stages zero pages for unchanged views");
+    }
+
+    #[test]
+    fn adoption_reverifies_chain_hash_at_install_time() {
+        let c = cfg(16);
+        let pool = SharedKvPool::new(c.clone());
+        let prompt: Vec<i32> = (0..32).map(|i| 5 + i % 9).collect();
+        let kf = full(&c, 3.0);
+        let mut a =
+            PagedKv::admit(&pool, &prompt, "t", 32, 96, false).unwrap();
+        a.install_full(&kf, &kf, 0, 32).unwrap(); // registers slot-0 page
+        drop(a); // page reclaimable, still indexed
+
+        // simulate a mid-round supersede: the index still maps the chain
+        // hash, but the page it points at no longer carries it (as after
+        // a recycle re-registered the slot under another prompt)
+        {
+            let mut p = pool.inner.borrow_mut();
+            let pids: Vec<usize> = p.index.values().copied().collect();
+            for pid in pids {
+                p.pages[pid].hash = None;
+            }
+        }
+
+        // a full-prefix "hit" must treat the stale mapping as a miss:
+        // nothing adopted, no prefill skip, and the index self-heals
+        let b = PagedKv::admit(&pool, &prompt, "t", 32, 96, false).unwrap();
+        assert!(!b.prefill_cached(),
+                "a superseded mapping must never skip the prefill");
+        assert_eq!(b.valid_count(), 0, "no stale rows may be adopted");
+        assert!(pool.stats().stale_hash_skips >= 1);
+        assert!(pool.inner.borrow().index.is_empty(),
+                "stale mappings are removed at detection");
+    }
+
+    #[test]
+    fn required_pages_for_credits_indexed_prefixes() {
+        let c = cfg(8);
+        let pool = SharedKvPool::new(c.clone());
+        let prompt: Vec<i32> = (0..64).map(|i| 5 + i % 13).collect();
+        // cold pool: the probe equals the no-sharing worst case
+        assert_eq!(pool.required_pages_for(&prompt, "t", 64, 128, false),
+                   pool.worst_case_pages(64, 128));
+
+        let kf = full(&c, 1.0);
+        let mut a =
+            PagedKv::admit(&pool, &prompt, "t", 64, 128, false).unwrap();
+        a.install_full(&kf, &kf, 0, 64).unwrap(); // registers 2 pages
+        // warm + live: both prefix pages are credited
+        assert_eq!(pool.required_pages_for(&prompt, "t", 64, 128, false),
+                   pool.worst_case_pages(64, 128) - 2);
+        // reclaimable pages still draw capacity when adopted: after the
+        // registrant retires the probe returns to the worst case
+        drop(a);
+        assert_eq!(pool.required_pages_for(&prompt, "t", 64, 128, false),
+                   pool.worst_case_pages(64, 128));
     }
 
     #[test]

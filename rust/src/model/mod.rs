@@ -8,7 +8,8 @@ pub mod kv_pool;
 pub mod params;
 
 pub use exec::{DecodeOut, PrefillOut, TrainOut, TrajectoryOut};
-pub use kv_cache::{KvCache, KvView};
+pub use kv_cache::{KvCache, KvPage, KvPageArgs, KvStageStats, KvStaging,
+                   KvView};
 pub use kv_pool::{KvPoolCfg, KvPoolStats, KvPoolUsage, PagedKv,
                   SharedKvPool};
 pub use params::{OptState, ParamStore};

@@ -17,6 +17,8 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
+use crate::model::kv_cache::{KvStageStats, KvStaging};
+
 use super::manifest::{ArgSpec, DType, ExecSpec, Manifest};
 
 /// Per-executable call statistics (the L3 profiler reads these).
@@ -40,6 +42,13 @@ pub struct Engine {
     /// Hot-path toggle: route `run_buffered` through execute_b with the
     /// cached parameter buffer (default on; flip for A/B perf runs).
     buffered: std::cell::Cell<bool>,
+    /// Reusable bounded staging scratch for paged KV views: windowed
+    /// forwards against a `PagedKv` copy only the pages that changed
+    /// since the scratch last held them, instead of re-gathering the full
+    /// `[L, S_max, d_kv]` cache per call (see `model::kv_cache::KvStaging`).
+    /// Dense caches bypass it entirely (borrow-only). Single-threaded
+    /// interior mutability, like the executable cache above.
+    kv_stage: RefCell<KvStaging>,
 }
 
 /// Non-parameter argument for the buffered hot path.
@@ -75,7 +84,19 @@ impl Engine {
             stats: RefCell::new(HashMap::new()),
             param_bufs: RefCell::new(HashMap::new()),
             buffered: std::cell::Cell::new(true),
+            kv_stage: RefCell::new(KvStaging::new()),
         })
+    }
+
+    /// Borrow the paged-KV staging scratch (the `decode_window` wrapper
+    /// stages paged views through it; dense views never touch it).
+    pub fn kv_stage(&self) -> std::cell::RefMut<'_, KvStaging> {
+        self.kv_stage.borrow_mut()
+    }
+
+    /// Cumulative staging counters (pages copied/reused, bytes staged).
+    pub fn kv_stage_stats(&self) -> KvStageStats {
+        self.kv_stage.borrow().stats()
     }
 
     /// Toggle the buffered (device-resident params + execute_b) hot path.

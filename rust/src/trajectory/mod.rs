@@ -305,6 +305,35 @@ mod tests {
     }
 
     #[test]
+    fn pooled_extraction_reads_paged_views_identically_to_dense() {
+        let sim = SimBackend::new(21);
+        let corpus = corpus(&sim, 5, 9);
+        let teacher = vec![0.31f32; 64];
+
+        // dense caches (no pool binding) vs. page-table views bound to a
+        // run-scoped pool: the teacher scan's windowed forwards read the
+        // cache paged-natively, and the ranks must not move a bit
+        let dense = extract_all_pooled(&sim, &teacher, &corpus,
+                                       tmp_dir("pvd_dense"), "pd", 4, None)
+            .unwrap();
+        let spec = sim.model_spec("main").unwrap().clone();
+        let c = sim.constants().clone();
+        let kv = SharedKvPool::new(KvPoolCfg {
+            layers: spec.n_layers,
+            d_kv: spec.d_kv,
+            s_max: c.s_max,
+            page_rows: c.block.max(1),
+            budget_bytes: 1 << 20,
+        });
+        let paged = extract_all_pooled(&sim, &teacher, &corpus,
+                                       tmp_dir("pvd_paged"), "pp", 4,
+                                       Some(&kv))
+            .unwrap();
+        assert_eq!(dense, paged,
+                   "paged-native teacher scan diverged from dense ranks");
+    }
+
+    #[test]
     fn cache_key_separates_teachers_and_corpora() {
         let sim = SimBackend::new(2);
         let c = sim.constants().clone();

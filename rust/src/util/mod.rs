@@ -26,6 +26,26 @@ pub fn write_csv(
     Ok(())
 }
 
+/// Emit one benchmark result record: prints the `BENCH {json}` line the
+/// CI log scrapers expect and, when `BENCH_JSON_DIR` is set, also writes
+/// it to `<dir>/BENCH_<name>.json` so the workflow can persist the perf
+/// trajectory as an artifact (`.github/workflows/ci.yml` sets the dir
+/// and uploads `BENCH_*.json`).
+pub fn emit_bench_json(name: &str, json: &str) {
+    println!("BENCH {json}");
+    let Ok(dir) = std::env::var("BENCH_JSON_DIR") else { return };
+    if dir.is_empty() {
+        return;
+    }
+    let path = Path::new(&dir).join(format!("BENCH_{name}.json"));
+    let write = std::fs::create_dir_all(&dir)
+        .and_then(|()| std::fs::write(&path, format!("{json}\n")));
+    match write {
+        Ok(()) => eprintln!("[bench] wrote {path:?}"),
+        Err(e) => eprintln!("[bench] could not write {path:?}: {e}"),
+    }
+}
+
 /// Hex-less short hash (FNV-1a) for cache keys / file names.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;

@@ -1,0 +1,149 @@
+//! Regression pins for `model::exec::decode_window`'s argument assembly.
+//! No real artifacts needed: the vendored offline `xla` stub validates
+//! shapes faithfully and only refuses the final execute, so everything up
+//! to (and excluding) graph execution is exercised for real — including
+//! the paged-native staging path on `Engine`.
+//!
+//! The headline pin: the valid-mask argument is validated against the
+//! *manifest* shape on both the buffered and the literal call path. The
+//! seed built it from `cache.capacity()` on one path only, so a pool
+//! whose span capacity diverged from the executable's lowered `S_max`
+//! failed (or silently passed a wrong-length mask) depending on which
+//! path served the call.
+
+use std::path::PathBuf;
+
+use d3llm::model::exec;
+use d3llm::model::kv_pool::{KvPoolCfg, PagedKv, SharedKvPool};
+use d3llm::model::{KvCache, KvView};
+use d3llm::runtime::Engine;
+
+const MANIFEST: &str = r#"{
+  "format_version": 1,
+  "constants": {"vocab":128,"pad_id":0,"mask_id":1,"eos_id":2,"bos_id":3,
+    "sep_id":4,"s_max":16,"s_train":8,"gen_max":8,"gen_train":4,
+    "window":2,"block":2,"verify_w":2,"b_train":1,"b_traj":1,
+    "rank_never":100000},
+  "models": {"main": {"name":"main","d_model":4,"n_layers":1,"n_heads":2,
+    "d_head":2,"d_ff":8,"vocab":128,"s_max":16,"d_kv":4,
+    "total_params":4,
+    "param_layout":[
+      {"name":"w","shape":[4],"offset":0,"size":4,"init":"normal"}]}},
+  "executables": [{"name":"decode_xla","file":"decode_xla.hlo.txt",
+    "model":"main",
+    "inputs":[
+      {"name":"params","shape":[4],"dtype":"f32"},
+      {"name":"win_tokens","shape":[2],"dtype":"i32"},
+      {"name":"win_pos","shape":[2],"dtype":"i32"},
+      {"name":"win_valid","shape":[2],"dtype":"f32"},
+      {"name":"kcache","shape":[1,16,4],"dtype":"f32"},
+      {"name":"vcache","shape":[1,16,4],"dtype":"f32"},
+      {"name":"cvalid","shape":[16],"dtype":"f32"}],
+    "outputs":[
+      {"name":"argmax","shape":[2],"dtype":"i32"},
+      {"name":"conf","shape":[2],"dtype":"f32"},
+      {"name":"entropy","shape":[2],"dtype":"f32"},
+      {"name":"k_win","shape":[1,2,4],"dtype":"f32"},
+      {"name":"v_win","shape":[1,2,4],"dtype":"f32"}]}]
+}"#;
+
+fn artifacts_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("d3llm_exec_shapes_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    std::fs::write(dir.join("decode_xla.hlo.txt"), "HloModule decode_xla\n")
+        .unwrap();
+    dir
+}
+
+#[test]
+fn capacity_mismatch_fails_identically_on_both_paths() {
+    let dir = artifacts_dir("mismatch");
+    let eng = Engine::load(&dir).unwrap();
+    let params = vec![0.0f32; 4];
+    // capacity 8 != the executable's lowered S_max 16
+    let cache = KvCache::new(1, 8, 4);
+    let toks = [5i32, 6];
+    let pos = [0i32, 1];
+    let valid = [1.0f32, 1.0];
+
+    let mut errs = Vec::new();
+    for buffered in [true, false] {
+        eng.set_buffered(buffered);
+        let e = exec::decode_window(&eng, "decode_xla", &params, &toks,
+                                    &pos, &valid, &cache)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("capacity 8") && e.contains("16"),
+                "buffered={buffered}: unclear mismatch error: {e}");
+        errs.push(e);
+    }
+    assert_eq!(errs[0], errs[1],
+               "both call paths must reject the mismatch identically");
+}
+
+#[test]
+fn matching_capacity_passes_validation_on_both_paths() {
+    let dir = artifacts_dir("match");
+    let eng = Engine::load(&dir).unwrap();
+    let params = vec![0.0f32; 4];
+    let cache = KvCache::new(1, 16, 4);
+    let toks = [5i32, 6];
+    let pos = [0i32, 1];
+    let valid = [1.0f32, 1.0];
+
+    for buffered in [true, false] {
+        eng.set_buffered(buffered);
+        let e = exec::decode_window(&eng, "decode_xla", &params, &toks,
+                                    &pos, &valid, &cache)
+            .unwrap_err()
+            .to_string();
+        // every argument (valid mask included) validated cleanly on both
+        // paths; only the offline stub's execute may refuse
+        assert!(e.contains("offline xla stub cannot execute"),
+                "buffered={buffered}: validation should pass, got: {e}");
+    }
+}
+
+#[test]
+fn paged_views_stage_through_the_engine_scratch() {
+    let dir = artifacts_dir("paged");
+    let eng = Engine::load(&dir).unwrap();
+    let params = vec![0.0f32; 4];
+    let pool = SharedKvPool::new(KvPoolCfg {
+        layers: 1,
+        d_kv: 4,
+        s_max: 16,
+        page_rows: 2,
+        budget_bytes: 1 << 16,
+    });
+    let mut view = PagedKv::admit(&pool, &[], "t", 0, 16, false).unwrap();
+    let full: Vec<f32> = (0..64).map(|i| i as f32).collect(); // [1,16,4]
+    view.install_full(&full, &full, 0, 6).unwrap();
+
+    let toks = [5i32, 6];
+    let pos = [0i32, 1];
+    let valid = [1.0f32, 1.0];
+    let e = exec::decode_window(&eng, "decode_xla", &params, &toks, &pos,
+                                &valid, &view)
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("offline xla stub cannot execute"),
+            "paged staging must validate cleanly up to execution: {e}");
+    let st = eng.kv_stage_stats();
+    assert_eq!(st.stage_calls, 1);
+    assert_eq!(st.pages_copied as usize, 3, "rows 0..6 live on 3 pages");
+
+    // an unchanged view re-stages zero pages on the next forward
+    let _ = exec::decode_window(&eng, "decode_xla", &params, &toks, &pos,
+                                &valid, &view);
+    let st = eng.kv_stage_stats();
+    assert_eq!(st.stage_calls, 2);
+    assert_eq!(st.pages_copied, 3);
+    assert_eq!(st.pages_reused, 3);
+    // the staged image equals the reference dense gather bit for bit
+    let stage = eng.kv_stage();
+    assert_eq!(stage.k.as_slice(), view.k_dense().as_ref());
+    assert_eq!(stage.valid.as_slice(), view.valid_dense().as_ref());
+}

@@ -267,6 +267,50 @@ fn reclaimable_pages_serve_hits_then_evict_under_pressure() {
     assert_eq!(kv.stats().prefill_skips, 1, "no further skips after evict");
 }
 
+/// The peek/admit race: the coordinator's admission probe
+/// (`required_pages_for` / `can_admit`) may credit a live prefix chain
+/// that retires *and* is evicted before `PagedKv::admit` lands. The
+/// admit must see the post-eviction world — adopt nothing, skip nothing
+/// — and the decode must stay bit-identical to the dense baseline; the
+/// probe must degrade to the no-sharing worst case so the next cycle
+/// re-plans honestly.
+#[test]
+fn eviction_between_probe_and_admit_degrades_to_fresh_pages() {
+    let params = vec![0.5f32; 8];
+    let sim = SimBackend::new(17);
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false;
+    let p = prompt(6);
+    let dense = run_dense(&sim, &cfg, &p, 64, None, &params);
+
+    let kv = pool_for(&sim, 64);
+    // live session A registers the chain and survives through the probe
+    let mut a = DecodeSession::with_pool(&sim, cfg.clone(), &p, 64, None,
+                                         &kv)
+        .unwrap();
+    let done = a.step(&sim, &params).unwrap(); // prefill + registration
+    assert!(!done);
+    let span = (p.len() + 64).min(sim.constants().s_max);
+    let warm =
+        kv.required_pages_for(&p, "prefill_xla", p.len(), span, false);
+    assert!(kv.can_admit(&p, "prefill_xla", p.len(), span, false));
+
+    // the chain retires AND is recycled before the admit lands
+    drop(a);
+    assert!(kv.evict_reclaimable(usize::MAX) >= 1);
+    let cold =
+        kv.required_pages_for(&p, "prefill_xla", p.len(), span, false);
+    assert!(cold > warm,
+            "eviction must raise the requirement ({warm} -> {cold})");
+
+    // the admit sees the post-eviction world: nothing adopted, no
+    // prefill skip, bit-identical decode on fresh pages
+    let b = run_pooled(&sim, &cfg, &p, 64, None, &params, &kv);
+    assert_eq!(kv.stats().prefill_skips, 0, "stale chain must not skip");
+    assert_eq!(b.tokens, dense.tokens);
+    assert_eq!(b.forwards, dense.forwards);
+}
+
 /// `run_interleaved_pooled` (the coordinator-style pooled entry point)
 /// serves a mixed-strategy request batch identically to the dense
 /// `run_interleaved`, with prefix sharing live across the batch.

@@ -286,3 +286,133 @@ fn mixed_strategy_pool_matches_b1_bit_for_bit() {
         assert_eq!(r.tokens.len(), gen_len, "{id}: incomplete decode");
     }
 }
+
+// ---------------------------------------------------------------------
+// Per-group fallback isolation: a session whose paged gather fails
+// mid-batch must fall back alone, without poisoning the other sessions
+// of its coalesced same-shape window group (the full-forward group path
+// already had this pin via `per_session_failure_does_not_poison_the_pool`).
+
+use anyhow::Result;
+use d3llm::decode::{Backend, PrefillItem, WindowItem};
+use d3llm::model::exec::{DecodeOut, PrefillOut, TrainOut, TrajectoryOut};
+use d3llm::model::kv_pool::{KvPoolCfg, SharedKvPool};
+use d3llm::model::KvView;
+use d3llm::runtime::manifest::{Constants, ModelSpec};
+
+/// Backend whose *paged* read path is broken: a windowed forward against
+/// a page-table view fails, and a batched call containing one poisons
+/// the whole batched call (exactly the failure mode the scheduler's
+/// per-session fallback exists for). Dense sessions are untouched.
+struct PagedGatherFails<'a> {
+    inner: &'a SimBackend,
+}
+
+impl Backend for PagedGatherFails<'_> {
+    fn constants(&self) -> &Constants {
+        self.inner.constants()
+    }
+
+    fn model_spec(&self, name: &str) -> Result<&ModelSpec> {
+        self.inner.model_spec(name)
+    }
+
+    fn prefill(&self, exec: &str, params: &[f32], tokens: &[i32],
+               valid: &[f32]) -> Result<PrefillOut> {
+        self.inner.prefill(exec, params, tokens, valid)
+    }
+
+    fn decode_window(&self, exec: &str, params: &[f32], win_tokens: &[i32],
+                     win_pos: &[i32], win_valid: &[f32], cache: &dyn KvView)
+                     -> Result<DecodeOut> {
+        if cache.page_args().is_some() {
+            anyhow::bail!("injected: paged gather failed");
+        }
+        self.inner
+            .decode_window(exec, params, win_tokens, win_pos, win_valid,
+                           cache)
+    }
+
+    fn prefill_batch(&self, params: &[f32], items: &[PrefillItem<'_>])
+                     -> Result<Vec<PrefillOut>> {
+        self.inner.prefill_batch(params, items)
+    }
+
+    fn decode_window_batch(&self, params: &[f32], items: &[WindowItem<'_>])
+                           -> Result<Vec<DecodeOut>> {
+        if items.iter().any(|it| it.cache.page_args().is_some()) {
+            anyhow::bail!("injected: batched paged gather failed");
+        }
+        self.inner.decode_window_batch(params, items)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(&self, exec: &str, params: &[f32], m: &[f32], v: &[f32],
+                  step: i32, tokens: &[i32], labels: &[i32],
+                  loss_mask: &[f32], attn_valid: &[f32], lr: f32,
+                  ent_weight: f32) -> Result<TrainOut> {
+        self.inner.train_step(exec, params, m, v, step, tokens, labels,
+                              loss_mask, attn_valid, lr, ent_weight)
+    }
+
+    fn trajectory(&self, params: &[f32], tokens: &[i32], attn_valid: &[f32],
+                  gen_mask: &[f32]) -> Result<TrajectoryOut> {
+        self.inner.trajectory(params, tokens, attn_valid, gen_mask)
+    }
+}
+
+#[test]
+fn paged_gather_failure_falls_back_alone_in_its_window_group() {
+    let sim = SimBackend::new(77);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    let (pa, pb, pc) = (prompt_for(1), prompt_for(2), prompt_for(3));
+
+    // solo references on the unwrapped backend (dense sessions)
+    let ra = decode::generate(&sim, &cfg, &params, None, &pa, 64).unwrap();
+    let rc = decode::generate(&sim, &cfg, &params, None, &pc, 64).unwrap();
+
+    let backend = PagedGatherFails { inner: &sim };
+    let c = sim.constants().clone();
+    let spec = sim.model_spec("main").unwrap().clone();
+    let kv = SharedKvPool::new(KvPoolCfg {
+        layers: spec.n_layers,
+        d_kv: spec.d_kv,
+        s_max: c.s_max,
+        page_rows: c.block,
+        budget_bytes: 1 << 20,
+    });
+
+    // one coalesced same-shape group: all d3llm, same window executable;
+    // B is the only paged session and the only one that may fail
+    let mut pool: SessionPool<usize> = SessionPool::new();
+    pool.admit("a".into(), 0,
+               DecodeSession::new(&backend, cfg.clone(), &pa, 64).unwrap());
+    pool.admit("b".into(), 1,
+               DecodeSession::with_pool(&backend, cfg.clone(), &pb, 64,
+                                        None, &kv)
+                   .unwrap());
+    pool.admit("c".into(), 2,
+               DecodeSession::new(&backend, cfg.clone(), &pc, 64).unwrap());
+
+    let mut results: Vec<Option<Result<GenResult>>> =
+        (0..3).map(|_| None).collect();
+    while !pool.is_empty() {
+        for f in pool.step_round(&backend, &params) {
+            results[f.tag] = Some(f.result);
+        }
+    }
+    let got_a = results[0].take().unwrap().expect("dense A must survive");
+    let err_b = results[1].take().unwrap()
+        .expect_err("paged B must fail alone");
+    let got_c = results[2].take().unwrap().expect("dense C must survive");
+    assert!(format!("{err_b:#}").contains("paged gather"),
+            "unexpected failure: {err_b:#}");
+    assert_eq!(got_a.tokens, ra.tokens, "A was poisoned by B's failure");
+    assert_eq!(got_a.forwards, ra.forwards, "A forwards diverged");
+    assert_eq!(got_c.tokens, rc.tokens, "C was poisoned by B's failure");
+    assert_eq!(got_c.forwards, rc.forwards, "C forwards diverged");
+    // the failed session released its pages and reservation on retire
+    let u = kv.usage();
+    assert_eq!(u.in_use + u.reserved, 0, "B leaked pool pages");
+}
