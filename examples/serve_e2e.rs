@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
         max_concurrent_sessions: args.usize_or("max-sessions", 4),
         draft: None,
         kv_budget_mb: 256,
+        slo_round_width: args.usize_or("round-width", 0),
         decode: None,
     };
     std::thread::spawn(move || {

@@ -68,6 +68,7 @@ fn run_once(ckpt: &str, port: u16, width: usize, prompts: &[String])
         max_concurrent_sessions: width,
         draft: None,
         kv_budget_mb: 256,
+        slo_round_width: 0,
         decode: None,
     };
     std::thread::spawn(move || {

@@ -40,6 +40,8 @@ fn main() {
         gen_tokens: 61,
         queue_ms: 0.2,
         decode_ms: 80.0,
+        slo: "standard".into(),
+        deadline_missed: false,
     };
     let secs = bench(10, 200, || {
         let _ = protocol::ok_response(&resp);

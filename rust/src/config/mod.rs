@@ -42,6 +42,9 @@ pub struct ServiceConfig {
     pub max_concurrent_sessions: usize,
     /// Shared paged KV pool budget in MiB (0 = dense per-session caches).
     pub kv_budget_mb: usize,
+    /// Sessions stepped per round under EDF deadline pressure
+    /// (0 = unlimited: every runnable session steps every round).
+    pub slo_round_width: usize,
     pub decode: DecodeCfg,
 }
 
@@ -55,6 +58,7 @@ impl Default for ServiceConfig {
             max_queue: 256,
             max_concurrent_sessions: 4,
             kv_budget_mb: 256,
+            slo_round_width: 0,
             decode: DecodeCfg::preset(Strategy::D3llm),
         }
     }
@@ -182,6 +186,8 @@ impl ServiceConfig {
                 d.max_concurrent_sessions,
             ),
             kv_budget_mb: get_usize(j, "kv_budget_mb", d.kv_budget_mb),
+            slo_round_width: get_usize(j, "slo_round_width",
+                                       d.slo_round_width),
             decode,
         };
         validate_service_limits(cfg.max_queue,
@@ -208,6 +214,7 @@ impl ServiceConfig {
             ("max_concurrent_sessions",
              Json::num(self.max_concurrent_sessions as f64)),
             ("kv_budget_mb", Json::num(self.kv_budget_mb as f64)),
+            ("slo_round_width", Json::num(self.slo_round_width as f64)),
             ("decode", decode_to_json(&self.decode)),
         ])
     }
@@ -232,6 +239,7 @@ mod tests {
         assert_eq!(c2.max_queue, c.max_queue);
         assert_eq!(c2.max_concurrent_sessions, c.max_concurrent_sessions);
         assert_eq!(c2.kv_budget_mb, c.kv_budget_mb);
+        assert_eq!(c2.slo_round_width, c.slo_round_width);
         assert_eq!(c2.decode.strategy, c.decode.strategy);
         assert_eq!(c2.decode.refresh_every, c.decode.refresh_every);
     }

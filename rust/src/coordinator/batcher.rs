@@ -1,11 +1,38 @@
-//! Request batcher / scheduler.
+//! Request batcher / admission controller.
 //!
 //! The decode engine is single-stream (batch = 1, matching the paper's
 //! serving setup), so the batcher's job is admission control and ordering:
-//! a bounded priority queue with FIFO tie-breaking and queue-time
-//! accounting. Higher `priority` values are served first.
+//! a bounded priority queue with deadline-aware (EDF) ordering inside each
+//! priority class, FIFO tie-breaking, queue-time accounting, and early
+//! load shedding. Higher `priority` values are served first; within a
+//! priority, jobs with earlier deadlines are served first and deadline-free
+//! jobs last.
+//!
+//! ## Deadlines and shedding
+//!
+//! Deadlines are absolute milliseconds on a caller-supplied monotonic
+//! clock (`now_ms`): the serving coordinator uses wall time since worker
+//! start, deterministic tests and benches drive a virtual clock. The
+//! batcher learns the observed per-round drain time via
+//! [`Batcher::observe_round_ms`] (EWMA) and sheds a job *at admission*
+//! when `queue depth x observed round time` already exceeds the job's
+//! deadline budget — answering with a `retry_after_ms` hint instead of
+//! letting the queue collapse under sustained overload.
+//!
+//! ## Accounting invariant
+//!
+//! Every job that entered the queue leaves it exactly once, by `pop` or
+//! by displacement:
+//!
+//! ```text
+//! enqueued_total == popped_total + evicted_total + len()
+//! ```
+//!
+//! Turned-away work (`rejected_total` for plain full-queue rejects,
+//! `shed_total` for deadline/overload sheds) never enters the queue and
+//! never counts toward `enqueued_total`.
 
-use std::collections::BinaryHeap;
+use std::cmp::Reverse;
 use std::time::Instant;
 
 /// A queued unit of work.
@@ -13,12 +40,33 @@ pub struct QueuedJob<T> {
     pub payload: T,
     pub priority: i64,
     pub enqueued: Instant,
+    /// Absolute deadline on the caller's clock (ms); `None` = no SLO.
+    pub deadline_at_ms: Option<u64>,
     seq: u64,
+}
+
+impl<T> QueuedJob<T> {
+    /// Milliseconds this job has spent queued so far (wall clock) —
+    /// available to the caller even for displaced victims, so wasted
+    /// queue time is never lost.
+    pub fn queue_ms(&self) -> f64 {
+        self.enqueued.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Urgency key: greater = served sooner. Priority first, then EDF
+    /// (earlier deadline first, deadline-free last), then FIFO.
+    fn urgency(&self) -> (i64, Reverse<u64>, Reverse<u64>) {
+        (
+            self.priority,
+            Reverse(self.deadline_at_ms.unwrap_or(u64::MAX)),
+            Reverse(self.seq),
+        )
+    }
 }
 
 impl<T> PartialEq for QueuedJob<T> {
     fn eq(&self, other: &Self) -> bool {
-        self.priority == other.priority && self.seq == other.seq
+        self.seq == other.seq
     }
 }
 impl<T> Eq for QueuedJob<T> {}
@@ -29,60 +77,101 @@ impl<T> PartialOrd for QueuedJob<T> {
 }
 impl<T> Ord for QueuedJob<T> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // max-heap: higher priority first; then earlier seq (FIFO)
-        self.priority
-            .cmp(&other.priority)
-            .then(other.seq.cmp(&self.seq))
+        self.urgency().cmp(&other.urgency())
     }
 }
 
-/// Outcome of a priority-aware admission attempt (`push_evicting`).
+/// Outcome of a deadline/priority-aware admission attempt (`admit`).
 pub enum Admission<T> {
-    /// Admitted; if the queue was full, the displaced lowest-priority
-    /// job is returned so the caller can answer it.
+    /// Admitted; if the queue was full, the displaced least-urgent job is
+    /// returned (with its enqueue timestamp intact) so the caller can
+    /// answer it and account its wasted queue time.
     Admitted(Option<QueuedJob<T>>),
-    /// Queue full of equal-or-higher-priority work; payload handed back.
-    Rejected(T),
+    /// Queue full of equal-or-more-urgent work, or the job's deadline
+    /// budget is already unmeetable: payload handed back with a hint for
+    /// when capacity is expected (queue depth x observed round time).
+    Shed { payload: T, retry_after_ms: u64 },
 }
 
 pub struct Batcher<T> {
-    heap: BinaryHeap<QueuedJob<T>>,
+    heap: std::collections::BinaryHeap<QueuedJob<T>>,
     next_seq: u64,
     max_queue: usize,
+    /// EWMA of the observed serving-round time (ms); 0 until observed.
+    round_ms: f64,
+    /// Jobs that entered the queue.
     pub enqueued_total: u64,
+    /// Jobs handed out by `pop` (admitted to serving).
+    pub popped_total: u64,
+    /// Admitted jobs displaced by a more urgent newcomer.
+    pub evicted_total: u64,
+    /// Jobs turned away by plain full-queue backpressure (`push`).
     pub rejected_total: u64,
+    /// Jobs turned away early with a retry-after hint (`admit`).
+    pub shed_total: u64,
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_queue: usize) -> Self {
         Batcher {
-            heap: BinaryHeap::new(),
+            heap: std::collections::BinaryHeap::new(),
             next_seq: 0,
             max_queue,
+            round_ms: 0.0,
             enqueued_total: 0,
+            popped_total: 0,
+            evicted_total: 0,
             rejected_total: 0,
+            shed_total: 0,
         }
     }
 
-    /// Admit a job; returns false (backpressure) when the queue is full.
+    /// Feed one observed serving-round duration (ms) into the drain-time
+    /// estimate (EWMA, alpha 0.25).
+    pub fn observe_round_ms(&mut self, ms: f64) {
+        if !(ms.is_finite() && ms >= 0.0) {
+            return;
+        }
+        self.round_ms =
+            if self.round_ms == 0.0 { ms } else { 0.75 * self.round_ms + 0.25 * ms };
+    }
+
+    /// Estimated queue wait (ms): queue depth x observed round time.
+    /// Zero until the first round has been observed.
+    pub fn estimated_wait_ms(&self) -> f64 {
+        self.heap.len() as f64 * self.round_ms
+    }
+
+    fn push_job(&mut self, payload: T, priority: i64,
+                deadline_at_ms: Option<u64>) {
+        self.heap.push(QueuedJob {
+            payload,
+            priority,
+            enqueued: Instant::now(),
+            deadline_at_ms,
+            seq: self.next_seq,
+        });
+        self.next_seq += 1;
+        self.enqueued_total += 1;
+    }
+
+    /// Plain admission (no deadline, no displacement): returns false
+    /// (backpressure) when the queue is full.
     pub fn push(&mut self, payload: T, priority: i64) -> bool {
         if self.heap.len() >= self.max_queue {
             self.rejected_total += 1;
             return false;
         }
-        self.heap.push(QueuedJob {
-            payload,
-            priority,
-            enqueued: Instant::now(),
-            seq: self.next_seq,
-        });
-        self.next_seq += 1;
-        self.enqueued_total += 1;
+        self.push_job(payload, priority, None);
         true
     }
 
     pub fn pop(&mut self) -> Option<QueuedJob<T>> {
-        self.heap.pop()
+        let j = self.heap.pop();
+        if j.is_some() {
+            self.popped_total += 1;
+        }
+        j
     }
 
     /// Borrow the job `pop` would return next, without disturbing its
@@ -97,52 +186,84 @@ impl<T> Batcher<T> {
         self.heap.len() >= self.max_queue
     }
 
-    /// Priority-aware admission: like `push`, but when the queue is full
-    /// a newcomer that outranks the lowest-priority queued job displaces
-    /// it (newest-first among equals) instead of being turned away.
-    /// Exactly one job loses in either case, and it is handed back so the
-    /// caller can answer it.
-    pub fn push_evicting(&mut self, payload: T, priority: i64)
-                         -> Admission<T> {
+    /// Retry-after hint for a shed job: the time the current queue needs
+    /// to drain at the observed round time, floored at one round (or 1 ms
+    /// before any round has been observed).
+    fn retry_after_ms(&self) -> u64 {
+        (self.estimated_wait_ms().max(self.round_ms).max(1.0)).ceil() as u64
+    }
+
+    /// Deadline/priority-aware admission. `now_ms` is the caller's clock
+    /// (same clock `deadline_at_ms` is on).
+    ///
+    /// 1. Early shed: once round time has been observed, a job whose
+    ///    deadline budget is smaller than the estimated queue wait is
+    ///    turned away immediately with a retry-after hint — it would
+    ///    only miss its deadline in the queue and starve others.
+    /// 2. Spare capacity: enqueue.
+    /// 3. Full queue: the least-urgent queued job (lowest priority, then
+    ///    latest/absent deadline, then newest) is displaced if the
+    ///    newcomer outranks it, otherwise the newcomer is shed. Exactly
+    ///    one job loses in either case.
+    pub fn admit(&mut self, payload: T, priority: i64,
+                 deadline_at_ms: Option<u64>, now_ms: u64) -> Admission<T> {
+        if let Some(d) = deadline_at_ms {
+            let budget_ms = d.saturating_sub(now_ms) as f64;
+            if self.round_ms > 0.0 && self.estimated_wait_ms() > budget_ms {
+                self.shed_total += 1;
+                let retry_after_ms = self.retry_after_ms();
+                return Admission::Shed { payload, retry_after_ms };
+            }
+        }
         if self.heap.len() < self.max_queue {
-            self.push(payload, priority);
+            self.push_job(payload, priority, deadline_at_ms);
             return Admission::Admitted(None);
         }
-        // victim candidate: lowest priority, newest among equals; found
-        // by a borrow-only scan so the rejection path (the common case
-        // under sustained overload) never deconstructs the heap
+        // victim candidate: least urgent; found by a borrow-only scan so
+        // the shed path (the common case under sustained overload) never
+        // deconstructs the heap
         let victim = self
             .heap
             .iter()
-            .map(|j| (j.priority, std::cmp::Reverse(j.seq)))
-            .min();
-        let Some((v_pri, v_seq)) = victim else {
+            .map(|j| (j.priority, j.deadline_at_ms.unwrap_or(u64::MAX), j.seq))
+            .min_by_key(|&(pri, dl, seq)| (pri, Reverse(dl), Reverse(seq)));
+        let Some((v_pri, v_dl, v_seq)) = victim else {
             // zero-capacity queue: nothing to displace
-            self.rejected_total += 1;
-            return Admission::Rejected(payload);
+            self.shed_total += 1;
+            let retry_after_ms = self.retry_after_ms();
+            return Admission::Shed { payload, retry_after_ms };
         };
-        if v_pri >= priority {
-            // everything queued outranks (or ties) the newcomer
-            self.rejected_total += 1;
-            return Admission::Rejected(payload);
+        let new_dl = deadline_at_ms.unwrap_or(u64::MAX);
+        // the newcomer must strictly outrank the victim (ties keep FIFO)
+        if (v_pri, Reverse(v_dl)) >= (priority, Reverse(new_dl)) {
+            self.shed_total += 1;
+            let retry_after_ms = self.retry_after_ms();
+            return Admission::Shed { payload, retry_after_ms };
         }
-        let mut v = std::mem::take(&mut self.heap).into_vec();
-        let pos = v
-            .iter()
-            .position(|j| j.seq == v_seq.0)
-            .expect("victim vanished");
-        let evicted = v.swap_remove(pos);
-        self.heap = BinaryHeap::from(v);
-        self.rejected_total += 1;
-        self.heap.push(QueuedJob {
-            payload,
-            priority,
-            enqueued: Instant::now(),
-            seq: self.next_seq,
-        });
-        self.next_seq += 1;
-        self.enqueued_total += 1;
+        let evicted = if self.heap.peek().map(|j| j.seq) == Some(v_seq) {
+            // least-urgent job is the heap top (e.g. capacity-1 queues):
+            // pop directly instead of rebuilding the heap
+            self.heap.pop().expect("peeked top")
+        } else {
+            let mut v = std::mem::take(&mut self.heap).into_vec();
+            let pos = v
+                .iter()
+                .position(|j| j.seq == v_seq)
+                .expect("victim vanished");
+            let evicted = v.swap_remove(pos);
+            self.heap = std::collections::BinaryHeap::from(v);
+            evicted
+        };
+        self.evicted_total += 1;
+        self.push_job(payload, priority, deadline_at_ms);
         Admission::Admitted(Some(evicted))
+    }
+
+    /// Priority-aware admission without a deadline (legacy entry point;
+    /// see `admit`).
+    pub fn push_evicting(&mut self, payload: T, priority: i64)
+                         -> Admission<T> {
+        self.admit(payload, priority, None, 0)
     }
 
     pub fn len(&self) -> usize {
@@ -158,6 +279,15 @@ impl<T> Batcher<T> {
 mod tests {
     use super::*;
 
+    /// `enqueued_total == popped + evicted + still-queued`, always.
+    fn assert_invariant<T>(b: &Batcher<T>) {
+        assert_eq!(
+            b.enqueued_total,
+            b.popped_total + b.evicted_total + b.len() as u64,
+            "admission accounting drifted"
+        );
+    }
+
     #[test]
     fn fifo_within_priority() {
         let mut b = Batcher::new(10);
@@ -167,6 +297,7 @@ mod tests {
         assert_eq!(b.pop().unwrap().payload, "a");
         assert_eq!(b.pop().unwrap().payload, "b");
         assert_eq!(b.pop().unwrap().payload, "c");
+        assert_invariant(&b);
     }
 
     #[test]
@@ -181,14 +312,31 @@ mod tests {
     }
 
     #[test]
+    fn edf_within_priority_deadline_free_last() {
+        let mut b = Batcher::new(10);
+        b.admit("no-slo", 0, None, 0);
+        b.admit("late", 0, Some(900), 0);
+        b.admit("soon", 0, Some(200), 0);
+        b.admit("urgent-low-pri", -1, Some(10), 0);
+        assert_eq!(b.pop().unwrap().payload, "soon");
+        assert_eq!(b.pop().unwrap().payload, "late");
+        assert_eq!(b.pop().unwrap().payload, "no-slo");
+        // priority still dominates the deadline
+        assert_eq!(b.pop().unwrap().payload, "urgent-low-pri");
+        assert_invariant(&b);
+    }
+
+    #[test]
     fn backpressure() {
         let mut b = Batcher::new(2);
         assert!(b.push(1, 0));
         assert!(b.push(2, 0));
         assert!(!b.push(3, 0));
         assert_eq!(b.rejected_total, 1);
+        assert_invariant(&b);
         b.pop();
         assert!(b.push(3, 0));
+        assert_invariant(&b);
     }
 
     #[test]
@@ -201,20 +349,101 @@ mod tests {
         match b.push_evicting("mid", 2) {
             Admission::Admitted(Some(evicted)) => {
                 assert_eq!(evicted.payload, "new-low");
+                // wasted queue time of the victim is still readable
+                assert!(evicted.queue_ms() >= 0.0);
             }
             _ => panic!("expected eviction"),
         }
         assert_eq!(b.len(), 3);
-        // newcomer that ties the lowest is rejected (FIFO respected)
+        // an admitted-by-displacement job is NOT a rejection: the newcomer
+        // entered the queue and the victim left it as an eviction
+        assert_eq!(b.evicted_total, 1);
+        assert_eq!(b.shed_total, 0);
+        assert_invariant(&b);
+        // newcomer that ties the lowest is shed (FIFO respected)
         match b.push_evicting("tie-low", 0) {
-            Admission::Rejected(p) => assert_eq!(p, "tie-low"),
+            Admission::Shed { payload, .. } => assert_eq!(payload, "tie-low"),
             _ => panic!("tie must not evict"),
         }
-        assert_eq!(b.rejected_total, 2);
+        assert_eq!(b.shed_total, 1);
+        assert_invariant(&b);
         // drain order: priority desc, FIFO within priority
         assert_eq!(b.pop().unwrap().payload, "high");
         assert_eq!(b.pop().unwrap().payload, "mid");
         assert_eq!(b.pop().unwrap().payload, "old-low");
+        assert_invariant(&b);
+    }
+
+    #[test]
+    fn eviction_pops_directly_when_victim_is_heap_top() {
+        // capacity-1 queue: the only queued job is both heap top and
+        // victim; the fast path must still hand it back intact
+        let mut b = Batcher::new(1);
+        b.push("low", 0);
+        match b.push_evicting("high", 9) {
+            Admission::Admitted(Some(evicted)) => {
+                assert_eq!(evicted.payload, "low");
+            }
+            _ => panic!("expected eviction"),
+        }
+        assert_eq!(b.pop().unwrap().payload, "high");
+        assert_invariant(&b);
+    }
+
+    #[test]
+    fn deadline_eviction_displaces_most_slack_first() {
+        let mut b = Batcher::new(2);
+        b.admit("slack", 0, Some(5_000), 0);
+        b.admit("tight", 0, Some(100), 0);
+        // same priority, tighter deadline: displaces the slack job
+        match b.admit("tighter", 0, Some(50), 0) {
+            Admission::Admitted(Some(evicted)) => {
+                assert_eq!(evicted.payload, "slack");
+            }
+            _ => panic!("expected eviction of the most-slack job"),
+        }
+        assert_eq!(b.pop().unwrap().payload, "tighter");
+        assert_eq!(b.pop().unwrap().payload, "tight");
+        assert_invariant(&b);
+    }
+
+    #[test]
+    fn unmeetable_deadline_is_shed_with_retry_after() {
+        let mut b = Batcher::new(100);
+        b.observe_round_ms(10.0);
+        for i in 0..20 {
+            b.admit(i, 0, None, 0);
+        }
+        // estimated wait = 20 x 10 ms; a 50 ms budget cannot be met
+        match b.admit(99, 0, Some(1_050), 1_000) {
+            Admission::Shed { payload, retry_after_ms } => {
+                assert_eq!(payload, 99);
+                assert!(retry_after_ms >= 200,
+                        "retry hint should cover the queue drain");
+            }
+            _ => panic!("expected early shed"),
+        }
+        assert_eq!(b.shed_total, 1);
+        // a job with enough budget still admits
+        assert!(matches!(b.admit(7, 0, Some(2_000), 1_000),
+                         Admission::Admitted(None)));
+        // deadline-free jobs are never early-shed
+        assert!(matches!(b.admit(8, 0, None, 1_000),
+                         Admission::Admitted(None)));
+        assert_invariant(&b);
+    }
+
+    #[test]
+    fn no_early_shed_before_round_time_observed() {
+        let mut b = Batcher::new(10);
+        for i in 0..5 {
+            b.admit(i, 0, None, 0);
+        }
+        // round time unknown: even a 0-budget job is admitted (EDF will
+        // order it first)
+        assert!(matches!(b.admit(9, 0, Some(0), 0),
+                         Admission::Admitted(None)));
+        assert_invariant(&b);
     }
 
     #[test]
@@ -224,6 +453,7 @@ mod tests {
         assert!(b.push(2, 1));
         assert!(b.is_full());
         assert_eq!(b.enqueued_total, 2);
+        assert_invariant(&b);
     }
 
     #[test]
@@ -244,6 +474,41 @@ mod tests {
         b.push((), 0);
         std::thread::sleep(std::time::Duration::from_millis(5));
         let j = b.pop().unwrap();
+        assert!(j.queue_ms() >= 5.0);
         assert!(j.enqueued.elapsed().as_secs_f64() >= 0.005);
+    }
+
+    #[test]
+    fn round_time_ewma_converges() {
+        let mut b: Batcher<()> = Batcher::new(4);
+        assert_eq!(b.estimated_wait_ms(), 0.0);
+        b.observe_round_ms(8.0);
+        for _ in 0..64 {
+            b.observe_round_ms(4.0);
+        }
+        b.push((), 0);
+        b.push((), 0);
+        // 2 queued x ~4 ms rounds
+        let est = b.estimated_wait_ms();
+        assert!(est > 7.0 && est < 9.0, "est {est}");
+    }
+
+    #[test]
+    fn accounting_invariant_under_churn() {
+        let mut b = Batcher::new(4);
+        let mut served = 0u64;
+        for i in 0..64i64 {
+            let dl = if i % 3 == 0 { Some(100 + i as u64) } else { None };
+            b.admit(i, i % 5, dl, 0);
+            if i % 2 == 0 && b.pop().is_some() {
+                served += 1;
+            }
+            assert_invariant(&b);
+        }
+        while b.pop().is_some() {
+            served += 1;
+        }
+        assert_invariant(&b);
+        assert_eq!(b.enqueued_total, served + b.evicted_total);
     }
 }

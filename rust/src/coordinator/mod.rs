@@ -35,6 +35,18 @@
 //! pool, keeping prefix-indexed ones reclaimable for future hits. Pool
 //! occupancy and hit rates are exported through `{"cmd":"stats"}`.
 //!
+//! Serving is deadline-aware end to end: requests carry an SLO class
+//! and/or an explicit `deadline_ms` budget (protocol.rs), the batcher
+//! orders EDF within priority and sheds unmeetable work at admission
+//! with a `retry_after_ms` hint (queue depth x observed round time, fed
+//! back from the worker's own rounds), and the session pool schedules
+//! runnable sessions EDF under `slo_round_width` pressure — overdue
+//! sessions yield their round slot to work that can still make its
+//! budget, and a preempted session simply pauses (sessions are
+//! resumable, so pausing is *not scheduling a round*; resume is
+//! bit-identical). Per-class served/shed/deadline-miss counters and
+//! queue/decode latency land in `{"cmd":"stats"}`.
+//!
 //! The engine worker pre-compiles the executables its strategy needs, so
 //! first-request latency is decode, not XLA compilation. Queue depth,
 //! active-session count and per-session progress are exported through the
@@ -48,6 +60,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -60,7 +73,7 @@ use crate::tokenizer::Tokenizer;
 use crate::train::TrainCfg;
 
 use batcher::{Admission, Batcher};
-use protocol::{GenRequest, GenResponse, Request};
+use protocol::{GenRequest, GenResponse, Request, SloClass};
 use scheduler::SessionPool;
 
 #[derive(Debug, Clone)]
@@ -80,6 +93,9 @@ pub struct ServerCfg {
     /// Shared paged KV pool budget in MiB; 0 serves with dense
     /// per-session caches (the pre-pool behavior).
     pub kv_budget_mb: usize,
+    /// Sessions stepped per round under EDF pressure; 0 = unlimited
+    /// (every runnable session steps, the pre-SLO behavior).
+    pub slo_round_width: usize,
     /// full decode configuration; per-request `strategy` switches presets,
     /// otherwise this config is used verbatim
     pub decode: Option<crate::decode::DecodeCfg>,
@@ -94,6 +110,7 @@ struct Job {
 struct ActiveJob {
     reply: mpsc::Sender<String>,
     queue_ms: f64,
+    class: SloClass,
 }
 
 #[derive(Default)]
@@ -112,6 +129,22 @@ pub struct ServerStats {
     pub admitted_total: AtomicU64,
     /// Configured interleaving width (set once at startup).
     pub max_concurrent: AtomicU64,
+    // ---- SLO / admission counters
+    /// Jobs turned away early with a retry-after hint (counter).
+    pub shed_total: AtomicU64,
+    /// Queued jobs displaced by a more urgent newcomer (counter).
+    pub evicted_total: AtomicU64,
+    /// Sessions retired past their deadline budget (counter).
+    pub deadline_miss_total: AtomicU64,
+    /// Runnable sessions left unscheduled by EDF width pressure (counter).
+    pub preempted_rounds: AtomicU64,
+    /// Per-class counters, indexed by `SloClass::idx()`.
+    pub served_by_class: [AtomicU64; 3],
+    pub shed_by_class: [AtomicU64; 3],
+    pub deadline_miss_by_class: [AtomicU64; 3],
+    /// Per-class latency totals (ms), for mean-latency gauges.
+    pub queue_ms_by_class: [AtomicU64; 3],
+    pub decode_ms_by_class: [AtomicU64; 3],
     // ---- paged KV pool gauges (all zero when serving dense)
     /// Page-budget ceiling of the shared KV pool.
     pub kv_pages_total: AtomicU64,
@@ -354,41 +387,24 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
         Some(kv) => SessionPool::new().with_kv_pool(kv.clone()),
         None => SessionPool::new(),
     };
+    pool.set_round_width(cfg.slo_round_width);
     let mut disconnected = false;
+    // serving clock: wall milliseconds since worker start. Deadlines are
+    // absolute on this clock; tests/benches drive a virtual one instead.
+    let started = Instant::now();
 
     loop {
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
-        // ---- drain the channel into the priority queue
+        let now_ms = started.elapsed().as_millis() as u64;
+        pool.set_now_ms(now_ms);
+        // ---- drain the channel into the priority queue (deadline-aware
+        //      admission: on overflow the least-urgent job — newcomer or
+        //      queued — is answered with a retry-after hint and dropped)
         loop {
             match jobs.try_recv() {
-                Ok(job) => {
-                    let pri = job.req.priority;
-                    // priority-aware backpressure: on overflow the lowest
-                    // ranked job (newcomer or queued) is answered and
-                    // dropped
-                    match batcher.push_evicting(job, pri) {
-                        Admission::Admitted(None) => {}
-                        Admission::Admitted(Some(evicted)) => {
-                            stats.errors.fetch_add(1, Ordering::Relaxed);
-                            let _ = evicted.payload.reply.send(
-                                protocol::err_response(
-                                    &evicted.payload.req.id,
-                                    "queue full (displaced by higher \
-                                     priority)",
-                                ),
-                            );
-                        }
-                        Admission::Rejected(job) => {
-                            stats.errors.fetch_add(1, Ordering::Relaxed);
-                            let _ = job.reply.send(protocol::err_response(
-                                &job.req.id,
-                                "queue full",
-                            ));
-                        }
-                    }
-                }
+                Ok(job) => admit_to_queue(&mut batcher, &stats, job, now_ms),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     disconnected = true;
@@ -499,13 +515,18 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                         Ok(session) => {
                             let queued =
                                 batcher.pop().expect("peeked head");
-                            let queue_ms = queued.enqueued.elapsed()
-                                .as_secs_f64() * 1e3;
+                            let queue_ms = queued.queue_ms();
+                            let deadline_at_ms = queued.deadline_at_ms;
                             let job = queued.payload;
-                            pool.admit(
+                            pool.admit_deadline(
                                 job.req.id.clone(),
-                                ActiveJob { reply: job.reply, queue_ms },
+                                ActiveJob {
+                                    reply: job.reply,
+                                    queue_ms,
+                                    class: job.req.slo,
+                                },
                                 session,
+                                deadline_at_ms,
                             );
                         }
                         Err(e) if is_pool_exhausted(&e)
@@ -535,6 +556,16 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
         stats
             .admitted_total
             .store(pool.admitted_total, Ordering::Relaxed);
+        stats.shed_total.store(batcher.shed_total, Ordering::Relaxed);
+        stats
+            .evicted_total
+            .store(batcher.evicted_total, Ordering::Relaxed);
+        stats
+            .deadline_miss_total
+            .store(pool.deadline_miss_total, Ordering::Relaxed);
+        stats
+            .preempted_rounds
+            .store(pool.preempted_total, Ordering::Relaxed);
         if let Ok(mut s) = stats.sessions.lock() {
             *s = pool.progress();
         }
@@ -570,8 +601,10 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                 match jobs.recv_timeout(std::time::Duration::from_millis(50))
                 {
                     Ok(job) => {
-                        let pri = job.req.priority;
-                        batcher.push(job, pri);
+                        // the blocking wait advanced the clock; deadline
+                        // admission must see the post-sleep time
+                        let now_ms = started.elapsed().as_millis() as u64;
+                        admit_to_queue(&mut batcher, &stats, job, now_ms);
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -583,7 +616,10 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
         }
 
         // ---- one interleaved round: each live session advances one step
+        //      (its duration feeds the batcher's shed/retry estimate)
+        let t_round = Instant::now();
         let finished = pool.step_round(&eng, &params.data);
+        batcher.observe_round_ms(t_round.elapsed().as_secs_f64() * 1e3);
         for f in finished {
             let line = match f.result {
                 Ok(r) => {
@@ -598,8 +634,10 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                         // engine time of this session's own steps (its
                         // share of batched forwards included)
                         decode_ms: f.busy_secs * 1e3,
+                        slo: f.tag.class.name().to_string(),
+                        deadline_missed: f.deadline_missed,
                     };
-                    record_served(&stats, &resp);
+                    record_served(&stats, &resp, f.tag.class);
                     protocol::ok_response(&resp)
                 }
                 Err(e) => {
@@ -620,7 +658,39 @@ fn reply_err(stats: &ServerStats, job: &Job, e: &anyhow::Error) {
         .send(protocol::err_response(&job.req.id, &format!("{e:#}")));
 }
 
-fn record_served(stats: &ServerStats, r: &GenResponse) {
+/// Run one incoming job through deadline-aware queue admission. Displaced
+/// and shed work is answered immediately with a `retry_after_ms` hint (the
+/// estimated queue drain time) and counted against its SLO class.
+fn admit_to_queue(batcher: &mut Batcher<Job>, stats: &ServerStats, job: Job,
+                  now_ms: u64) {
+    let pri = job.req.priority;
+    let deadline_at_ms = job.req.deadline_ms.map(|b| now_ms + b);
+    match batcher.admit(job, pri, deadline_at_ms, now_ms) {
+        Admission::Admitted(None) => {}
+        Admission::Admitted(Some(evicted)) => {
+            let retry = batcher.estimated_wait_ms().max(1.0).ceil() as u64;
+            let j = evicted.payload;
+            stats.shed_by_class[j.req.slo.idx()]
+                .fetch_add(1, Ordering::Relaxed);
+            let _ = j.reply.send(protocol::shed_response(
+                &j.req.id,
+                "displaced by higher-priority load",
+                retry,
+            ));
+        }
+        Admission::Shed { payload: j, retry_after_ms } => {
+            stats.shed_by_class[j.req.slo.idx()]
+                .fetch_add(1, Ordering::Relaxed);
+            let _ = j.reply.send(protocol::shed_response(
+                &j.req.id,
+                "queue overloaded",
+                retry_after_ms,
+            ));
+        }
+    }
+}
+
+fn record_served(stats: &ServerStats, r: &GenResponse, class: SloClass) {
     stats.served.fetch_add(1, Ordering::Relaxed);
     stats
         .queue_ms_total
@@ -628,6 +698,17 @@ fn record_served(stats: &ServerStats, r: &GenResponse) {
     stats
         .decode_ms_total
         .fetch_add(r.decode_ms as u64, Ordering::Relaxed);
+    let i = class.idx();
+    stats.served_by_class[i].fetch_add(1, Ordering::Relaxed);
+    stats
+        .queue_ms_by_class[i]
+        .fetch_add(r.queue_ms as u64, Ordering::Relaxed);
+    stats
+        .decode_ms_by_class[i]
+        .fetch_add(r.decode_ms as u64, Ordering::Relaxed);
+    if r.deadline_missed {
+        stats.deadline_miss_by_class[i].fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// Blocking client helper (examples + integration tests).

@@ -2,18 +2,81 @@
 //!
 //! Request (one JSON object per line):
 //!   {"id": "r1", "prompt": "Q EVAL 3 + 4", "gen_len": 96,
-//!    "priority": 0, "strategy": "d3llm"}        // strategy optional
+//!    "priority": 0, "strategy": "d3llm",        // strategy optional
+//!    "slo": "interactive", "deadline_ms": 250}  // SLO fields optional
 //!   {"cmd": "stats"} | {"cmd": "shutdown"}
+//!
+//! `slo` names the request's service class (`interactive` / `standard` /
+//! `batch`); `deadline_ms` overrides the class's default latency budget.
+//! Without either, a request serves as `standard` with no deadline (the
+//! pre-SLO behavior: never shed, never preempted).
 //!
 //! Response:
 //!   {"id": "r1", "ok": true, "text": "...", "tokens": [..],
 //!    "tpf": 5.1, "forwards": 12, "gen_tokens": 61,
-//!    "queue_ms": 0.3, "decode_ms": 210.0}
+//!    "queue_ms": 0.3, "decode_ms": 210.0,
+//!    "slo": "standard", "deadline_missed": false}
 //!   {"id": "r1", "ok": false, "error": "..."}
+//!   {"id": "r1", "ok": false, "error": "shed: queue overloaded",
+//!    "retry_after_ms": 120}                     // shed under overload
 
 use anyhow::{anyhow, Result};
 
 use crate::util::json::{self, Json};
+
+/// Service-level objective class of a request. Classes only set the
+/// *default* deadline budget and label the per-class serving counters;
+/// scheduling itself is driven by `priority` and the resolved deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloClass {
+    /// Tight latency budget (user-facing chat turns).
+    Interactive,
+    /// Default class: relaxed budget.
+    Standard,
+    /// Throughput work: no deadline, first to be shed or preempted.
+    Batch,
+}
+
+impl SloClass {
+    pub const ALL: [SloClass; 3] =
+        [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Stable index for per-class counter arrays.
+    pub fn idx(&self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    /// Default latency budget when the request names a class but no
+    /// explicit `deadline_ms`. `None` = no deadline (never shed on SLO).
+    pub fn default_deadline_ms(&self) -> Option<u64> {
+        match self {
+            SloClass::Interactive => Some(500),
+            SloClass::Standard => Some(2_000),
+            SloClass::Batch => None,
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub enum Request {
@@ -29,6 +92,13 @@ pub struct GenRequest {
     pub gen_len: Option<usize>,
     pub priority: i64,
     pub strategy: Option<String>,
+    /// SLO class (accounting + default deadline). `Standard` when absent.
+    pub slo: SloClass,
+    /// Effective latency budget in ms from enqueue, resolved at parse
+    /// time: an explicit `deadline_ms` wins; a request that only named a
+    /// class gets the class default; a request with neither has no
+    /// deadline (legacy behavior: never shed on SLO, never preempted).
+    pub deadline_ms: Option<u64>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -41,6 +111,10 @@ pub struct GenResponse {
     pub gen_tokens: usize,
     pub queue_ms: f64,
     pub decode_ms: f64,
+    /// SLO class name the request was served under.
+    pub slo: String,
+    /// True when the request finished past its deadline budget.
+    pub deadline_missed: bool,
 }
 
 pub fn parse_request(line: &str) -> Result<Request> {
@@ -52,6 +126,10 @@ pub fn parse_request(line: &str) -> Result<Request> {
             other => Err(anyhow!("unknown cmd `{other}`")),
         };
     }
+    parse_generate(&j).map(Request::Generate)
+}
+
+fn parse_generate(j: &Json) -> Result<GenRequest> {
     let id = j
         .get("id")
         .and_then(|v| v.as_str())
@@ -62,7 +140,25 @@ pub fn parse_request(line: &str) -> Result<Request> {
         .and_then(|v| v.as_str())
         .ok_or_else(|| anyhow!("missing `prompt`"))?
         .to_string();
-    Ok(Request::Generate(GenRequest {
+    let slo_raw = j.get("slo").and_then(|v| v.as_str());
+    let slo = match slo_raw {
+        Some(s) => {
+            SloClass::parse(s).ok_or_else(|| anyhow!("unknown slo `{s}`"))?
+        }
+        None => SloClass::Standard,
+    };
+    // resolve the effective deadline here: explicit budget wins, the
+    // class default applies only when the line named a class, and a line
+    // with neither keeps the legacy no-deadline behavior
+    let deadline_ms = j
+        .get("deadline_ms")
+        .and_then(|v| v.as_f64())
+        .filter(|d| *d >= 0.0)
+        .map(|d| d as u64)
+        .or_else(|| {
+            if slo_raw.is_some() { slo.default_deadline_ms() } else { None }
+        });
+    Ok(GenRequest {
         id,
         prompt,
         gen_len: j.get("gen_len").and_then(|v| v.as_usize()),
@@ -71,7 +167,9 @@ pub fn parse_request(line: &str) -> Result<Request> {
             .get("strategy")
             .and_then(|v| v.as_str())
             .map(|s| s.to_string()),
-    }))
+        slo,
+        deadline_ms,
+    })
 }
 
 pub fn ok_response(r: &GenResponse) -> String {
@@ -86,12 +184,28 @@ pub fn ok_response(r: &GenResponse) -> String {
         ("gen_tokens", Json::num(r.gen_tokens as f64)),
         ("queue_ms", Json::num(r.queue_ms)),
         ("decode_ms", Json::num(r.decode_ms)),
+        ("slo", Json::str(r.slo.clone())),
+        ("deadline_missed", Json::Bool(r.deadline_missed)),
+    ])
+    .to_string()
+}
+
+/// Load-shed reply: the request was turned away before decoding (queue
+/// overload or unmeetable deadline) with a hint for when to retry.
+pub fn shed_response(id: &str, reason: &str, retry_after_ms: u64) -> String {
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(format!("shed: {reason}"))),
+        ("retry_after_ms", Json::num(retry_after_ms as f64)),
     ])
     .to_string()
 }
 
 /// Serialize the server stats snapshot, including the interleaving
-/// gauges (queue depth, live sessions) and per-session progress.
+/// gauges (queue depth, live sessions), the SLO serving counters
+/// (per-class served/shed/deadline-miss + latency totals) and per-session
+/// progress.
 pub fn stats_response(s: &super::ServerStats) -> String {
     use std::sync::atomic::Ordering::Relaxed;
     let sessions: Vec<Json> = s
@@ -107,11 +221,30 @@ pub fn stats_response(s: &super::ServerStats) -> String {
                         ("steps", Json::num(p.steps as f64)),
                         ("rounds", Json::num(p.rounds as f64)),
                         ("forwards", Json::num(p.forwards as f64)),
+                        ("paused_rounds",
+                         Json::num(p.paused_rounds as f64)),
                     ])
                 })
                 .collect()
         })
         .unwrap_or_default();
+    let slo: Vec<Json> = SloClass::ALL
+        .iter()
+        .map(|c| {
+            let i = c.idx();
+            Json::obj(vec![
+                ("class", Json::str(c.name())),
+                ("served", Json::num(s.served_by_class[i].load(Relaxed) as f64)),
+                ("shed", Json::num(s.shed_by_class[i].load(Relaxed) as f64)),
+                ("deadline_miss",
+                 Json::num(s.deadline_miss_by_class[i].load(Relaxed) as f64)),
+                ("queue_ms",
+                 Json::num(s.queue_ms_by_class[i].load(Relaxed) as f64)),
+                ("decode_ms",
+                 Json::num(s.decode_ms_by_class[i].load(Relaxed) as f64)),
+            ])
+        })
+        .collect();
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("served", Json::num(s.served.load(Relaxed) as f64)),
@@ -125,6 +258,14 @@ pub fn stats_response(s: &super::ServerStats) -> String {
         ("admitted", Json::num(s.admitted_total.load(Relaxed) as f64)),
         ("max_concurrent_sessions",
          Json::num(s.max_concurrent.load(Relaxed) as f64)),
+        // SLO / admission counters
+        ("shed", Json::num(s.shed_total.load(Relaxed) as f64)),
+        ("evicted", Json::num(s.evicted_total.load(Relaxed) as f64)),
+        ("deadline_misses",
+         Json::num(s.deadline_miss_total.load(Relaxed) as f64)),
+        ("preempted_rounds",
+         Json::num(s.preempted_rounds.load(Relaxed) as f64)),
+        ("slo", Json::Arr(slo)),
         // paged KV pool gauges (all zero when serving dense caches)
         ("kv_pages_total",
          Json::num(s.kv_pages_total.load(Relaxed) as f64)),
@@ -172,9 +313,51 @@ mod tests {
                 assert_eq!(g.gen_len, Some(96));
                 assert_eq!(g.priority, 2);
                 assert!(g.strategy.is_none());
+                assert_eq!(g.slo, SloClass::Standard);
+                assert!(g.deadline_ms.is_none());
             }
             _ => panic!(),
         }
+    }
+
+    fn gen_req(line: &str) -> GenRequest {
+        match parse_request(line).unwrap() {
+            Request::Generate(g) => g,
+            _ => panic!("expected generate"),
+        }
+    }
+
+    #[test]
+    fn parse_slo_fields() {
+        // explicit deadline wins over the class default
+        let g = gen_req(
+            r#"{"id":"a","prompt":"x","slo":"interactive","deadline_ms":250}"#,
+        );
+        assert_eq!(g.slo, SloClass::Interactive);
+        assert_eq!(g.deadline_ms, Some(250));
+
+        // class default applies when only the class is named
+        let g = gen_req(r#"{"id":"a","prompt":"x","slo":"interactive"}"#);
+        assert_eq!(g.deadline_ms, Some(500));
+
+        // batch: no default deadline
+        let g = gen_req(r#"{"id":"a","prompt":"x","slo":"batch"}"#);
+        assert_eq!(g.slo, SloClass::Batch);
+        assert_eq!(g.deadline_ms, None);
+
+        // no SLO fields: legacy behavior, no deadline at all
+        let g = gen_req(r#"{"id":"a","prompt":"x"}"#);
+        assert_eq!(g.slo, SloClass::Standard);
+        assert_eq!(g.deadline_ms, None);
+
+        // an explicit deadline without a class still applies
+        let g = gen_req(r#"{"id":"a","prompt":"x","deadline_ms":80}"#);
+        assert_eq!(g.deadline_ms, Some(80));
+
+        // unknown class is a parse error
+        assert!(
+            parse_request(r#"{"id":"a","prompt":"x","slo":"warp"}"#).is_err()
+        );
     }
 
     #[test]
@@ -203,14 +386,29 @@ mod tests {
             gen_tokens: 14,
             queue_ms: 0.4,
             decode_ms: 9.0,
+            slo: "interactive".into(),
+            deadline_missed: true,
         };
         let line = ok_response(&resp);
         let j = json::parse(&line).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("tpf").unwrap().as_f64(), Some(3.5));
+        assert_eq!(j.get("slo").unwrap().as_str(), Some("interactive"));
+        assert_eq!(j.get("deadline_missed").unwrap().as_bool(), Some(true));
         let e = err_response("x", "boom");
         let j = json::parse(&e).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn shed_response_carries_retry_after() {
+        let line = shed_response("r9", "queue overloaded", 120);
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_str(), Some("r9"));
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("retry_after_ms").unwrap().as_usize(), Some(120));
+        assert!(j.get("error").unwrap().as_str().unwrap()
+                 .starts_with("shed:"));
     }
 
     #[test]
@@ -251,5 +449,32 @@ mod tests {
         assert_eq!(sess.len(), 1);
         assert_eq!(sess[0].get("id").unwrap().as_str(), Some("r1"));
         assert_eq!(sess[0].get("unmasked").unwrap().as_usize(), Some(40));
+    }
+
+    #[test]
+    fn stats_response_exposes_slo_counters() {
+        use std::sync::atomic::Ordering;
+        let s = crate::coordinator::ServerStats::default();
+        let i = SloClass::Interactive.idx();
+        s.served_by_class[i].store(7, Ordering::Relaxed);
+        s.shed_by_class[SloClass::Batch.idx()].store(3, Ordering::Relaxed);
+        s.deadline_miss_by_class[i].store(1, Ordering::Relaxed);
+        s.shed_total.store(3, Ordering::Relaxed);
+        s.evicted_total.store(2, Ordering::Relaxed);
+        s.deadline_miss_total.store(1, Ordering::Relaxed);
+        s.preempted_rounds.store(11, Ordering::Relaxed);
+        let j = json::parse(&stats_response(&s)).unwrap();
+        assert_eq!(j.get("shed").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("evicted").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("deadline_misses").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("preempted_rounds").unwrap().as_usize(), Some(11));
+        let slo = j.get("slo").unwrap().as_arr().unwrap();
+        assert_eq!(slo.len(), 3);
+        assert_eq!(slo[0].get("class").unwrap().as_str(),
+                   Some("interactive"));
+        assert_eq!(slo[0].get("served").unwrap().as_usize(), Some(7));
+        assert_eq!(slo[0].get("deadline_miss").unwrap().as_usize(), Some(1));
+        assert_eq!(slo[2].get("class").unwrap().as_str(), Some("batch"));
+        assert_eq!(slo[2].get("shed").unwrap().as_usize(), Some(3));
     }
 }

@@ -13,6 +13,25 @@
 //! consecutive steps of any session, every other live session steps
 //! exactly once (per-session step gap <= pool size).
 //!
+//! ## EDF scheduling and preemption-by-pausing
+//!
+//! With a `round_width` smaller than the live-session count, each round
+//! steps only the `round_width` most urgent runnable sessions — earliest
+//! deadline first (`admit_deadline`), deadline-free sessions after every
+//! deadlined one, and sessions already past their deadline last (they
+//! have nothing left to win; urgent work that can still make its budget
+//! runs instead). Sessions are fully resumable, so preemption is simply
+//! *not scheduling a round*: a paused session keeps its KV pages and
+//! resumes bit-identically (its trajectory is schedule-independent —
+//! pinned in tests/scheduler_determinism.rs). Ties rotate by
+//! least-recently-stepped, so width-limited pools without deadlines
+//! degrade to fair round-robin, and the default width (unlimited)
+//! preserves the classic step-everyone behavior exactly.
+//!
+//! Deadlines are absolute milliseconds on a caller-driven clock
+//! (`set_now_ms`): the serving coordinator feeds wall time since worker
+//! start, tests and benches drive a deterministic virtual clock.
+//!
 //! ## Batched rounds
 //!
 //! One cycle runs in three phases: every runnable session *plans* its
@@ -59,6 +78,9 @@ pub struct Finished<T> {
     /// Engine time this session's own steps took (its share of batched
     /// forwards; excludes rounds spent on other interleaved sessions).
     pub busy_secs: f64,
+    /// True when the session retired after its deadline (on the pool's
+    /// `set_now_ms` clock); always false for deadline-free sessions.
+    pub deadline_missed: bool,
 }
 
 struct Entry<T> {
@@ -67,6 +89,10 @@ struct Entry<T> {
     session: DecodeSession,
     seq: u64,
     busy_secs: f64,
+    /// Absolute deadline (ms on the pool clock); `None` = no SLO.
+    deadline_at_ms: Option<u64>,
+    /// Pool round this session last stepped in (EDF tie rotation).
+    last_step: u64,
 }
 
 /// What one session's round planned, held between the plan and apply
@@ -103,6 +129,17 @@ pub struct SessionPool<T> {
     pub steps_total: u64,
     /// Total sessions ever admitted.
     pub admitted_total: u64,
+    /// Runnable sessions left unscheduled by EDF width pressure (counter).
+    pub preempted_total: u64,
+    /// Sessions retired past their deadline (counter).
+    pub deadline_miss_total: u64,
+    /// Sessions stepped per round under EDF pressure (`usize::MAX` =
+    /// step every runnable session, the classic behavior).
+    round_width: usize,
+    /// Current time (ms) on the caller's clock, for overdue checks.
+    now_ms: u64,
+    /// `step_round` invocations (EDF tie rotation epoch).
+    rounds_issued: u64,
     record_trace: bool,
     trace: Vec<u64>,
     /// Shared paged KV pool the admitted sessions draw pages from, when
@@ -118,10 +155,33 @@ impl<T> SessionPool<T> {
             next_seq: 0,
             steps_total: 0,
             admitted_total: 0,
+            preempted_total: 0,
+            deadline_miss_total: 0,
+            round_width: usize::MAX,
+            now_ms: 0,
+            rounds_issued: 0,
             record_trace: false,
             trace: Vec::new(),
             kv: None,
         }
+    }
+
+    /// Bound how many sessions step per round (EDF selection among the
+    /// runnable ones); `0` or `usize::MAX` = step every runnable session.
+    pub fn with_round_width(mut self, width: usize) -> SessionPool<T> {
+        self.set_round_width(width);
+        self
+    }
+
+    /// See `with_round_width`.
+    pub fn set_round_width(&mut self, width: usize) {
+        self.round_width = if width == 0 { usize::MAX } else { width };
+    }
+
+    /// Advance the pool clock (absolute ms; same clock `admit_deadline`
+    /// deadlines are on). Drives overdue demotion and miss accounting.
+    pub fn set_now_ms(&mut self, now_ms: u64) {
+        self.now_ms = now_ms;
     }
 
     /// Record the admission-sequence number of every step (for fairness
@@ -172,11 +232,58 @@ impl<T> SessionPool<T> {
     /// sequence number (stable id for the fairness trace).
     pub fn admit(&mut self, id: String, tag: T, session: DecodeSession)
                  -> u64 {
+        self.admit_deadline(id, tag, session, None)
+    }
+
+    /// `admit` with an absolute deadline (ms on the `set_now_ms` clock):
+    /// the session competes EDF for round slots and is demoted behind
+    /// still-meetable work once overdue.
+    pub fn admit_deadline(&mut self, id: String, tag: T,
+                          session: DecodeSession,
+                          deadline_at_ms: Option<u64>) -> u64 {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.admitted_total += 1;
-        self.entries.push(Entry { id, tag, session, seq, busy_secs: 0.0 });
+        self.entries.push(Entry {
+            id,
+            tag,
+            session,
+            seq,
+            busy_secs: 0.0,
+            deadline_at_ms,
+            last_step: 0,
+        });
         seq
+    }
+
+    /// Pick which runnable sessions step this round. `None` = no width
+    /// pressure (every runnable session steps — the classic fast path);
+    /// `Some(sel)` = EDF selection, `sel[i]` true for stepped entries.
+    ///
+    /// Urgency order: sessions that can still meet a deadline first
+    /// (earliest deadline), then deadline-free sessions, then overdue
+    /// sessions last — a session past its deadline budget yields its
+    /// round slot to work that can still win. Ties rotate by
+    /// least-recently-stepped, then admission order.
+    fn select_runnable(&self) -> Option<Vec<bool>> {
+        let mut runnable: Vec<usize> = (0..self.entries.len())
+            .filter(|&i| self.entries[i].session.is_runnable())
+            .collect();
+        if runnable.len() <= self.round_width {
+            return None;
+        }
+        runnable.sort_by_key(|&i| {
+            let e = &self.entries[i];
+            let overdue =
+                e.deadline_at_ms.map_or(false, |d| d < self.now_ms);
+            (overdue, e.deadline_at_ms.unwrap_or(u64::MAX), e.last_step,
+             e.seq)
+        });
+        let mut sel = vec![false; self.entries.len()];
+        for &i in runnable.iter().take(self.round_width) {
+            sel[i] = true;
+        }
+        Some(sel)
     }
 
     /// Step every runnable session exactly once, in admission order,
@@ -189,6 +296,8 @@ impl<T> SessionPool<T> {
     pub fn step_round(&mut self, backend: &dyn Backend, params: &[f32])
                       -> Vec<Finished<T>> {
         let n = self.entries.len();
+        self.rounds_issued += 1;
+        let selected = self.select_runnable();
 
         // ---- phase 1: plan (admission order; this is the fairness trace)
         let mut slots: Vec<Slot> = Vec::with_capacity(n);
@@ -200,6 +309,17 @@ impl<T> SessionPool<T> {
                 slots.push(Slot::Idle);
                 continue;
             }
+            if let Some(sel) = &selected {
+                if !sel[i] {
+                    // preemption-by-pausing: runnable but out-prioritized
+                    // this round — the session just doesn't get a step
+                    self.entries[i].session.note_paused();
+                    self.preempted_total += 1;
+                    slots.push(Slot::Idle);
+                    continue;
+                }
+            }
+            self.entries[i].last_step = self.rounds_issued;
             if self.record_trace {
                 self.trace.push(self.entries[i].seq);
             }
@@ -289,6 +409,11 @@ impl<T> SessionPool<T> {
         for (idx, err) in retire {
             let e = self.entries.remove(idx - removed);
             removed += 1;
+            let deadline_missed =
+                e.deadline_at_ms.map_or(false, |d| self.now_ms > d);
+            if deadline_missed {
+                self.deadline_miss_total += 1;
+            }
             finished.push(Finished {
                 id: e.id,
                 tag: e.tag,
@@ -297,6 +422,7 @@ impl<T> SessionPool<T> {
                     None => Ok(e.session.finish()),
                 },
                 busy_secs: e.busy_secs,
+                deadline_missed,
             });
         }
         finished

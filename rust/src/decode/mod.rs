@@ -229,6 +229,9 @@ pub struct GenResult {
     pub wall_secs: f64,
     /// Decode rounds (scheduling iterations; one main forward at most).
     pub rounds: usize,
+    /// Rounds a width-pressured scheduler paused this session (EDF
+    /// preemption-by-pausing; zero outside SLO serving).
+    pub paused_rounds: usize,
     /// Teacher-extraction sessions: the scan step at which each
     /// generation offset was unmasked (`None` for decode strategies).
     pub unmask_ranks: Option<Vec<i32>>,

@@ -68,6 +68,8 @@ pub struct SessionProgress {
     pub full_forwards: usize,
     /// Windowed cached forwards so far.
     pub window_forwards: usize,
+    /// Rounds the scheduler paused this session (EDF preemption).
+    pub paused_rounds: usize,
 }
 
 /// KV-pool admission geometry of one request: how many prompt rows its
@@ -137,6 +139,9 @@ pub struct DecodeSession {
     pub res: GenResult,
     policy: Box<dyn DecodePolicy>,
     steps: usize,
+    /// Rounds a width-pressured scheduler skipped this session
+    /// (preemption-by-pausing bookkeeping; never advanced by decoding).
+    paused_rounds: usize,
     done: bool,
 }
 
@@ -227,6 +232,7 @@ impl DecodeSession {
             res: GenResult::default(),
             policy,
             steps: 0,
+            paused_rounds: 0,
             done: false,
         })
     }
@@ -262,6 +268,18 @@ impl DecodeSession {
         self.res.rounds
     }
 
+    /// Record one scheduler round that skipped this (runnable) session —
+    /// EDF preemption-by-pausing. Pure bookkeeping: pausing never touches
+    /// decode state, so a paused session resumes bit-identically.
+    pub fn note_paused(&mut self) {
+        self.paused_rounds += 1;
+    }
+
+    /// Rounds the scheduler paused this session so far.
+    pub fn paused_rounds(&self) -> usize {
+        self.paused_rounds
+    }
+
     /// Block states of a multi-block session (`None` for strategies
     /// without block structure).
     pub fn block_states(&self) -> Option<&[BlockState]> {
@@ -278,6 +296,7 @@ impl DecodeSession {
             forwards: self.res.forwards,
             full_forwards: self.res.mix.full_forwards,
             window_forwards: self.res.mix.window_forwards,
+            paused_rounds: self.paused_rounds,
         }
     }
 
@@ -425,6 +444,7 @@ impl DecodeSession {
     /// diffusion policies use the `SeqState::output()` semantics.
     pub fn finish(mut self) -> GenResult {
         self.res.unmask_ranks = self.policy.take_unmask_ranks();
+        self.res.paused_rounds = self.paused_rounds;
         match self.policy.emitted_len() {
             Some(n) => {
                 let lo = self.st.gen_start();

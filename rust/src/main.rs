@@ -273,6 +273,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "kv-budget-mb",
             svc.as_ref().map(|s| s.kv_budget_mb).unwrap_or(256),
         ),
+        // EDF round width: sessions stepped per round under deadline
+        // pressure (0 = unlimited, the pre-SLO behavior)
+        slo_round_width: args.usize_or(
+            "round-width",
+            svc.as_ref().map(|s| s.slo_round_width).unwrap_or(0),
+        ),
         // an explicit --strategy flag wins over the config file's decode
         // block; without the flag the config's tuned decode applies
         decode: if args.get("strategy").is_some() {

@@ -13,6 +13,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -34,6 +35,7 @@ impl Summary {
             min: sorted[0],
             p50: percentile(&sorted, 0.50),
             p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
             max: sorted[n - 1],
         }
     }
@@ -103,6 +105,14 @@ mod tests {
         let v = [1.0, 2.0, 10.0];
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 1.0), 10.0);
+    }
+
+    #[test]
+    fn p99_sits_between_p95_and_max() {
+        let xs: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.p99 - 197.01).abs() < 1e-9, "p99 {}", s.p99);
     }
 
     #[test]

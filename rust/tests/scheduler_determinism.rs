@@ -8,7 +8,10 @@
 //!     since a session's trajectory is schedule-independent);
 //!   * `step_round` coalesces same-shape rounds into one B>1 batched
 //!     backend call with outputs bit-identical to the B=1 path, and a
-//!     pool can mix strategies (d3llm + ar + spec) freely.
+//!     pool can mix strategies (d3llm + ar + spec) freely;
+//!   * under `round_width` pressure the pool schedules EDF (earliest
+//!     deadline first, deadline-free after deadlined, overdue last),
+//!     preempts by pausing, and a paused session resumes bit-identical.
 
 use d3llm::coordinator::scheduler::{run_interleaved, InterleavedRequest,
                                     SessionPool};
@@ -415,4 +418,144 @@ fn paged_gather_failure_falls_back_alone_in_its_window_group() {
     // the failed session released its pages and reservation on retire
     let u = kv.usage();
     assert_eq!(u.in_use + u.reserved, 0, "B leaked pool pages");
+}
+
+// ---------------------------------------------------------------------
+// EDF scheduling + preemption-by-pausing (deadline-aware serving). All
+// deadlines live on the pool's virtual `set_now_ms` clock, so these runs
+// are fully deterministic.
+
+#[test]
+fn edf_width_pressure_runs_earliest_deadline_first() {
+    let sim = SimBackend::new(13);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    // adversarial admission order: deadlines inverted (latest admitted
+    // first) plus one deadline-free rider
+    let mut pool: SessionPool<usize> =
+        SessionPool::new().with_trace().with_round_width(1);
+    pool.set_now_ms(0);
+    let deadlines = [Some(30_000u64), Some(20_000), Some(10_000), None];
+    for (i, dl) in deadlines.into_iter().enumerate() {
+        let s = DecodeSession::new(&sim, cfg.clone(), &prompt_for(i), 32)
+            .unwrap();
+        pool.admit_deadline(format!("r{i}"), i, s, dl);
+    }
+    let mut order = Vec::new();
+    let mut results: Vec<Option<GenResult>> =
+        (0..4).map(|_| None).collect();
+    while !pool.is_empty() {
+        for f in pool.step_round(&sim, &params) {
+            order.push(f.id.clone());
+            assert!(!f.deadline_missed, "{}: the clock never advanced",
+                    f.id);
+            results[f.tag] = Some(f.result.unwrap());
+        }
+    }
+    // earliest deadline drains first; the deadline-free session runs last
+    assert_eq!(order, ["r2", "r1", "r0", "r3"]);
+    assert!(pool.preempted_total > 0, "width 1 must have paused losers");
+    assert_eq!(pool.deadline_miss_total, 0);
+    // pause bookkeeping surfaces in the results
+    assert_eq!(results[2].take().unwrap().paused_rounds, 0,
+               "the most urgent session must never pause");
+    assert!(results[3].take().unwrap().paused_rounds > 0,
+            "the deadline-free session was never paused");
+}
+
+#[test]
+fn overdue_sessions_yield_their_slot_to_meetable_work() {
+    let sim = SimBackend::new(17);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    let mut pool: SessionPool<usize> =
+        SessionPool::new().with_round_width(1);
+    for (i, dl) in [Some(50u64), Some(60_000)].into_iter().enumerate() {
+        let s = DecodeSession::new(&sim, cfg.clone(), &prompt_for(i), 32)
+            .unwrap();
+        pool.admit_deadline(format!("r{i}"), i, s, dl);
+    }
+    // the clock is already past r0's deadline: EDF alone would run r0
+    // first, but an overdue session has nothing left to win — r1 (still
+    // meetable) takes every round slot until it retires
+    pool.set_now_ms(100);
+    let mut order = Vec::new();
+    let mut missed = Vec::new();
+    while !pool.is_empty() {
+        for f in pool.step_round(&sim, &params) {
+            order.push(f.id.clone());
+            missed.push(f.deadline_missed);
+        }
+    }
+    assert_eq!(order, ["r1", "r0"]);
+    assert_eq!(missed, [false, true]);
+    assert_eq!(pool.deadline_miss_total, 1);
+}
+
+#[test]
+fn preempted_sessions_resume_bit_identical() {
+    let seed = 29u64;
+    let sim = SimBackend::new(seed);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    // solo reference for the session that will be paused mid-decode (the
+    // sim is a pure function of the seed and the call inputs)
+    let ref_sim = SimBackend::new(seed);
+    let reference = decode::generate(&ref_sim, &cfg, &params, None,
+                                     &prompt_for(4), 64)
+        .unwrap();
+
+    let mut pool: SessionPool<usize> =
+        SessionPool::new().with_round_width(1);
+    pool.set_now_ms(0);
+    // the urgent job wins every round slot until it retires; the
+    // deadline-free job pauses the whole time, then resumes
+    pool.admit_deadline(
+        "urgent".into(), 0,
+        DecodeSession::new(&sim, cfg.clone(), &prompt_for(3), 32).unwrap(),
+        Some(500),
+    );
+    pool.admit_deadline(
+        "paused".into(), 1,
+        DecodeSession::new(&sim, cfg.clone(), &prompt_for(4), 64).unwrap(),
+        None,
+    );
+    let mut results: Vec<Option<GenResult>> = vec![None, None];
+    while !pool.is_empty() {
+        for f in pool.step_round(&sim, &params) {
+            results[f.tag] = Some(f.result.unwrap());
+        }
+    }
+    let paused = results[1].take().unwrap();
+    assert!(paused.paused_rounds > 0, "session was never actually paused");
+    assert_eq!(paused.tokens, reference.tokens,
+               "pause/resume changed the decode trajectory");
+    assert_eq!(paused.forwards, reference.forwards,
+               "pause/resume changed the forward count");
+    assert_eq!(paused.rounds, reference.rounds,
+               "paused rounds leaked into the session's own round count");
+}
+
+#[test]
+fn width_limited_deadline_free_pool_degrades_to_round_robin() {
+    let sim = SimBackend::new(19);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    let mut pool: SessionPool<usize> =
+        SessionPool::new().with_trace().with_round_width(2);
+    for i in 0..4 {
+        let s = DecodeSession::new(&sim, cfg.clone(), &prompt_for(i), 32)
+            .unwrap();
+        pool.admit(format!("r{i}"), i, s);
+    }
+    let mut finished = 0;
+    while !pool.is_empty() {
+        finished += pool.step_round(&sim, &params).len();
+    }
+    assert_eq!(finished, 4, "width pressure must not strand sessions");
+    // least-recently-stepped tie rotation: with no deadlines, width-2
+    // rounds alternate session pairs in admission order
+    assert!(pool.trace().len() >= 8);
+    assert_eq!(&pool.trace()[..8], &[0u64, 1, 2, 3, 0, 1, 2, 3]);
+    assert!(pool.preempted_total > 0);
 }

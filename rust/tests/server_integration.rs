@@ -46,6 +46,7 @@ fn server_serves_generates_and_shuts_down() {
         // prefix sharing and page release end to end
         draft: None,
         kv_budget_mb: 64,
+        slo_round_width: 0,
         decode: None,
     };
     let handle = std::thread::spawn(move || {
@@ -78,6 +79,18 @@ fn server_serves_generates_and_shuts_down() {
     assert_eq!(j.get("id").and_then(|v| v.as_str()), Some("g1"));
     assert!(j.get("gen_tokens").and_then(|v| v.as_usize()).unwrap() > 0);
     assert!(j.get("tpf").and_then(|v| v.as_f64()).unwrap() > 0.0);
+
+    // ---- SLO-tagged generate: class echoed back, no miss on an idle
+    //      server with a generous budget
+    let resp = request(
+        &addr,
+        r#"{"id":"g-slo","prompt":"Q EVAL 1 + 1","gen_len":32,"slo":"interactive","deadline_ms":60000}"#,
+    );
+    let j = json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp}");
+    assert_eq!(j.get("slo").and_then(|v| v.as_str()), Some("interactive"));
+    assert_eq!(j.get("deadline_missed").and_then(|v| v.as_bool()),
+               Some(false));
 
     // ---- unknown token in prompt -> per-request error, server survives
     let resp = request(&addr, r#"{"id":"g2","prompt":"BOGUSWORD"}"#);
@@ -113,6 +126,14 @@ fn server_serves_generates_and_shuts_down() {
     assert!(j.get("queue_depth").is_some());
     assert!(j.get("active_sessions").is_some());
     assert!(j.get("sessions").and_then(|v| v.as_arr()).is_some());
+    // per-class SLO counters: the tagged request above landed in
+    // `interactive`, nothing was shed on an idle server
+    let slo = j.get("slo").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(slo.len(), 3);
+    assert_eq!(slo[0].get("class").and_then(|v| v.as_str()),
+               Some("interactive"));
+    assert!(slo[0].get("served").and_then(|v| v.as_usize()).unwrap() >= 1);
+    assert_eq!(j.get("shed").and_then(|v| v.as_usize()), Some(0));
 
     // ---- shutdown
     let _ = request(&addr, r#"{"cmd":"shutdown"}"#);
