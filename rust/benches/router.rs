@@ -1,0 +1,303 @@
+//! `cargo bench --bench router` — the multi-worker fleet router under a
+//! deterministic 8-prefix-family workload (SimBackend + virtual clock,
+//! no artifacts, no wall-time dependence).
+//!
+//! The bench drives the real placement core (`RouterCore`: rendezvous
+//! hashing over the prefix-chain routing key, backlog-aware spill,
+//! least-loaded cold placement) against per-replica serving stacks built
+//! from the real `Batcher` + `SessionPool` + `SharedKvPool`, ticking all
+//! replicas in lockstep on a virtual millisecond clock (`ROUND_MS` per
+//! pool round — rounds are batched, so a round costs the same whatever
+//! its width). Request cost is calibrated from one solo session first.
+//!
+//! Two phases:
+//!   1. *Affinity*: open-loop arrivals at ~60% fleet utilization with
+//!      roomy queues. Every request is keyed (same 64-token prompt per
+//!      family, two full 32-row pages), so placement should pin each
+//!      family to its rendezvous home — vs ~1/N co-location under random
+//!      placement. Co-location is what makes prefix pages adoptable, so
+//!      the phase also checks the pools actually skipped prompt prefills.
+//!   2. *Throughput*: closed loop (all requests pending at t=0, tight
+//!      queues, dispatch gated on queue room like a blocking client) at
+//!      1 replica vs `FLEET` replicas. Backlog-aware spill keeps the
+//!      fleet work-conserving even when rendezvous hashing concentrates
+//!      families, so aggregate throughput must scale.
+//!
+//! Acceptance (asserted):
+//!   * phase 1 affinity-hit rate >= 80% (random placement: ~1/N = 25%);
+//!   * phase 1 fleet prefill skips > 0 (co-location paid off in pages);
+//!   * phase 2 aggregate throughput at 4 replicas >= 2x the 1-replica
+//!     baseline on the same workload;
+//!   * nothing is lost: every request decodes in every run.
+//!
+//! Emits `BENCH_router.json` with the hit rate, per-replica spread,
+//! spill/cold counters, adoption stats, and both throughput figures.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+
+use d3llm::coordinator::batcher::{Admission, Batcher};
+use d3llm::coordinator::router::RouterCore;
+use d3llm::coordinator::scheduler::SessionPool;
+use d3llm::decode::{self, DecodeCfg, DecodeSession, SimBackend, Strategy};
+use d3llm::model::kv_pool::{prefix_routing_key, KvPoolCfg, SharedKvPool};
+use d3llm::util::json::Json;
+
+/// Virtual duration of one pool round (ms).
+const ROUND_MS: f64 = 5.0;
+const GEN_LEN: usize = 32;
+/// Live sessions per replica pool.
+const MAX_LIVE: usize = 4;
+const N_FAMILIES: usize = 8;
+const PER_FAMILY: usize = 12;
+const N_REQUESTS: usize = N_FAMILIES * PER_FAMILY;
+const FLEET: usize = 4;
+/// Phase-1 queue bound: roomier than the whole run, so placement is pure
+/// affinity. Phase-2 queue bound: tight, so backlog spill has to work.
+const OPEN_QUEUE: usize = 128;
+const TIGHT_QUEUE: usize = 4;
+
+fn cfg() -> DecodeCfg {
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false; // sim argmax never emits EOS by default
+    cfg
+}
+
+/// One 64-token prompt per family (two full 32-row pages): every member
+/// shares the full prompt, so the routing key is the family identity and
+/// co-located members can adopt each other's prompt pages wholesale.
+fn family_prompt(family: usize) -> Vec<i32> {
+    (0..64).map(|i| 5 + ((i * 7 + family * 13) % 80) as i32).collect()
+}
+
+struct Replica {
+    batcher: Batcher<usize>,
+    pool: SessionPool<usize>,
+    kv: SharedKvPool,
+    served: usize,
+}
+
+struct RunOut {
+    makespan_ms: f64,
+    affinity_hits: u64,
+    affinity_spills: u64,
+    cold: u64,
+    prefill_skips: u64,
+    prefix_hits: u64,
+    served_per_replica: Vec<usize>,
+}
+
+/// Drive `n_replicas` serving stacks behind one `RouterCore` until every
+/// request has decoded. `inter_arrival_ms = 0` is the closed loop (all
+/// requests pending at t=0); dispatch is gated on queue room, so a full
+/// fleet backpressures the client instead of shedding.
+fn run_fleet(seed: u64, n_replicas: usize, max_queue: usize,
+             inter_arrival_ms: f64) -> RunOut {
+    let sim = SimBackend::new(seed);
+    let params = vec![0.5f32; 8];
+    let c = sim.constants().clone();
+    let spec = sim.model_spec("main").unwrap().clone();
+    let core = RouterCore::new(n_replicas, max_queue);
+    let mut reps: Vec<Replica> = (0..n_replicas)
+        .map(|_| {
+            let kv = SharedKvPool::new(KvPoolCfg {
+                layers: spec.n_layers,
+                d_kv: spec.d_kv,
+                s_max: c.s_max,
+                page_rows: c.block,
+                budget_bytes: 1 << 20,
+            });
+            Replica {
+                batcher: Batcher::new(max_queue),
+                pool: SessionPool::new().with_kv_pool(kv.clone()),
+                kv,
+                served: 0,
+            }
+        })
+        .collect();
+    // the same chain hash the replica pools index pages by — computed
+    // once per family, exactly like the acceptor's RouteKeyCtx
+    let keys: Vec<u64> = (0..N_FAMILIES)
+        .map(|f| {
+            let p = family_prompt(f);
+            let geo = decode::kv_admission_geometry(&cfg(), &c, p.len(), 0);
+            prefix_routing_key(&geo.prefix_tag, spec.n_layers, spec.d_kv,
+                               c.block, &p, geo.prefix_rows)
+                .expect("a 64-token prompt spans full pages")
+        })
+        .collect();
+    let arrival = |i: usize| i as f64 * inter_arrival_ms;
+
+    let mut pending: VecDeque<usize> = VecDeque::new();
+    let mut next_arrival = 0usize;
+    let mut now_ms = 0.0f64;
+    let mut done = 0usize;
+    while done < N_REQUESTS {
+        while next_arrival < N_REQUESTS && arrival(next_arrival) <= now_ms {
+            pending.push_back(next_arrival);
+            next_arrival += 1;
+        }
+        // dispatch while someone has queue room; placement sees live
+        // gauges, so a backlogged home spills to a fitting sibling
+        while let Some(&i) = pending.front() {
+            if reps.iter().all(|rep| rep.batcher.len() >= max_queue) {
+                break; // whole fleet backlogged: the client waits
+            }
+            for (r, rep) in reps.iter().enumerate() {
+                let g = core.gauge(r);
+                g.queue_depth
+                    .store(rep.batcher.len() as u64, Ordering::Relaxed);
+                g.active_sessions
+                    .store(rep.pool.len() as u64, Ordering::Relaxed);
+                g.est_wait_ms.store(
+                    rep.batcher.estimated_wait_ms().ceil() as u64,
+                    Ordering::Relaxed,
+                );
+            }
+            let r = core
+                .place(Some(keys[i % N_FAMILIES]), None)
+                .expect("live fleet")
+                .replica();
+            match reps[r].batcher.admit(i, 0, None, now_ms as u64) {
+                Admission::Admitted(None) => {}
+                _ => unreachable!("placement is gated on queue room"),
+            }
+            pending.pop_front();
+        }
+        // one lockstep round across the fleet (replicas run in parallel)
+        let mut any_live = false;
+        for rep in reps.iter_mut() {
+            while rep.pool.len() < MAX_LIVE {
+                let i = match rep.batcher.pop() {
+                    Some(q) => q.payload,
+                    None => break,
+                };
+                let s = DecodeSession::with_pool(
+                    &sim, cfg(), &family_prompt(i % N_FAMILIES), GEN_LEN,
+                    None, &rep.kv)
+                    .unwrap();
+                rep.pool.admit(format!("r{i}"), i, s);
+            }
+            if rep.pool.is_empty() {
+                continue;
+            }
+            any_live = true;
+            rep.pool.set_now_ms(now_ms as u64);
+            let finished = rep.pool.step_round(&sim, &params);
+            rep.batcher.observe_round_ms(ROUND_MS);
+            for f in finished {
+                f.result.expect("sim decode");
+                rep.served += 1;
+                done += 1;
+            }
+        }
+        if !any_live {
+            // idle gap before the next arrival: jump the clock (always
+            // advancing, so a bookkeeping bug can't spin forever)
+            now_ms += ROUND_MS;
+            if next_arrival < N_REQUESTS {
+                now_ms = now_ms.max(arrival(next_arrival));
+            }
+            continue;
+        }
+        now_ms += ROUND_MS;
+    }
+    RunOut {
+        makespan_ms: now_ms,
+        affinity_hits: core.affinity_hits.load(Ordering::Relaxed),
+        affinity_spills: core.affinity_spills.load(Ordering::Relaxed),
+        cold: core.cold_placements.load(Ordering::Relaxed),
+        prefill_skips: reps.iter().map(|r| r.kv.stats().prefill_skips).sum(),
+        prefix_hits: reps.iter().map(|r| r.kv.stats().prefix_hits).sum(),
+        served_per_replica: reps.iter().map(|r| r.served).collect(),
+    }
+}
+
+fn main() {
+    // ---- calibrate: rounds one request needs, solo
+    let sim = SimBackend::new(7);
+    let params = vec![0.5f32; 8];
+    let mut solo =
+        DecodeSession::new(&sim, cfg(), &family_prompt(0), GEN_LEN).unwrap();
+    let mut solo_rounds = 1u64; // the finishing step counts too
+    while !solo.step(&sim, &params).unwrap() {
+        solo_rounds += 1;
+    }
+    let service_ms = solo_rounds as f64 * ROUND_MS;
+    println!(
+        "== fleet router: {N_REQUESTS} requests, {N_FAMILIES} prefix \
+         families, {FLEET} replicas ==\n\
+         request cost {solo_rounds} rounds x {ROUND_MS} ms = {service_ms} ms"
+    );
+
+    // ---- phase 1: prefix affinity at ~60% fleet utilization
+    let inter_arrival_ms = service_ms / (MAX_LIVE * FLEET) as f64 / 0.6;
+    let aff = run_fleet(7, FLEET, OPEN_QUEUE, inter_arrival_ms);
+    let placed = aff.affinity_hits + aff.affinity_spills + aff.cold;
+    assert_eq!(placed as usize, N_REQUESTS, "placements went missing");
+    let hit_rate = aff.affinity_hits as f64 / placed as f64;
+    let random_rate = 1.0 / FLEET as f64;
+    println!(
+        "affinity: {}/{placed} keyed requests landed on their prefix home \
+         ({:.0}% vs ~{:.0}% random), spread {:?}, prefill skips {} \
+         (prefix pages adopted {})",
+        aff.affinity_hits, hit_rate * 100.0, random_rate * 100.0,
+        aff.served_per_replica, aff.prefill_skips, aff.prefix_hits
+    );
+    assert!(
+        hit_rate >= 0.80,
+        "affinity-hit rate {:.2} below 0.80 (random would be ~{random_rate:.2})",
+        hit_rate
+    );
+    assert!(aff.prefill_skips > 0,
+            "co-located family members never adopted prompt pages");
+
+    // ---- phase 2: aggregate throughput, 1 replica vs the fleet
+    let solo_run = run_fleet(7, 1, TIGHT_QUEUE, 0.0);
+    let fleet_run = run_fleet(7, FLEET, TIGHT_QUEUE, 0.0);
+    let tp1 = N_REQUESTS as f64 / (solo_run.makespan_ms / 1000.0);
+    let tp4 = N_REQUESTS as f64 / (fleet_run.makespan_ms / 1000.0);
+    let speedup = tp4 / tp1;
+    println!(
+        "throughput: 1 replica {:.1} req/s ({:.0} ms), {FLEET} replicas \
+         {:.1} req/s ({:.0} ms) -> {speedup:.2}x (spills {}, spread {:?})",
+        tp1, solo_run.makespan_ms, tp4, fleet_run.makespan_ms,
+        fleet_run.affinity_spills, fleet_run.served_per_replica
+    );
+    assert!(
+        speedup >= 2.0,
+        "{FLEET} replicas reached only {speedup:.2}x the 1-replica \
+         throughput"
+    );
+
+    // ---- report + BENCH json
+    let spread =
+        aff.served_per_replica.iter().map(|&s| Json::num(s as f64));
+    let j = Json::obj(vec![
+        ("bench", Json::str("router")),
+        ("requests", Json::num(N_REQUESTS as f64)),
+        ("families", Json::num(N_FAMILIES as f64)),
+        ("workers", Json::num(FLEET as f64)),
+        ("round_ms", Json::num(ROUND_MS)),
+        ("service_ms", Json::num(service_ms)),
+        ("affinity_hit_rate", Json::num(hit_rate)),
+        ("random_hit_rate", Json::num(random_rate)),
+        ("affinity_spills", Json::num(aff.affinity_spills as f64)),
+        ("cold_placements", Json::num(aff.cold as f64)),
+        ("prefill_skips", Json::num(aff.prefill_skips as f64)),
+        ("prefix_page_hits", Json::num(aff.prefix_hits as f64)),
+        ("served_per_replica", Json::arr(spread)),
+        ("throughput_1_replica_rps", Json::num(tp1)),
+        ("throughput_fleet_rps", Json::num(tp4)),
+        ("fleet_speedup_x", Json::num(speedup)),
+        ("fleet_spills", Json::num(fleet_run.affinity_spills as f64)),
+        ("makespan_1_replica_ms", Json::num(solo_run.makespan_ms)),
+        ("makespan_fleet_ms", Json::num(fleet_run.makespan_ms)),
+    ]);
+    d3llm::util::emit_bench_json("router", &j.to_string());
+    println!(
+        "PASS: {:.0}% prefix-affinity (random ~{:.0}%) and {speedup:.2}x \
+         aggregate throughput at {FLEET} replicas",
+        hit_rate * 100.0, random_rate * 100.0
+    );
+}

@@ -13,6 +13,10 @@ use crate::util::json::{self, Json};
 /// Upper bound on the engine worker's interleaving width.
 pub const MAX_SESSIONS_LIMIT: usize = 256;
 
+/// Upper bound on the serving fleet's replica count (each replica owns a
+/// full engine + KV pool, so this is a sanity rail, not a tuning target).
+pub const MAX_WORKERS_LIMIT: usize = 64;
+
 /// Shared bounds for the serving knobs; enforced identically for CLI
 /// flags and config files.
 pub fn validate_service_limits(max_queue: usize,
@@ -25,6 +29,14 @@ pub fn validate_service_limits(max_queue: usize,
         || max_concurrent_sessions > MAX_SESSIONS_LIMIT
     {
         bail!("max_concurrent_sessions must be in 1..={MAX_SESSIONS_LIMIT}");
+    }
+    Ok(())
+}
+
+/// Bounds for the fleet knob, shared by CLI flags and config files.
+pub fn validate_workers(workers: usize) -> Result<()> {
+    if workers == 0 || workers > MAX_WORKERS_LIMIT {
+        bail!("workers must be in 1..={MAX_WORKERS_LIMIT}");
     }
     Ok(())
 }
@@ -45,6 +57,13 @@ pub struct ServiceConfig {
     /// Sessions stepped per round under EDF deadline pressure
     /// (0 = unlimited: every runnable session steps every round).
     pub slo_round_width: usize,
+    /// Engine-worker replicas behind the fleet router (data parallel,
+    /// each with its own engine + KV pool; 1 = single-worker topology).
+    pub workers: usize,
+    /// Preemption spill threshold: a session paused this many consecutive
+    /// rounds releases its paged KV to the reclaimable set and re-prefills
+    /// on resume (0 = disabled).
+    pub spill_after_rounds: usize,
     pub decode: DecodeCfg,
 }
 
@@ -59,6 +78,8 @@ impl Default for ServiceConfig {
             max_concurrent_sessions: 4,
             kv_budget_mb: 256,
             slo_round_width: 0,
+            workers: 1,
+            spill_after_rounds: 0,
             decode: DecodeCfg::preset(Strategy::D3llm),
         }
     }
@@ -188,10 +209,14 @@ impl ServiceConfig {
             kv_budget_mb: get_usize(j, "kv_budget_mb", d.kv_budget_mb),
             slo_round_width: get_usize(j, "slo_round_width",
                                        d.slo_round_width),
+            workers: get_usize(j, "workers", d.workers),
+            spill_after_rounds: get_usize(j, "spill_after_rounds",
+                                          d.spill_after_rounds),
             decode,
         };
         validate_service_limits(cfg.max_queue,
                                 cfg.max_concurrent_sessions)?;
+        validate_workers(cfg.workers)?;
         Ok(cfg)
     }
 
@@ -215,6 +240,9 @@ impl ServiceConfig {
              Json::num(self.max_concurrent_sessions as f64)),
             ("kv_budget_mb", Json::num(self.kv_budget_mb as f64)),
             ("slo_round_width", Json::num(self.slo_round_width as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("spill_after_rounds",
+             Json::num(self.spill_after_rounds as f64)),
             ("decode", decode_to_json(&self.decode)),
         ])
     }
@@ -240,8 +268,23 @@ mod tests {
         assert_eq!(c2.max_concurrent_sessions, c.max_concurrent_sessions);
         assert_eq!(c2.kv_budget_mb, c.kv_budget_mb);
         assert_eq!(c2.slo_round_width, c.slo_round_width);
+        assert_eq!(c2.workers, c.workers);
+        assert_eq!(c2.spill_after_rounds, c.spill_after_rounds);
         assert_eq!(c2.decode.strategy, c.decode.strategy);
         assert_eq!(c2.decode.refresh_every, c.decode.refresh_every);
+    }
+
+    #[test]
+    fn rejects_bad_worker_count() {
+        for bad in [r#"{"workers":0}"#, r#"{"workers":1000}"#] {
+            let j = json::parse(bad).unwrap();
+            assert!(ServiceConfig::from_json(&j).is_err(), "{bad}");
+        }
+        let j = json::parse(r#"{"workers":4,"spill_after_rounds":6}"#)
+            .unwrap();
+        let c = ServiceConfig::from_json(&j).unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.spill_after_rounds, 6);
     }
 
     #[test]

@@ -6,16 +6,27 @@
 //!   acceptor thread --- per-connection reader threads
 //!        |  (mpsc)                |  parse JSON-line requests
 //!        v                        v
-//!   router/batcher  <-- bounded priority queue, backpressure
-//!        |   admit up to `max_concurrent_sessions`
-//!        v
-//!   engine worker (owns PJRT Engine + checkpoint; round-robins one
-//!        |          decode round per live `DecodeSession` per cycle —
-//!        |          `scheduler::SessionPool` — retiring finished
-//!        |          sessions and admitting queued jobs between rounds)
+//!   fleet router  <-- prefix-affinity placement (`router.rs`): HRW over
+//!        |            the request's prefix-chain hash, least-loaded for
+//!        |            cold keys, backlog-aware spill to siblings
+//!        +----------+----------+
+//!        v          v          v
+//!   replica 0   replica 1 ... replica N-1   (`--workers N`; each owns
+//!        |            its own batcher — bounded priority queue with
+//!        |            backpressure — PJRT Engine + checkpoint, shared
+//!        |            paged KV pool, and `scheduler::SessionPool`
+//!        |            round-robining one decode round per live
+//!        |            `DecodeSession` per cycle, retiring finished
+//!        |            sessions and admitting queued jobs between rounds)
 //!        |
 //!        v  per-request reply channel
 //!   connection writer
+//!
+//! All replicas share one service epoch, so absolute deadlines and
+//! per-class latency gauges are on a common clock and fleet aggregates
+//! stay comparable. A replica that dies drains gracefully: its queued
+//! jobs re-route to survivors and its in-flight sessions retire with an
+//! error reply instead of hanging their connections.
 //!
 //! Every strategy (d3llm / d2f / ar / vanilla / fast-dllm / dparallel /
 //! spec) decodes as a resumable `DecodeSession` over the unified
@@ -54,6 +65,7 @@
 
 pub mod batcher;
 pub mod protocol;
+pub mod router;
 pub mod scheduler;
 
 use std::io::{BufRead, BufReader, Write};
@@ -96,14 +108,24 @@ pub struct ServerCfg {
     /// Sessions stepped per round under EDF pressure; 0 = unlimited
     /// (every runnable session steps, the pre-SLO behavior).
     pub slo_round_width: usize,
+    /// Engine-worker replicas behind the fleet router (data parallel,
+    /// each with its own engine + KV pool); 1 = the classic
+    /// single-worker topology.
+    pub workers: usize,
+    /// Preemption spill threshold: a session paused this many consecutive
+    /// rounds releases its paged KV to the reclaimable set and re-prefills
+    /// on resume (prefix adoption makes that cheap); 0 disables spilling.
+    pub spill_after_rounds: usize,
     /// full decode configuration; per-request `strategy` switches presets,
     /// otherwise this config is used verbatim
     pub decode: Option<crate::decode::DecodeCfg>,
 }
 
-struct Job {
-    req: GenRequest,
-    reply: mpsc::Sender<String>,
+/// One accepted generate request in flight between the router and a
+/// replica (pub so `router.rs` can carry it through placement).
+pub struct Job {
+    pub req: GenRequest,
+    pub reply: mpsc::Sender<String>,
 }
 
 /// Metadata carried through the session pool for each admitted job.
@@ -162,6 +184,11 @@ pub struct ServerStats {
     pub kv_refresh_skips: AtomicU64,
     /// Copy-on-write page copies (counter).
     pub kv_cow_copies: AtomicU64,
+    /// Pages released back to the pool by preemption spill (counter).
+    pub kv_pages_spilled: AtomicU64,
+    /// Spilled pages rebuilt by re-prefill at resume, i.e. not re-adopted
+    /// from the prefix index (counter).
+    pub kv_pages_reprefilled: AtomicU64,
     /// Per-session progress snapshots, refreshed every worker cycle.
     pub sessions: Mutex<Vec<(String, SessionProgress)>>,
 }
@@ -171,31 +198,58 @@ pub fn serve(cfg: ServerCfg) -> Result<()> {
     let addr = format!("{}:{}", cfg.host, cfg.port);
     let listener =
         TcpListener::bind(&addr).with_context(|| format!("bind {addr}"))?;
+    let workers = cfg.workers.max(1);
     eprintln!(
-        "[serve] listening on {addr} (ckpt={}, strategy={}, sessions={})",
+        "[serve] listening on {addr} (ckpt={}, strategy={}, sessions={}, \
+         workers={workers})",
         cfg.ckpt,
         cfg.strategy.name(),
         cfg.max_concurrent_sessions
     );
 
-    let (job_tx, job_rx) = mpsc::channel::<Job>();
-    let stats = Arc::new(ServerStats::default());
-    stats
-        .max_concurrent
-        .store(cfg.max_concurrent_sessions.max(1) as u64, Ordering::Relaxed);
+    let core = Arc::new(router::RouterCore::new(workers, cfg.max_queue));
     let shutdown = Arc::new(AtomicBool::new(false));
+    // one service epoch shared by every replica: absolute deadlines and
+    // per-class latency gauges are on a common clock fleet-wide
+    let epoch = Instant::now();
 
-    // ---- engine worker (owns the non-Sync PJRT engine)
-    let worker_cfg = cfg.clone();
-    let worker_stats = stats.clone();
-    let worker_shutdown = shutdown.clone();
-    let worker = std::thread::spawn(move || {
-        if let Err(e) =
-            engine_worker(worker_cfg, job_rx, worker_stats, worker_shutdown)
-        {
-            eprintln!("[serve] engine worker failed: {e:#}");
-        }
-    });
+    let mut senders = Vec::with_capacity(workers);
+    let mut receivers = Vec::with_capacity(workers);
+    let mut replicas: Vec<Arc<ServerStats>> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (tx, rx) = mpsc::channel::<Job>();
+        senders.push(tx);
+        receivers.push(rx);
+        let stats = Arc::new(ServerStats::default());
+        stats.max_concurrent.store(
+            cfg.max_concurrent_sessions.max(1) as u64, Ordering::Relaxed);
+        replicas.push(stats);
+    }
+    let rt = Arc::new(router::Router::new(core.clone(), senders));
+    let replicas = Arc::new(replicas);
+
+    // ---- engine-worker replicas (each owns its non-Sync PJRT engine)
+    let mut handles = Vec::with_capacity(workers);
+    for (r, rx) in receivers.into_iter().enumerate() {
+        let wcfg = cfg.clone();
+        let wstats = replicas[r].clone();
+        let wshutdown = shutdown.clone();
+        let wrouter = rt.clone();
+        let gauge = core.gauge(r);
+        handles.push(std::thread::spawn(move || {
+            engine_worker(r, wcfg, rx, wstats, gauge, wrouter, wshutdown,
+                          epoch);
+        }));
+    }
+
+    // routing-key context: only worth loading when placement has a choice
+    // and a paged pool to be affine to; absent artifacts degrade every
+    // placement to cold/least-loaded
+    let keyctx = if workers > 1 && cfg.kv_budget_mb > 0 {
+        router::RouteKeyCtx::load("artifacts").map(Arc::new)
+    } else {
+        None
+    };
 
     // ---- accept loop
     listener.set_nonblocking(true)?;
@@ -205,11 +259,15 @@ pub fn serve(cfg: ServerCfg) -> Result<()> {
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
-                let tx = job_tx.clone();
-                let st = stats.clone();
+                let conn_cfg = cfg.clone();
+                let conn_rt = rt.clone();
+                let conn_replicas = replicas.clone();
+                let conn_key = keyctx.clone();
                 let sd = shutdown.clone();
                 std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, tx, st, sd) {
+                    if let Err(e) = handle_conn(stream, conn_cfg, conn_rt,
+                                                conn_replicas, conn_key, sd)
+                    {
                         eprintln!("[serve] connection error: {e:#}");
                     }
                 });
@@ -220,14 +278,19 @@ pub fn serve(cfg: ServerCfg) -> Result<()> {
             Err(e) => return Err(e.into()),
         }
     }
-    drop(job_tx);
-    let _ = worker.join();
+    rt.close_intake();
+    for h in handles {
+        let _ = h.join();
+    }
     eprintln!("[serve] shut down cleanly");
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, jobs: mpsc::Sender<Job>,
-               stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>)
+fn handle_conn(stream: TcpStream, cfg: ServerCfg,
+               rt: Arc<router::Router>,
+               replicas: Arc<Vec<Arc<ServerStats>>>,
+               keyctx: Option<Arc<router::RouteKeyCtx>>,
+               shutdown: Arc<AtomicBool>)
                -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
@@ -244,19 +307,29 @@ fn handle_conn(stream: TcpStream, jobs: mpsc::Sender<Job>,
                 break;
             }
             Ok(Request::Stats) => {
-                writeln!(writer, "{}", protocol::stats_response(&stats))?;
+                writeln!(writer, "{}",
+                         protocol::fleet_stats_response(&replicas,
+                                                        rt.core()))?;
             }
             Ok(Request::Generate(req)) => {
+                let key =
+                    keyctx.as_ref().and_then(|kc| kc.key_for(&cfg, &req));
+                let budget_ms = req.deadline_ms;
                 let (reply_tx, reply_rx) = mpsc::channel();
-                jobs.send(Job { req, reply: reply_tx })
-                    .map_err(|_| anyhow!("engine worker gone"))?;
+                if let Err(e) =
+                    rt.dispatch(key, budget_ms, Job { req, reply: reply_tx })
+                {
+                    writeln!(writer, "{}",
+                             protocol::err_response("", &format!("{e}")))?;
+                    continue;
+                }
                 let response = reply_rx
                     .recv()
                     .unwrap_or_else(|_| protocol::err_response("", "worker died"));
                 writeln!(writer, "{response}")?;
             }
             Err(e) => {
-                stats.errors.fetch_add(1, Ordering::Relaxed);
+                rt.core().conn_errors.fetch_add(1, Ordering::Relaxed);
                 writeln!(writer, "{}", protocol::err_response("", &format!("{e}")))?;
             }
         }
@@ -308,9 +381,57 @@ enum Verdict {
     Wait,
 }
 
-fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
-                 stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>)
-                 -> Result<()> {
+/// One replica's thread body: run the engine loop, and on a fatal error
+/// drain gracefully — mark the replica dead (so the router stops placing
+/// here and re-routes can't bounce back), retire in-flight sessions with
+/// an error reply instead of hanging their connections, and re-route
+/// every salvaged queued job to the surviving replicas.
+fn engine_worker(replica: usize, cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
+                 stats: Arc<ServerStats>, gauge: Arc<router::ReplicaGauge>,
+                 rt: Arc<router::Router>, shutdown: Arc<AtomicBool>,
+                 epoch: Instant) {
+    let mut batcher: Batcher<Job> = Batcher::new(cfg.max_queue);
+    let mut pool: SessionPool<ActiveJob> = SessionPool::new();
+    let result = run_replica(replica, &cfg, &jobs, &mut batcher, &mut pool,
+                             &stats, &gauge, &shutdown, epoch);
+    match result {
+        Ok(()) => {
+            // clean exit (shutdown or intake drained): queue and pool are
+            // empty by contract, nothing to salvage
+            gauge.alive.store(false, Ordering::SeqCst);
+        }
+        Err(e) => {
+            eprintln!("[serve] replica {replica} failed: {e:#}");
+            rt.drop_replica(replica);
+            for (id, tag) in pool.drain_sessions() {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = tag.reply.send(protocol::err_response(
+                    &id, "replica failed; session aborted"));
+            }
+            let mut salvaged: Vec<Job> = Vec::new();
+            while let Some(q) = batcher.pop() {
+                salvaged.push(q.payload);
+            }
+            while let Ok(job) = jobs.try_recv() {
+                salvaged.push(job);
+            }
+            for job in salvaged {
+                if let Err(job) = rt.reroute(job) {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(protocol::err_response(
+                        &job.req.id, "no live replicas"));
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_replica(replica: usize, cfg: &ServerCfg, jobs: &mpsc::Receiver<Job>,
+               batcher: &mut Batcher<Job>,
+               pool: &mut SessionPool<ActiveJob>, stats: &ServerStats,
+               gauge: &router::ReplicaGauge, shutdown: &AtomicBool,
+               epoch: Instant) -> Result<()> {
     let eng = Engine::load("artifacts")?;
     let c = eng.manifest.constants.clone();
     let tk = Tokenizer::new(c.vocab)?;
@@ -352,7 +473,8 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
         };
         let pool = SharedKvPool::new(pool_cfg);
         eprintln!(
-            "[serve] paged KV pool: {} pages of {} rows ({} MiB budget)",
+            "[serve] replica {replica}: paged KV pool: {} pages of {} rows \
+             ({} MiB budget)",
             pool.max_pages(), c.block, cfg.kv_budget_mb
         );
         Some(pool)
@@ -379,32 +501,34 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
     }
     let exec_refs: Vec<&str> = execs.iter().map(|s| s.as_str()).collect();
     eng.warmup(&exec_refs)?;
-    eprintln!("[serve] engine ready ({} executables warm)", exec_refs.len());
+    eprintln!("[serve] replica {replica}: engine ready ({} executables warm)",
+              exec_refs.len());
 
     let max_live = cfg.max_concurrent_sessions.max(1);
-    let mut batcher: Batcher<Job> = Batcher::new(cfg.max_queue);
-    let mut pool: SessionPool<ActiveJob> = match &kv_pool {
+    *pool = match &kv_pool {
         Some(kv) => SessionPool::new().with_kv_pool(kv.clone()),
         None => SessionPool::new(),
     };
     pool.set_round_width(cfg.slo_round_width);
+    pool.set_spill_after_rounds(cfg.spill_after_rounds);
     let mut disconnected = false;
-    // serving clock: wall milliseconds since worker start. Deadlines are
-    // absolute on this clock; tests/benches drive a virtual one instead.
-    let started = Instant::now();
+    // serving clock: wall milliseconds on the fleet-shared service epoch
+    // (every replica reads the same `epoch`, so absolute deadlines and
+    // per-class latency aggregates are comparable across the fleet);
+    // tests/benches drive a virtual clock instead
 
     loop {
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
-        let now_ms = started.elapsed().as_millis() as u64;
+        let now_ms = epoch.elapsed().as_millis() as u64;
         pool.set_now_ms(now_ms);
         // ---- drain the channel into the priority queue (deadline-aware
         //      admission: on overflow the least-urgent job — newcomer or
         //      queued — is answered with a retry-after hint and dropped)
         loop {
             match jobs.try_recv() {
-                Ok(job) => admit_to_queue(&mut batcher, &stats, job, now_ms),
+                Ok(job) => admit_to_queue(batcher, stats, job, now_ms),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     disconnected = true;
@@ -490,7 +614,7 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                 Verdict::Wait => break,
                 Verdict::Reject(e) => {
                     let queued = batcher.pop().expect("peeked head");
-                    reply_err(&stats, &queued.payload, &e);
+                    reply_err(stats, &queued.payload, &e);
                 }
                 Verdict::Admit(dcfg, prompt, gen_len) => {
                     // build the session BEFORE popping the queue head, so
@@ -539,7 +663,7 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                         Err(e) => {
                             let queued =
                                 batcher.pop().expect("peeked head");
-                            reply_err(&stats, &queued.payload, &e);
+                            reply_err(stats, &queued.payload, &e);
                         }
                     }
                 }
@@ -552,6 +676,14 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
         stats
             .active_sessions
             .store(pool.len() as u64, Ordering::Relaxed);
+        // load snapshot the router places by (same figures the stats
+        // protocol exports, read lock-free by the acceptor side)
+        gauge.queue_depth.store(batcher.len() as u64, Ordering::Relaxed);
+        gauge
+            .active_sessions
+            .store(pool.len() as u64, Ordering::Relaxed);
+        gauge.est_wait_ms.store(batcher.estimated_wait_ms().ceil() as u64,
+                                Ordering::Relaxed);
         stats.steps_total.store(pool.steps_total, Ordering::Relaxed);
         stats
             .admitted_total
@@ -589,6 +721,12 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                 .kv_refresh_skips
                 .store(ks.refresh_skips, Ordering::Relaxed);
             stats.kv_cow_copies.store(ks.cow_copies, Ordering::Relaxed);
+            stats
+                .kv_pages_spilled
+                .store(ks.pages_spilled, Ordering::Relaxed);
+            stats
+                .kv_pages_reprefilled
+                .store(ks.pages_reprefilled, Ordering::Relaxed);
         }
 
         if pool.is_empty() {
@@ -603,8 +741,8 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                     Ok(job) => {
                         // the blocking wait advanced the clock; deadline
                         // admission must see the post-sleep time
-                        let now_ms = started.elapsed().as_millis() as u64;
-                        admit_to_queue(&mut batcher, &stats, job, now_ms);
+                        let now_ms = epoch.elapsed().as_millis() as u64;
+                        admit_to_queue(batcher, stats, job, now_ms);
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -637,7 +775,7 @@ fn engine_worker(cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
                         slo: f.tag.class.name().to_string(),
                         deadline_missed: f.deadline_missed,
                     };
-                    record_served(&stats, &resp, f.tag.class);
+                    record_served(stats, &resp, f.tag.class);
                     protocol::ok_response(&resp)
                 }
                 Err(e) => {

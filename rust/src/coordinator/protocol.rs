@@ -207,6 +207,18 @@ pub fn shed_response(id: &str, reason: &str, retry_after_ms: u64) -> String {
 /// (per-class served/shed/deadline-miss + latency totals) and per-session
 /// progress.
 pub fn stats_response(s: &super::ServerStats) -> String {
+    let mut fields = vec![("ok", Json::Bool(true))];
+    fields.extend(stats_fields(s, None));
+    Json::obj(fields).to_string()
+}
+
+/// The shared field set of one `ServerStats` snapshot — used verbatim by
+/// the single-stats response and per-replica objects of the fleet
+/// response, and (name-for-name) by the fleet aggregates, so the wire
+/// names stay pinned in exactly one place. `replica` tags each session
+/// entry with its home replica when serving a fleet.
+fn stats_fields(s: &super::ServerStats, replica: Option<usize>)
+                -> Vec<(&'static str, Json)> {
     use std::sync::atomic::Ordering::Relaxed;
     let sessions: Vec<Json> = s
         .sessions
@@ -214,8 +226,11 @@ pub fn stats_response(s: &super::ServerStats) -> String {
         .map(|v| {
             v.iter()
                 .map(|(id, p)| {
-                    Json::obj(vec![
-                        ("id", Json::str(id.clone())),
+                    let mut f = vec![("id", Json::str(id.clone()))];
+                    if let Some(r) = replica {
+                        f.push(("replica", Json::num(r as f64)));
+                    }
+                    f.extend(vec![
                         ("unmasked", Json::num(p.unmasked as f64)),
                         ("gen_len", Json::num(p.gen_len as f64)),
                         ("steps", Json::num(p.steps as f64)),
@@ -223,7 +238,8 @@ pub fn stats_response(s: &super::ServerStats) -> String {
                         ("forwards", Json::num(p.forwards as f64)),
                         ("paused_rounds",
                          Json::num(p.paused_rounds as f64)),
-                    ])
+                    ]);
+                    Json::obj(f)
                 })
                 .collect()
         })
@@ -245,8 +261,7 @@ pub fn stats_response(s: &super::ServerStats) -> String {
             ])
         })
         .collect();
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
+    vec![
         ("served", Json::num(s.served.load(Relaxed) as f64)),
         ("errors", Json::num(s.errors.load(Relaxed) as f64)),
         ("queue_ms", Json::num(s.queue_ms_total.load(Relaxed) as f64)),
@@ -283,7 +298,147 @@ pub fn stats_response(s: &super::ServerStats) -> String {
          Json::num(s.kv_refresh_skips.load(Relaxed) as f64)),
         ("kv_cow_copies",
          Json::num(s.kv_cow_copies.load(Relaxed) as f64)),
+        ("kv_pages_spilled",
+         Json::num(s.kv_pages_spilled.load(Relaxed) as f64)),
+        ("kv_pages_reprefilled",
+         Json::num(s.kv_pages_reprefilled.load(Relaxed) as f64)),
         ("sessions", Json::Arr(sessions)),
+    ]
+}
+
+/// Serialize the whole fleet's stats: the pinned top-level field names of
+/// `stats_response` carry fleet *sums* (so single-worker clients read the
+/// same names unchanged — with one replica the sums degenerate to its
+/// snapshot), `max_concurrent_sessions` echoes the per-replica config,
+/// session entries gain a `replica` tag, and new `workers` / `replicas` /
+/// routing fields expose the per-replica breakdown and the router's
+/// affinity accounting.
+pub fn fleet_stats_response(replicas: &[std::sync::Arc<super::ServerStats>],
+                            core: &super::router::RouterCore) -> String {
+    use std::sync::atomic::Ordering::Relaxed;
+    let sum = |f: &dyn Fn(&super::ServerStats) -> u64| -> f64 {
+        replicas.iter().map(|s| f(s)).sum::<u64>() as f64
+    };
+    let slo: Vec<Json> = SloClass::ALL
+        .iter()
+        .map(|c| {
+            let i = c.idx();
+            Json::obj(vec![
+                ("class", Json::str(c.name())),
+                ("served",
+                 Json::num(sum(&|s| s.served_by_class[i].load(Relaxed)))),
+                ("shed",
+                 Json::num(sum(&|s| s.shed_by_class[i].load(Relaxed)))),
+                ("deadline_miss",
+                 Json::num(sum(
+                     &|s| s.deadline_miss_by_class[i].load(Relaxed)))),
+                ("queue_ms",
+                 Json::num(sum(&|s| s.queue_ms_by_class[i].load(Relaxed)))),
+                ("decode_ms",
+                 Json::num(sum(&|s| s.decode_ms_by_class[i].load(Relaxed)))),
+            ])
+        })
+        .collect();
+    let sessions: Vec<Json> = replicas
+        .iter()
+        .enumerate()
+        .flat_map(|(r, s)| {
+            s.sessions
+                .lock()
+                .map(|v| {
+                    v.iter()
+                        .map(|(id, p)| {
+                            Json::obj(vec![
+                                ("id", Json::str(id.clone())),
+                                ("replica", Json::num(r as f64)),
+                                ("unmasked", Json::num(p.unmasked as f64)),
+                                ("gen_len", Json::num(p.gen_len as f64)),
+                                ("steps", Json::num(p.steps as f64)),
+                                ("rounds", Json::num(p.rounds as f64)),
+                                ("forwards", Json::num(p.forwards as f64)),
+                                ("paused_rounds",
+                                 Json::num(p.paused_rounds as f64)),
+                            ])
+                        })
+                        .collect::<Vec<Json>>()
+                })
+                .unwrap_or_default()
+        })
+        .collect();
+    let per_replica: Vec<Json> = replicas
+        .iter()
+        .enumerate()
+        .map(|(r, s)| {
+            let mut f = vec![
+                ("replica", Json::num(r as f64)),
+                ("alive", Json::Bool(core.alive(r))),
+            ];
+            f.extend(stats_fields(s, Some(r)));
+            Json::obj(f)
+        })
+        .collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("served", Json::num(sum(&|s| s.served.load(Relaxed)))),
+        // acceptor-side protocol errors never reach a replica, so the
+        // fleet total adds them on top of the per-replica sums
+        ("errors",
+         Json::num(sum(&|s| s.errors.load(Relaxed))
+                   + core.conn_errors.load(Relaxed) as f64)),
+        ("queue_ms", Json::num(sum(&|s| s.queue_ms_total.load(Relaxed)))),
+        ("decode_ms", Json::num(sum(&|s| s.decode_ms_total.load(Relaxed)))),
+        ("queue_depth", Json::num(sum(&|s| s.queue_depth.load(Relaxed)))),
+        ("active_sessions",
+         Json::num(sum(&|s| s.active_sessions.load(Relaxed)))),
+        ("steps", Json::num(sum(&|s| s.steps_total.load(Relaxed)))),
+        ("admitted", Json::num(sum(&|s| s.admitted_total.load(Relaxed)))),
+        // config echo, not a sum: the per-replica interleaving width
+        ("max_concurrent_sessions",
+         Json::num(replicas.first()
+                       .map(|s| s.max_concurrent.load(Relaxed))
+                       .unwrap_or(0) as f64)),
+        ("shed", Json::num(sum(&|s| s.shed_total.load(Relaxed)))),
+        ("evicted", Json::num(sum(&|s| s.evicted_total.load(Relaxed)))),
+        ("deadline_misses",
+         Json::num(sum(&|s| s.deadline_miss_total.load(Relaxed)))),
+        ("preempted_rounds",
+         Json::num(sum(&|s| s.preempted_rounds.load(Relaxed)))),
+        ("slo", Json::Arr(slo)),
+        ("kv_pages_total",
+         Json::num(sum(&|s| s.kv_pages_total.load(Relaxed)))),
+        ("kv_pages_in_use",
+         Json::num(sum(&|s| s.kv_pages_in_use.load(Relaxed)))),
+        ("kv_pages_reclaimable",
+         Json::num(sum(&|s| s.kv_pages_reclaimable.load(Relaxed)))),
+        ("kv_prefix_hits",
+         Json::num(sum(&|s| s.kv_prefix_hits.load(Relaxed)))),
+        ("kv_prefill_skips",
+         Json::num(sum(&|s| s.kv_prefill_skips.load(Relaxed)))),
+        ("kv_pages_refreshed",
+         Json::num(sum(&|s| s.kv_pages_refreshed.load(Relaxed)))),
+        ("kv_refresh_skips",
+         Json::num(sum(&|s| s.kv_refresh_skips.load(Relaxed)))),
+        ("kv_cow_copies",
+         Json::num(sum(&|s| s.kv_cow_copies.load(Relaxed)))),
+        ("kv_pages_spilled",
+         Json::num(sum(&|s| s.kv_pages_spilled.load(Relaxed)))),
+        ("kv_pages_reprefilled",
+         Json::num(sum(&|s| s.kv_pages_reprefilled.load(Relaxed)))),
+        ("sessions", Json::Arr(sessions)),
+        // ---- fleet topology + routing
+        ("workers", Json::num(replicas.len() as f64)),
+        ("replicas_alive", Json::num(core.alive_count() as f64)),
+        ("affinity_hits",
+         Json::num(core.affinity_hits.load(Relaxed) as f64)),
+        ("affinity_spills",
+         Json::num(core.affinity_spills.load(Relaxed) as f64)),
+        ("cold_placements",
+         Json::num(core.cold_placements.load(Relaxed) as f64)),
+        ("jobs_rerouted",
+         Json::num(core.jobs_rerouted.load(Relaxed) as f64)),
+        ("replica_deaths",
+         Json::num(core.replica_deaths.load(Relaxed) as f64)),
+        ("replicas", Json::Arr(per_replica)),
     ])
     .to_string()
 }
@@ -449,6 +604,54 @@ mod tests {
         assert_eq!(sess.len(), 1);
         assert_eq!(sess[0].get("id").unwrap().as_str(), Some("r1"));
         assert_eq!(sess[0].get("unmasked").unwrap().as_usize(), Some(40));
+    }
+
+    #[test]
+    fn fleet_stats_sums_replicas_and_reports_routing() {
+        use std::sync::atomic::Ordering;
+        use std::sync::Arc;
+        let a = Arc::new(crate::coordinator::ServerStats::default());
+        let b = Arc::new(crate::coordinator::ServerStats::default());
+        a.served.store(3, Ordering::Relaxed);
+        b.served.store(4, Ordering::Relaxed);
+        a.errors.store(1, Ordering::Relaxed);
+        a.max_concurrent.store(4, Ordering::Relaxed);
+        b.max_concurrent.store(4, Ordering::Relaxed);
+        a.kv_pages_spilled.store(5, Ordering::Relaxed);
+        b.sessions.lock().unwrap().push((
+            "r7".to_string(),
+            crate::decode::SessionProgress::default(),
+        ));
+        let core = crate::coordinator::router::RouterCore::new(2, 8);
+        core.affinity_hits.store(9, Ordering::Relaxed);
+        core.conn_errors.store(2, Ordering::Relaxed);
+        core.mark_dead(1);
+        let line = fleet_stats_response(&[a, b], &core);
+        let j = json::parse(&line).unwrap();
+        // pinned names carry fleet sums
+        assert_eq!(j.get("served").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("errors").unwrap().as_usize(), Some(3));
+        // config echo, not a sum
+        assert_eq!(j.get("max_concurrent_sessions").unwrap().as_usize(),
+                   Some(4));
+        assert_eq!(j.get("kv_pages_spilled").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("workers").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("replicas_alive").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("affinity_hits").unwrap().as_usize(), Some(9));
+        assert_eq!(j.get("replica_deaths").unwrap().as_usize(), Some(1));
+        let reps = j.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[0].get("replica").unwrap().as_usize(), Some(0));
+        assert_eq!(reps[0].get("alive").unwrap().as_bool(), Some(true));
+        assert_eq!(reps[1].get("alive").unwrap().as_bool(), Some(false));
+        assert_eq!(reps[1].get("served").unwrap().as_usize(), Some(4));
+        // session entries are tagged with their home replica
+        let sess = j.get("sessions").unwrap().as_arr().unwrap();
+        assert_eq!(sess.len(), 1);
+        assert_eq!(sess[0].get("id").unwrap().as_str(), Some("r7"));
+        assert_eq!(sess[0].get("replica").unwrap().as_usize(), Some(1));
+        // the slo array stays a 3-class summary
+        assert_eq!(j.get("slo").unwrap().as_arr().unwrap().len(), 3);
     }
 
     #[test]

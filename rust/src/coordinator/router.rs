@@ -1,0 +1,468 @@
+//! Fleet router: prefix-affinity placement over N engine-worker replicas.
+//!
+//! Each replica owns its own engine, `SessionPool` and `SharedKvPool`, so
+//! a prompt's prefilled pages live in exactly one pool — placement decides
+//! whether the next same-prefix request re-prefills from scratch or adopts
+//! those pages for free. The router therefore keys placement on the *same*
+//! prefix-chain hash the pools index pages by (`kv_pool::chain_hashes`,
+//! exposed as `prefix_routing_key`): rendezvous/HRW hashing over that key
+//! sends same-prefix traffic to one stable home replica, and keeps doing
+//! so with minimal disruption when replicas die (only keys homed on the
+//! dead replica move).
+//!
+//! Placement policy, in order:
+//!   1. keyed request, home replica can take it  -> affinity hit
+//!   2. keyed, home backlogged past the request's deadline budget (or its
+//!      queue full) while a sibling fits         -> backlog spill to the
+//!      least-loaded fitting sibling (the home batcher would shed what a
+//!      sibling could meet)
+//!   3. keyed, nobody fits                       -> home anyway; its
+//!      batcher owns the shed/retry answer
+//!   4. no key (short prompt, no-cache strategy, artifacts absent)
+//!                                               -> least-loaded replica
+//!
+//! The placement core (`RouterCore`) is pure and threadless — workers
+//! publish load through `ReplicaGauge` atomics and the core only reads
+//! them — so determinism tests and the fleet bench drive it directly. The
+//! `Router` wrapper adds the per-replica job channels and the death/drain
+//! behavior: a send to a dead replica marks it dead and re-places, and
+//! `reroute` lets a dying worker push its salvaged queue to survivors.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::model::kv_pool::{prefix_routing_key, rendezvous_score};
+use crate::runtime::manifest::Constants;
+use crate::runtime::Manifest;
+use crate::tokenizer::Tokenizer;
+
+use super::protocol::GenRequest;
+use super::{Job, ServerCfg};
+
+/// Live load snapshot one engine worker publishes every cycle. The router
+/// reads these without any cross-thread locking; staleness is bounded by
+/// one worker round and only costs placement quality, never correctness.
+pub struct ReplicaGauge {
+    /// Cleared when the replica's engine worker exits (crash or drain).
+    pub alive: AtomicBool,
+    /// Jobs waiting in the replica's admission queue.
+    pub queue_depth: AtomicU64,
+    /// Live interleaved sessions on the replica.
+    pub active_sessions: AtomicU64,
+    /// The replica batcher's estimated queue wait in ms (depth x observed
+    /// round time), the same figure its shed/retry hints use.
+    pub est_wait_ms: AtomicU64,
+}
+
+impl ReplicaGauge {
+    fn new() -> ReplicaGauge {
+        ReplicaGauge {
+            alive: AtomicBool::new(true),
+            queue_depth: AtomicU64::new(0),
+            active_sessions: AtomicU64::new(0),
+            est_wait_ms: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Where one request went, and why — the counters the stats protocol
+/// exports are keyed on this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// HRW home of the request's prefix chain.
+    Affinity(usize),
+    /// Home too backlogged for the deadline budget; least-loaded sibling.
+    Spill(usize),
+    /// No routing key: least-loaded replica.
+    Cold(usize),
+}
+
+impl Placement {
+    pub fn replica(&self) -> usize {
+        match *self {
+            Placement::Affinity(r) | Placement::Spill(r)
+            | Placement::Cold(r) => r,
+        }
+    }
+}
+
+/// Pure placement core: gauges in, replica index out. Fleet-wide routing
+/// counters live here so the threadless test/bench harnesses see the same
+/// accounting the server exports.
+pub struct RouterCore {
+    gauges: Vec<Arc<ReplicaGauge>>,
+    /// Per-replica queue capacity (a full queue never takes spilled work).
+    max_queue: usize,
+    /// Keyed requests placed on their HRW home (counter).
+    pub affinity_hits: AtomicU64,
+    /// Keyed requests spilled off a backlogged home to a sibling (counter).
+    pub affinity_spills: AtomicU64,
+    /// Keyless requests placed least-loaded (counter).
+    pub cold_placements: AtomicU64,
+    /// Salvaged jobs re-routed off a dead replica (counter).
+    pub jobs_rerouted: AtomicU64,
+    /// Replicas that died (transitioned alive -> dead) (counter).
+    pub replica_deaths: AtomicU64,
+    /// Acceptor-side protocol errors (unparseable request lines), counted
+    /// fleet-wide — they never reach a replica.
+    pub conn_errors: AtomicU64,
+}
+
+impl RouterCore {
+    pub fn new(workers: usize, max_queue: usize) -> RouterCore {
+        let workers = workers.max(1);
+        RouterCore {
+            gauges: (0..workers).map(|_| Arc::new(ReplicaGauge::new()))
+                                .collect(),
+            max_queue: max_queue.max(1),
+            affinity_hits: AtomicU64::new(0),
+            affinity_spills: AtomicU64::new(0),
+            cold_placements: AtomicU64::new(0),
+            jobs_rerouted: AtomicU64::new(0),
+            replica_deaths: AtomicU64::new(0),
+            conn_errors: AtomicU64::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.gauges.len()
+    }
+
+    pub fn gauge(&self, r: usize) -> Arc<ReplicaGauge> {
+        self.gauges[r].clone()
+    }
+
+    pub fn alive(&self, r: usize) -> bool {
+        self.gauges[r].alive.load(Ordering::SeqCst)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        (0..self.workers()).filter(|&r| self.alive(r)).count()
+    }
+
+    /// Idempotent: only the alive -> dead transition counts a death.
+    pub fn mark_dead(&self, r: usize) {
+        if self.gauges[r].alive.swap(false, Ordering::SeqCst) {
+            self.replica_deaths.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Can replica `r` take one more job and still meet `budget_ms`?
+    fn fits(&self, r: usize, budget_ms: Option<u64>) -> bool {
+        let g = &self.gauges[r];
+        if g.queue_depth.load(Ordering::Relaxed) >= self.max_queue as u64 {
+            return false;
+        }
+        match budget_ms {
+            None => true,
+            Some(b) => g.est_wait_ms.load(Ordering::Relaxed) <= b,
+        }
+    }
+
+    /// Deterministic load order: queue depth, then live sessions, then
+    /// estimated wait, then index (stable tie-break).
+    fn load_key(&self, r: usize) -> (u64, u64, u64, usize) {
+        let g = &self.gauges[r];
+        (g.queue_depth.load(Ordering::Relaxed),
+         g.active_sessions.load(Ordering::Relaxed),
+         g.est_wait_ms.load(Ordering::Relaxed),
+         r)
+    }
+
+    /// Least-loaded live replica (`None` when the whole fleet is dead).
+    pub fn least_loaded_alive(&self) -> Option<usize> {
+        (0..self.workers())
+            .filter(|&r| self.alive(r))
+            .min_by_key(|&r| self.load_key(r))
+    }
+
+    /// HRW home of `key` among live replicas.
+    fn home_of(&self, key: u64) -> Option<usize> {
+        (0..self.workers())
+            .filter(|&r| self.alive(r))
+            .max_by_key(|&r| (rendezvous_score(key, r as u64), r))
+    }
+
+    /// Place one request. `key` is the prefix-chain routing key (`None` =
+    /// cold), `budget_ms` the request's deadline budget for the backlog
+    /// check. Returns `None` only when no replica is alive.
+    pub fn place(&self, key: Option<u64>, budget_ms: Option<u64>)
+                 -> Option<Placement> {
+        match key {
+            None => {
+                let r = self.least_loaded_alive()?;
+                self.cold_placements.fetch_add(1, Ordering::Relaxed);
+                Some(Placement::Cold(r))
+            }
+            Some(k) => {
+                let home = self.home_of(k)?;
+                if self.fits(home, budget_ms) {
+                    self.affinity_hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(Placement::Affinity(home));
+                }
+                // the home batcher would shed this: spill to the least-
+                // loaded sibling that can still meet it, if any
+                let sibling = (0..self.workers())
+                    .filter(|&r| r != home && self.alive(r)
+                                 && self.fits(r, budget_ms))
+                    .min_by_key(|&r| self.load_key(r));
+                match sibling {
+                    Some(r) => {
+                        self.affinity_spills.fetch_add(1, Ordering::Relaxed);
+                        Some(Placement::Spill(r))
+                    }
+                    None => {
+                        // nobody can meet it: keep affinity and let the
+                        // home's deadline-aware admission answer the shed
+                        self.affinity_hits.fetch_add(1, Ordering::Relaxed);
+                        Some(Placement::Affinity(home))
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Channel-owning router the acceptor dispatches through. Senders are
+/// `Option` so a dead replica's channel can be dropped (its worker then
+/// sees `Disconnected` and drains) while indices stay stable.
+pub struct Router {
+    core: Arc<RouterCore>,
+    senders: Mutex<Vec<Option<mpsc::Sender<Job>>>>,
+}
+
+impl Router {
+    pub fn new(core: Arc<RouterCore>, senders: Vec<mpsc::Sender<Job>>)
+               -> Router {
+        assert_eq!(core.workers(), senders.len());
+        Router {
+            core,
+            senders: Mutex::new(senders.into_iter().map(Some).collect()),
+        }
+    }
+
+    pub fn core(&self) -> &Arc<RouterCore> {
+        &self.core
+    }
+
+    /// Send to replica `r`; on failure (channel gone — the worker died
+    /// between placement and send) the job is handed back and the replica
+    /// marked dead so the next placement skips it.
+    fn try_send(&self, r: usize, job: Job) -> std::result::Result<(), Job> {
+        let mut senders = self.senders.lock().expect("router senders");
+        match senders[r].as_ref() {
+            Some(tx) => match tx.send(job) {
+                Ok(()) => Ok(()),
+                Err(mpsc::SendError(job)) => {
+                    senders[r] = None;
+                    drop(senders);
+                    self.core.mark_dead(r);
+                    Err(job)
+                }
+            },
+            None => {
+                drop(senders);
+                self.core.mark_dead(r);
+                Err(job)
+            }
+        }
+    }
+
+    /// Place and deliver one request. Re-places on dead-replica races;
+    /// each failed send kills one replica, so this terminates. Errors
+    /// only when the whole fleet is dead.
+    pub fn dispatch(&self, key: Option<u64>, budget_ms: Option<u64>,
+                    mut job: Job) -> Result<()> {
+        loop {
+            let p = self.core.place(key, budget_ms)
+                .ok_or_else(|| anyhow!("no live replicas"))?;
+            match self.try_send(p.replica(), job) {
+                Ok(()) => return Ok(()),
+                Err(j) => job = j,
+            }
+        }
+    }
+
+    /// Graceful-drain path: a dying worker pushes a salvaged queued job to
+    /// the least-loaded survivor. The job already paid its placement
+    /// counters once, so this only counts the re-route. When the whole
+    /// fleet is dead the job is handed back so the caller can still send
+    /// an error reply on its connection.
+    pub fn reroute(&self, mut job: Job) -> std::result::Result<(), Job> {
+        self.core.jobs_rerouted.fetch_add(1, Ordering::Relaxed);
+        loop {
+            let r = match self.core.least_loaded_alive() {
+                Some(r) => r,
+                None => return Err(job),
+            };
+            match self.try_send(r, job) {
+                Ok(()) => return Ok(()),
+                Err(j) => job = j,
+            }
+        }
+    }
+
+    /// Mark a replica dead and drop its channel. Called by the replica's
+    /// own wrapper on fatal error, *before* it salvages its queue, so
+    /// re-routes cannot bounce back to it.
+    pub fn drop_replica(&self, r: usize) {
+        self.core.mark_dead(r);
+        self.senders.lock().expect("router senders")[r] = None;
+    }
+
+    /// Shutdown: drop every sender so each worker sees `Disconnected`
+    /// once its queue drains, finishes its live sessions, and exits.
+    pub fn close_intake(&self) {
+        let mut senders = self.senders.lock().expect("router senders");
+        for s in senders.iter_mut() {
+            *s = None;
+        }
+    }
+}
+
+/// Enough of the serving manifest to compute, acceptor-side, the same
+/// prefix-chain hash the replica pools index pages by. Loaded once at
+/// startup; `None` (artifacts absent, paged serving disabled, or a single
+/// worker) degrades every placement to cold/least-loaded, which for one
+/// replica is exact and for a key-less fleet is plain load balancing.
+pub struct RouteKeyCtx {
+    tk: Tokenizer,
+    c: Constants,
+    layers: usize,
+    d_kv: usize,
+}
+
+impl RouteKeyCtx {
+    pub fn load(dir: &str) -> Option<RouteKeyCtx> {
+        let m = Manifest::load(dir).ok()?;
+        let spec = m.model("main").ok()?.clone();
+        let tk = Tokenizer::new(m.constants.vocab).ok()?;
+        Some(RouteKeyCtx {
+            tk,
+            c: m.constants,
+            layers: spec.n_layers,
+            d_kv: spec.d_kv,
+        })
+    }
+
+    /// Routing key for one request: tokenize, resolve the decode config,
+    /// and hash the first prompt page under the request's prefix tag —
+    /// exactly the chain hash `PagedKv::admit` will look up on the
+    /// replica. `None` (short prompt, no-cache strategy, bad request)
+    /// means no pages to be affine to; the request places cold and any
+    /// real error surfaces on the replica, which owns error replies.
+    pub fn key_for(&self, cfg: &ServerCfg, req: &GenRequest) -> Option<u64> {
+        let prompt = self.tk.encode(&req.prompt).ok()?;
+        let dcfg = super::request_cfg(cfg, req).ok()?;
+        // gen_len only affects span_rows, not the prefix tag/rows the
+        // routing key hashes, so 0 is fine here
+        let geo = crate::decode::kv_admission_geometry(&dcfg, &self.c,
+                                                       prompt.len(), 0);
+        prefix_routing_key(&geo.prefix_tag, self.layers, self.d_kv,
+                           self.c.block, &prompt, geo.prefix_rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn core(workers: usize, max_queue: usize) -> RouterCore {
+        RouterCore::new(workers, max_queue)
+    }
+
+    #[test]
+    fn keyed_placement_is_deterministic_and_stable() {
+        let c = core(4, 8);
+        let k = 0xDEAD_BEEF_u64;
+        let first = c.place(Some(k), None).unwrap();
+        for _ in 0..10 {
+            assert_eq!(c.place(Some(k), None).unwrap(), first);
+        }
+        match first {
+            Placement::Affinity(_) => {}
+            other => panic!("expected affinity placement, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hrw_moves_only_keys_homed_on_the_dead_replica() {
+        let c = core(4, 8);
+        let keys: Vec<u64> = (0..64).map(|i| 0x9E37_79B9 ^ (i * 7919)).collect();
+        let before: Vec<usize> =
+            keys.iter().map(|&k| c.place(Some(k), None).unwrap().replica())
+                .collect();
+        // keys spread over more than one replica (sanity on the hash)
+        let mut seen = before.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert!(seen.len() > 1, "all 64 keys landed on one replica");
+        let victim = before[0];
+        c.mark_dead(victim);
+        for (i, &k) in keys.iter().enumerate() {
+            let after = c.place(Some(k), None).unwrap().replica();
+            assert_ne!(after, victim);
+            if before[i] != victim {
+                // HRW minimal disruption: surviving homes don't move
+                assert_eq!(after, before[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn cold_goes_least_loaded() {
+        let c = core(3, 8);
+        c.gauge(0).queue_depth.store(5, Ordering::Relaxed);
+        c.gauge(1).queue_depth.store(2, Ordering::Relaxed);
+        c.gauge(2).queue_depth.store(2, Ordering::Relaxed);
+        // tie between 1 and 2 breaks to the lower index
+        assert_eq!(c.place(None, None).unwrap(), Placement::Cold(1));
+        assert_eq!(c.cold_placements.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn backlogged_home_spills_to_fitting_sibling() {
+        let c = core(2, 4);
+        let k = 42u64;
+        let home = c.place(Some(k), None).unwrap().replica();
+        let other = 1 - home;
+        // full queue on the home: a keyed request must spill
+        c.gauge(home).queue_depth.store(4, Ordering::Relaxed);
+        assert_eq!(c.place(Some(k), None).unwrap(), Placement::Spill(other));
+        // deadline budget version: home est-wait exceeds the budget
+        c.gauge(home).queue_depth.store(0, Ordering::Relaxed);
+        c.gauge(home).est_wait_ms.store(500, Ordering::Relaxed);
+        assert_eq!(c.place(Some(k), Some(100)).unwrap(),
+                   Placement::Spill(other));
+        // generous budget: affinity wins again
+        assert_eq!(c.place(Some(k), Some(1000)).unwrap(),
+                   Placement::Affinity(home));
+        assert_eq!(c.affinity_spills.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn nobody_fits_keeps_affinity_for_the_shed_answer() {
+        let c = core(2, 2);
+        let k = 7u64;
+        let home = c.place(Some(k), None).unwrap().replica();
+        c.gauge(0).queue_depth.store(2, Ordering::Relaxed);
+        c.gauge(1).queue_depth.store(2, Ordering::Relaxed);
+        assert_eq!(c.place(Some(k), None).unwrap(),
+                   Placement::Affinity(home));
+    }
+
+    #[test]
+    fn dead_fleet_places_nothing() {
+        let c = core(2, 8);
+        c.mark_dead(0);
+        c.mark_dead(1);
+        assert!(c.place(Some(1), None).is_none());
+        assert!(c.place(None, None).is_none());
+        assert_eq!(c.replica_deaths.load(Ordering::Relaxed), 2);
+        // idempotent: re-marking doesn't double count
+        c.mark_dead(0);
+        assert_eq!(c.replica_deaths.load(Ordering::Relaxed), 2);
+    }
+}

@@ -146,6 +146,11 @@ pub struct SessionPool<T> {
     /// paged serving is enabled (admission budget checks + occupancy
     /// stats; session retirement releases pages via `PagedKv::drop`).
     kv: Option<SharedKvPool>,
+    /// Preemption spill threshold: a session paused this many consecutive
+    /// rounds releases its paged KV to the pool's reclaimable set and
+    /// re-prefills on resume (prefix adoption makes that cheap). `0` =
+    /// disabled.
+    spill_after_rounds: usize,
 }
 
 impl<T> SessionPool<T> {
@@ -163,6 +168,7 @@ impl<T> SessionPool<T> {
             record_trace: false,
             trace: Vec::new(),
             kv: None,
+            spill_after_rounds: 0,
         }
     }
 
@@ -198,6 +204,14 @@ impl<T> SessionPool<T> {
         self
     }
 
+    /// Spill a session's paged KV after it has been paused this many
+    /// consecutive rounds (`0` = never, the default). Spilled sessions
+    /// restore automatically before their next planned round, staying
+    /// paused while the pool is exhausted instead of failing.
+    pub fn set_spill_after_rounds(&mut self, rounds: usize) {
+        self.spill_after_rounds = rounds;
+    }
+
     /// The attached paged KV pool, if paged serving is enabled.
     pub fn kv_pool(&self) -> Option<&SharedKvPool> {
         self.kv.as_ref()
@@ -216,6 +230,14 @@ impl<T> SessionPool<T> {
     }
 
     /// Per-session progress snapshots, in admission order.
+    /// Drain every live session, returning each entry's `(id, tag)`.
+    /// Worker-death path: the caller turns these into error replies so
+    /// in-flight connections retire instead of hanging. Dropping the
+    /// sessions releases their paged KV back to the pool.
+    pub fn drain_sessions(&mut self) -> Vec<(String, T)> {
+        self.entries.drain(..).map(|e| (e.id, e.tag)).collect()
+    }
+
     pub fn progress(&self) -> Vec<(String, SessionProgress)> {
         self.entries
             .iter()
@@ -315,8 +337,34 @@ impl<T> SessionPool<T> {
                     // this round — the session just doesn't get a step
                     self.entries[i].session.note_paused();
                     self.preempted_total += 1;
+                    if self.spill_after_rounds > 0
+                        && self.entries[i].session.paused_streak()
+                            >= self.spill_after_rounds
+                    {
+                        // long pause: free the memory too, not just the
+                        // round slot (no-op once spilled / for dense)
+                        self.entries[i].session.spill_kv();
+                    }
                     slots.push(Slot::Idle);
                     continue;
+                }
+            }
+            if self.entries[i].session.kv_spilled() {
+                // resuming a spilled session: re-admit + rebuild before
+                // planning; under pool exhaustion it stays paused rather
+                // than failing (retry next round)
+                match self.entries[i].session.ensure_kv(backend, params) {
+                    Ok(true) => {}
+                    Ok(false) => {
+                        self.entries[i].session.note_paused();
+                        self.preempted_total += 1;
+                        slots.push(Slot::Idle);
+                        continue;
+                    }
+                    Err(e) => {
+                        slots.push(Slot::Failed(e));
+                        continue;
+                    }
                 }
             }
             self.entries[i].last_step = self.rounds_issued;

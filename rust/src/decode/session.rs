@@ -29,7 +29,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::model::kv_pool::{PagedKv, SharedKvPool};
+use crate::model::kv_pool::{is_pool_exhausted, PagedKv, SharedKvPool};
 use crate::model::{KvCache, KvView};
 use crate::runtime::manifest::Constants;
 
@@ -142,6 +142,13 @@ pub struct DecodeSession {
     /// Rounds a width-pressured scheduler skipped this session
     /// (preemption-by-pausing bookkeeping; never advanced by decoding).
     paused_rounds: usize,
+    /// Consecutive paused rounds since the session last planned a round
+    /// — the preemption-spill trigger (`SessionPool::spill_after_rounds`).
+    paused_streak: usize,
+    /// Prefill executable family of the admission geometry: the forward
+    /// a spill-restore uses to rebuild rows adoption did not bring back.
+    /// Empty for dense / no-cache sessions (they never spill).
+    restore_exec: String,
     done: bool,
 }
 
@@ -209,6 +216,7 @@ impl DecodeSession {
                 geo: Option<KvAdmissionGeometry>) -> Result<DecodeSession> {
         let c = backend.constants().clone();
         let spec = backend.model_spec("main")?.clone();
+        let mut restore_exec = String::new();
         let cache: Box<dyn KvView> = match pool {
             None => {
                 Box::new(KvCache::new(spec.n_layers, st.s_max, spec.d_kv))
@@ -218,6 +226,7 @@ impl DecodeSession {
                     kv_admission_geometry(&cfg, &c, st.prompt_len,
                                           st.gen_len)
                 });
+                restore_exec = geo.prefix_tag.clone();
                 Box::new(PagedKv::admit(pool,
                                         &st.tokens[..st.prompt_len],
                                         &geo.prefix_tag, geo.prefix_rows,
@@ -233,6 +242,8 @@ impl DecodeSession {
             policy,
             steps: 0,
             paused_rounds: 0,
+            paused_streak: 0,
+            restore_exec,
             done: false,
         })
     }
@@ -273,11 +284,77 @@ impl DecodeSession {
     /// decode state, so a paused session resumes bit-identically.
     pub fn note_paused(&mut self) {
         self.paused_rounds += 1;
+        self.paused_streak += 1;
     }
 
     /// Rounds the scheduler paused this session so far.
     pub fn paused_rounds(&self) -> usize {
         self.paused_rounds
+    }
+
+    /// Consecutive paused rounds since the session last planned a round.
+    pub fn paused_streak(&self) -> usize {
+        self.paused_streak
+    }
+
+    /// Preemption spill (the SLO follow-on): release the session's paged
+    /// KV back to the pool so a long pause frees memory, not just its
+    /// round slot. Prefix-indexed pages land in the pool's reclaimable
+    /// set — still adoptable, by anyone including this session's own
+    /// resume. Returns pages released; `None` when there is nothing to
+    /// spill (dense cache, finished, or already spilled).
+    pub fn spill_kv(&mut self) -> Option<usize> {
+        if self.done {
+            return None;
+        }
+        self.cache.spill()
+    }
+
+    /// True while the session's KV is spilled — it must be restored (via
+    /// `ensure_kv`, or implicitly by `plan_round`) before decoding.
+    pub fn kv_spilled(&self) -> bool {
+        self.cache.spilled()
+    }
+
+    /// Restore a spilled KV view: re-admit against the pool (prompt
+    /// pages usually come back by prefix adoption from the reclaimable
+    /// set) and rebuild whatever previously-valid rows did not with one
+    /// full forward over the current sequence. Returns `Ok(false)` when
+    /// the pool is currently exhausted — the session stays spilled and
+    /// the scheduler keeps it paused to retry later. Other errors are
+    /// fatal.
+    pub fn ensure_kv(&mut self, backend: &dyn Backend, params: &[f32])
+                     -> Result<bool> {
+        if !self.cache.spilled() {
+            return Ok(true);
+        }
+        match self.restore_spilled_kv(backend, params) {
+            Ok(()) => Ok(true),
+            Err(e) if is_pool_exhausted(&e) => Ok(false),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn restore_spilled_kv(&mut self, backend: &dyn Backend, params: &[f32])
+                          -> Result<()> {
+        self.cache.readmit(&self.st.tokens[..self.st.prompt_len])?;
+        let runs = self.cache.take_spill_restore_runs();
+        if runs.is_empty() {
+            return Ok(());
+        }
+        // One full forward over the current sequence re-derives the rows
+        // adoption did not bring back. On the sim backend KV rows are
+        // pure functions of (layer, position, token), so the restored
+        // content is bit-identical to what was spilled; on a real engine
+        // this is the same approximation the KV-refresh path makes.
+        let out = backend.prefill(&self.restore_exec, params,
+                                  &self.st.tokens, &self.st.full_valid())?;
+        for (lo, hi) in runs {
+            self.cache.install_full(&out.kcache, &out.vcache, lo, hi)?;
+        }
+        self.res.forwards += 1;
+        self.res.mix.full_forwards += 1;
+        Ok(())
     }
 
     /// Block states of a multi-block session (`None` for strategies
@@ -313,6 +390,13 @@ impl DecodeSession {
         if self.done {
             return Ok(RoundPlan::Finished);
         }
+        if self.cache.spilled() {
+            // standalone-driver path; the scheduler restores via
+            // `ensure_kv` *before* planning so pool exhaustion keeps the
+            // session paused instead of erroring here
+            self.restore_spilled_kv(backend, params)?;
+        }
+        self.paused_streak = 0;
         let t0 = Instant::now();
         self.steps += 1;
         if !self.policy.prefilled() {

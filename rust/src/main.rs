@@ -68,6 +68,8 @@ fn print_help() {
            serve --ckpt C [--port 7070]          start the serving coordinator\n\
                 [--max-sessions N] [--max-queue N] [--config svc.json]\n\
                 [--draft D] [--kv-budget-mb MB (0 = dense caches)]\n\
+                [--workers N (replica fleet)] [--round-width N]\n\
+                [--spill-after N (paused rounds before KV spill, 0 = off)]\n\
            bench --exp EXP [--n N] [--fast]      regenerate a table/figure\n\
                  (table1..table11, curves, radar, figure1, perf, all)"
     );
@@ -279,6 +281,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "round-width",
             svc.as_ref().map(|s| s.slo_round_width).unwrap_or(0),
         ),
+        // replica fleet behind the prefix-affinity router (1 = classic
+        // single-worker topology)
+        workers: args.usize_or(
+            "workers",
+            svc.as_ref().map(|s| s.workers).unwrap_or(1),
+        ),
+        // paused rounds before a preempted session spills its paged KV
+        // back to the pool (0 = never spill)
+        spill_after_rounds: args.usize_or(
+            "spill-after",
+            svc.as_ref().map(|s| s.spill_after_rounds).unwrap_or(0),
+        ),
         // an explicit --strategy flag wins over the config file's decode
         // block; without the flag the config's tuned decode applies
         decode: if args.get("strategy").is_some() {
@@ -289,6 +303,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     d3llm::config::validate_service_limits(cfg.max_queue,
                                            cfg.max_concurrent_sessions)?;
+    d3llm::config::validate_workers(cfg.workers)?;
     coordinator::serve(cfg)
 }
 

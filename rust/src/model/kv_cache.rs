@@ -180,6 +180,37 @@ pub trait KvView {
     /// Bookkeeping hook invoked when a session skipped its prompt-prefill
     /// forward thanks to a prefix-cache hit. No-op on dense caches.
     fn note_prefill_skipped(&mut self) {}
+
+    /// Preemption spill: release every pool-backed page this view holds
+    /// (prefix-indexed pages stay adoptable in the pool's reclaimable
+    /// set) and remember which rows were valid so they can be rebuilt on
+    /// resume. Returns the number of pages released, `None` when the
+    /// view has nothing to spill (dense storage, or already spilled).
+    fn spill(&mut self) -> Option<usize> {
+        None
+    }
+
+    /// True between a `spill` and its successful `readmit` — the view
+    /// holds no rows and must not be read or written.
+    fn spilled(&self) -> bool {
+        false
+    }
+
+    /// Re-admit a spilled view against its pool: re-adopt whatever the
+    /// prefix index still holds and re-reserve the span. After this,
+    /// [`KvView::take_spill_restore_runs`] lists the previously-valid
+    /// rows that did not come back by adoption and need their content
+    /// re-installed. No-op for dense storage.
+    fn readmit(&mut self, _prompt_tokens: &[i32]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Row runs (`lo..hi`) that were valid at spill time and still need
+    /// an `install_full` after `readmit`. Draining: returns each run
+    /// once. Empty for dense storage.
+    fn take_spill_restore_runs(&mut self) -> Vec<(usize, usize)> {
+        Vec::new()
+    }
 }
 
 /// Dense host-side mirror of the block-approximate KV cache: one

@@ -154,6 +154,14 @@ pub struct KvPoolStats {
     /// Mid-decode page allocations that failed (budget exhausted beyond
     /// the admission reservation).
     pub alloc_fails: u64,
+    /// Pages released back to the pool by preemption spill
+    /// (`KvView::spill`): a long-paused session frees its memory, not
+    /// just its round slot.
+    pub pages_spilled: u64,
+    /// Spilled pages that were *not* re-adopted from the prefix index at
+    /// resume and had to be rebuilt — the re-prefill cost of a spill
+    /// (prefix pages usually come back free).
+    pub pages_reprefilled: u64,
 }
 
 /// Point-in-time occupancy snapshot.
@@ -366,6 +374,37 @@ fn chain_hashes(seed: u64, tokens: &[i32], prefix_rows: usize,
     out
 }
 
+/// Affinity routing key for a prompt under a given prefill family and
+/// cache geometry: the chain hash of the *first* prefix page — the root
+/// of the prefix chain. Two prompts share it iff their first page of
+/// prompt tokens matches under the same executable family and geometry,
+/// which is exactly when their pool pages are mutually adoptable — so a
+/// fleet router that sends equal keys to the same replica lands
+/// requests where their prompt pages already live. `None` when the
+/// prompt does not fill a single page (no shareable pages exist, so
+/// there is nothing to be affine to).
+pub fn prefix_routing_key(tag: &str, layers: usize, d_kv: usize,
+                          page_rows: usize, tokens: &[i32],
+                          prefix_rows: usize) -> Option<u64> {
+    let prefix_rows = prefix_rows.min(tokens.len());
+    if prefix_rows < page_rows {
+        return None;
+    }
+    let seed = prefix_seed(tag, layers, d_kv, page_rows);
+    chain_hashes(seed, tokens, prefix_rows, page_rows)
+        .first()
+        .map(|&(_, h)| h)
+}
+
+/// Rendezvous (highest-random-weight) score of `replica` for `key`: a
+/// router ranks the live replicas by this score and picks the maximum.
+/// Removing a replica remaps only the keys it owned and adding one
+/// steals only the keys it now wins — no global reshuffle of warm
+/// prefix pages.
+pub fn rendezvous_score(key: u64, replica: u64) -> u64 {
+    mix64(key ^ mix64(replica ^ 0xD3A9_5F2E_C0FF_EE00))
+}
+
 /// Resolve a prefix-index hit, re-verifying that the indexed page still
 /// carries the chain hash it is indexed under. The index and the page's
 /// own `hash` field are kept consistent by construction, but adoption is
@@ -576,6 +615,16 @@ pub struct PagedKv {
     /// Every prefix page was adopted at admission: the prompt-prefill
     /// forward can be skipped.
     prefill_cached: bool,
+    /// Admission geometry retained so a preemption spill can re-admit
+    /// the view later (`KvView::spill` / `KvView::readmit`).
+    prefix_tag: String,
+    span_rows: usize,
+    causal: bool,
+    /// Between `spill` and a successful `readmit`: the table is empty
+    /// and `spill_restore` remembers which rows must be rebuilt.
+    spilled: bool,
+    spill_restore: Vec<(usize, usize)>,
+    spill_pages_held: usize,
 }
 
 impl PagedKv {
@@ -626,6 +675,12 @@ impl PagedKv {
             prefix_rows,
             pending: Vec::new(),
             prefill_cached: false,
+            prefix_tag: prefix_tag.to_string(),
+            span_rows,
+            causal,
+            spilled: false,
+            spill_restore: Vec::new(),
+            spill_pages_held: 0,
         };
 
         // adopt prefix hits (live pages share; reclaimable pages revive,
@@ -1081,6 +1136,100 @@ impl KvView for PagedKv {
 
     fn note_prefill_skipped(&mut self) {
         self.pool.inner.borrow_mut().stats.prefill_skips += 1;
+    }
+
+    /// Preemption spill: remember which rows are valid, then release
+    /// every page (prefix-indexed pages become reclaimable — still
+    /// adoptable, by this session's own readmit or anyone else's) plus
+    /// the unused reservation. The view stays bound to its pool and is
+    /// rebuilt by `readmit`.
+    fn spill(&mut self) -> Option<usize> {
+        if self.spilled {
+            return None;
+        }
+        let r = self.page_rows;
+        let mut runs: Vec<(usize, usize)> = Vec::new();
+        let mut released = 0usize;
+        {
+            let mut p = self.pool.inner.borrow_mut();
+            for (slot, entry) in self.table.iter().enumerate() {
+                let Some(pid) = *entry else { continue };
+                let rows = r.min(self.s_max - slot * r);
+                for row in 0..rows {
+                    if p.pages[pid].valid[row] > 0.0 {
+                        let pos = slot * r + row;
+                        match runs.last_mut() {
+                            Some((_, hi)) if *hi == pos => *hi = pos + 1,
+                            _ => runs.push((pos, pos + 1)),
+                        }
+                    }
+                }
+                p.release_page(pid);
+                released += 1;
+            }
+            p.reserved -= self.reserved_left;
+            p.stats.pages_spilled += released as u64;
+        }
+        self.table.fill(None);
+        self.valid_rows = 0;
+        self.reserved_left = 0;
+        self.seq_gen += 1;
+        self.slot_touch.fill(0);
+        self.slot_install.fill(0);
+        self.pending.clear();
+        self.prefill_cached = false;
+        self.spilled = true;
+        self.spill_restore = runs;
+        self.spill_pages_held = released;
+        Some(released)
+    }
+
+    fn spilled(&self) -> bool {
+        self.spilled
+    }
+
+    /// Re-admit after a spill: probe the prefix index again (the pages
+    /// this view released are still indexed unless evicted, so shared —
+    /// and usually even private — prompt pages come back by adoption),
+    /// re-reserve the span, and record which previously-valid rows still
+    /// need their content rebuilt (`take_spill_restore_runs`). Fails
+    /// pool-exhausted exactly like `admit`; the view stays spilled and
+    /// the call can be retried.
+    fn readmit(&mut self, prompt_tokens: &[i32]) -> Result<()> {
+        if !self.spilled {
+            return Ok(());
+        }
+        let pool = self.pool.clone();
+        let fresh = PagedKv::admit(&pool, prompt_tokens, &self.prefix_tag,
+                                   self.prefix_rows, self.span_rows,
+                                   self.causal)?;
+        let mut restore: Vec<(usize, usize)> = Vec::new();
+        for &(lo, hi) in &self.spill_restore {
+            let mut pos = lo;
+            while pos < hi {
+                if fresh.is_valid(pos) {
+                    pos += 1;
+                    continue;
+                }
+                let start = pos;
+                while pos < hi && !fresh.is_valid(pos) {
+                    pos += 1;
+                }
+                restore.push((start, pos));
+            }
+        }
+        let rebuilt =
+            self.spill_pages_held.saturating_sub(fresh.pages_held());
+        pool.inner.borrow_mut().stats.pages_reprefilled += rebuilt as u64;
+        // the spilled view's table is empty and its reservation zero, so
+        // the Drop this assignment triggers releases nothing
+        *self = fresh;
+        self.spill_restore = restore;
+        Ok(())
+    }
+
+    fn take_spill_restore_runs(&mut self) -> Vec<(usize, usize)> {
+        std::mem::take(&mut self.spill_restore)
     }
 }
 

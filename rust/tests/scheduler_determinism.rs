@@ -11,7 +11,13 @@
 //!     pool can mix strategies (d3llm + ar + spec) freely;
 //!   * under `round_width` pressure the pool schedules EDF (earliest
 //!     deadline first, deadline-free after deadlined, overdue last),
-//!     preempts by pausing, and a paused session resumes bit-identical.
+//!     preempts by pausing, and a paused session resumes bit-identical;
+//!   * a 4-replica fleet placed by the prefix-affinity router core is
+//!     bit-identical to a 1-replica reference on a shared-prefix mix,
+//!     and a mid-run replica kill drains its backlog to the survivors
+//!     without losing a single queued request;
+//!   * a session paused past `spill_after_rounds` releases its paged KV,
+//!     re-prefills on resume, and still decodes bit-identically.
 
 use d3llm::coordinator::scheduler::{run_interleaved, InterleavedRequest,
                                     SessionPool};
@@ -534,6 +540,310 @@ fn preempted_sessions_resume_bit_identical() {
                "pause/resume changed the forward count");
     assert_eq!(paused.rounds, reference.rounds,
                "paused rounds leaked into the session's own round count");
+}
+
+// ---------------------------------------------------------------------
+// Multi-worker fleet: prefix-affinity placement via the router core must
+// never change what any single request decodes — routing is a pure
+// performance decision. The fleet here is threadless (one pool + kv pool
+// per replica, placed by `RouterCore`), so the runs stay deterministic.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+
+use d3llm::coordinator::protocol::{GenRequest, SloClass};
+use d3llm::coordinator::router::{Router, RouterCore};
+use d3llm::coordinator::Job;
+use d3llm::model::kv_pool::prefix_routing_key;
+
+/// 36 shared tokens per family (>= one full 32-row page, the routing
+/// key) plus a 4-token member-unique tail.
+fn family_prompt(family: usize, member: usize) -> Vec<i32> {
+    let mut p: Vec<i32> =
+        (0..36).map(|i| 5 + ((i * 7 + family * 13) % 80) as i32).collect();
+    p.extend((0..4).map(|j| 5 + ((j + 11 * member + family) % 80) as i32));
+    p
+}
+
+#[test]
+fn four_replica_fleet_matches_single_replica_reference() {
+    let seed = 43u64;
+    let sim = SimBackend::new(seed);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    let c = sim.constants().clone();
+    let spec = sim.model_spec("main").unwrap().clone();
+    let mk_kv = || {
+        SharedKvPool::new(KvPoolCfg {
+            layers: spec.n_layers,
+            d_kv: spec.d_kv,
+            s_max: c.s_max,
+            page_rows: c.block,
+            budget_bytes: 1 << 20,
+        })
+    };
+    let reqs: Vec<(String, Vec<i32>)> = (0..8)
+        .flat_map(|fam| {
+            (0..2).map(move |m| {
+                (format!("f{fam}m{m}"), family_prompt(fam, m))
+            })
+        })
+        .collect();
+
+    // 1-replica reference: every request in one pool on one kv pool
+    let ref_sim = SimBackend::new(seed);
+    let ref_kv = mk_kv();
+    let mut ref_pool: SessionPool<()> = SessionPool::new();
+    for (id, prompt) in &reqs {
+        ref_pool.admit(id.clone(), (),
+                       DecodeSession::with_pool(&ref_sim, cfg.clone(),
+                                                prompt, 32, None, &ref_kv)
+                           .unwrap());
+    }
+    let mut reference: HashMap<String, GenResult> = HashMap::new();
+    while !ref_pool.is_empty() {
+        for f in ref_pool.step_round(&ref_sim, &params) {
+            reference.insert(f.id, f.result.unwrap());
+        }
+    }
+
+    // 4-replica fleet: the same requests, placed by prefix affinity
+    let core = RouterCore::new(4, 64);
+    let kvs: Vec<SharedKvPool> = (0..4).map(|_| mk_kv()).collect();
+    let mut pools: Vec<SessionPool<()>> = kvs
+        .iter()
+        .map(|kv| SessionPool::new().with_kv_pool(kv.clone()))
+        .collect();
+    let mut family_home: HashMap<u64, usize> = HashMap::new();
+    for (id, prompt) in &reqs {
+        let geo = decode::kv_admission_geometry(&cfg, &c, prompt.len(), 0);
+        let key = prefix_routing_key(&geo.prefix_tag, spec.n_layers,
+                                     spec.d_kv, c.block, prompt,
+                                     geo.prefix_rows)
+            .expect("a 40-token prompt spans a full page");
+        let r = core.place(Some(key), None).expect("live fleet").replica();
+        // prefix affinity: the same key homes on the same replica, always
+        assert_eq!(*family_home.entry(key).or_insert(r), r,
+                   "{id}: family split across replicas");
+        pools[r].admit(id.clone(), (),
+                       DecodeSession::with_pool(&sim, cfg.clone(), prompt,
+                                                32, None, &kvs[r])
+                           .unwrap());
+    }
+    assert_eq!(core.affinity_hits.load(Ordering::Relaxed), 16,
+               "an idle keyed fleet must place by affinity only");
+    assert_eq!(core.cold_placements.load(Ordering::Relaxed), 0);
+    assert!(family_home.values().collect::<HashSet<_>>().len() >= 2,
+            "HRW degenerated to a single replica");
+
+    let mut fleet: HashMap<String, GenResult> = HashMap::new();
+    for pool in &mut pools {
+        while !pool.is_empty() {
+            for f in pool.step_round(&sim, &params) {
+                fleet.insert(f.id, f.result.unwrap());
+            }
+        }
+    }
+    assert_eq!(fleet.len(), reference.len(), "the fleet lost requests");
+    for (id, r) in &reference {
+        let got = fleet.get(id)
+            .unwrap_or_else(|| panic!("{id} lost by the fleet"));
+        assert_eq!(got.tokens, r.tokens,
+                   "{id}: fleet diverged from the 1-replica reference");
+        assert_eq!(got.forwards, r.forwards, "{id}: forwards diverged");
+    }
+}
+
+fn mk_job(id: &str, reply: &mpsc::Sender<String>) -> Job {
+    Job {
+        req: GenRequest {
+            id: id.into(),
+            prompt: String::new(),
+            gen_len: Some(32),
+            priority: 0,
+            strategy: None,
+            slo: SloClass::Standard,
+            deadline_ms: None,
+        },
+        reply: reply.clone(),
+    }
+}
+
+#[test]
+fn replica_kill_drains_queued_jobs_to_survivors() {
+    let core = Arc::new(RouterCore::new(2, 8));
+    let (tx0, rx0) = mpsc::channel::<Job>();
+    let (tx1, rx1) = mpsc::channel::<Job>();
+    let rt = Router::new(core.clone(), vec![tx0, tx1]);
+    let (reply_tx, reply_rx) = mpsc::channel::<String>();
+
+    // key-less placement is least-loaded; with idle gauges the tie breaks
+    // to replica 0, so the whole backlog lands on the replica we kill
+    for k in 0..4 {
+        rt.dispatch(None, None, mk_job(&format!("q{k}"), &reply_tx))
+            .expect("live fleet");
+    }
+    assert_eq!(core.cold_placements.load(Ordering::Relaxed), 4);
+
+    // the replica dies. This is the worker wrapper's exact sequence:
+    // mark it dead first (re-routes must not bounce back), then salvage
+    // the queued backlog and re-route it to the survivors.
+    rt.drop_replica(0);
+    let mut salvaged = Vec::new();
+    while let Ok(job) = rx0.try_recv() {
+        salvaged.push(job);
+    }
+    assert_eq!(salvaged.len(), 4, "backlog did not land on replica 0");
+    for job in salvaged {
+        assert!(rt.reroute(job).is_ok(),
+                "the survivor must absorb the backlog");
+    }
+    // intake after the death routes straight to the survivor
+    rt.dispatch(None, None, mk_job("q4", &reply_tx)).expect("live fleet");
+
+    let mut got: Vec<String> = Vec::new();
+    while let Ok(job) = rx1.try_recv() {
+        // the reply handle survived the re-route: the survivor can still
+        // answer the original connection
+        job.reply.send(format!("done {}", job.req.id)).unwrap();
+        got.push(job.req.id);
+    }
+    got.sort();
+    assert_eq!(got, ["q0", "q1", "q2", "q3", "q4"],
+               "a queued request was lost in the drain");
+    for _ in 0..5 {
+        reply_rx.recv().expect("a reply connection was dropped");
+    }
+    assert_eq!(core.jobs_rerouted.load(Ordering::Relaxed), 4);
+    assert_eq!(core.replica_deaths.load(Ordering::Relaxed), 1);
+    assert_eq!(core.alive_count(), 1);
+
+    // fleet-wide death: the job comes back so the caller can still send
+    // an error reply instead of hanging the connection
+    rt.drop_replica(1);
+    let job = rt.reroute(mk_job("q5", &reply_tx))
+        .expect_err("a dead fleet cannot absorb work");
+    assert_eq!(job.req.id, "q5");
+}
+
+#[test]
+fn drain_sessions_releases_paged_pages_and_reports_ids() {
+    let sim = SimBackend::new(41);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    let c = sim.constants().clone();
+    let spec = sim.model_spec("main").unwrap().clone();
+    let kv = SharedKvPool::new(KvPoolCfg {
+        layers: spec.n_layers,
+        d_kv: spec.d_kv,
+        s_max: c.s_max,
+        page_rows: c.block,
+        budget_bytes: 1 << 20,
+    });
+    let mut pool: SessionPool<usize> =
+        SessionPool::new().with_kv_pool(kv.clone());
+    for i in 0..2 {
+        pool.admit(format!("r{i}"), i,
+                   DecodeSession::with_pool(&sim, cfg.clone(),
+                                            &prompt_for(i), 32, None, &kv)
+                       .unwrap());
+    }
+    pool.step_round(&sim, &params); // prefill: sessions now hold pages
+    assert!(kv.usage().in_use > 0, "prefill installed no pages");
+
+    let drained = pool.drain_sessions();
+    assert_eq!(drained.iter().map(|(id, _)| id.as_str()).collect::<Vec<_>>(),
+               ["r0", "r1"]);
+    assert_eq!(drained.iter().map(|(_, tag)| *tag).collect::<Vec<_>>(),
+               [0, 1]);
+    assert!(pool.is_empty());
+    let u = kv.usage();
+    assert_eq!(u.in_use + u.reserved, 0, "drain leaked pool pages");
+}
+
+// ---------------------------------------------------------------------
+// Preemption spill: a session paused past `spill_after_rounds` gives its
+// paged KV back to the pool and re-prefills the lost rows on resume —
+// the decode trajectory must not notice.
+
+#[test]
+fn spilled_sessions_resume_bit_identical_and_account_pages() {
+    let seed = 37u64;
+    let sim = SimBackend::new(seed);
+    let params = vec![0.5f32; 8];
+    let cfg = test_cfg();
+    let c = sim.constants().clone();
+    let spec = sim.model_spec("main").unwrap().clone();
+    let mk_kv = || {
+        SharedKvPool::new(KvPoolCfg {
+            layers: spec.n_layers,
+            d_kv: spec.d_kv,
+            s_max: c.s_max,
+            page_rows: c.block,
+            budget_bytes: 1 << 20,
+        })
+    };
+
+    // solo paged reference (the sim is a pure function of seed + inputs)
+    let ref_sim = SimBackend::new(seed);
+    let ref_kv = mk_kv();
+    let mut ref_pool: SessionPool<()> = SessionPool::new();
+    ref_pool.admit("ref".into(), (),
+                   DecodeSession::with_pool(&ref_sim, cfg.clone(),
+                                            &prompt_for(4), 64, None,
+                                            &ref_kv)
+                       .unwrap());
+    let mut reference = None;
+    while !ref_pool.is_empty() {
+        for f in ref_pool.step_round(&ref_sim, &params) {
+            reference = Some(f.result.unwrap());
+        }
+    }
+    let reference = reference.unwrap();
+
+    let kv = mk_kv();
+    let mut pool: SessionPool<usize> =
+        SessionPool::new().with_round_width(1).with_kv_pool(kv.clone());
+    pool.set_spill_after_rounds(2);
+    pool.set_now_ms(0);
+    pool.admit_deadline(
+        "a".into(), 0,
+        DecodeSession::with_pool(&sim, cfg.clone(), &prompt_for(4), 64,
+                                 None, &kv)
+            .unwrap(),
+        None,
+    );
+    // a runs alone first (prefill + one window), so it holds pool pages
+    // by the time the urgent arrival preempts it
+    for _ in 0..2 {
+        pool.step_round(&sim, &params);
+    }
+    pool.admit_deadline(
+        "b".into(), 1,
+        DecodeSession::with_pool(&sim, cfg.clone(), &prompt_for(3), 32,
+                                 None, &kv)
+            .unwrap(),
+        Some(500),
+    );
+    let mut results: Vec<Option<GenResult>> = vec![None, None];
+    while !pool.is_empty() {
+        for f in pool.step_round(&sim, &params) {
+            results[f.tag] = Some(f.result.unwrap());
+        }
+    }
+    let a = results[0].take().unwrap();
+    assert!(a.paused_rounds > 0, "a was never actually preempted");
+    let ks = kv.stats();
+    assert!(ks.pages_spilled > 0, "the paused session never spilled");
+    assert!(ks.pages_reprefilled <= ks.pages_spilled,
+            "restore rebuilt more pages than were ever spilled");
+    // forwards differ by design (the restore prefill is extra work);
+    // the emitted tokens must not
+    assert_eq!(a.tokens, reference.tokens,
+               "spill/restore changed the decode trajectory");
+    let u = kv.usage();
+    assert_eq!(u.in_use + u.reserved, 0, "spill path leaked pool pages");
 }
 
 #[test]

@@ -47,6 +47,8 @@ fn server_serves_generates_and_shuts_down() {
         draft: None,
         kv_budget_mb: 64,
         slo_round_width: 0,
+        workers: 1,
+        spill_after_rounds: 0,
         decode: None,
     };
     let handle = std::thread::spawn(move || {
@@ -134,6 +136,15 @@ fn server_serves_generates_and_shuts_down() {
                Some("interactive"));
     assert!(slo[0].get("served").and_then(|v| v.as_usize()).unwrap() >= 1);
     assert_eq!(j.get("shed").and_then(|v| v.as_usize()), Some(0));
+    // fleet fields present even for a single worker: same pinned names
+    // carry the (degenerate) fleet sums plus the per-replica breakdown
+    assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(j.get("replicas_alive").and_then(|v| v.as_usize()), Some(1));
+    let reps = j.get("replicas").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(reps.len(), 1);
+    assert_eq!(reps[0].get("replica").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(reps[0].get("alive").and_then(|v| v.as_bool()), Some(true));
+    assert!(reps[0].get("served").and_then(|v| v.as_usize()).unwrap() >= 5);
 
     // ---- shutdown
     let _ = request(&addr, r#"{"cmd":"shutdown"}"#);
