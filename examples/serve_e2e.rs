@@ -42,6 +42,9 @@ fn main() -> anyhow::Result<()> {
         draft: None,
         kv_budget_mb: 256,
         slo_round_width: args.usize_or("round-width", 0),
+        workers: 1,
+        spill_after_rounds: 0,
+        adaptive: Default::default(),
         decode: None,
     };
     std::thread::spawn(move || {

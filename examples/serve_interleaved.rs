@@ -69,6 +69,9 @@ fn run_once(ckpt: &str, port: u16, width: usize, prompts: &[String])
         draft: None,
         kv_budget_mb: 256,
         slo_round_width: 0,
+        workers: 1,
+        spill_after_rounds: 0,
+        adaptive: Default::default(),
         decode: None,
     };
     std::thread::spawn(move || {

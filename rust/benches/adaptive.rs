@@ -1,0 +1,237 @@
+//! `cargo bench --bench adaptive` — the adaptive parallelism controller
+//! under a deterministic overload burst (SimBackend + virtual clock, no
+//! artifacts, no wall-time dependence).
+//!
+//! Two runs over the *identical* burst — N d3llm requests arriving far
+//! faster than the pool drains them — differing only in the controller
+//! mode:
+//!
+//!   * `off`  — the static baseline: every session decodes at the preset
+//!              operating point (`decode::DEFAULT_ENTROPY_THRESHOLD`);
+//!   * `load` — the controller sees the batcher backlog and the full
+//!              session pool (`pool_full` occupancy term), drives
+//!              pressure to ~1, and raises each session's entropy
+//!              threshold toward the calibrated `entropy_ceiling` (with
+//!              the widest block budget), buying tokens per round.
+//!
+//! Acceptance (asserted):
+//!   * aggregate tokens/round (total committed tokens / pool rounds) in
+//!     `load` mode is >= 1.3x the static baseline;
+//!   * the accuracy cost stays inside the pinned AUP floor: with the
+//!     mean selection-time confidence of committed tokens as the
+//!     accuracy proxy (the sim's task accuracy is degenerate — see
+//!     bench-results/README.md), the adaptive single-point AUP
+//!     (tokens/round x proxy) regresses at most `MAX_AUP_DELTA_FRAC`
+//!     versus the static point;
+//!   * no emitted threshold ever crosses the `entropy_ceiling` (the hard
+//!     floor, load notwithstanding), and `off` mode emits no budgets.
+//!
+//! Emits `BENCH_adaptive.json` with both operating points and the gates.
+
+use d3llm::coordinator::batcher::{Admission, Batcher};
+use d3llm::coordinator::scheduler::SessionPool;
+use d3llm::decode::{AdaptiveCfg, AdaptiveController, AdaptiveMode,
+                    DecodeCfg, DecodeSession, LoadSignal, SimBackend,
+                    Strategy};
+use d3llm::metrics::aup::{aup_delta_frac, Point};
+use d3llm::util::json::Json;
+
+/// Virtual duration of one pool round (ms).
+const ROUND_MS: f64 = 5.0;
+/// Arrival spacing (ms): ~5 arrivals per round — a hard burst.
+const INTER_ARRIVAL_MS: f64 = 1.0;
+const GEN_LEN: usize = 64;
+const MAX_LIVE: usize = 4;
+/// Large enough that nothing sheds: both runs serve every request.
+const MAX_QUEUE: usize = 64;
+const N_REQUESTS: usize = 32;
+const SEED: u64 = 67;
+/// The throughput gate: adaptive tokens/round vs. static.
+const MIN_TOKENS_PER_ROUND_X: f64 = 1.3;
+/// The pinned accuracy floor: the adaptive operating point may lose at
+/// most this fraction of the static point's single-point AUP.
+const MAX_AUP_DELTA_FRAC: f64 = 0.10;
+
+fn cfg() -> DecodeCfg {
+    let mut cfg = DecodeCfg::preset(Strategy::D3llm);
+    cfg.early_stop = false; // sim argmax never emits EOS by default
+    cfg
+}
+
+fn prompt_for(k: usize) -> Vec<i32> {
+    (0..(8 + k % 5)).map(|i| 5 + ((i + 3 * k) % 80) as i32).collect()
+}
+
+#[derive(Default)]
+struct RunStats {
+    pool_rounds: u64,
+    total_tokens: u64,
+    conf_sum: f64,
+    quality_commits: u64,
+    budgets_emitted: u64,
+    max_threshold: f32,
+}
+
+impl RunStats {
+    fn tokens_per_round(&self) -> f64 {
+        self.total_tokens as f64 / self.pool_rounds.max(1) as f64
+    }
+
+    /// Accuracy proxy in percent: mean selection-time confidence of the
+    /// tokens the run actually committed.
+    fn acc_proxy(&self) -> f64 {
+        100.0 * self.conf_sum / self.quality_commits.max(1) as f64
+    }
+}
+
+/// One full serving run over the burst; only `mode` differs between the
+/// baseline and the adaptive run.
+fn run(mode: AdaptiveMode) -> RunStats {
+    let sim = SimBackend::new(SEED);
+    let params = vec![0.5f32; 8];
+    let mut ctrl = AdaptiveController::new(AdaptiveCfg {
+        mode,
+        // what the serving replica loop defaults to: a full pool is load
+        pool_full: MAX_LIVE,
+        ..AdaptiveCfg::default()
+    });
+    let mut batcher: Batcher<usize> = Batcher::new(MAX_QUEUE);
+    let mut pool: SessionPool<usize> = SessionPool::new();
+    let mut st = RunStats::default();
+    let mut now_ms = 0.0f64;
+    let mut next_arrival = 0usize;
+
+    while next_arrival < N_REQUESTS || !batcher.is_empty()
+        || !pool.is_empty()
+    {
+        while next_arrival < N_REQUESTS
+            && next_arrival as f64 * INTER_ARRIVAL_MS <= now_ms
+        {
+            let i = next_arrival;
+            next_arrival += 1;
+            let adm = batcher.admit(i, 0, None, now_ms as u64);
+            assert!(matches!(adm, Admission::Admitted(None)),
+                    "the bench queue must never shed");
+        }
+        while pool.len() < MAX_LIVE {
+            let Some(q) = batcher.pop() else { break };
+            let i = q.payload;
+            let s = DecodeSession::new(&sim, cfg(), &prompt_for(i), GEN_LEN)
+                .unwrap();
+            pool.admit(format!("r{i}"), i, s);
+        }
+        if pool.is_empty() {
+            now_ms = now_ms.max(next_arrival as f64 * INTER_ARRIVAL_MS);
+            continue;
+        }
+
+        // the replica loop's controller sequence, on the virtual clock
+        if ctrl.enabled() {
+            ctrl.observe(&LoadSignal {
+                queue_depth: batcher.len(),
+                active_sessions: pool.len(),
+                est_wait_ms: batcher.estimated_wait_ms(),
+            });
+            pool.set_budgets(|dcfg, res| {
+                let b =
+                    ctrl.budget_for(dcfg.metric, res.mean_commit_entropy());
+                if let Some(b) = b {
+                    st.budgets_emitted += 1;
+                    st.max_threshold =
+                        st.max_threshold.max(b.entropy_threshold);
+                }
+                b
+            });
+        }
+
+        pool.set_now_ms(now_ms as u64);
+        let finished = pool.step_round(&sim, &params);
+        st.pool_rounds += 1;
+        now_ms += ROUND_MS;
+        batcher.observe_round_ms(ROUND_MS);
+        for f in finished {
+            let r = f.result.expect("sim decode");
+            st.total_tokens += r.unmasked as u64;
+            st.conf_sum += r.conf_sum;
+            st.quality_commits += r.quality_commits as u64;
+        }
+    }
+    st
+}
+
+fn main() {
+    println!(
+        "== adaptive parallelism: {N_REQUESTS} x {GEN_LEN}-token d3llm \
+         requests, {INTER_ARRIVAL_MS} ms arrivals vs {ROUND_MS} ms rounds \
+         (hard burst) =="
+    );
+    let stat = run(AdaptiveMode::Off);
+    let adap = run(AdaptiveMode::Load);
+
+    // identical burst, fully served, both modes
+    assert_eq!(stat.total_tokens, (N_REQUESTS * GEN_LEN) as u64,
+               "the static run dropped tokens");
+    assert_eq!(adap.total_tokens, stat.total_tokens,
+               "the runs served different workloads");
+    assert_eq!(stat.budgets_emitted, 0, "off mode emitted budgets");
+    assert!(adap.budgets_emitted > 0, "load mode never emitted a budget");
+
+    // ---- hard floor: no emitted threshold past the ceiling, ever
+    let ceiling = AdaptiveCfg::default().entropy_ceiling;
+    assert!(adap.max_threshold <= ceiling + 1e-6,
+            "emitted threshold {} crossed the ceiling {ceiling}",
+            adap.max_threshold);
+
+    // ---- throughput gate
+    let x = adap.tokens_per_round() / stat.tokens_per_round();
+    println!(
+        "static:   {:4} rounds, {:.2} tokens/round, acc proxy {:.1}",
+        stat.pool_rounds, stat.tokens_per_round(), stat.acc_proxy()
+    );
+    println!(
+        "adaptive: {:4} rounds, {:.2} tokens/round, acc proxy {:.1}  \
+         (max emitted threshold {:.3}, ceiling {ceiling})",
+        adap.pool_rounds, adap.tokens_per_round(), adap.acc_proxy(),
+        adap.max_threshold
+    );
+    assert!(x >= MIN_TOKENS_PER_ROUND_X,
+            "tokens/round speedup {x:.2}x under the burst is below the \
+             {MIN_TOKENS_PER_ROUND_X}x gate");
+
+    // ---- AUP regression gate (the pinned accuracy floor)
+    let delta = aup_delta_frac(
+        Point { rho: stat.tokens_per_round(), acc: stat.acc_proxy() },
+        Point { rho: adap.tokens_per_round(), acc: adap.acc_proxy() },
+    );
+    assert!(delta <= MAX_AUP_DELTA_FRAC,
+            "adaptive AUP regressed {:.1}% vs static (pinned floor {:.0}%)",
+            delta * 100.0, MAX_AUP_DELTA_FRAC * 100.0);
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("adaptive")),
+        ("requests", Json::num(N_REQUESTS as f64)),
+        ("gen_len", Json::num(GEN_LEN as f64)),
+        ("round_ms", Json::num(ROUND_MS)),
+        ("static_rounds", Json::num(stat.pool_rounds as f64)),
+        ("adaptive_rounds", Json::num(adap.pool_rounds as f64)),
+        ("static_tokens_per_round", Json::num(stat.tokens_per_round())),
+        ("adaptive_tokens_per_round", Json::num(adap.tokens_per_round())),
+        ("tokens_per_round_x", Json::num(x)),
+        ("min_tokens_per_round_x", Json::num(MIN_TOKENS_PER_ROUND_X)),
+        ("static_acc_proxy", Json::num(stat.acc_proxy())),
+        ("adaptive_acc_proxy", Json::num(adap.acc_proxy())),
+        ("aup_delta_frac", Json::num(delta)),
+        ("max_aup_delta_frac", Json::num(MAX_AUP_DELTA_FRAC)),
+        ("max_emitted_threshold", Json::num(adap.max_threshold as f64)),
+        ("entropy_ceiling", Json::num(ceiling as f64)),
+        ("budgets_emitted", Json::num(adap.budgets_emitted as f64)),
+    ]);
+    d3llm::util::emit_bench_json("adaptive", &j.to_string());
+    println!(
+        "PASS: {x:.2}x tokens/round under the burst (gate \
+         {MIN_TOKENS_PER_ROUND_X}x) at {:.1}% AUP delta (pinned floor \
+         {:.0}%)",
+        delta * 100.0,
+        MAX_AUP_DELTA_FRAC * 100.0
+    );
+}

@@ -5,7 +5,8 @@
 use anyhow::Result;
 
 use crate::data::{self, Family};
-use crate::decode::{DecodeCfg, Strategy};
+use crate::decode::{AdaptiveCfg, AdaptiveController, AdaptiveMode,
+                    DecodeCfg, LoadSignal, Strategy};
 use crate::eval::evaluate;
 use crate::metrics::aup::Point;
 
@@ -30,8 +31,12 @@ impl MethodSpec {
     pub fn new(label: &str, ckpt: &str, strategy: Strategy) -> MethodSpec {
         let sweep = match strategy {
             Strategy::Vanilla | Strategy::Ar | Strategy::Spec => vec![],
+            // entropy grid around `decode::DEFAULT_ENTROPY_THRESHOLD`
+            // (the 0.45 headline); the top of the grid doubles as the
+            // adaptive controller's default `entropy_ceiling`
             Strategy::D3llm => vec![0.1, 0.25, 0.45, 0.8, 1.3],
-            // confidence-threshold methods
+            // confidence-threshold methods; the bottom of the grid
+            // doubles as the adaptive controller's default `conf_floor`
             _ => vec![0.99, 0.95, 0.85, 0.7, 0.55],
         };
         let headline = if sweep.is_empty() { 0 } else { 2 };
@@ -120,6 +125,40 @@ pub fn eval_custom(ctx: &BenchCtx, ckpt: &str, cfg: &DecodeCfg, tag: &str,
     );
     ctx.cache.borrow_mut().put(key, rec.clone());
     Ok(rec)
+}
+
+/// Where the adaptive controller lands on the static sweep's axis: drive
+/// a `load`-mode controller to saturation under a sustained synthetic
+/// backlog, take the threshold it emits for this method's metric, and
+/// evaluate the method there (cached under an `adaptive-*` tag). The
+/// returned point rides alongside the static grid so the sweep table
+/// shows the controller's overload operating point relative to the
+/// static Pareto frontier.
+pub fn eval_adaptive_row(ctx: &BenchCtx, m: &MethodSpec, task: Family,
+                         n: usize, seed: u64) -> Result<SweepPoint> {
+    let mut cfg = DecodeCfg::preset(m.strategy);
+    cfg.variant = "xla".to_string();
+    let mut ctrl = AdaptiveController::new(AdaptiveCfg {
+        mode: AdaptiveMode::Load,
+        ..AdaptiveCfg::default()
+    });
+    // deterministic saturation: a few rounds of a full backlog are
+    // enough for the pressure EWMA to converge to ~1
+    for _ in 0..12 {
+        ctrl.observe(&LoadSignal {
+            queue_depth: ctrl.cfg.backlog_full,
+            active_sessions: 4,
+            est_wait_ms: 0.0,
+        });
+    }
+    let budget = ctrl
+        .budget_for(cfg.metric, 0.0)
+        .expect("load mode always emits a budget");
+    let threshold = budget.entropy_threshold;
+    let tag = format!("adaptive-{}", m.strategy.name());
+    let rec = eval_custom(ctx, &m.ckpt, &cfg, &tag, task, threshold, n,
+                          seed)?;
+    Ok(SweepPoint { threshold, rec })
 }
 
 /// Full sweep of one (method, task, seed).

@@ -150,6 +150,43 @@ fn family_table(ctx: &BenchCtx, title: &str, stem: &str,
             push_method_row(&mut table, &task_label, &m.label, &tpfs, &accs,
                             &aups);
         }
+
+        // adaptive-controller row: where the `load`-mode controller lands
+        // under saturation, shown next to the static threshold grid so
+        // the table places it on the static Pareto frontier. Skipped for
+        // strict ("+") tasks, which the custom-eval path does not cover.
+        if !strict {
+            for m in methods.iter()
+                .filter(|m| m.strategy == Strategy::D3llm)
+            {
+                let mut tpfs = Vec::new();
+                let mut accs = Vec::new();
+                let mut aups = Vec::new();
+                for seed_i in 0..seeds {
+                    let seed = 42 + seed_i as u64;
+                    match sweep::eval_adaptive_row(ctx, m, task, n, seed) {
+                        Ok(p) => {
+                            let pt = Point { rho: p.rec.tpf,
+                                             acc: p.rec.acc };
+                            aups.push(aup_from_points(&[pt], DEFAULT_ALPHA,
+                                                      Some(y_max[seed_i])));
+                            tpfs.push(p.rec.tpf);
+                            accs.push(p.rec.acc);
+                        }
+                        Err(e) => {
+                            eprintln!("[bench] skip adaptive row for {}: \
+                                       {e:#}", m.label);
+                            break;
+                        }
+                    }
+                }
+                if tpfs.len() == seeds {
+                    let label = format!("{} (adaptive)", m.label);
+                    push_method_row(&mut table, &task_label, &label, &tpfs,
+                                    &accs, &aups);
+                }
+            }
+        }
     }
     table.print();
     table.write(stem)

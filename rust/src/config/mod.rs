@@ -7,7 +7,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::decode::{DecodeCfg, SelMetric, Strategy};
+use crate::decode::{AdaptiveCfg, AdaptiveMode, DecodeCfg, SelMetric,
+                    Strategy, DEFAULT_ENTROPY_THRESHOLD};
 use crate::util::json::{self, Json};
 
 /// Upper bound on the engine worker's interleaving width.
@@ -64,6 +65,10 @@ pub struct ServiceConfig {
     /// rounds releases its paged KV to the reclaimable set and re-prefills
     /// on resume (0 = disabled).
     pub spill_after_rounds: usize,
+    /// Adaptive parallelism controller (`decode::adaptive`): mode `off`
+    /// (default) preserves the static decode path; `load` couples
+    /// thresholds/widths to backlog, bounded by the hard accuracy floor.
+    pub adaptive: AdaptiveCfg,
     pub decode: DecodeCfg,
 }
 
@@ -80,9 +85,31 @@ impl Default for ServiceConfig {
             slo_round_width: 0,
             workers: 1,
             spill_after_rounds: 0,
+            adaptive: AdaptiveCfg::default(),
             decode: DecodeCfg::preset(Strategy::D3llm),
         }
     }
+}
+
+/// Bounds for the adaptive-controller knobs, shared by CLI flags and
+/// config files. The floor bounds match `validate_decode`'s threshold
+/// ranges — the controller interpolates between a valid static threshold
+/// and this bound, so a valid floor keeps every emitted threshold valid.
+pub fn validate_adaptive(cfg: &AdaptiveCfg) -> Result<()> {
+    if !(0.0..=2.0).contains(&cfg.conf_floor) {
+        bail!("adaptive conf_floor {} out of [0, 2]", cfg.conf_floor);
+    }
+    if !(0.0..=10.0).contains(&cfg.entropy_ceiling) {
+        bail!("adaptive entropy_ceiling {} out of [0, 10]",
+              cfg.entropy_ceiling);
+    }
+    if cfg.max_block_width == 0 || cfg.max_block_width > 16 {
+        bail!("adaptive max_block_width must be in 1..=16");
+    }
+    if !(cfg.alpha > 0.0 && cfg.alpha <= 1.0) {
+        bail!("adaptive alpha must be in (0, 1]");
+    }
+    Ok(())
 }
 
 fn get_str(j: &Json, key: &str, default: &str) -> String {
@@ -112,7 +139,11 @@ pub fn decode_from_json(j: &Json) -> Result<DecodeCfg> {
         let t = get_f64(j, "threshold", 0.0) as f32;
         cfg.metric = match m {
             "conf" => SelMetric::Conf(if t > 0.0 { t } else { 0.85 }),
-            "entropy" => SelMetric::Entropy(if t > 0.0 { t } else { 0.45 }),
+            "entropy" => SelMetric::Entropy(if t > 0.0 {
+                t
+            } else {
+                DEFAULT_ENTROPY_THRESHOLD
+            }),
             other => bail!("unknown metric `{other}`"),
         };
     } else if let Some(t) = j.get("threshold").and_then(|v| v.as_f64()) {
@@ -212,11 +243,32 @@ impl ServiceConfig {
             workers: get_usize(j, "workers", d.workers),
             spill_after_rounds: get_usize(j, "spill_after_rounds",
                                           d.spill_after_rounds),
+            adaptive: {
+                let mode_name =
+                    get_str(j, "adaptive", d.adaptive.mode.name());
+                let mode = AdaptiveMode::parse(&mode_name).ok_or_else(
+                    || anyhow!("unknown adaptive mode `{mode_name}`"))?;
+                AdaptiveCfg {
+                    mode,
+                    conf_floor: get_f64(j, "adaptive_conf_floor",
+                                        d.adaptive.conf_floor as f64)
+                        as f32,
+                    entropy_ceiling:
+                        get_f64(j, "adaptive_entropy_ceiling",
+                                d.adaptive.entropy_ceiling as f64)
+                            as f32,
+                    max_block_width:
+                        get_usize(j, "adaptive_max_block_width",
+                                  d.adaptive.max_block_width),
+                    ..d.adaptive.clone()
+                }
+            },
             decode,
         };
         validate_service_limits(cfg.max_queue,
                                 cfg.max_concurrent_sessions)?;
         validate_workers(cfg.workers)?;
+        validate_adaptive(&cfg.adaptive)?;
         Ok(cfg)
     }
 
@@ -243,6 +295,13 @@ impl ServiceConfig {
             ("workers", Json::num(self.workers as f64)),
             ("spill_after_rounds",
              Json::num(self.spill_after_rounds as f64)),
+            ("adaptive", Json::str(self.adaptive.mode.name())),
+            ("adaptive_conf_floor",
+             Json::num(self.adaptive.conf_floor as f64)),
+            ("adaptive_entropy_ceiling",
+             Json::num(self.adaptive.entropy_ceiling as f64)),
+            ("adaptive_max_block_width",
+             Json::num(self.adaptive.max_block_width as f64)),
             ("decode", decode_to_json(&self.decode)),
         ])
     }
@@ -340,6 +399,57 @@ mod tests {
             ServiceConfig::from_json(&j).unwrap().max_concurrent_sessions,
             8
         );
+    }
+
+    #[test]
+    fn adaptive_roundtrips_and_validates() {
+        // default: off, floors at the sweep-grid bounds
+        let c = ServiceConfig::default();
+        assert_eq!(c.adaptive.mode, AdaptiveMode::Off);
+        let c2 = ServiceConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.adaptive.mode, c.adaptive.mode);
+        assert_eq!(c2.adaptive.conf_floor, c.adaptive.conf_floor);
+        assert_eq!(c2.adaptive.entropy_ceiling, c.adaptive.entropy_ceiling);
+
+        // load mode with explicit floors round-trips
+        let j = json::parse(
+            r#"{"adaptive":"load","adaptive_conf_floor":0.6,
+                "adaptive_entropy_ceiling":1.1,
+                "adaptive_max_block_width":2}"#,
+        )
+        .unwrap();
+        let c = ServiceConfig::from_json(&j).unwrap();
+        assert_eq!(c.adaptive.mode, AdaptiveMode::Load);
+        assert!((c.adaptive.conf_floor - 0.6).abs() < 1e-6);
+        assert!((c.adaptive.entropy_ceiling - 1.1).abs() < 1e-6);
+        assert_eq!(c.adaptive.max_block_width, 2);
+        let c2 = ServiceConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.adaptive.mode, AdaptiveMode::Load);
+        assert_eq!(c2.adaptive.max_block_width, 2);
+
+        // bad mode / out-of-range floors rejected
+        for bad in [
+            r#"{"adaptive":"warp"}"#,
+            r#"{"adaptive":"load","adaptive_conf_floor":-0.1}"#,
+            r#"{"adaptive":"load","adaptive_entropy_ceiling":99.0}"#,
+            r#"{"adaptive":"load","adaptive_max_block_width":0}"#,
+        ] {
+            let j = json::parse(bad).unwrap();
+            assert!(ServiceConfig::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn entropy_metric_fallback_uses_the_shared_default() {
+        let j = json::parse(r#"{"strategy":"d3llm","metric":"entropy"}"#)
+            .unwrap();
+        let cfg = decode_from_json(&j).unwrap();
+        match cfg.metric {
+            SelMetric::Entropy(t) => {
+                assert_eq!(t, DEFAULT_ENTROPY_THRESHOLD)
+            }
+            _ => panic!("entropy metric requested"),
+        }
     }
 
     #[test]

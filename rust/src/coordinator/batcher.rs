@@ -35,6 +35,11 @@
 use std::cmp::Reverse;
 use std::time::Instant;
 
+/// Default smoothing factor for the observed round-time EWMA
+/// (`observe_round_ms`): each observation contributes a quarter of the
+/// new estimate. Overridable via [`Batcher::with_ewma_alpha`].
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.25;
+
 /// A queued unit of work.
 pub struct QueuedJob<T> {
     pub payload: T,
@@ -99,6 +104,8 @@ pub struct Batcher<T> {
     max_queue: usize,
     /// EWMA of the observed serving-round time (ms); 0 until observed.
     round_ms: f64,
+    /// Smoothing factor of the round-time EWMA, in (0, 1].
+    ewma_alpha: f64,
     /// Jobs that entered the queue.
     pub enqueued_total: u64,
     /// Jobs handed out by `pop` (admitted to serving).
@@ -113,11 +120,24 @@ pub struct Batcher<T> {
 
 impl<T> Batcher<T> {
     pub fn new(max_queue: usize) -> Self {
+        Batcher::with_ewma_alpha(max_queue, DEFAULT_EWMA_ALPHA)
+    }
+
+    /// `new` with an explicit round-time EWMA smoothing factor. Values
+    /// outside (0, 1] are clamped: alpha 1 tracks the last observation
+    /// exactly, small alphas smooth harder.
+    pub fn with_ewma_alpha(max_queue: usize, ewma_alpha: f64) -> Self {
+        let ewma_alpha = if ewma_alpha.is_finite() {
+            ewma_alpha.clamp(f64::EPSILON, 1.0)
+        } else {
+            DEFAULT_EWMA_ALPHA
+        };
         Batcher {
             heap: std::collections::BinaryHeap::new(),
             next_seq: 0,
             max_queue,
             round_ms: 0.0,
+            ewma_alpha,
             enqueued_total: 0,
             popped_total: 0,
             evicted_total: 0,
@@ -127,13 +147,16 @@ impl<T> Batcher<T> {
     }
 
     /// Feed one observed serving-round duration (ms) into the drain-time
-    /// estimate (EWMA, alpha 0.25).
+    /// estimate (EWMA, alpha `DEFAULT_EWMA_ALPHA` unless overridden).
     pub fn observe_round_ms(&mut self, ms: f64) {
         if !(ms.is_finite() && ms >= 0.0) {
             return;
         }
-        self.round_ms =
-            if self.round_ms == 0.0 { ms } else { 0.75 * self.round_ms + 0.25 * ms };
+        self.round_ms = if self.round_ms == 0.0 {
+            ms
+        } else {
+            (1.0 - self.ewma_alpha) * self.round_ms + self.ewma_alpha * ms
+        };
     }
 
     /// Estimated queue wait (ms): queue depth x observed round time.
@@ -491,6 +514,36 @@ mod tests {
         // 2 queued x ~4 ms rounds
         let est = b.estimated_wait_ms();
         assert!(est > 7.0 && est < 9.0, "est {est}");
+    }
+
+    #[test]
+    fn ewma_alpha_is_configurable() {
+        // alpha 1.0: the estimate tracks the last observation exactly
+        let mut fast: Batcher<()> = Batcher::with_ewma_alpha(4, 1.0);
+        fast.observe_round_ms(8.0);
+        fast.observe_round_ms(2.0);
+        fast.push((), 0);
+        assert_eq!(fast.estimated_wait_ms(), 2.0);
+
+        // the default constructor matches an explicit DEFAULT_EWMA_ALPHA
+        let mut a: Batcher<()> = Batcher::new(4);
+        let mut b: Batcher<()> =
+            Batcher::with_ewma_alpha(4, DEFAULT_EWMA_ALPHA);
+        for ms in [8.0, 4.0, 6.0, 2.0] {
+            a.observe_round_ms(ms);
+            b.observe_round_ms(ms);
+        }
+        a.push((), 0);
+        b.push((), 0);
+        assert_eq!(a.estimated_wait_ms(), b.estimated_wait_ms());
+
+        // out-of-range alphas are clamped into (0, 1] instead of
+        // producing a frozen or oscillating estimator
+        let mut c: Batcher<()> = Batcher::with_ewma_alpha(4, 7.5);
+        c.observe_round_ms(8.0);
+        c.observe_round_ms(2.0);
+        c.push((), 0);
+        assert_eq!(c.estimated_wait_ms(), 2.0);
     }
 
     #[test]

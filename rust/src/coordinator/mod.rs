@@ -76,8 +76,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::decode::{self, DecodeCfg, DecodeSession, SessionProgress,
-                    Strategy};
+use crate::decode::{self, AdaptiveCfg, AdaptiveController, DecodeCfg,
+                    DecodeSession, LoadSignal, SessionProgress, Strategy,
+                    WIDTH_HIST_BUCKETS};
 use crate::model::kv_pool::{is_pool_exhausted, KvPoolCfg, SharedKvPool};
 use crate::model::ParamStore;
 use crate::runtime::Engine;
@@ -116,6 +117,11 @@ pub struct ServerCfg {
     /// rounds releases its paged KV to the reclaimable set and re-prefills
     /// on resume (prefix adoption makes that cheap); 0 disables spilling.
     pub spill_after_rounds: usize,
+    /// Adaptive parallelism controller (`decode::adaptive`): mode `off`
+    /// preserves the static decode path bit-for-bit; `load` couples
+    /// thresholds and block widths to replica backlog, bounded by the
+    /// config's hard accuracy floor.
+    pub adaptive: AdaptiveCfg,
     /// full decode configuration; per-request `strategy` switches presets,
     /// otherwise this config is used verbatim
     pub decode: Option<crate::decode::DecodeCfg>,
@@ -189,6 +195,16 @@ pub struct ServerStats {
     /// Spilled pages rebuilt by re-prefill at resume, i.e. not re-adopted
     /// from the prefix index (counter).
     pub kv_pages_reprefilled: AtomicU64,
+    // ---- adaptive parallelism controller (all zero in `off` mode)
+    /// Last emitted selection threshold x1000 (gauge, on the emitting
+    /// session's metric scale).
+    pub adaptive_threshold_milli: AtomicU64,
+    /// Budget adjustments toward throughput — width widened (counter).
+    pub adaptive_up: AtomicU64,
+    /// Budget adjustments toward accuracy — width narrowed (counter).
+    pub adaptive_down: AtomicU64,
+    /// Histogram of emitted block widths (bucket = `min(width, 7)`).
+    pub adaptive_width_hist: [AtomicU64; WIDTH_HIST_BUCKETS],
     /// Per-session progress snapshots, refreshed every worker cycle.
     pub sessions: Mutex<Vec<(String, SessionProgress)>>,
 }
@@ -511,6 +527,25 @@ fn run_replica(replica: usize, cfg: &ServerCfg, jobs: &mpsc::Receiver<Job>,
     };
     pool.set_round_width(cfg.slo_round_width);
     pool.set_spill_after_rounds(cfg.spill_after_rounds);
+    // per-replica adaptive parallelism controller: in `load` mode it
+    // couples selection thresholds / block widths to this replica's
+    // backlog (hard accuracy floor enforced inside `budget_for`); in
+    // `off` mode it never emits a budget and decoding is bit-identical
+    // to the static configuration
+    let mut ctrl = AdaptiveController::new(cfg.adaptive.clone());
+    if ctrl.cfg.pool_full == 0 {
+        // a full session pool is load even when the queue has drained:
+        // default the occupancy term to this replica's pool capacity
+        ctrl.cfg.pool_full = cfg.max_concurrent_sessions;
+    }
+    if ctrl.enabled() {
+        eprintln!(
+            "[serve] replica {replica}: adaptive controller on \
+             (mode={}, conf_floor={}, entropy_ceiling={})",
+            ctrl.cfg.mode.name(), ctrl.cfg.conf_floor,
+            ctrl.cfg.entropy_ceiling
+        );
+    }
     let mut disconnected = false;
     // serving clock: wall milliseconds on the fleet-shared service epoch
     // (every replica reads the same `epoch`, so absolute deadlines and
@@ -753,6 +788,20 @@ fn run_replica(replica: usize, cfg: &ServerCfg, jobs: &mpsc::Receiver<Job>,
             continue;
         }
 
+        // ---- adaptive budgets: observe this round's load, hand each
+        //      live session its budget, and export the controller gauges
+        if ctrl.enabled() {
+            ctrl.observe(&LoadSignal {
+                queue_depth: batcher.len(),
+                active_sessions: pool.len(),
+                est_wait_ms: batcher.estimated_wait_ms(),
+            });
+            pool.set_budgets(|dcfg, res| {
+                ctrl.budget_for(dcfg.metric, res.mean_commit_entropy())
+            });
+            publish_adaptive(stats, &ctrl);
+        }
+
         // ---- one interleaved round: each live session advances one step
         //      (its duration feeds the batcher's shed/retry estimate)
         let t_round = Instant::now();
@@ -825,6 +874,20 @@ fn admit_to_queue(batcher: &mut Batcher<Job>, stats: &ServerStats, job: Job,
                 retry_after_ms,
             ));
         }
+    }
+}
+
+/// Export the adaptive controller's gauges into the replica stats (read
+/// by the `{"cmd":"stats"}` protocol).
+fn publish_adaptive(stats: &ServerStats, ctrl: &AdaptiveController) {
+    let g = &ctrl.gauges;
+    stats
+        .adaptive_threshold_milli
+        .store(g.threshold_milli, Ordering::Relaxed);
+    stats.adaptive_up.store(g.adjust_up, Ordering::Relaxed);
+    stats.adaptive_down.store(g.adjust_down, Ordering::Relaxed);
+    for (slot, v) in stats.adaptive_width_hist.iter().zip(g.width_hist) {
+        slot.store(v, Ordering::Relaxed);
     }
 }
 

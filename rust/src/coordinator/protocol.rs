@@ -302,6 +302,15 @@ fn stats_fields(s: &super::ServerStats, replica: Option<usize>)
          Json::num(s.kv_pages_spilled.load(Relaxed) as f64)),
         ("kv_pages_reprefilled",
          Json::num(s.kv_pages_reprefilled.load(Relaxed) as f64)),
+        // adaptive parallelism controller (all zero in `off` mode)
+        ("adaptive_threshold_milli",
+         Json::num(s.adaptive_threshold_milli.load(Relaxed) as f64)),
+        ("adaptive_up", Json::num(s.adaptive_up.load(Relaxed) as f64)),
+        ("adaptive_down", Json::num(s.adaptive_down.load(Relaxed) as f64)),
+        ("adaptive_width_hist",
+         Json::arr(s.adaptive_width_hist
+             .iter()
+             .map(|v| Json::num(v.load(Relaxed) as f64)))),
         ("sessions", Json::Arr(sessions)),
     ]
 }
@@ -424,6 +433,24 @@ pub fn fleet_stats_response(replicas: &[std::sync::Arc<super::ServerStats>],
          Json::num(sum(&|s| s.kv_pages_spilled.load(Relaxed)))),
         ("kv_pages_reprefilled",
          Json::num(sum(&|s| s.kv_pages_reprefilled.load(Relaxed)))),
+        // adaptive controller: counters/histogram sum fleet-wide; the
+        // threshold gauge reports the fleet max (the most aggressive
+        // replica) — per-replica values live in `replicas`
+        ("adaptive_threshold_milli",
+         Json::num(replicas
+             .iter()
+             .map(|s| s.adaptive_threshold_milli.load(Relaxed))
+             .max()
+             .unwrap_or(0) as f64)),
+        ("adaptive_up", Json::num(sum(&|s| s.adaptive_up.load(Relaxed)))),
+        ("adaptive_down",
+         Json::num(sum(&|s| s.adaptive_down.load(Relaxed)))),
+        ("adaptive_width_hist",
+         Json::arr((0..crate::decode::WIDTH_HIST_BUCKETS).map(|i| {
+             Json::num(sum(&|s: &super::ServerStats| {
+                 s.adaptive_width_hist[i].load(Relaxed)
+             }))
+         }))),
         ("sessions", Json::Arr(sessions)),
         // ---- fleet topology + routing
         ("workers", Json::num(replicas.len() as f64)),
@@ -652,6 +679,48 @@ mod tests {
         assert_eq!(sess[0].get("replica").unwrap().as_usize(), Some(1));
         // the slo array stays a 3-class summary
         assert_eq!(j.get("slo").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn stats_response_exposes_adaptive_gauges() {
+        use std::sync::atomic::Ordering;
+        let s = crate::coordinator::ServerStats::default();
+        s.adaptive_threshold_milli.store(980, Ordering::Relaxed);
+        s.adaptive_up.store(4, Ordering::Relaxed);
+        s.adaptive_down.store(2, Ordering::Relaxed);
+        s.adaptive_width_hist[3].store(7, Ordering::Relaxed);
+        let j = json::parse(&stats_response(&s)).unwrap();
+        assert_eq!(j.get("adaptive_threshold_milli").unwrap().as_usize(),
+                   Some(980));
+        assert_eq!(j.get("adaptive_up").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("adaptive_down").unwrap().as_usize(), Some(2));
+        let hist = j.get("adaptive_width_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), crate::decode::WIDTH_HIST_BUCKETS);
+        assert_eq!(hist[3].as_usize(), Some(7));
+        assert_eq!(hist[0].as_usize(), Some(0));
+    }
+
+    #[test]
+    fn fleet_stats_aggregate_adaptive_gauges() {
+        use std::sync::atomic::Ordering;
+        use std::sync::Arc;
+        let a = Arc::new(crate::coordinator::ServerStats::default());
+        let b = Arc::new(crate::coordinator::ServerStats::default());
+        a.adaptive_threshold_milli.store(450, Ordering::Relaxed);
+        b.adaptive_threshold_milli.store(1_300, Ordering::Relaxed);
+        a.adaptive_up.store(2, Ordering::Relaxed);
+        b.adaptive_up.store(3, Ordering::Relaxed);
+        a.adaptive_width_hist[1].store(4, Ordering::Relaxed);
+        b.adaptive_width_hist[1].store(6, Ordering::Relaxed);
+        let core = crate::coordinator::router::RouterCore::new(2, 8);
+        let j = json::parse(&fleet_stats_response(&[a, b], &core)).unwrap();
+        // counters/histogram sum, the threshold gauge is the fleet max
+        assert_eq!(j.get("adaptive_threshold_milli").unwrap().as_usize(),
+                   Some(1_300));
+        assert_eq!(j.get("adaptive_up").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("adaptive_down").unwrap().as_usize(), Some(0));
+        let hist = j.get("adaptive_width_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist[1].as_usize(), Some(10));
     }
 
     #[test]

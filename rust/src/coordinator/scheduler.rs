@@ -55,8 +55,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::decode::{Backend, DecodeCfg, DecodeSession, GenResult,
-                    PrefillItem, RoundOut, RoundPlan, SessionProgress,
-                    WindowItem};
+                    PrefillItem, RoundBudget, RoundOut, RoundPlan,
+                    SessionProgress, WindowItem};
 use crate::model::kv_pool::{is_pool_exhausted, SharedKvPool};
 
 /// One admitted request.
@@ -215,6 +215,23 @@ impl<T> SessionPool<T> {
     /// The attached paged KV pool, if paged serving is enabled.
     pub fn kv_pool(&self) -> Option<&SharedKvPool> {
         self.kv.as_ref()
+    }
+
+    /// Install per-session adaptive round budgets: `f` sees each live
+    /// session's config and running result (for the commit-quality
+    /// feedback signal) and returns the budget to apply — `None` keeps
+    /// that session on the static path. The serving coordinator calls
+    /// this with `AdaptiveController::budget_for` before every
+    /// `step_round`; sessions admitted later default to no budget until
+    /// the next call.
+    pub fn set_budgets<F>(&mut self, mut f: F)
+    where
+        F: FnMut(&DecodeCfg, &GenResult) -> Option<RoundBudget>,
+    {
+        for e in self.entries.iter_mut() {
+            let b = f(&e.session.cfg, &e.session.res);
+            e.session.set_round_budget(b);
+        }
     }
 
     pub fn len(&self) -> usize {

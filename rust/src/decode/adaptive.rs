@@ -1,0 +1,430 @@
+//! Adaptive parallelism controller: the runtime closed loop that turns
+//! the static threshold/width knobs into load-coupled per-round budgets.
+//!
+//! The accuracy–parallelism dial the paper exposes per *request* (a fixed
+//! `SelMetric` threshold and block schedule) becomes a per-*round* control
+//! loop spanning the decode and coordinator layers:
+//!
+//! ```text
+//!   Batcher backlog / EWMA wait ──┐
+//!   SessionPool runnable width ───┼──> pressure (EWMA, [0,1])
+//!                                 │         │
+//!   per-session commit entropy ───┘         v
+//!   (GenResult.entropy_sum)        RoundBudget { threshold,
+//!                                               max_unmask,
+//!                                               block_width }
+//!                                            │
+//!                    DecodePolicy::plan/apply (multi/single block)
+//! ```
+//!
+//! Two modes:
+//!
+//!   * `off`  — the controller emits no budgets; every decode path is
+//!              bit-identical to the static configuration (the serving
+//!              determinism pins stay green by construction).
+//!   * `load` — thresholds and block widths interpolate between the
+//!              session's static operating point (idle) and a calibrated
+//!              aggressive bound (saturated), so a backlogged fleet buys
+//!              throughput and an idle one buys accuracy.
+//!
+//! The **accuracy floor is hard**: whatever the load signal does, the
+//! emitted threshold never crosses the calibrated per-metric bound
+//! (`conf_floor` for confidence metrics, `entropy_ceiling` for entropy
+//! metrics — entropy is aggressive-high, so its floor is a ceiling). The
+//! floor is enforced by construction in [`AdaptiveController::budget_for`]
+//! and validated by a property test plus the AUP regression gate in
+//! `benches/adaptive.rs`.
+//!
+//! The controller is deterministic and threadless — a pure function of the
+//! observed load trace — so budget sequences are reproducible run-to-run
+//! and pinned in `tests/adaptive.rs`.
+
+use super::{SelMetric, DEFAULT_ENTROPY_THRESHOLD};
+
+/// Width-histogram buckets exported through the stats protocol: emitted
+/// block widths land in bucket `min(width, N-1)`.
+pub const WIDTH_HIST_BUCKETS: usize = 8;
+
+/// Per-session, per-round decode budget. Policies treat an absent budget
+/// as the static path (bit-identical); a present budget substitutes the
+/// effective threshold, caps tokens committed per round, and clamps the
+/// windowed block span.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundBudget {
+    /// Effective selection threshold, on the session metric's own scale
+    /// (confidence or entropy).
+    pub entropy_threshold: f32,
+    /// Cap on tokens committed in one round (`usize::MAX` = uncapped; the
+    /// per-block progress guarantees still commit at least one token).
+    pub max_unmask: usize,
+    /// Cap on active blocks in a windowed multi-block round
+    /// (`usize::MAX` = the static geometry cap).
+    pub block_width: usize,
+}
+
+/// Controller mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdaptiveMode {
+    /// No budgets: preserve every static pin (default).
+    Off,
+    /// Load-coupled budgets: aggressive under backlog, conservative idle.
+    Load,
+}
+
+impl AdaptiveMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdaptiveMode::Off => "off",
+            AdaptiveMode::Load => "load",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AdaptiveMode> {
+        Some(match s {
+            "off" => AdaptiveMode::Off,
+            "load" => AdaptiveMode::Load,
+            _ => return None,
+        })
+    }
+}
+
+/// Controller configuration: mode, the hard accuracy floor, and the load
+/// signal's normalization knobs.
+#[derive(Debug, Clone)]
+pub struct AdaptiveCfg {
+    pub mode: AdaptiveMode,
+    /// Accuracy floor for confidence metrics: the emitted confidence
+    /// threshold never drops below this (lower confidence threshold =
+    /// more aggressive).
+    pub conf_floor: f32,
+    /// Accuracy floor for entropy metrics: the emitted entropy threshold
+    /// never rises above this (higher entropy threshold = more
+    /// aggressive). Calibrated to the top of the sweep grid, where the
+    /// AUP cost is measured and bounded.
+    pub entropy_ceiling: f32,
+    /// Widest windowed span (blocks) granted under full pressure; the
+    /// geometry cap (`window / block`) still applies downstream.
+    pub max_block_width: usize,
+    /// Per-round commit cap at full pressure (0 = uncapped).
+    pub max_unmask_cap: usize,
+    /// Queue depth treated as full pressure.
+    pub backlog_full: usize,
+    /// Live-session count treated as full pressure (0 disables the
+    /// occupancy term). A full pool is load even once the queue has
+    /// drained — without this term the controller relaxes mid-drain
+    /// while every round is still contended. The serving replica loop
+    /// fills in its `max_concurrent_sessions` when left at 0.
+    pub pool_full: usize,
+    /// Estimated queue wait (ms) treated as full pressure (0 disables the
+    /// wait term; pressure then follows queue depth alone).
+    pub wait_full_ms: f64,
+    /// EWMA smoothing factor for the pressure signal, in (0, 1].
+    pub alpha: f64,
+}
+
+impl Default for AdaptiveCfg {
+    fn default() -> AdaptiveCfg {
+        AdaptiveCfg {
+            mode: AdaptiveMode::Off,
+            // bottom of the confidence sweep grid in bench/sweep.rs
+            conf_floor: 0.55,
+            // top of the entropy sweep grid in bench/sweep.rs
+            entropy_ceiling: 1.3,
+            max_block_width: 3,
+            max_unmask_cap: 0,
+            backlog_full: 4,
+            pool_full: 0,
+            wait_full_ms: 0.0,
+            alpha: 0.5,
+        }
+    }
+}
+
+/// One observation of coordinator load, taken just before a scheduling
+/// round: queue state from `Batcher`, width from `SessionPool`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadSignal {
+    /// Jobs waiting in the batcher queue.
+    pub queue_depth: usize,
+    /// Sessions currently live in the pool.
+    pub active_sessions: usize,
+    /// Batcher drain estimate (queue depth x EWMA round time, ms).
+    pub est_wait_ms: f64,
+}
+
+/// Counters and gauges the controller exports through `{"cmd":"stats"}`.
+#[derive(Debug, Clone, Default)]
+pub struct AdaptiveGauges {
+    /// Last emitted threshold x1000 (on the emitting session's metric
+    /// scale; 0 until the first budget).
+    pub threshold_milli: u64,
+    /// Histogram of emitted block widths (bucket = `min(width, 7)`).
+    pub width_hist: [u64; WIDTH_HIST_BUCKETS],
+    /// Rounds where the pressure-mapped width widened vs. the previous
+    /// observation (budget adjusted toward throughput).
+    pub adjust_up: u64,
+    /// Rounds where it narrowed (budget adjusted toward accuracy).
+    pub adjust_down: u64,
+}
+
+/// The controller proper: deterministic, threadless, owned by whoever
+/// owns the scheduling loop (one per replica in serving; benches and
+/// tests drive it directly on a virtual clock).
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    pub cfg: AdaptiveCfg,
+    /// Smoothed load pressure in [0, 1].
+    pressure: f64,
+    /// Width implied by the previous observation (adjust up/down gauges).
+    last_width: usize,
+    pub gauges: AdaptiveGauges,
+}
+
+impl AdaptiveController {
+    pub fn new(cfg: AdaptiveCfg) -> AdaptiveController {
+        AdaptiveController {
+            cfg,
+            pressure: 0.0,
+            last_width: 0,
+            gauges: AdaptiveGauges::default(),
+        }
+    }
+
+    /// Whether the controller emits budgets at all.
+    pub fn enabled(&self) -> bool {
+        self.cfg.mode != AdaptiveMode::Off
+    }
+
+    /// Current smoothed pressure in [0, 1].
+    pub fn pressure(&self) -> f64 {
+        self.pressure
+    }
+
+    /// Feed one load observation (call once per scheduling round, before
+    /// handing budgets to the pool).
+    pub fn observe(&mut self, load: &LoadSignal) {
+        if !self.enabled() {
+            return;
+        }
+        let backlog_frac = if self.cfg.backlog_full == 0 {
+            0.0
+        } else {
+            (load.queue_depth as f64 / self.cfg.backlog_full as f64).min(1.0)
+        };
+        let wait_frac = if self.cfg.wait_full_ms > 0.0 {
+            (load.est_wait_ms / self.cfg.wait_full_ms).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        let occupancy_frac = if self.cfg.pool_full == 0 {
+            0.0
+        } else {
+            (load.active_sessions as f64 / self.cfg.pool_full as f64)
+                .min(1.0)
+        };
+        let raw = backlog_frac.max(wait_frac).max(occupancy_frac);
+        let alpha = self.cfg.alpha.clamp(f64::MIN_POSITIVE, 1.0);
+        self.pressure = (self.pressure + alpha * (raw - self.pressure))
+            .clamp(0.0, 1.0);
+        let width = self.width_at_pressure();
+        if self.last_width != 0 {
+            if width > self.last_width {
+                self.gauges.adjust_up += 1;
+            } else if width < self.last_width {
+                self.gauges.adjust_down += 1;
+            }
+        }
+        self.last_width = width;
+    }
+
+    /// Block width the current pressure maps to (>= 1).
+    fn width_at_pressure(&self) -> usize {
+        let top = self.cfg.max_block_width.max(1);
+        1 + (self.pressure * (top - 1) as f64).round() as usize
+    }
+
+    /// Effective threshold for a session's metric at the current
+    /// pressure. Interpolates from the static base (idle) toward the
+    /// calibrated bound (saturated); the bound is a **hard clamp** — a
+    /// misconfigured floor tighter than the base pins the output at the
+    /// floor rather than ever crossing it.
+    fn threshold_for(&self, metric: SelMetric) -> f32 {
+        let p = self.pressure as f32;
+        match metric {
+            SelMetric::Entropy(base) => {
+                // aggressive-high: floor is a ceiling
+                let hi = self.cfg.entropy_ceiling;
+                let lo = base.min(hi);
+                lo + p * (hi - lo)
+            }
+            SelMetric::Conf(base) => {
+                // aggressive-low: floor is a floor
+                let lo = self.cfg.conf_floor;
+                let hi = base.max(lo);
+                hi - p * (hi - lo)
+            }
+        }
+    }
+
+    /// Emit the budget for one session this round. `mean_commit_entropy`
+    /// is the session's running commit-quality signal
+    /// (`GenResult::mean_commit_entropy`): when a session's committed
+    /// entropy already runs past the midpoint of its allowed band —
+    /// fallback commits dominating selection — the controller halves its
+    /// aggressiveness for that session (never the other way, so the floor
+    /// clamp is unaffected). Returns `None` in `off` mode.
+    pub fn budget_for(&mut self, metric: SelMetric,
+                      mean_commit_entropy: f64) -> Option<RoundBudget> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut threshold = self.threshold_for(metric);
+        if let SelMetric::Entropy(base) = metric {
+            let lo = base.min(self.cfg.entropy_ceiling);
+            let mid = (lo + self.cfg.entropy_ceiling) * 0.5;
+            if mean_commit_entropy > mid as f64 {
+                // back off halfway toward the static base
+                threshold = lo + (threshold - lo) * 0.5;
+            }
+        }
+        let width = self.width_at_pressure();
+        let max_unmask = if self.cfg.max_unmask_cap == 0 {
+            usize::MAX
+        } else {
+            self.cfg.max_unmask_cap.max(1)
+        };
+        self.gauges.threshold_milli =
+            (threshold.max(0.0) * 1000.0).round() as u64;
+        self.gauges.width_hist[width.min(WIDTH_HIST_BUCKETS - 1)] += 1;
+        Some(RoundBudget {
+            entropy_threshold: threshold,
+            max_unmask,
+            block_width: width,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load_cfg() -> AdaptiveCfg {
+        AdaptiveCfg { mode: AdaptiveMode::Load, ..AdaptiveCfg::default() }
+    }
+
+    #[test]
+    fn off_mode_emits_nothing() {
+        let mut c = AdaptiveController::new(AdaptiveCfg::default());
+        c.observe(&LoadSignal { queue_depth: 99, active_sessions: 9,
+                                est_wait_ms: 1e6 });
+        assert!(!c.enabled());
+        assert_eq!(c.budget_for(SelMetric::Entropy(0.45), 0.0), None);
+        assert_eq!(c.pressure(), 0.0);
+        assert_eq!(c.gauges.adjust_up + c.gauges.adjust_down, 0);
+    }
+
+    #[test]
+    fn idle_load_mode_sits_at_the_static_base() {
+        let mut c = AdaptiveController::new(load_cfg());
+        c.observe(&LoadSignal::default());
+        let b = c
+            .budget_for(SelMetric::Entropy(DEFAULT_ENTROPY_THRESHOLD), 0.0)
+            .unwrap();
+        assert!((b.entropy_threshold - DEFAULT_ENTROPY_THRESHOLD).abs()
+                    < 1e-6);
+        assert_eq!(b.block_width, 1);
+        assert_eq!(b.max_unmask, usize::MAX);
+    }
+
+    #[test]
+    fn pressure_moves_threshold_toward_the_bound() {
+        let mut c = AdaptiveController::new(load_cfg());
+        let mut last = 0.0f32;
+        for _ in 0..12 {
+            c.observe(&LoadSignal { queue_depth: 16, active_sessions: 4,
+                                    est_wait_ms: 0.0 });
+            let b = c.budget_for(SelMetric::Entropy(0.45), 0.0).unwrap();
+            assert!(b.entropy_threshold >= last);
+            last = b.entropy_threshold;
+        }
+        // saturated: at the ceiling, widest width, and never past it
+        assert!((last - 1.3).abs() < 1e-3, "got {last}");
+        let b = c.budget_for(SelMetric::Entropy(0.45), 0.0).unwrap();
+        assert_eq!(b.block_width, 3);
+        assert!(b.entropy_threshold <= 1.3 + 1e-6);
+        // confidence metric moves down toward its floor, never below
+        let b = c.budget_for(SelMetric::Conf(0.85), 0.0).unwrap();
+        assert!(b.entropy_threshold >= 0.55 - 1e-6);
+        assert!(b.entropy_threshold < 0.85);
+    }
+
+    #[test]
+    fn commit_entropy_feedback_only_backs_off() {
+        let mut c = AdaptiveController::new(load_cfg());
+        for _ in 0..12 {
+            c.observe(&LoadSignal { queue_depth: 16, ..Default::default() });
+        }
+        let hot = c.budget_for(SelMetric::Entropy(0.45), 0.0).unwrap();
+        let cooled = c.budget_for(SelMetric::Entropy(0.45), 1.2).unwrap();
+        assert!(cooled.entropy_threshold < hot.entropy_threshold);
+        assert!(cooled.entropy_threshold >= 0.45 - 1e-6);
+    }
+
+    #[test]
+    fn misconfigured_floor_pins_at_the_floor() {
+        let mut cfg = load_cfg();
+        cfg.entropy_ceiling = 0.2; // tighter than the 0.45 base
+        cfg.conf_floor = 0.95; // tighter than the 0.85 base
+        let mut c = AdaptiveController::new(cfg);
+        for q in [0usize, 16, 0, 16] {
+            c.observe(&LoadSignal { queue_depth: q, ..Default::default() });
+            let e = c.budget_for(SelMetric::Entropy(0.45), 0.0).unwrap();
+            assert!(e.entropy_threshold <= 0.2 + 1e-6);
+            let f = c.budget_for(SelMetric::Conf(0.85), 0.0).unwrap();
+            assert!(f.entropy_threshold >= 0.95 - 1e-6);
+        }
+    }
+
+    #[test]
+    fn gauges_track_adjustments_and_widths() {
+        let mut c = AdaptiveController::new(load_cfg());
+        for q in [0usize, 16, 16, 16, 0, 0, 0, 16] {
+            c.observe(&LoadSignal { queue_depth: q, ..Default::default() });
+            c.budget_for(SelMetric::Entropy(0.45), 0.0);
+        }
+        assert!(c.gauges.adjust_up > 0);
+        assert!(c.gauges.adjust_down > 0);
+        assert_eq!(c.gauges.width_hist.iter().sum::<u64>(), 8);
+        assert!(c.gauges.threshold_milli > 0);
+    }
+
+    #[test]
+    fn pool_occupancy_holds_pressure_through_a_drain() {
+        // queue empty, pool full: the occupancy term keeps pressure up
+        let mut cfg = load_cfg();
+        cfg.pool_full = 4;
+        let mut c = AdaptiveController::new(cfg);
+        for _ in 0..12 {
+            c.observe(&LoadSignal { queue_depth: 0, active_sessions: 4,
+                                    est_wait_ms: 0.0 });
+        }
+        assert!(c.pressure() > 0.99, "got {}", c.pressure());
+        // with the term disabled (default), the same trace stays idle
+        let mut c = AdaptiveController::new(load_cfg());
+        for _ in 0..12 {
+            c.observe(&LoadSignal { queue_depth: 0, active_sessions: 4,
+                                    est_wait_ms: 0.0 });
+        }
+        assert_eq!(c.pressure(), 0.0);
+    }
+
+    #[test]
+    fn unmask_cap_is_forwarded() {
+        let mut cfg = load_cfg();
+        cfg.max_unmask_cap = 5;
+        let mut c = AdaptiveController::new(cfg);
+        c.observe(&LoadSignal::default());
+        let b = c.budget_for(SelMetric::Entropy(0.45), 0.0).unwrap();
+        assert_eq!(b.max_unmask, 5);
+    }
+}

@@ -20,6 +20,7 @@
 //! deterministic `SimBackend`; `generate` is the one-shot run-to-
 //! completion wrapper kept for the CLI / eval / bench paths.
 
+pub mod adaptive;
 pub mod ar;
 pub mod backend;
 pub mod multi_block;
@@ -32,6 +33,8 @@ pub mod spec;
 
 use anyhow::Result;
 
+pub use adaptive::{AdaptiveCfg, AdaptiveController, AdaptiveMode,
+                   LoadSignal, RoundBudget, WIDTH_HIST_BUCKETS};
 pub use backend::{Backend, PrefillItem, WindowItem};
 pub use policy::{DecodePolicy, PolicyCtx, RoundOut, RoundPlan};
 pub use seq_state::SeqState;
@@ -112,6 +115,11 @@ impl Strategy {
     }
 }
 
+/// Paper-default d3LLM entropy threshold (paper: 0.4–0.5). The single
+/// source of truth shared by the `Strategy::D3llm` preset, the CLI parse
+/// fallback in `config`, and the sweep grid in `bench/sweep.rs`.
+pub const DEFAULT_ENTROPY_THRESHOLD: f32 = 0.45;
+
 /// Token-selection rule applied to head statistics.
 #[derive(Debug, Clone, Copy)]
 pub enum SelMetric {
@@ -136,6 +144,23 @@ impl SelMetric {
         match self {
             SelMetric::Conf(_) => conf,
             SelMetric::Entropy(_) => -entropy,
+        }
+    }
+
+    /// The raw threshold value, on this metric's own scale.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        match self {
+            SelMetric::Conf(t) | SelMetric::Entropy(t) => *t,
+        }
+    }
+
+    /// Same metric kind with a different threshold.
+    #[inline]
+    pub fn with_threshold(&self, t: f32) -> SelMetric {
+        match self {
+            SelMetric::Conf(_) => SelMetric::Conf(t),
+            SelMetric::Entropy(_) => SelMetric::Entropy(t),
         }
     }
 }
@@ -191,7 +216,7 @@ impl DecodeCfg {
                 ..base
             },
             Strategy::D3llm => DecodeCfg {
-                metric: SelMetric::Entropy(0.45), // paper: 0.4-0.5
+                metric: SelMetric::Entropy(DEFAULT_ENTROPY_THRESHOLD),
                 stabilize_rounds: 1,
                 refresh_every: 8,
                 ..base
@@ -201,10 +226,7 @@ impl DecodeCfg {
 
     /// Set the sweep knob (confidence or entropy threshold, per metric).
     pub fn with_threshold(mut self, t: f32) -> DecodeCfg {
-        self.metric = match self.metric {
-            SelMetric::Conf(_) => SelMetric::Conf(t),
-            SelMetric::Entropy(_) => SelMetric::Entropy(t),
-        };
+        self.metric = self.metric.with_threshold(t);
         self
     }
 }
@@ -232,6 +254,16 @@ pub struct GenResult {
     /// Rounds a width-pressured scheduler paused this session (EDF
     /// preemption-by-pausing; zero outside SLO serving).
     pub paused_rounds: usize,
+    /// Sum of selection-time entropies over committed tokens (windowed
+    /// selection paths; the adaptive controller's per-session quality
+    /// signal — see `decode::adaptive`).
+    pub entropy_sum: f64,
+    /// Sum of selection-time confidences over committed tokens (windowed
+    /// selection paths; commit-quality proxy for AUP-under-load benches).
+    pub conf_sum: f64,
+    /// Commits covered by `entropy_sum`/`conf_sum` (updated live, unlike
+    /// `unmasked` which is finalized at `finish`).
+    pub quality_commits: usize,
     /// Teacher-extraction sessions: the scan step at which each
     /// generation offset was unmasked (`None` for decode strategies).
     pub unmask_ranks: Option<Vec<i32>>,
@@ -243,6 +275,26 @@ impl GenResult {
             0.0
         } else {
             self.unmasked as f64 / self.forwards as f64
+        }
+    }
+
+    /// Mean selection-time entropy over committed tokens; 0.0 until the
+    /// session commits (or for strategies that don't record it).
+    pub fn mean_commit_entropy(&self) -> f64 {
+        if self.quality_commits == 0 {
+            0.0
+        } else {
+            self.entropy_sum / self.quality_commits as f64
+        }
+    }
+
+    /// Mean selection-time confidence over committed tokens (see
+    /// `mean_commit_entropy`).
+    pub fn mean_commit_conf(&self) -> f64 {
+        if self.quality_commits == 0 {
+            0.0
+        } else {
+            self.conf_sum / self.quality_commits as f64
         }
     }
 }

@@ -24,10 +24,11 @@ use anyhow::Result;
 
 use crate::tokenizer::MASK;
 
+use super::adaptive::RoundBudget;
 use super::backend::Backend;
 use super::policy::{mismatch, DecodePolicy, PolicyCtx, RoundOut, RoundPlan};
 use super::session::DecodeSession;
-use super::{exec_names, DecodeCfg, GenResult, SeqState};
+use super::{exec_names, DecodeCfg, GenResult, SelMetric, SeqState};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum BlockState {
@@ -90,13 +91,35 @@ pub fn decode_multi_block(backend: &dyn Backend, cfg: &DecodeCfg,
 pub fn unmask_round(cfg: &DecodeCfg, st: &mut SeqState,
                     states: &mut [BlockState], stats: &RoundStatsOwned,
                     restrict: Option<(usize, usize)>) -> Vec<usize> {
+    unmask_round_budgeted(cfg, None, st, states, stats, restrict, None)
+}
+
+/// Budget-aware [`unmask_round`]: an adaptive [`RoundBudget`] substitutes
+/// its threshold into the selection metric and caps the round's commits
+/// at `max_unmask` (highest-score commits win; the progress guarantees
+/// still land at least one token). `res`, when provided, accumulates the
+/// selection-time entropy/confidence of every commit — the controller's
+/// quality signal. With `budget == None` the selection is bit-identical
+/// to the static path.
+pub fn unmask_round_budgeted(cfg: &DecodeCfg, budget: Option<RoundBudget>,
+                             st: &mut SeqState, states: &mut [BlockState],
+                             stats: &RoundStatsOwned,
+                             restrict: Option<(usize, usize)>,
+                             mut res: Option<&mut GenResult>)
+                             -> Vec<usize> {
+    let metric: SelMetric = match budget {
+        Some(b) => cfg.metric.with_threshold(b.entropy_threshold),
+        None => cfg.metric,
+    };
+    let cap = budget.map_or(usize::MAX, |b| b.max_unmask.max(1));
     let nb = st.n_blocks();
     let (b_lo, b_hi) = restrict.unwrap_or((0, nb));
     let mut newly_complete = Vec::new();
     let mut any_selected = false;
     let mut global_best: Option<(usize, f32)> = None;
 
-    let mut to_unmask: Vec<(usize, i32)> = Vec::new();
+    // (position, token, score) — the score orders the cap truncation
+    let mut to_unmask: Vec<(usize, i32, f32)> = Vec::new();
     for b in b_lo..b_hi.min(nb) {
         if !states[b].is_active() {
             continue;
@@ -110,36 +133,49 @@ pub fn unmask_round(cfg: &DecodeCfg, st: &mut SeqState,
             }
             let Some(i) = stats.index(p) else { continue };
             let (cf, en) = (stats.conf[i], stats.entropy[i]);
-            let sc = cfg.metric.score(cf, en);
+            let sc = metric.score(cf, en);
             if block_best.map(|(_, s)| sc > s).unwrap_or(true) {
                 block_best = Some((p, sc));
             }
             if global_best.map(|(_, s)| sc > s).unwrap_or(true) {
                 global_best = Some((p, sc));
             }
-            if cfg.metric.selects(cf, en) {
-                to_unmask.push((p, stats.argmax[i]));
+            if metric.selects(cf, en) {
+                to_unmask.push((p, stats.argmax[i], sc));
                 block_selected = true;
                 any_selected = true;
             }
         }
         // aggressive mode: FullyActivated decodes >=1 token per forward
         if !block_selected && states[b] == BlockState::FullyActivated {
-            if let Some((p, _)) = block_best {
+            if let Some((p, sc)) = block_best {
                 let i = stats.index(p).unwrap();
-                to_unmask.push((p, stats.argmax[i]));
+                to_unmask.push((p, stats.argmax[i], sc));
                 any_selected = true;
             }
         }
     }
     // global progress guarantee: never waste a forward entirely
     if !any_selected {
-        if let Some((p, _)) = global_best {
+        if let Some((p, sc)) = global_best {
             let i = stats.index(p).unwrap();
-            to_unmask.push((p, stats.argmax[i]));
+            to_unmask.push((p, stats.argmax[i], sc));
         }
     }
-    for (p, t) in to_unmask {
+    if to_unmask.len() > cap {
+        // keep the best-scoring commits, deterministically (ties by
+        // position), then restore positional order
+        to_unmask.sort_by(|a, b| b.2.total_cmp(&a.2).then(a.0.cmp(&b.0)));
+        to_unmask.truncate(cap);
+        to_unmask.sort_by_key(|e| e.0);
+    }
+    for (p, t, _) in to_unmask {
+        if let Some(r) = res.as_deref_mut() {
+            let i = stats.index(p).unwrap();
+            r.entropy_sum += stats.entropy[i] as f64;
+            r.conf_sum += stats.conf[i] as f64;
+            r.quality_commits += 1;
+        }
         st.tokens[p] = t;
     }
     for b in 0..nb {
@@ -286,7 +322,9 @@ impl DecodePolicy for MultiBlockPolicy {
         };
         let last =
             (0..nb).rev().find(|&b| self.states[b].is_active()).unwrap();
-        let span = (last - first + 1).min(self.max_active_blocks);
+        let span = (last - first + 1)
+            .min(self.max_active_blocks)
+            .min(ctx.block_width());
         let (w_lo, _) = ctx.st.block_range(first);
         let w_hi = ctx.st.block_range(first + span - 1).1;
 
@@ -355,8 +393,9 @@ impl DecodePolicy for MultiBlockPolicy {
                     w_hi: ctx.st.s_max,
                     absolute: true,
                 };
-                unmask_round(ctx.cfg, ctx.st, &mut self.states, &stats,
-                             None);
+                unmask_round_budgeted(ctx.cfg, ctx.budget, ctx.st,
+                                      &mut self.states, &stats, None,
+                                      Some(&mut *ctx.res));
                 self.finish_round(ctx)
             }
             (Pending::Window { w_lo, w_hi, first, span },
@@ -372,9 +411,9 @@ impl DecodePolicy for MultiBlockPolicy {
                     w_hi,
                     absolute: false,
                 };
-                let completed =
-                    unmask_round(ctx.cfg, ctx.st, &mut self.states, &stats,
-                                 Some((first, first + span)));
+                let completed = unmask_round_budgeted(
+                    ctx.cfg, ctx.budget, ctx.st, &mut self.states, &stats,
+                    Some((first, first + span)), Some(&mut *ctx.res));
                 if ctx.cfg.stabilize_rounds == 0 {
                     for b in completed {
                         let (lo, hi) = ctx.st.block_range(b);

@@ -29,12 +29,13 @@ use anyhow::{anyhow, Result};
 use crate::model::exec::{DecodeOut, PrefillOut};
 use crate::model::KvView;
 
+use super::adaptive::RoundBudget;
 use super::ar::ArPolicy;
 use super::backend::Backend;
 use super::multi_block::{BlockState, MultiBlockPolicy};
 use super::single_block::{SingleBlockCachedPolicy, SingleBlockNoCachePolicy};
 use super::spec::SpecPolicy;
-use super::{DecodeCfg, GenResult, SeqState, Strategy};
+use super::{DecodeCfg, GenResult, SelMetric, SeqState, Strategy};
 
 /// Mutable view of the session-owned state a policy operates on. The
 /// session (not the policy) owns these, so phase/progress introspection
@@ -48,6 +49,31 @@ pub struct PolicyCtx<'a> {
     /// live inside the policy.
     pub cache: &'a mut dyn KvView,
     pub res: &'a mut GenResult,
+    /// This round's adaptive budget, if a controller set one on the
+    /// session (`decode::adaptive`). `None` — the common case — is the
+    /// static path, bit-identical to the pre-controller behavior.
+    pub budget: Option<RoundBudget>,
+}
+
+impl PolicyCtx<'_> {
+    /// The selection metric this round: the static config metric, with
+    /// the budget's threshold substituted when a budget is present.
+    pub fn metric(&self) -> SelMetric {
+        match self.budget {
+            Some(b) => self.cfg.metric.with_threshold(b.entropy_threshold),
+            None => self.cfg.metric,
+        }
+    }
+
+    /// This round's commit cap (`usize::MAX` without a budget).
+    pub fn max_unmask(&self) -> usize {
+        self.budget.map_or(usize::MAX, |b| b.max_unmask.max(1))
+    }
+
+    /// This round's block-span clamp (`usize::MAX` without a budget).
+    pub fn block_width(&self) -> usize {
+        self.budget.map_or(usize::MAX, |b| b.block_width.max(1))
+    }
 }
 
 /// The main forward one decode round wants, as owned backend-call

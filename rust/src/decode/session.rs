@@ -33,6 +33,7 @@ use crate::model::kv_pool::{is_pool_exhausted, PagedKv, SharedKvPool};
 use crate::model::{KvCache, KvView};
 use crate::runtime::manifest::Constants;
 
+use super::adaptive::RoundBudget;
 use super::backend::Backend;
 use super::multi_block::BlockState;
 use super::policy::{make_policy, DecodePolicy, PolicyCtx, RoundOut,
@@ -149,6 +150,10 @@ pub struct DecodeSession {
     /// a spill-restore uses to rebuild rows adoption did not bring back.
     /// Empty for dense / no-cache sessions (they never spill).
     restore_exec: String,
+    /// Adaptive budget for the next round(s), set by the coordinator's
+    /// controller before each scheduler round. `None` (the default) is
+    /// the static path — bit-identical to pre-controller decoding.
+    round_budget: Option<RoundBudget>,
     done: bool,
 }
 
@@ -244,6 +249,7 @@ impl DecodeSession {
             paused_rounds: 0,
             paused_streak: 0,
             restore_exec,
+            round_budget: None,
             done: false,
         })
     }
@@ -295,6 +301,19 @@ impl DecodeSession {
     /// Consecutive paused rounds since the session last planned a round.
     pub fn paused_streak(&self) -> usize {
         self.paused_streak
+    }
+
+    /// Install (or clear) the adaptive budget applied to subsequent
+    /// rounds. The coordinator's `AdaptiveController` calls this through
+    /// `SessionPool::set_budgets` before each scheduler round; `None`
+    /// restores the static decode path.
+    pub fn set_round_budget(&mut self, budget: Option<RoundBudget>) {
+        self.round_budget = budget;
+    }
+
+    /// The currently installed adaptive budget, if any.
+    pub fn round_budget(&self) -> Option<RoundBudget> {
+        self.round_budget
     }
 
     /// Preemption spill (the SLO follow-on): release the session's paged
@@ -409,6 +428,7 @@ impl DecodeSession {
                     st: &mut self.st,
                     cache: &mut *self.cache,
                     res: &mut self.res,
+                    budget: self.round_budget,
                 };
                 self.policy.try_skip_prefill(backend, &mut ctx)
             };
@@ -431,6 +451,7 @@ impl DecodeSession {
                 st: &mut self.st,
                 cache: &mut *self.cache,
                 res: &mut self.res,
+                budget: self.round_budget,
             };
             self.policy.plan(backend, params, &mut ctx)
         };
@@ -458,6 +479,7 @@ impl DecodeSession {
                 st: &mut self.st,
                 cache: &mut *self.cache,
                 res: &mut self.res,
+                budget: self.round_budget,
             };
             self.policy.apply(&mut ctx, out)
         };

@@ -17,32 +17,40 @@ use crate::tokenizer::MASK;
 
 use super::backend::Backend;
 use super::policy::{mismatch, DecodePolicy, PolicyCtx, RoundOut, RoundPlan};
-use super::{exec_names, DecodeCfg};
+use super::{exec_names, DecodeCfg, SelMetric};
 
 /// Threshold-select within `lo..hi` (offsets into `conf`/`entropy` via
-/// `base`): always at least the best-scoring masked position.
-fn select_in_block(cfg: &DecodeCfg, tokens: &[i32], lo: usize, hi: usize,
-                   base: usize, conf: &[f32], entropy: &[f32])
-                   -> Vec<usize> {
+/// `base`): always at least the best-scoring masked position. `metric`
+/// and `cap` come from the round context, so an adaptive budget
+/// substitutes its threshold / commit cap here; without a budget they are
+/// the static metric and `usize::MAX` (bit-identical selection).
+fn select_in_block(metric: SelMetric, cap: usize, tokens: &[i32],
+                   lo: usize, hi: usize, base: usize, conf: &[f32],
+                   entropy: &[f32]) -> Vec<usize> {
     let mut best: Option<(usize, f32)> = None;
-    let mut selected = Vec::new();
+    let mut selected: Vec<(usize, f32)> = Vec::new();
     for p in lo..hi {
         if tokens[p] != MASK {
             continue;
         }
         let i = p - base;
-        let sc = cfg.metric.score(conf[i], entropy[i]);
+        let sc = metric.score(conf[i], entropy[i]);
         if best.map(|(_, s)| sc > s).unwrap_or(true) {
             best = Some((p, sc));
         }
-        if cfg.metric.selects(conf[i], entropy[i]) {
-            selected.push(p);
+        if metric.selects(conf[i], entropy[i]) {
+            selected.push((p, sc));
         }
     }
     if selected.is_empty() {
-        selected.push(best.expect("incomplete block has masks").0);
+        selected.push(best.expect("incomplete block has masks"));
     }
-    selected
+    if selected.len() > cap.max(1) {
+        selected.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        selected.truncate(cap.max(1));
+        selected.sort_by_key(|e| e.0);
+    }
+    selected.into_iter().map(|(p, _)| p).collect()
 }
 
 // --------------------------------------------------------------- no-cache
@@ -80,8 +88,12 @@ impl DecodePolicy for SingleBlockNoCachePolicy {
         ctx.res.mix.full_forwards += 1;
         let b = ctx.st.first_incomplete_block().expect("planned round");
         let (lo, hi) = ctx.st.block_range(b);
-        for p in select_in_block(ctx.cfg, &ctx.st.tokens, lo, hi, 0,
-                                 &out.conf, &out.entropy) {
+        for p in select_in_block(ctx.metric(), ctx.max_unmask(),
+                                 &ctx.st.tokens, lo, hi, 0, &out.conf,
+                                 &out.entropy) {
+            ctx.res.entropy_sum += out.entropy[p] as f64;
+            ctx.res.conf_sum += out.conf[p] as f64;
+            ctx.res.quality_commits += 1;
             ctx.st.tokens[p] = out.argmax[p];
         }
         if ctx.cfg.early_stop && ctx.st.eos_settled() {
@@ -163,8 +175,12 @@ impl DecodePolicy for SingleBlockCachedPolicy {
                     self.pending.take().ok_or_else(|| mismatch("fast-dllm"))?;
                 ctx.res.forwards += 1;
                 ctx.res.mix.window_forwards += 1;
-                for p in select_in_block(ctx.cfg, &ctx.st.tokens, lo, hi, lo,
+                for p in select_in_block(ctx.metric(), ctx.max_unmask(),
+                                         &ctx.st.tokens, lo, hi, lo,
                                          &out.conf, &out.entropy) {
+                    ctx.res.entropy_sum += out.entropy[p - lo] as f64;
+                    ctx.res.conf_sum += out.conf[p - lo] as f64;
+                    ctx.res.quality_commits += 1;
                     ctx.st.tokens[p] = out.argmax[p - lo];
                 }
                 if ctx.st.block_complete(b) {

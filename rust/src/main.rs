@@ -70,6 +70,8 @@ fn print_help() {
                 [--draft D] [--kv-budget-mb MB (0 = dense caches)]\n\
                 [--workers N (replica fleet)] [--round-width N]\n\
                 [--spill-after N (paused rounds before KV spill, 0 = off)]\n\
+                [--adaptive off|load] [--adaptive-conf-floor X]\n\
+                [--adaptive-entropy-ceiling X]\n\
            bench --exp EXP [--n N] [--fast]      regenerate a table/figure\n\
                  (table1..table11, curves, radar, figure1, perf, all)"
     );
@@ -243,6 +245,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(path) => Some(d3llm::config::ServiceConfig::load(path)?),
         None => None,
     };
+    // adaptive parallelism controller: flags override the config file's
+    // adaptive block, which overrides the off-by-default preset
+    let adaptive = {
+        let mut a = svc
+            .as_ref()
+            .map(|s| s.adaptive.clone())
+            .unwrap_or_default();
+        if let Some(m) = args.get("adaptive") {
+            a.mode = d3llm::decode::AdaptiveMode::parse(m).ok_or_else(
+                || anyhow!("unknown adaptive mode `{m}` (off|load)"))?;
+        }
+        if let Some(v) = args.get("adaptive-conf-floor") {
+            a.conf_floor = v.parse()?;
+        }
+        if let Some(v) = args.get("adaptive-entropy-ceiling") {
+            a.entropy_ceiling = v.parse()?;
+        }
+        d3llm::config::validate_adaptive(&a)?;
+        a
+    };
     let cfg = coordinator::ServerCfg {
         host: args.str_or(
             "host",
@@ -293,6 +315,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "spill-after",
             svc.as_ref().map(|s| s.spill_after_rounds).unwrap_or(0),
         ),
+        adaptive,
         // an explicit --strategy flag wins over the config file's decode
         // block; without the flag the config's tuned decode applies
         decode: if args.get("strategy").is_some() {

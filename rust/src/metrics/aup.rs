@@ -72,6 +72,20 @@ pub fn aup(points: &[Point]) -> f64 {
     aup_from_points(points, DEFAULT_ALPHA, None)
 }
 
+/// Fractional AUP regression of a candidate operating point versus a
+/// baseline, both scored as single-point AUPs (rho * acc). Positive means
+/// the candidate lost AUP, negative that it gained; 0 when the baseline
+/// has no AUP to lose. The adaptive-parallelism bench pins its accuracy
+/// floor on this: the controller's point must stay within a fixed
+/// fraction of the static baseline's AUP.
+pub fn aup_delta_frac(baseline: Point, candidate: Point) -> f64 {
+    let base = aup(&[baseline]);
+    if base <= 0.0 {
+        return 0.0;
+    }
+    (base - aup(&[candidate])) / base
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +163,20 @@ mod tests {
             Point { rho: 4.0, acc: 70.0 },
         ];
         assert_eq!(aup(&a), aup(&b));
+    }
+
+    #[test]
+    fn delta_frac_tracks_single_point_aup() {
+        let base = Point { rho: 2.0, acc: 80.0 }; // AUP 160
+        // faster but less accurate: 3.0 * 48.0 = 144 => lost 10%
+        let cand = Point { rho: 3.0, acc: 48.0 };
+        assert!((aup_delta_frac(base, cand) - 0.10).abs() < 1e-9);
+        // strictly better point => negative regression
+        let better = Point { rho: 3.0, acc: 80.0 };
+        assert!(aup_delta_frac(base, better) < 0.0);
+        // degenerate baseline never divides by zero
+        let zero = Point { rho: 0.0, acc: 0.0 };
+        assert_eq!(aup_delta_frac(zero, cand), 0.0);
     }
 
     #[test]

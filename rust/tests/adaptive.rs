@@ -1,0 +1,270 @@
+//! Adaptive parallelism controller — serving-loop pins over the
+//! SimBackend (no artifacts, fully deterministic):
+//!
+//!   * `--adaptive off` is bit-identical (tokens AND forward counts) to
+//!     the static path for every strategy, even with the controller wired
+//!     into the scheduling loop exactly like `run_replica` wires it;
+//!   * an explicit budget pinned at the static operating point
+//!     (base threshold, uncapped commits, uncapped width) is also a
+//!     strict no-op — the budgeted plan/apply path degrades exactly to
+//!     the static one;
+//!   * `load` mode is a pure function of the observed load trace: the
+//!     same virtual-clock trace yields the same budget sequence, the
+//!     same gauges, and the same tokens, run to run;
+//!   * the accuracy floor is hard: under adversarial load swings (and
+//!     adversarially misconfigured floors) the emitted thresholds never
+//!     cross the per-metric bound.
+
+use std::collections::HashMap;
+
+use d3llm::coordinator::scheduler::SessionPool;
+use d3llm::decode::{self, AdaptiveCfg, AdaptiveController, AdaptiveMode,
+                    DecodeCfg, DecodeSession, GenResult, LoadSignal,
+                    RoundBudget, SelMetric, SimBackend, Strategy};
+use d3llm::util::rng::Rng;
+
+fn mk(s: Strategy) -> DecodeCfg {
+    let mut c = DecodeCfg::preset(s);
+    c.early_stop = false; // sim argmax never emits EOS by default
+    c
+}
+
+fn prompt_for(k: usize) -> Vec<i32> {
+    (0..(8 + k % 5)).map(|i| 5 + ((i + 3 * k) % 80) as i32).collect()
+}
+
+const ALL_STRATEGIES: [Strategy; 7] = [
+    Strategy::Vanilla,
+    Strategy::Ar,
+    Strategy::Spec,
+    Strategy::FastDllm,
+    Strategy::D2f,
+    Strategy::DParallel,
+    Strategy::D3llm,
+];
+
+fn gen_len_for(s: Strategy) -> usize {
+    match s {
+        Strategy::Ar | Strategy::Spec => 32,
+        _ => 64,
+    }
+}
+
+/// `--adaptive off`, wired exactly like the replica loop (observe →
+/// set_budgets → step_round each round), must keep every strategy
+/// token- and forward-identical to the solo static reference.
+#[test]
+fn off_mode_is_bit_identical_to_static_for_every_strategy() {
+    let seed = 53u64;
+    let sim = SimBackend::new(seed);
+    let params = vec![0.5f32; 8];
+    let draft = vec![0.25f32; 8];
+    let mut ctrl = AdaptiveController::new(AdaptiveCfg::default());
+    assert!(!ctrl.enabled());
+
+    let mut pool: SessionPool<usize> = SessionPool::new();
+    for (i, &s) in ALL_STRATEGIES.iter().enumerate() {
+        let sess = DecodeSession::with_draft(&sim, mk(s), &prompt_for(i),
+                                             gen_len_for(s), Some(&draft))
+            .unwrap();
+        pool.admit(format!("s{i}"), i, sess);
+    }
+    let mut results: Vec<Option<GenResult>> =
+        (0..ALL_STRATEGIES.len()).map(|_| None).collect();
+    while !pool.is_empty() {
+        // the serving loop's exact per-round controller sequence
+        ctrl.observe(&LoadSignal {
+            queue_depth: 17, // any backlog: off mode must ignore it
+            active_sessions: pool.len(),
+            est_wait_ms: 123.0,
+        });
+        pool.set_budgets(|dcfg, res| {
+            ctrl.budget_for(dcfg.metric, res.mean_commit_entropy())
+        });
+        for f in pool.step_round(&sim, &params) {
+            results[f.tag] = Some(f.result.unwrap());
+        }
+    }
+
+    let ref_sim = SimBackend::new(seed);
+    for (i, &s) in ALL_STRATEGIES.iter().enumerate() {
+        let got = results[i].take().unwrap();
+        let reference = decode::generate(&ref_sim, &mk(s), &params,
+                                         Some(&draft), &prompt_for(i),
+                                         gen_len_for(s))
+            .unwrap();
+        assert_eq!(got.tokens, reference.tokens,
+                   "{}: off mode changed the tokens", s.name());
+        assert_eq!(got.forwards, reference.forwards,
+                   "{}: off mode changed the forward count", s.name());
+        assert_eq!(got.rounds, reference.rounds, "{}", s.name());
+    }
+    // the controller stayed inert the whole run
+    assert_eq!(ctrl.pressure(), 0.0);
+    assert_eq!(ctrl.gauges.threshold_milli, 0);
+    assert_eq!(ctrl.gauges.width_hist.iter().sum::<u64>(), 0);
+}
+
+/// A budget frozen at the static operating point (base threshold,
+/// uncapped commits and width) must route through the budgeted
+/// plan/apply path yet decode bit-identically to no budget at all.
+#[test]
+fn static_valued_budget_is_a_strict_noop() {
+    let seed = 59u64;
+    let sim = SimBackend::new(seed);
+    let params = vec![0.5f32; 8];
+    let cfg = mk(Strategy::D3llm);
+    let static_budget = RoundBudget {
+        entropy_threshold: cfg.metric.threshold(),
+        max_unmask: usize::MAX,
+        block_width: usize::MAX,
+    };
+
+    let mut pool: SessionPool<()> = SessionPool::new();
+    pool.admit("b".into(), (),
+               DecodeSession::new(&sim, cfg.clone(), &prompt_for(2), 96)
+                   .unwrap());
+    let mut budgeted = None;
+    while !pool.is_empty() {
+        pool.set_budgets(|_, _| Some(static_budget));
+        for f in pool.step_round(&sim, &params) {
+            budgeted = Some(f.result.unwrap());
+        }
+    }
+    let budgeted = budgeted.unwrap();
+
+    let ref_sim = SimBackend::new(seed);
+    let reference = decode::generate(&ref_sim, &cfg, &params, None,
+                                     &prompt_for(2), 96)
+        .unwrap();
+    assert_eq!(budgeted.tokens, reference.tokens,
+               "a static-valued budget changed the trajectory");
+    assert_eq!(budgeted.forwards, reference.forwards);
+    assert_eq!(budgeted.rounds, reference.rounds);
+}
+
+/// One full `load`-mode run over a fixed virtual load trace: returns the
+/// emitted budget sequence, per-request tokens, and the final gauges.
+fn run_load_trace(seed: u64, trace: &[usize])
+                  -> (Vec<RoundBudget>, HashMap<String, Vec<i32>>,
+                      u64, u64, u64) {
+    let sim = SimBackend::new(seed);
+    let params = vec![0.5f32; 8];
+    let cfg = mk(Strategy::D3llm);
+    let mut ctrl = AdaptiveController::new(AdaptiveCfg {
+        mode: AdaptiveMode::Load,
+        ..AdaptiveCfg::default()
+    });
+    let mut pool: SessionPool<()> = SessionPool::new();
+    for i in 0..3 {
+        pool.admit(format!("r{i}"), (),
+                   DecodeSession::new(&sim, cfg.clone(), &prompt_for(i),
+                                      64)
+                       .unwrap());
+    }
+    let mut budgets: Vec<RoundBudget> = Vec::new();
+    let mut tokens: HashMap<String, Vec<i32>> = HashMap::new();
+    let mut round = 0usize;
+    while !pool.is_empty() {
+        let q = trace[round.min(trace.len() - 1)];
+        ctrl.observe(&LoadSignal {
+            queue_depth: q,
+            active_sessions: pool.len(),
+            est_wait_ms: 0.0,
+        });
+        pool.set_budgets(|dcfg, res| {
+            let b = ctrl.budget_for(dcfg.metric, res.mean_commit_entropy());
+            if let Some(b) = b {
+                budgets.push(b);
+            }
+            b
+        });
+        for f in pool.step_round(&sim, &params) {
+            tokens.insert(f.id, f.result.unwrap().tokens);
+        }
+        round += 1;
+    }
+    let g = &ctrl.gauges;
+    (budgets, tokens,
+     g.threshold_milli, g.adjust_up + g.adjust_down,
+     g.width_hist.iter().sum())
+}
+
+/// `load` mode is a pure function of the load trace: identical traces
+/// give identical budget sequences, gauges, and tokens, run to run.
+#[test]
+fn load_mode_is_deterministic_over_a_fixed_trace() {
+    // an overload burst that ramps, saturates, then drains
+    let trace: Vec<usize> =
+        [0, 1, 4, 8, 8, 8, 8, 4, 2, 1, 0, 0].to_vec();
+    let a = run_load_trace(61, &trace);
+    let b = run_load_trace(61, &trace);
+    assert_eq!(a.0, b.0, "budget sequences diverged run-to-run");
+    assert_eq!(a.1, b.1, "decoded tokens diverged run-to-run");
+    assert_eq!((a.2, a.3, a.4), (b.2, b.3, b.4), "gauges diverged");
+
+    assert!(!a.0.is_empty(), "load mode emitted no budgets");
+    // the burst actually moved the dial: some budget left the static
+    // base, and none ever crossed the calibrated ceiling
+    let base = mk(Strategy::D3llm).metric.threshold();
+    let ceiling = AdaptiveCfg::default().entropy_ceiling;
+    assert!(a.0.iter().any(|b| b.entropy_threshold > base + 0.05),
+            "saturation never raised the threshold");
+    assert!(a.0.iter().all(|b| b.entropy_threshold <= ceiling + 1e-6));
+    assert!(a.0.iter().all(|b| (1..=8).contains(&b.block_width)));
+}
+
+/// Property: under adversarial load swings — and adversarially
+/// misconfigured floors — the emitted threshold never crosses the
+/// per-metric accuracy bound, the width stays in range, and the
+/// pressure stays normalized.
+#[test]
+fn accuracy_floor_survives_adversarial_load_swings() {
+    let mut rng = Rng::new(0xADA_BEEF);
+    for case in 0..200 {
+        let cfg = AdaptiveCfg {
+            mode: AdaptiveMode::Load,
+            conf_floor: rng.f32() * 1.2,       // may exceed the base
+            entropy_ceiling: rng.f32() * 2.0,  // may undercut the base
+            max_block_width: 1 + rng.usize(6),
+            max_unmask_cap: rng.usize(4),
+            backlog_full: 1 + rng.usize(8),
+            pool_full: rng.usize(9), // 0 disables the occupancy term
+            wait_full_ms: if rng.bool(0.5) { 200.0 } else { 0.0 },
+            alpha: 0.05 + 0.9 * rng.f64(),
+        };
+        let mut c = AdaptiveController::new(cfg.clone());
+        let base_e = rng.f32() * 1.5;
+        let base_c = rng.f32();
+        for step in 0..64 {
+            c.observe(&LoadSignal {
+                queue_depth: rng.usize(32),
+                active_sessions: rng.usize(8),
+                est_wait_ms: rng.f64() * 1000.0,
+            });
+            assert!((0.0..=1.0).contains(&c.pressure()),
+                    "case {case} step {step}: pressure left [0,1]");
+            let mce = rng.f64() * 5.0; // adversarial quality feedback
+            let e = c.budget_for(SelMetric::Entropy(base_e), mce).unwrap();
+            assert!(e.entropy_threshold <= cfg.entropy_ceiling + 1e-5,
+                    "case {case} step {step}: entropy ceiling crossed \
+                     ({} > {})", e.entropy_threshold, cfg.entropy_ceiling);
+            assert!(e.entropy_threshold
+                        >= base_e.min(cfg.entropy_ceiling) - 1e-5,
+                    "case {case} step {step}: drifted below the base");
+            let f = c.budget_for(SelMetric::Conf(base_c), mce).unwrap();
+            assert!(f.entropy_threshold >= cfg.conf_floor - 1e-5,
+                    "case {case} step {step}: conf floor crossed \
+                     ({} < {})", f.entropy_threshold, cfg.conf_floor);
+            assert!(f.entropy_threshold
+                        <= base_c.max(cfg.conf_floor) + 1e-5,
+                    "case {case} step {step}: drifted above the base");
+            for b in [e, f] {
+                assert!(b.block_width >= 1
+                            && b.block_width <= cfg.max_block_width.max(1),
+                        "case {case} step {step}: width out of range");
+                assert!(b.max_unmask >= 1);
+            }
+        }
+    }
+}

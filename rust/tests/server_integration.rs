@@ -49,6 +49,7 @@ fn server_serves_generates_and_shuts_down() {
         slo_round_width: 0,
         workers: 1,
         spill_after_rounds: 0,
+        adaptive: Default::default(),
         decode: None,
     };
     let handle = std::thread::spawn(move || {
