@@ -44,6 +44,22 @@ def _sig(name, shape, dtype):
 
 F32, I32 = jnp.float32, jnp.int32
 
+# Paged executable ABI: page geometry baked into the paged specs and
+# recorded per-executable in the manifest (format_version 2) so the Rust
+# loader can refuse a page-table layout it did not compile for.
+PAGED_ABI = {"page_rows": C.PAGE_ROWS, "max_pages": C.MAX_PAGES}
+
+# Extra manifest fields per executable (absent = unbatched, unpaged). A
+# format_version-1 manifest has none of these; the Rust loader treats the
+# absence as "no batched/paged entries" and keeps the per-item/staged path.
+EXEC_META = {
+    "prefill_batch": {"batch": C.B_DECODE},
+    "decode_paged_pallas": {"paged": PAGED_ABI},
+    "decode_paged_xla": {"paged": PAGED_ABI},
+    "decode_paged_batch": {"batch": C.B_DECODE, "paged": PAGED_ABI},
+    "train_diff_fused": {"batch": C.TRAIN_CHUNK},
+}
+
 
 def build_specs():
     """Return [(exec_name, model_name, fn, arg_specs, input_sig, output_sig)]."""
@@ -51,6 +67,7 @@ def build_specs():
     _, p_main = C.param_layout(main)
     _, p_draft = C.param_layout(draft)
     S, W, ST, B = C.S_MAX, C.WINDOW, C.S_TRAIN, C.B_TRAIN
+    MP, PR, BD = C.MAX_PAGES, C.PAGE_ROWS, C.B_DECODE
     L, DKV = main.n_layers, main.d_kv
     LD, DKVD = draft.n_layers, draft.d_kv
 
@@ -89,6 +106,63 @@ def build_specs():
              _sig("k_win", (L, W, DKV), "f32"),
              _sig("v_win", (L, W, DKV), "f32")],
         )
+
+    # ---- paged decode: reads packed KV pages + page table in place
+    #      (retires the host-side dense KvStaging gather)
+    for variant in ("pallas", "xla"):
+        add(
+            f"decode_paged_{variant}", "main",
+            M.make_decode_paged(main, variant, W, PR, MP),
+            [_spec((p_main,), F32), _spec((W,), I32), _spec((W,), I32),
+             _spec((W,), F32), _spec((L, MP, PR, DKV), F32),
+             _spec((L, MP, PR, DKV), F32), _spec((MP,), I32),
+             _spec((MP,), I32)],
+            [_sig("params", (p_main,), "f32"),
+             _sig("win_tokens", (W,), "i32"), _sig("win_pos", (W,), "i32"),
+             _sig("win_valid", (W,), "f32"),
+             _sig("k_pages", (L, MP, PR, DKV), "f32"),
+             _sig("v_pages", (L, MP, PR, DKV), "f32"),
+             _sig("page_index", (MP,), "i32"),
+             _sig("page_valid", (MP,), "i32")],
+            [_sig("argmax", (W,), "i32"), _sig("conf", (W,), "f32"),
+             _sig("entropy", (W,), "f32"),
+             _sig("k_win", (L, W, DKV), "f32"),
+             _sig("v_win", (L, W, DKV), "f32")],
+        )
+
+    # ---- batched serving executables: one device call per coalesced
+    #      same-shape round in SessionPool::step_round
+    add(
+        "prefill_batch", "main",
+        M.make_prefill_batch(main, "xla", BD, S),
+        [_spec((p_main,), F32), _spec((BD, S), I32), _spec((BD, S), F32)],
+        [_sig("params", (p_main,), "f32"), _sig("tokens", (BD, S), "i32"),
+         _sig("valid", (BD, S), "f32")],
+        [_sig("kcache", (BD, L, S, DKV), "f32"),
+         _sig("vcache", (BD, L, S, DKV), "f32"),
+         _sig("argmax", (BD, S), "i32"), _sig("conf", (BD, S), "f32"),
+         _sig("entropy", (BD, S), "f32")],
+    )
+    add(
+        "decode_paged_batch", "main",
+        M.make_decode_paged_batch(main, "xla", BD, W, PR, MP),
+        [_spec((p_main,), F32), _spec((BD, W), I32), _spec((BD, W), I32),
+         _spec((BD, W), F32), _spec((BD, L, MP, PR, DKV), F32),
+         _spec((BD, L, MP, PR, DKV), F32), _spec((BD, MP), I32),
+         _spec((BD, MP), I32)],
+        [_sig("params", (p_main,), "f32"),
+         _sig("win_tokens", (BD, W), "i32"),
+         _sig("win_pos", (BD, W), "i32"),
+         _sig("win_valid", (BD, W), "f32"),
+         _sig("k_pages", (BD, L, MP, PR, DKV), "f32"),
+         _sig("v_pages", (BD, L, MP, PR, DKV), "f32"),
+         _sig("page_index", (BD, MP), "i32"),
+         _sig("page_valid", (BD, MP), "i32")],
+        [_sig("argmax", (BD, W), "i32"), _sig("conf", (BD, W), "f32"),
+         _sig("entropy", (BD, W), "f32"),
+         _sig("k_win", (BD, L, W, DKV), "f32"),
+         _sig("v_win", (BD, L, W, DKV), "f32")],
+    )
 
     # ---- AR graphs (baseline + spec-decode), for main and draft models
     for mname, arch, ptot, ll, dkv in (
@@ -150,11 +224,44 @@ def build_specs():
              _sig("v_out", (ptot,), "f32"), _sig("loss", (), "f32")],
         )
 
+    # ---- fused multi-step training: one device call per TRAIN_CHUNK steps
+    K = C.TRAIN_CHUNK
+    add(
+        "train_diff_fused", "main",
+        M.make_train_fused(main, False, K, B, ST),
+        [_spec((p_main,), F32), _spec((p_main,), F32), _spec((p_main,), F32),
+         _spec((), I32), _spec((K, B, ST), I32), _spec((K, B, ST), I32),
+         _spec((K, B, ST), F32), _spec((K, B, ST), F32), _spec((), F32),
+         _spec((), F32)],
+        [_sig("params", (p_main,), "f32"), _sig("m", (p_main,), "f32"),
+         _sig("v", (p_main,), "f32"), _sig("step", (), "i32"),
+         _sig("tokens", (K, B, ST), "i32"),
+         _sig("labels", (K, B, ST), "i32"),
+         _sig("loss_mask", (K, B, ST), "f32"),
+         _sig("attn_valid", (K, B, ST), "f32"), _sig("lr", (), "f32"),
+         _sig("ent_weight", (), "f32")],
+        [_sig("params_out", (p_main,), "f32"),
+         _sig("m_out", (p_main,), "f32"), _sig("v_out", (p_main,), "f32"),
+         _sig("loss", (K,), "f32")],
+    )
+
     # ---- pseudo-trajectory extractor
     BT = C.B_TRAJ
     add(
         "trajectory", "main",
         M.make_trajectory(main, BT, ST, C.GEN_TRAIN),
+        [_spec((p_main,), F32), _spec((BT, ST), I32), _spec((BT, ST), F32),
+         _spec((BT, ST), F32)],
+        [_sig("params", (p_main,), "f32"), _sig("tokens", (BT, ST), "i32"),
+         _sig("attn_valid", (BT, ST), "f32"),
+         _sig("gen_mask", (BT, ST), "f32")],
+        [_sig("rank", (BT, ST), "i32"), _sig("final_tokens", (BT, ST), "i32")],
+    )
+    # cached variant: window-only scan over a frozen, device-resident
+    # prompt cache (same signature; the serving path's approximate scheme)
+    add(
+        "trajectory_paged", "main",
+        M.make_trajectory_paged(main, BT, ST, C.GEN_TRAIN),
         [_spec((p_main,), F32), _spec((BT, ST), I32), _spec((BT, ST), F32),
          _spec((BT, ST), F32)],
         [_sig("params", (p_main,), "f32"), _sig("tokens", (BT, ST), "i32"),
@@ -195,13 +302,19 @@ def main() -> None:
                 f.write(text)
             print(f"  {name}: {len(text)} chars -> {fname}")
         digest = hashlib.sha256(open(path, "rb").read()).hexdigest()[:16]
-        executables.append({
+        entry = {
             "name": name, "file": fname, "model": mname,
             "inputs": insig, "outputs": outsig, "sha256_16": digest,
-        })
+        }
+        entry.update(EXEC_META.get(name, {}))
+        executables.append(entry)
 
     manifest = {
-        "format_version": 1,
+        # v2: executables may carry "batch" / "paged" ABI fields and the
+        # constants include the page/batch geometry. The Rust loader
+        # accepts v1 manifests (no batched/paged entries -> per-item and
+        # staged fallback paths).
+        "format_version": 2,
         "constants": {
             "vocab": C.VOCAB, "pad_id": C.PAD_ID, "mask_id": C.MASK_ID,
             "eos_id": C.EOS_ID, "bos_id": C.BOS_ID, "sep_id": C.SEP_ID,
@@ -209,6 +322,8 @@ def main() -> None:
             "gen_train": C.GEN_TRAIN, "window": C.WINDOW, "block": C.BLOCK,
             "verify_w": C.VERIFY_W, "b_train": C.B_TRAIN,
             "b_traj": C.B_TRAJ, "rank_never": M.RANK_NEVER,
+            "page_rows": C.PAGE_ROWS, "max_pages": C.MAX_PAGES,
+            "b_decode": C.B_DECODE, "train_chunk": C.TRAIN_CHUNK,
         },
         "models": {"main": arch_dict(C.MAIN), "draft": arch_dict(C.DRAFT)},
         "executables": executables,

@@ -32,6 +32,12 @@ VERIFY_W = 16    # speculative-decoding verification window
 B_TRAIN = 8      # training batch
 B_TRAJ = 8       # trajectory-extraction batch
 
+# ---------------------------------------------------------------- paged KV / batch geometry
+PAGE_ROWS = 32   # KV page height (rows) — matches the Rust pool's block-aligned pages
+MAX_PAGES = S_MAX // PAGE_ROWS  # page-table length of one session (12)
+B_DECODE = 4     # batch of the batched serving executables (prefill/decode)
+TRAIN_CHUNK = 4  # optimizer steps fused into one train_diff_fused call
+
 # ---------------------------------------------------------------- kernel tiling
 BQ = 48          # attention query tile
 BK = 48          # attention key tile

@@ -1,0 +1,144 @@
+"""Layer-1 Pallas kernel: paged-attention decode over the block KV pool.
+
+The serving hot path used to feed the decode executable a dense
+`[L, S_max, d_kv]` cache image re-gathered on the host (`KvStaging`).
+This kernel consumes the page-table arguments `KvView::page_args` already
+produces instead — a page index list and per-page valid counts — so the
+executable reads KV pages in place:
+
+  * the KV cache arrives as up to `MAX_PAGES` page-shaped entries of
+    `PAGE_ROWS` rows each, in arbitrary order (attention is permutation-
+    invariant over keys; positional information is baked into the cached
+    K/V vectors themselves);
+  * `page_index` (i32[MP], scalar-prefetched to SMEM) marks live entries
+    (logical page id, or -1 for a dead slot) and `page_valid` (i32[MP])
+    gives each entry's valid row count — both are consumed *inside* the
+    kernel to build the key mask, so no host-side gather, zeroing, or
+    dense validity image exists anywhere on the path;
+  * the decode window's own K/V ride along as `W / PAGE_ROWS` extra
+    kv-grid steps after the pages, masked by `win_kmask`.
+
+Grid = (heads, q_tiles, MP + W/PAGE_ROWS), kv innermost: the same
+online-softmax schedule as `attention.flash_attention`, with the kv sweep
+walking pages first and window tiles last. Runs under interpret=True
+(CPU PJRT cannot execute Mosaic custom-calls), like every kernel here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pidx_ref, pval_ref, q_ref, kp_ref, vp_ref, kw_ref, vw_ref,
+                  wmask_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, mp: int, n_kv: int, rows: int, scale: float):
+    """One (head, q_tile, kv_entry) grid step of paged online-softmax."""
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, :]  # [BQ, Dh]
+    is_page = ik < mp
+
+    # Both candidate tiles are resident (their BlockSpecs clamp the index);
+    # the grid position selects which one this step attends to.
+    k = jnp.where(is_page, kp_ref[0, 0, :, :], kw_ref[0, :, :])  # [PR, Dh]
+    v = jnp.where(is_page, vp_ref[0, 0, :, :], vw_ref[0, :, :])
+
+    # Key mask from the page table: entry `ik` is attendable at row r iff
+    # it is live (page_index >= 0) and r < page_valid. Window tiles use the
+    # window validity mask instead.
+    entry = jnp.minimum(ik, mp - 1)
+    r = jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], rows), 1)
+    page_ok = (pidx_ref[entry] >= 0) & (r < pval_ref[entry])
+    win_ok = (wmask_ref[...] > 0.0)[None, :]
+    mask = jnp.where(is_page, page_ok, win_ok)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    correction = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])  # [BQ, PR]
+
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * correction[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        # Fully-masked rows (l == 0) only occur for padding queries; emit 0.
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, :] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq",))
+def paged_flash_attention(q, k_pages, v_pages, page_index, page_valid,
+                          k_win, v_win, win_kmask, bq: int = 48):
+    """Paged masked attention for the windowed decode step.
+
+    q: [H, W, Dh] window queries; k_pages/v_pages: [H, MP, PR, Dh] packed
+    live KV pages (arbitrary order); page_index i32[MP] (logical page id,
+    -1 = dead entry), page_valid i32[MP] (valid rows per entry);
+    k_win/v_win: [H, W, Dh] the window's own KV; win_kmask f32[W] (> 0 =
+    attendable window key). W must divide by bq and by PR. Returns
+    [H, W, Dh] f32.
+    """
+    h, w, dh = q.shape
+    mp, pr = k_pages.shape[1], k_pages.shape[2]
+    assert w % bq == 0 and w % pr == 0, (w, bq, pr)
+    n_q, n_win = w // bq, w // pr
+    n_kv = mp + n_win
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(_paged_kernel, mp=mp, n_kv=n_kv, rows=pr,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda hh, iq, ik, pi, pv: (hh, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, pr, dh),
+                lambda hh, iq, ik, pi, pv: (hh, jnp.minimum(ik, mp - 1), 0, 0)),
+            pl.BlockSpec(
+                (1, 1, pr, dh),
+                lambda hh, iq, ik, pi, pv: (hh, jnp.minimum(ik, mp - 1), 0, 0)),
+            pl.BlockSpec(
+                (1, pr, dh),
+                lambda hh, iq, ik, pi, pv:
+                (hh, jnp.clip(ik - mp, 0, n_win - 1), 0)),
+            pl.BlockSpec(
+                (1, pr, dh),
+                lambda hh, iq, ik, pi, pv:
+                (hh, jnp.clip(ik - mp, 0, n_win - 1), 0)),
+            pl.BlockSpec(
+                (pr,),
+                lambda hh, iq, ik, pi, pv: (jnp.clip(ik - mp, 0, n_win - 1),)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh),
+                               lambda hh, iq, ik, pi, pv: (hh, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((h, w, dh), jnp.float32),
+        interpret=True,
+    )(page_index, page_valid, q, k_pages, v_pages, k_win, v_win, win_kmask)

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from .config import (Arch, BLOCK, BOS_ID, GEN_TRAIN, MASK_ID, PAD_ID,
                      SEP_ID, param_layout)
 from .kernels.attention import flash_attention
+from .kernels.paged_attention import paged_flash_attention
 from .kernels.ref import attention_ref, head_ref
 from .kernels.fused_head import fused_head
 
@@ -71,6 +72,12 @@ def _split_heads(x, arch: Arch):
 def _merge_heads(x, arch: Arch):
     """[H, S, Dh] -> [S, H*Dh]"""
     return x.transpose(1, 0, 2).reshape(x.shape[1], arch.d_kv)
+
+
+def _split_page_heads(x, arch: Arch):
+    """[MP, PR, H*Dh] -> [H, MP, PR, Dh]"""
+    mp, pr, _ = x.shape
+    return x.reshape(mp, pr, arch.n_heads, arch.d_head).transpose(2, 0, 1, 3)
 
 
 def _attn(q, k, v, bias, variant: str):
@@ -152,6 +159,63 @@ def forward_window(params: Dict, win_tokens, win_pos, kcache, vcache,
             jnp.stack(k_wins), jnp.stack(v_wins))
 
 
+def forward_window_paged(params: Dict, win_tokens, win_pos, k_pages, v_pages,
+                         page_index, page_valid, win_valid, arch: Arch,
+                         variant: str):
+    """Forward the active window against packed KV pages read in place.
+
+    win_tokens/win_pos: i32[W]; k_pages/v_pages: f32[L, MP, PR, H*Dh] —
+    up to MP live pages in arbitrary order (attention is permutation-
+    invariant over keys; positions live inside the cached K/V vectors);
+    page_index: i32[MP] logical page id per entry (-1 = dead entry);
+    page_valid: i32[MP] valid rows per entry; win_valid: f32[W].
+    Returns (h_final_normed [W, D], k_win, v_win [L, W, H*Dh]).
+
+    No dense [S_max]-proportional cache image or validity vector exists on
+    this path — the mask is derived entry-locally from the page table.
+    """
+    mp, pr = k_pages.shape[1], k_pages.shape[2]
+    w = win_tokens.shape[0]
+    x = params["embed"][win_tokens] + params["pos"][win_pos]
+    rows = jnp.arange(pr, dtype=jnp.int32)[None, :]
+    entry_ok = (page_index[:, None] >= 0) & (rows < page_valid[:, None])
+    allowed = jnp.concatenate([entry_ok.reshape(mp * pr), win_valid > 0.0])
+    bias = jnp.broadcast_to(
+        jnp.where(allowed[None, :], 0.0, NEG_INF), (w, mp * pr + w))
+    k_wins, v_wins = [], []
+    for l in range(arch.n_layers):
+        p = f"layer{l}."
+        hn = rms(x, params[p + "ln1"])
+        q = hn @ params[p + "wq"]
+        k_w = hn @ params[p + "wk"]
+        v_w = hn @ params[p + "wv"]
+        k_wins.append(k_w)
+        v_wins.append(v_w)
+        if variant == "pallas":
+            o = paged_flash_attention(
+                _split_heads(q, arch),
+                _split_page_heads(k_pages[l], arch),
+                _split_page_heads(v_pages[l], arch),
+                page_index, page_valid,
+                _split_heads(k_w, arch), _split_heads(v_w, arch), win_valid,
+                bq=48 if w % 48 == 0 else w)
+        else:
+            # reference path: packed pages are already key-major — a
+            # reshape (not a gather) concatenates them with the window
+            k_all = jnp.concatenate(
+                [k_pages[l].reshape(mp * pr, arch.d_kv), k_w], axis=0)
+            v_all = jnp.concatenate(
+                [v_pages[l].reshape(mp * pr, arch.d_kv), v_w], axis=0)
+            o = attention_ref(_split_heads(q, arch),
+                              _split_heads(k_all, arch),
+                              _split_heads(v_all, arch), bias)
+        x = x + _merge_heads(o, arch) @ params[p + "wo"]
+        hn2 = rms(x, params[p + "ln2"])
+        x = x + jax.nn.gelu(hn2 @ params[p + "w1"]) @ params[p + "w2"]
+    return (rms(x, params["lnf"]),
+            jnp.stack(k_wins), jnp.stack(v_wins))
+
+
 # --------------------------------------------------------------------------
 # graph builders (each returns a jit-able fn over concrete shapes)
 # --------------------------------------------------------------------------
@@ -185,6 +249,54 @@ def make_decode(arch: Arch, variant: str, window: int, seq: int):
             params, win_tokens, win_pos, kcache, vcache, bias, arch, variant)
         amax, conf, ent = _head(h, params["embed"], variant, arch)
         return amax, conf, ent, k_win, v_win
+
+    return fn
+
+
+def make_decode_paged(arch: Arch, variant: str, window: int, page_rows: int,
+                      max_pages: int):
+    """Windowed decode step reading packed KV pages in place.
+
+    The paged twin of `make_decode`: instead of a dense [L, S, d_kv] cache
+    image plus a dense validity vector, it takes up to `max_pages` packed
+    page entries and the page-table arguments (`page_index`, `page_valid`)
+    the Rust `KvView::page_args` produces. Serves both cache layouts: a
+    paged pool passes its live pages as-is; a dense cache is presented as
+    an identity-table page view (contiguous row slices, no gather).
+    """
+
+    def fn(flat, win_tokens, win_pos, win_valid, k_pages, v_pages,
+           page_index, page_valid):
+        params = unflatten(flat, arch)
+        h, k_win, v_win = forward_window_paged(
+            params, win_tokens, win_pos, k_pages, v_pages, page_index,
+            page_valid, win_valid, arch, variant)
+        amax, conf, ent = _head(h, params["embed"], variant, arch)
+        return amax, conf, ent, k_win, v_win
+
+    return fn
+
+
+def make_prefill_batch(arch: Arch, variant: str, batch: int, seq: int):
+    """B>1 prefill: one device call for a coalesced same-shape round."""
+    single = make_prefill(arch, variant, seq)
+
+    def fn(flat, tokens, valid):
+        return jax.vmap(single, in_axes=(None, 0, 0))(flat, tokens, valid)
+
+    return fn
+
+
+def make_decode_paged_batch(arch: Arch, variant: str, batch: int, window: int,
+                            page_rows: int, max_pages: int):
+    """B>1 paged decode: every item carries its own page table."""
+    single = make_decode_paged(arch, variant, window, page_rows, max_pages)
+
+    def fn(flat, win_tokens, win_pos, win_valid, k_pages, v_pages,
+           page_index, page_valid):
+        return jax.vmap(single, in_axes=(None, 0, 0, 0, 0, 0, 0, 0))(
+            flat, win_tokens, win_pos, win_valid, k_pages, v_pages,
+            page_index, page_valid)
 
     return fn
 
@@ -306,6 +418,34 @@ def make_train(arch: Arch, causal: bool, batch: int, seq: int):
     return fn
 
 
+def make_train_fused(arch: Arch, causal: bool, chunk: int, batch: int,
+                     seq: int):
+    """`chunk` fused fwd+bwd+AdamW steps in one on-device lax.scan.
+
+    Same per-step math as `make_train`; tokens/labels/masks carry a
+    leading [chunk] axis and the optimizer state threads through the scan,
+    so a training chunk costs one device call instead of `chunk`.
+    Outputs: params', m', v', loss f32[chunk].
+    """
+    step_fn = make_train(arch, causal, batch, seq)
+
+    def fn(flat, m, v, step, tokens, labels, loss_mask, attn_valid, lr,
+           ent_weight):
+        def body(carry, xs):
+            f, mm, vv, st = carry
+            t, lb, lm, av = xs
+            f2, m2, v2, loss = step_fn(f, mm, vv, st, t, lb, lm, av, lr,
+                                       ent_weight)
+            return (f2, m2, v2, st + 1), loss
+
+        (f2, m2, v2, _), losses = jax.lax.scan(
+            body, (flat, m, v, step),
+            (tokens, labels, loss_mask, attn_valid))
+        return f2, m2, v2, losses
+
+    return fn
+
+
 # --------------------------------------------------------------------------
 # pseudo-trajectory extraction (paper §3.1)
 # --------------------------------------------------------------------------
@@ -353,6 +493,87 @@ def make_trajectory(arch: Arch, batch: int, seq: int, steps: int = GEN_TRAIN):
             any_m = jnp.any(selectable, axis=1)
             hit = (iota == j[:, None]) & any_m[:, None]
             toks = jnp.where(hit, pred, toks)
+            rank = jnp.where(hit & (rank == RANK_NEVER), step, rank)
+            return (toks, rank), None
+
+        rank0 = jnp.full((batch, seq), RANK_NEVER, dtype=jnp.int32)
+        (toks, rank), _ = jax.lax.scan(
+            step_fn, (tokens, rank0), jnp.arange(steps, dtype=jnp.int32))
+        return rank, toks
+
+    return fn
+
+
+def make_trajectory_paged(arch: Arch, batch: int, seq: int,
+                          steps: int = GEN_TRAIN):
+    """Pseudo-trajectory extractor over a frozen, device-resident KV cache.
+
+    Same I/O contract as `make_trajectory`, but the scan re-runs only the
+    generation window: the prompt KV is prefilled once and read in place
+    every step (the serving path's block-approximate cache scheme) instead
+    of re-running the full [B, S] forward `steps` times. The extracted
+    order is therefore the *cached-decode* teacher order — the ordering
+    the serving hot path actually executes — and the per-step attention
+    cost drops from S^2 to W*(S+W).
+    """
+    w = steps  # the gen region is one window wide (GEN_TRAIN)
+
+    def fn(flat, tokens, attn_valid, gen_mask):
+        params = unflatten(flat, arch)
+        pos_ids = jnp.arange(seq, dtype=jnp.int32)
+        gen = gen_mask > 0.0
+        gen_start = jnp.argmax(gen_mask, axis=1).astype(jnp.int32)  # [B]
+        win_pos = (gen_start[:, None]
+                   + jnp.arange(w, dtype=jnp.int32)[None, :])  # [B, w]
+
+        # one bidirectional prefill (MASKs in place) builds the cache
+        bias_full = jnp.where(attn_valid[:, None, :] > 0.0, 0.0, NEG_INF)
+        bias_full = jnp.broadcast_to(bias_full, (batch, seq, seq))
+
+        def one_prefill(t, bias):
+            _, kvs = forward_single(params, t, pos_ids, bias, arch, "xla")
+            return (jnp.stack([k for k, _ in kvs]),
+                    jnp.stack([v for _, v in kvs]))
+
+        kcache, vcache = jax.vmap(one_prefill)(tokens, bias_full)
+
+        # window queries attend to frozen non-gen cache keys plus the
+        # window's own live keys (gen keys in the cache are stale MASKs)
+        cache_ok = (attn_valid > 0.0) & ~gen  # [B, S]
+        win_ok = jnp.take_along_axis(gen_mask, win_pos, axis=1) > 0.0
+        allowed = jnp.concatenate([cache_ok, win_ok], axis=1)  # [B, S+w]
+        bias_w = jnp.broadcast_to(
+            jnp.where(allowed[:, None, :], 0.0, NEG_INF),
+            (batch, w, seq + w))
+
+        vb = vocab_bias(arch)[None, None, :]
+        iota = jnp.arange(seq, dtype=jnp.int32)[None, :]
+        block_id_w = (jnp.arange(w, dtype=jnp.int32) // BLOCK)[None, :]
+
+        def step_fn(carry, step):
+            toks, rank = carry
+            win_toks = jnp.take_along_axis(toks, win_pos, axis=1)  # [B, w]
+
+            def one_win(wt, wp, kc, vc, b):
+                h, _, _ = forward_window(params, wt, wp, kc, vc, b, arch,
+                                         "xla")
+                return h
+
+            h = jax.vmap(one_win)(win_toks, win_pos, kcache, vcache, bias_w)
+            logits = h @ params["embed"].T + vb  # [B, w, V]
+            pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            conf = jnp.max(jax.nn.softmax(logits, axis=-1), axis=-1)
+            masked = (win_toks == MASK_ID) & win_ok
+            cur_block = jnp.min(
+                jnp.where(masked, block_id_w, jnp.int32(10**6)), axis=1)
+            selectable = masked & (block_id_w == cur_block[:, None])
+            score = jnp.where(selectable, conf, -1.0)
+            j = jnp.argmax(score, axis=1)  # [B], window-relative
+            any_m = jnp.any(selectable, axis=1)
+            j_abs = jnp.take_along_axis(win_pos, j[:, None], axis=1)[:, 0]
+            pred_j = jnp.take_along_axis(pred, j[:, None], axis=1)[:, 0]
+            hit = (iota == j_abs[:, None]) & any_m[:, None]
+            toks = jnp.where(hit, pred_j[:, None], toks)
             rank = jnp.where(hit & (rank == RANK_NEVER), step, rank)
             return (toks, rank), None
 

@@ -1,0 +1,7 @@
+"""Make `compile.*` importable regardless of pytest's invocation cwd
+(repo root in CI, `python/` locally)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -6,12 +6,13 @@ pin the parts Rust assumes.
 
 import json
 import os
+import re
 
 import numpy as np
 import pytest
 
 from compile import config as C
-from compile.aot import build_specs
+from compile.aot import EXEC_META, build_specs, to_hlo_text
 
 ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
 MANIFEST = os.path.join(ART, "manifest.json")
@@ -36,8 +37,76 @@ def test_exec_names_unique():
     for required in ("prefill_pallas", "prefill_xla", "decode_pallas",
                      "decode_xla", "ar_prefill", "ar_step", "ar_verify",
                      "train_diff", "train_ar", "trajectory",
-                     "draft_ar_prefill", "draft_ar_step", "draft_train_ar"):
+                     "draft_ar_prefill", "draft_ar_step", "draft_train_ar",
+                     "decode_paged_pallas", "decode_paged_xla",
+                     "prefill_batch", "decode_paged_batch",
+                     "train_diff_fused", "trajectory_paged"):
         assert required in names, required
+
+
+def test_exec_meta_geometry():
+    """The batched/paged ABI fields the v2 manifest records."""
+    assert EXEC_META["prefill_batch"]["batch"] == C.B_DECODE
+    assert EXEC_META["decode_paged_batch"]["batch"] == C.B_DECODE
+    assert EXEC_META["train_diff_fused"]["batch"] == C.TRAIN_CHUNK
+    for name in ("decode_paged_pallas", "decode_paged_xla",
+                 "decode_paged_batch"):
+        paged = EXEC_META[name]["paged"]
+        assert paged == {"page_rows": C.PAGE_ROWS, "max_pages": C.MAX_PAGES}
+    assert C.PAGE_ROWS * C.MAX_PAGES == C.S_MAX
+    # every meta name must exist as a spec
+    names = {s[0] for s in build_specs()}
+    assert set(EXEC_META) <= names
+
+
+# ---- HLO signature goldens for the batched + paged specs: the lowered
+#      entry computation must expose exactly the manifest signature
+#      (argument order, shapes, dtypes) the Rust loader validates against.
+
+_HLO_GOLDEN_NAMES = ("decode_paged_xla", "prefill_batch",
+                     "decode_paged_batch")
+
+_TY = {"f32": "f32", "i32": "s32"}  # manifest dtype -> HLO element type
+
+
+def _hlo_entry_types(text):
+    """(param_types, result_types) of the ENTRY computation, e.g. f32[3,4].
+
+    The HLO text emitter writes the signature as parameter instructions
+    plus a ROOT tuple inside the ENTRY block; layouts ({1,0}) are
+    stripped.
+    """
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    params, res = {}, None
+    for l in lines[start + 1:]:
+        if l.startswith("}"):
+            break
+        m = re.match(r"\s*\S+ = (\S+) parameter\((\d+)\)", l)
+        if m:
+            params[int(m.group(2))] = re.sub(r"\{[^}]*\}", "", m.group(1))
+        m = re.match(r"\s*ROOT \S+ = \((?P<tys>.*?)\) tuple\(", l)
+        if m:
+            res = [re.sub(r"\{[^}]*\}", "", t)
+                   for t in m.group("tys").split(", ")]
+    assert res is not None and sorted(params) == list(range(len(params)))
+    return [params[i] for i in range(len(params))], res
+
+
+def _sig_type(s):
+    dims = ",".join(str(d) for d in s["shape"])
+    return f"{_TY[s['dtype']]}[{dims}]"
+
+
+@pytest.mark.parametrize("name", _HLO_GOLDEN_NAMES)
+def test_hlo_signature_golden(name):
+    import jax
+    spec = next(s for s in build_specs() if s[0] == name)
+    _, _, fn, args, insig, outsig = spec
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    params, res = _hlo_entry_types(text)
+    assert params == [_sig_type(s) for s in insig], name
+    assert res == [_sig_type(s) for s in outsig], name
 
 
 @needs_artifacts

@@ -1,0 +1,237 @@
+"""Paged-attention kernel + batched/fused builder tests.
+
+Ground truth for the paged ABI: the packed-pages layout must be exactly
+equivalent to the dense cache image it replaces (same math, permutation-
+invariant over entries), the batched builders must match their B=1
+singles row-for-row, and the fused train chunk must match sequential
+steps. Everything runs in Pallas interpret mode (no device) — these are
+the tests the CI python job executes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import config as C
+from compile import model as M
+from compile.kernels.paged_attention import paged_flash_attention
+from compile.kernels.ref import attention_ref
+
+NEG_INF = -1e30
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _paged_ref(q, k_pages, v_pages, page_index, page_valid, k_win, v_win,
+               win_kmask):
+    """Dense oracle: flatten pages, build the mask, run attention_ref."""
+    h, mp, pr, dh = k_pages.shape
+    w = q.shape[1]
+    k_all = np.concatenate([k_pages.reshape(h, mp * pr, dh), k_win], axis=1)
+    v_all = np.concatenate([v_pages.reshape(h, mp * pr, dh), v_win], axis=1)
+    rows = np.arange(pr)[None, :]
+    entry_ok = (page_index[:, None] >= 0) & (rows < page_valid[:, None])
+    allowed = np.concatenate([entry_ok.reshape(mp * pr), win_kmask > 0.0])
+    bias = np.where(allowed[None, :], 0.0, NEG_INF)
+    bias = np.broadcast_to(bias, (w, mp * pr + w))
+    return np.asarray(attention_ref(jnp.asarray(q), jnp.asarray(k_all),
+                                    jnp.asarray(v_all), jnp.asarray(bias)))
+
+
+def _random_case(rng, h=2, mp=4, pr=8, w=16, dh=8):
+    q = rng.standard_normal((h, w, dh), dtype=np.float32)
+    k_pages = rng.standard_normal((h, mp, pr, dh), dtype=np.float32)
+    v_pages = rng.standard_normal((h, mp, pr, dh), dtype=np.float32)
+    k_win = rng.standard_normal((h, w, dh), dtype=np.float32)
+    v_win = rng.standard_normal((h, w, dh), dtype=np.float32)
+    # entry 2 dead, entry 3 partially valid — the mask must come from the
+    # page table, not from zeroed page contents
+    page_index = np.array([0, 1, -1, 2], dtype=np.int32)[:mp]
+    page_valid = np.array([pr, pr, 0, pr // 2], dtype=np.int32)[:mp]
+    win_kmask = (rng.random(w) > 0.25).astype(np.float32)
+    win_kmask[0] = 1.0  # at least one live key per query row
+    return q, k_pages, v_pages, page_index, page_valid, k_win, v_win, win_kmask
+
+
+def test_paged_kernel_matches_ref():
+    args = _random_case(_rng(1))
+    got = np.asarray(paged_flash_attention(
+        *(jnp.asarray(a) for a in args), bq=8))
+    want = _paged_ref(*args)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_paged_kernel_permutation_invariant():
+    q, kp, vp, pidx, pval, kw, vw, wm = _random_case(_rng(2))
+    base = np.asarray(paged_flash_attention(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(pidx),
+        jnp.asarray(pval), jnp.asarray(kw), jnp.asarray(vw), jnp.asarray(wm),
+        bq=8))
+    perm = np.array([3, 1, 0, 2])
+    shuffled = np.asarray(paged_flash_attention(
+        jnp.asarray(q), jnp.asarray(kp[:, perm]), jnp.asarray(vp[:, perm]),
+        jnp.asarray(pidx[perm]), jnp.asarray(pval[perm]), jnp.asarray(kw),
+        jnp.asarray(vw), jnp.asarray(wm), bq=8))
+    np.testing.assert_allclose(shuffled, base, atol=1e-5, rtol=1e-5)
+
+
+TINY = C.Arch(name="tiny", d_model=16, n_layers=2, n_heads=2, d_head=8,
+              d_ff=32, s_max=64)
+
+
+def _tiny_params(rng, arch):
+    _, total = C.param_layout(arch)
+    return jnp.asarray(rng.standard_normal(total, dtype=np.float32) * 0.05)
+
+
+def test_decode_paged_matches_dense_decode():
+    """Identity page table over a dense cache == the dense decode exec."""
+    rng = _rng(3)
+    arch, seq, w, pr = TINY, 64, 16, 8
+    mp = seq // pr
+    L, DKV = arch.n_layers, arch.d_kv
+    flat = _tiny_params(rng, arch)
+    kcache = rng.standard_normal((L, seq, DKV), dtype=np.float32)
+    vcache = rng.standard_normal((L, seq, DKV), dtype=np.float32)
+    n_valid = 20  # partial final page
+    cache_valid = (np.arange(seq) < n_valid).astype(np.float32)
+    win_tokens = rng.integers(5, C.VOCAB, w).astype(np.int32)
+    win_pos = (n_valid + np.arange(w)).astype(np.int32)
+    win_valid = np.ones(w, dtype=np.float32)
+
+    dense = M.make_decode(arch, "xla", w, seq)(
+        flat, jnp.asarray(win_tokens), jnp.asarray(win_pos),
+        jnp.asarray(win_valid), jnp.asarray(kcache), jnp.asarray(vcache),
+        jnp.asarray(cache_valid))
+
+    k_pages = kcache.reshape(L, mp, pr, DKV)
+    v_pages = vcache.reshape(L, mp, pr, DKV)
+    page_index = np.arange(mp, dtype=np.int32)
+    page_valid = np.clip(n_valid - page_index * pr, 0, pr).astype(np.int32)
+    paged = M.make_decode_paged(arch, "xla", w, pr, mp)(
+        flat, jnp.asarray(win_tokens), jnp.asarray(win_pos),
+        jnp.asarray(win_valid), jnp.asarray(k_pages),
+        jnp.asarray(v_pages), jnp.asarray(page_index),
+        jnp.asarray(page_valid))
+    for d, p in zip(dense, paged):
+        np.testing.assert_allclose(np.asarray(p), np.asarray(d),
+                                   atol=1e-4, rtol=1e-4)
+
+    # the pallas paged kernel must agree with the xla paged reference at
+    # the forward level (the fused head has its own tiling constraints and
+    # its own tests — here we pin the attention path)
+    params = M.unflatten(flat, arch)
+    h_args = (jnp.asarray(win_tokens), jnp.asarray(win_pos),
+              jnp.asarray(k_pages), jnp.asarray(v_pages),
+              jnp.asarray(page_index), jnp.asarray(page_valid),
+              jnp.asarray(win_valid))
+    ref = M.forward_window_paged(params, *h_args[:2], *h_args[2:6],
+                                 h_args[6], arch, "xla")
+    ker = M.forward_window_paged(params, *h_args[:2], *h_args[2:6],
+                                 h_args[6], arch, "pallas")
+    for a, b in zip(ref, ker):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_decode_paged_batch_matches_single():
+    rng = _rng(4)
+    arch, seq, w, pr, bd = TINY, 64, 16, 8, 3
+    mp = seq // pr
+    L, DKV = arch.n_layers, arch.d_kv
+    flat = _tiny_params(rng, arch)
+    args = dict(
+        win_tokens=rng.integers(5, C.VOCAB, (bd, w)).astype(np.int32),
+        win_pos=np.tile(np.arange(w, dtype=np.int32), (bd, 1)),
+        win_valid=np.ones((bd, w), dtype=np.float32),
+        k_pages=rng.standard_normal((bd, L, mp, pr, DKV), dtype=np.float32),
+        v_pages=rng.standard_normal((bd, L, mp, pr, DKV), dtype=np.float32),
+        page_index=np.tile(np.arange(mp, dtype=np.int32), (bd, 1)),
+        page_valid=np.full((bd, mp), pr, dtype=np.int32),
+    )
+    batched = M.make_decode_paged_batch(arch, "xla", bd, w, pr, mp)(
+        flat, *(jnp.asarray(v) for v in args.values()))
+    single = M.make_decode_paged(arch, "xla", w, pr, mp)
+    for b in range(bd):
+        one = single(flat, *(jnp.asarray(v[b]) for v in args.values()))
+        for sb, so in zip(batched, one):
+            np.testing.assert_allclose(np.asarray(sb[b]), np.asarray(so),
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_prefill_batch_matches_single():
+    rng = _rng(5)
+    arch, seq, bd = TINY, 64, 3
+    flat = _tiny_params(rng, arch)
+    tokens = rng.integers(5, C.VOCAB, (bd, seq)).astype(np.int32)
+    valid = (rng.random((bd, seq)) > 0.2).astype(np.float32)
+    valid[:, 0] = 1.0
+    batched = M.make_prefill_batch(arch, "xla", bd, seq)(
+        flat, jnp.asarray(tokens), jnp.asarray(valid))
+    single = M.make_prefill(arch, "xla", seq)
+    for b in range(bd):
+        one = single(flat, jnp.asarray(tokens[b]), jnp.asarray(valid[b]))
+        for sb, so in zip(batched, one):
+            np.testing.assert_allclose(np.asarray(sb[b]), np.asarray(so),
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_train_fused_matches_sequential_steps():
+    rng = _rng(6)
+    arch, chunk, b, seq = TINY, 2, 2, 32
+    _, total = C.param_layout(arch)
+    flat = _tiny_params(rng, arch)
+    m = jnp.zeros(total)
+    v = jnp.zeros(total)
+    tokens = rng.integers(5, C.VOCAB, (chunk, b, seq)).astype(np.int32)
+    labels = rng.integers(5, C.VOCAB, (chunk, b, seq)).astype(np.int32)
+    loss_mask = np.ones((chunk, b, seq), dtype=np.float32)
+    attn_valid = np.ones((chunk, b, seq), dtype=np.float32)
+    lr, ent_w = jnp.float32(1e-3), jnp.float32(0.01)
+
+    step_fn = M.make_train(arch, False, b, seq)
+    f_seq, m_seq, v_seq = flat, m, v
+    losses = []
+    for k in range(chunk):
+        f_seq, m_seq, v_seq, loss = step_fn(
+            f_seq, m_seq, v_seq, jnp.int32(1 + k), jnp.asarray(tokens[k]),
+            jnp.asarray(labels[k]), jnp.asarray(loss_mask[k]),
+            jnp.asarray(attn_valid[k]), lr, ent_w)
+        losses.append(float(loss))
+
+    fused = M.make_train_fused(arch, False, chunk, b, seq)(
+        flat, m, v, jnp.int32(1), jnp.asarray(tokens), jnp.asarray(labels),
+        jnp.asarray(loss_mask), jnp.asarray(attn_valid), lr, ent_w)
+    np.testing.assert_allclose(np.asarray(fused[0]), np.asarray(f_seq),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(fused[3]), np.asarray(losses),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_trajectory_paged_contract():
+    """One token unmasked per step, gen region only, ranks consistent."""
+    rng = _rng(7)
+    arch, bt, seq, steps = TINY, 2, 64, 32
+    flat = _tiny_params(rng, arch)
+    prompt_len = seq - steps
+    tokens = rng.integers(5, C.VOCAB, (bt, seq)).astype(np.int32)
+    tokens[:, prompt_len:] = C.MASK_ID
+    attn_valid = np.ones((bt, seq), dtype=np.float32)
+    gen_mask = np.zeros((bt, seq), dtype=np.float32)
+    gen_mask[:, prompt_len:] = 1.0
+
+    rank, final = M.make_trajectory_paged(arch, bt, seq, steps)(
+        flat, jnp.asarray(tokens), jnp.asarray(attn_valid),
+        jnp.asarray(gen_mask))
+    rank, final = np.asarray(rank), np.asarray(final)
+    assert rank.shape == (bt, seq) and final.shape == (bt, seq)
+    # prompt positions never ranked, tokens untouched
+    assert (rank[:, :prompt_len] == M.RANK_NEVER).all()
+    assert (final[:, :prompt_len] == tokens[:, :prompt_len]).all()
+    # exactly one unmask per step per row: gen ranks are a permutation
+    for b in range(bt):
+        gen_ranks = np.sort(rank[b, prompt_len:])
+        np.testing.assert_array_equal(gen_ranks, np.arange(steps))
+    # every unmasked position carries a real (non-MASK) token
+    assert (final[:, prompt_len:] != C.MASK_ID).all()

@@ -131,6 +131,7 @@ fn run(mode: AdaptiveMode) -> RunStats {
                 queue_depth: batcher.len(),
                 active_sessions: pool.len(),
                 est_wait_ms: batcher.estimated_wait_ms(),
+                round_ms: batcher.round_ms(),
             });
             pool.set_budgets(|dcfg, res| {
                 let b =

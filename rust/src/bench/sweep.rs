@@ -149,6 +149,7 @@ pub fn eval_adaptive_row(ctx: &BenchCtx, m: &MethodSpec, task: Family,
             queue_depth: ctrl.cfg.backlog_full,
             active_sessions: 4,
             est_wait_ms: 0.0,
+            round_ms: 0.0,
         });
     }
     let budget = ctrl

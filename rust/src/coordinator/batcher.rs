@@ -165,6 +165,13 @@ impl<T> Batcher<T> {
         self.heap.len() as f64 * self.round_ms
     }
 
+    /// Round-time EWMA (ms) on its own, independent of queue depth — the
+    /// adaptive controller's latency pressure term reads this. Zero until
+    /// the first round has been observed.
+    pub fn round_ms(&self) -> f64 {
+        self.round_ms
+    }
+
     fn push_job(&mut self, payload: T, priority: i64,
                 deadline_at_ms: Option<u64>) {
         self.heap.push(QueuedJob {

@@ -795,6 +795,7 @@ fn run_replica(replica: usize, cfg: &ServerCfg, jobs: &mpsc::Receiver<Job>,
                 queue_depth: batcher.len(),
                 active_sessions: pool.len(),
                 est_wait_ms: batcher.estimated_wait_ms(),
+                round_ms: batcher.round_ms(),
             });
             pool.set_budgets(|dcfg, res| {
                 ctrl.budget_for(dcfg.metric, res.mean_commit_entropy())

@@ -118,6 +118,11 @@ pub struct AdaptiveCfg {
     /// Estimated queue wait (ms) treated as full pressure (0 disables the
     /// wait term; pressure then follows queue depth alone).
     pub wait_full_ms: f64,
+    /// Per-round latency (ms) treated as full pressure (0 disables the
+    /// term). Couples the controller to device-side slowness: a latency
+    /// spike raises pressure even when the queue depth is flat, so the
+    /// budgets widen before the backlog ever builds.
+    pub round_full_ms: f64,
     /// EWMA smoothing factor for the pressure signal, in (0, 1].
     pub alpha: f64,
 }
@@ -135,6 +140,7 @@ impl Default for AdaptiveCfg {
             backlog_full: 4,
             pool_full: 0,
             wait_full_ms: 0.0,
+            round_full_ms: 0.0,
             alpha: 0.5,
         }
     }
@@ -150,6 +156,9 @@ pub struct LoadSignal {
     pub active_sessions: usize,
     /// Batcher drain estimate (queue depth x EWMA round time, ms).
     pub est_wait_ms: f64,
+    /// Batcher round-time EWMA (ms): how long one scheduling round has
+    /// been taking lately, independent of how many jobs are queued.
+    pub round_ms: f64,
 }
 
 /// Counters and gauges the controller exports through `{"cmd":"stats"}`.
@@ -222,7 +231,15 @@ impl AdaptiveController {
             (load.active_sessions as f64 / self.cfg.pool_full as f64)
                 .min(1.0)
         };
-        let raw = backlog_frac.max(wait_frac).max(occupancy_frac);
+        let round_frac = if self.cfg.round_full_ms > 0.0 {
+            (load.round_ms / self.cfg.round_full_ms).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        let raw = backlog_frac
+            .max(wait_frac)
+            .max(occupancy_frac)
+            .max(round_frac);
         let alpha = self.cfg.alpha.clamp(f64::MIN_POSITIVE, 1.0);
         self.pressure = (self.pressure + alpha * (raw - self.pressure))
             .clamp(0.0, 1.0);
@@ -316,7 +333,8 @@ mod tests {
     fn off_mode_emits_nothing() {
         let mut c = AdaptiveController::new(AdaptiveCfg::default());
         c.observe(&LoadSignal { queue_depth: 99, active_sessions: 9,
-                                est_wait_ms: 1e6 });
+                                est_wait_ms: 1e6,
+                                ..Default::default() });
         assert!(!c.enabled());
         assert_eq!(c.budget_for(SelMetric::Entropy(0.45), 0.0), None);
         assert_eq!(c.pressure(), 0.0);
@@ -342,7 +360,7 @@ mod tests {
         let mut last = 0.0f32;
         for _ in 0..12 {
             c.observe(&LoadSignal { queue_depth: 16, active_sessions: 4,
-                                    est_wait_ms: 0.0 });
+                                    ..Default::default() });
             let b = c.budget_for(SelMetric::Entropy(0.45), 0.0).unwrap();
             assert!(b.entropy_threshold >= last);
             last = b.entropy_threshold;
@@ -406,16 +424,47 @@ mod tests {
         let mut c = AdaptiveController::new(cfg);
         for _ in 0..12 {
             c.observe(&LoadSignal { queue_depth: 0, active_sessions: 4,
-                                    est_wait_ms: 0.0 });
+                                    ..Default::default() });
         }
         assert!(c.pressure() > 0.99, "got {}", c.pressure());
         // with the term disabled (default), the same trace stays idle
         let mut c = AdaptiveController::new(load_cfg());
         for _ in 0..12 {
             c.observe(&LoadSignal { queue_depth: 0, active_sessions: 4,
-                                    est_wait_ms: 0.0 });
+                                    ..Default::default() });
         }
         assert_eq!(c.pressure(), 0.0);
+    }
+
+    #[test]
+    fn latency_spike_raises_pressure_at_constant_queue_depth() {
+        // the batcher's round-time EWMA is a pressure term of its own:
+        // rounds slowing down must raise pressure even while queue depth
+        // (and hence the backlog term) stays flat
+        let mut cfg = load_cfg();
+        cfg.backlog_full = 100; // depth 2 ~ no backlog pressure
+        cfg.round_full_ms = 50.0;
+        let mut c = AdaptiveController::new(cfg.clone());
+        for _ in 0..12 {
+            c.observe(&LoadSignal { queue_depth: 2, round_ms: 5.0,
+                                    ..Default::default() });
+        }
+        let calm = c.pressure();
+        for _ in 0..12 {
+            c.observe(&LoadSignal { queue_depth: 2, round_ms: 80.0,
+                                    ..Default::default() });
+        }
+        assert!(calm < 0.1, "fast rounds read as load: {calm}");
+        assert!(c.pressure() > 0.99,
+                "latency spike did not saturate pressure: {}", c.pressure());
+        // with the term disabled (default 0), the same spike is invisible
+        cfg.round_full_ms = 0.0;
+        let mut c = AdaptiveController::new(cfg);
+        for _ in 0..12 {
+            c.observe(&LoadSignal { queue_depth: 2, round_ms: 80.0,
+                                    ..Default::default() });
+        }
+        assert!(c.pressure() < 0.1, "got {}", c.pressure());
     }
 
     #[test]

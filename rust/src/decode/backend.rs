@@ -19,27 +19,31 @@
 //! view into the shared `SharedKvPool` run through identical code. Both
 //! backends read the cache paged-natively (`KvView::page_args` /
 //! `for_each_page`): `SimBackend` fingerprints the page table in place
-//! (O(live-pages) per step), and the PJRT engine stages only the pages
-//! that changed since its reusable scratch last held them
-//! (`Engine::kv_stage`) — dense caches are still handed over borrow-only,
-//! and neither path re-gathers `[L, S_max, d_kv]` per forward.
+//! (O(live-pages) per step), and the PJRT engine packs the live pages
+//! into the page-table arguments of a paged executable
+//! (`exec::pack_page_table` — bytes copied scale with valid rows) when
+//! the manifest ships one, staging through its reusable scratch
+//! (`Engine::kv_stage`) only on the v1 fallback path. Dense caches are
+//! handed over borrow-only (or sliced into page entries for the paged
+//! executables), and no path re-gathers `[L, S_max, d_kv]` per forward.
 //!
 //! ## Batched forwards
 //!
 //! `prefill_batch` / `decode_window_batch` run B same-shape forwards in
 //! one backend call. The serving scheduler (`SessionPool::step_round`)
 //! coalesces the per-round forwards of sessions whose rounds share a
-//! shape — (executable, sequence/window length) — into one such call. The
-//! default implementations loop over `prefill` / `decode_window`, so a
-//! backend without a lowered B>1 executable (today's `Engine`) keeps
-//! working unchanged; `SimBackend` overrides them with a genuinely
-//! batched single-pass implementation whose per-item outputs are
-//! bit-identical to the B=1 path.
+//! shape — (executable, sequence/window length) — into one such call.
+//! The default implementations loop over `prefill` / `decode_window`;
+//! `SimBackend` overrides them with a genuinely batched single-pass
+//! implementation whose per-item outputs are bit-identical to the B=1
+//! path, and `Engine` routes eligible groups through the lowered B>1
+//! executables (manifest format_version >= 2), falling back to the loop
+//! for v1 artifact dirs.
 
 use anyhow::Result;
 
-use crate::model::exec::{self, DecodeOut, PrefillOut, TrainOut,
-                         TrajectoryOut};
+use crate::model::exec::{self, DecodeOut, PrefillOut, TrainFusedOut,
+                         TrainOut, TrajectoryOut};
 use crate::model::KvView;
 use crate::runtime::manifest::{Constants, ModelSpec};
 use crate::runtime::Engine;
@@ -121,6 +125,48 @@ pub trait Backend {
                   loss_mask: &[f32], attn_valid: &[f32], lr: f32,
                   ent_weight: f32) -> Result<TrainOut>;
 
+    /// Chunk size K of a fused multi-step train executable serving
+    /// `exec`, `None` when each step must be its own call (the default —
+    /// and what v1 artifact dirs report, so the training driver keeps
+    /// its per-step loop there).
+    fn fused_train_chunk(&self, _exec: &str) -> Option<usize> {
+        None
+    }
+
+    /// K sequential fused train steps over batches stacked `[K, B,
+    /// s_train]`, inner step counter advancing `step0 .. step0 + K`.
+    /// Default: K looped `train_step` calls — arithmetically the fused
+    /// scan, fused nowhere. Callers pass the `k` they got from
+    /// [`Backend::fused_train_chunk`].
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_fused(&self, exec: &str, k: usize, params: &[f32],
+                        m: &[f32], v: &[f32], step0: i32, tokens: &[i32],
+                        labels: &[i32], loss_mask: &[f32],
+                        attn_valid: &[f32], lr: f32, ent_weight: f32)
+                        -> Result<TrainFusedOut> {
+        if k == 0 || tokens.len() % k != 0 {
+            anyhow::bail!("train_step_fused: bad chunk {k} for {} tokens",
+                          tokens.len());
+        }
+        let per = tokens.len() / k;
+        let mut p = params.to_vec();
+        let mut mm = m.to_vec();
+        let mut vv = v.to_vec();
+        let mut loss = Vec::with_capacity(k);
+        for i in 0..k {
+            let r = i * per..(i + 1) * per;
+            let out = self.train_step(
+                exec, &p, &mm, &vv, step0 + i as i32, &tokens[r.clone()],
+                &labels[r.clone()], &loss_mask[r.clone()],
+                &attn_valid[r], lr, ent_weight)?;
+            p = out.params;
+            mm = out.m;
+            vv = out.v;
+            loss.push(out.loss);
+        }
+        Ok(TrainFusedOut { params: p, m: mm, v: vv, loss })
+    }
+
     /// Batched whole-scan teacher decoding-order extraction over
     /// `[B, s_train]` rows: unmask exactly one token per step (earliest
     /// incomplete block, highest confidence) and record each position's
@@ -153,9 +199,67 @@ impl Backend for Engine {
                             win_valid, cache)
     }
 
-    // `Engine` inherits the loop-based batch defaults: the AOT layer has
-    // no B>1 executable yet (see ROADMAP), so batching degenerates to B
-    // sequential forwards with identical outputs.
+    // Batched forwards: route a same-exec group through the B>1
+    // executables (`prefill_batch` / `decode_paged_batch`) when the
+    // manifest ships them. `exec::*_batch` returns `Ok(None)` whenever
+    // the lowering cannot serve the group — v1 artifacts, the AR/draft
+    // executables, or a cache-geometry mismatch — and the loop default
+    // runs instead, so old artifact dirs batch exactly as before
+    // (B sequential forwards with identical outputs).
+
+    fn prefill_batch(&self, params: &[f32], items: &[PrefillItem<'_>])
+                     -> Result<Vec<PrefillOut>> {
+        if items.len() >= 2
+            && items.iter().all(|it| it.exec == items[0].exec)
+        {
+            let group: Vec<exec::PrefillBatchItem<'_>> = items
+                .iter()
+                .map(|it| exec::PrefillBatchItem {
+                    tokens: it.tokens,
+                    valid: it.valid,
+                })
+                .collect();
+            if let Some(outs) =
+                exec::prefill_batch(self, items[0].exec, params, &group)?
+            {
+                return Ok(outs);
+            }
+        }
+        items
+            .iter()
+            .map(|it| self.prefill(it.exec, params, it.tokens, it.valid))
+            .collect()
+    }
+
+    fn decode_window_batch(&self, params: &[f32],
+                           items: &[WindowItem<'_>])
+                           -> Result<Vec<DecodeOut>> {
+        if items.len() >= 2
+            && items.iter().all(|it| it.exec == items[0].exec)
+        {
+            let group: Vec<exec::WindowBatchItem<'_>> = items
+                .iter()
+                .map(|it| exec::WindowBatchItem {
+                    tokens: it.tokens,
+                    pos: it.pos,
+                    valid: it.valid,
+                    cache: it.cache,
+                })
+                .collect();
+            if let Some(outs) = exec::decode_window_batch(
+                self, items[0].exec, params, &group)?
+            {
+                return Ok(outs);
+            }
+        }
+        items
+            .iter()
+            .map(|it| {
+                self.decode_window(it.exec, params, it.tokens, it.pos,
+                                   it.valid, it.cache)
+            })
+            .collect()
+    }
 
     fn train_step(&self, exec_name: &str, params: &[f32], m: &[f32],
                   v: &[f32], step: i32, tokens: &[i32], labels: &[i32],
@@ -165,8 +269,45 @@ impl Backend for Engine {
                          labels, loss_mask, attn_valid, lr, ent_weight)
     }
 
+    /// The fused multi-step lowering exists for the diffusion objective
+    /// only (`train_diff_fused`, manifest format_version >= 2); AR and
+    /// draft training keep the per-step path everywhere.
+    fn fused_train_chunk(&self, exec: &str) -> Option<usize> {
+        if exec != "train_diff" {
+            return None;
+        }
+        self.manifest.executables.get("train_diff_fused")?.batch
+    }
+
+    fn train_step_fused(&self, exec: &str, k: usize, params: &[f32],
+                        m: &[f32], v: &[f32], step0: i32, tokens: &[i32],
+                        labels: &[i32], loss_mask: &[f32],
+                        attn_valid: &[f32], lr: f32, ent_weight: f32)
+                        -> Result<TrainFusedOut> {
+        if self.fused_train_chunk(exec) != Some(k) {
+            anyhow::bail!("train_step_fused: no fused lowering for \
+                           `{exec}` with chunk {k}");
+        }
+        exec::train_step_fused(self, params, m, v, step0, tokens, labels,
+                               loss_mask, attn_valid, lr, ent_weight)
+    }
+
     fn trajectory(&self, params: &[f32], tokens: &[i32], attn_valid: &[f32],
                   gen_mask: &[f32]) -> Result<TrajectoryOut> {
+        // prefer the paged on-device scan when the artifact set ships it
+        // (manifest format_version >= 2) with the same [B, S] geometry
+        // and signature — identical outputs, paged window reads inside
+        if let (Ok(dense), Some(paged)) = (
+            self.manifest.exec("trajectory"),
+            self.manifest.executables.get("trajectory_paged"),
+        ) {
+            if paged.inputs.len() == dense.inputs.len()
+                && paged.inputs[1].shape == dense.inputs[1].shape
+            {
+                return exec::trajectory_paged(self, params, tokens,
+                                              attn_valid, gen_mask);
+            }
+        }
         exec::trajectory(self, params, tokens, attn_valid, gen_mask)
     }
 }

@@ -18,11 +18,11 @@ use crate::metrics::{ForwardMix, RunMetrics};
 use crate::tokenizer::Tokenizer;
 
 /// Default number of eval sessions in flight. Bounds resident cache
-/// memory at `width` dense `KvCache` buffers; on a backend without a
-/// lowered B>1 executable (today's `Engine`) the batched calls fall back
-/// to loops, so the width costs memory without throughput until that
-/// executable lands — pass width 1 to `evaluate_pooled` to reproduce
-/// classic sequential evaluation exactly.
+/// memory at `width` dense `KvCache` buffers; coalesced same-shape
+/// rounds run through the lowered B>1 executables when the artifact set
+/// ships them (manifest format_version >= 2) and fall back to loops on
+/// v1 artifacts — pass width 1 to `evaluate_pooled` to reproduce classic
+/// sequential evaluation exactly.
 pub const DEFAULT_EVAL_WIDTH: usize = 8;
 
 /// Per-task generation length (tokens, block multiple).

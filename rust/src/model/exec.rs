@@ -1,6 +1,13 @@
 //! Typed host-side wrappers around the AOT executables: each wrapper
 //! assembles the manifest-ordered argument list, runs the graph, and
 //! unpacks outputs into plain Rust vectors.
+//!
+//! Since manifest format_version 2 the artifact set also ships
+//! paged-native and batched lowerings (`decode_paged_{variant}`,
+//! `prefill_batch`, `decode_paged_batch`, `train_diff_fused`,
+//! `trajectory_paged`). Every wrapper here probes the manifest and uses
+//! them when present, falling back to the per-item / staged v1 path
+//! otherwise — old artifact dirs keep working bit-identically.
 
 use anyhow::{bail, Result};
 use xla::Literal;
@@ -35,6 +42,15 @@ pub struct TrainOut {
     pub m: Vec<f32>,
     pub v: Vec<f32>,
     pub loss: f32,
+}
+
+/// Output of the chunked fused train step (`train_diff_fused`): K
+/// optimizer steps in one device call, one loss per inner step.
+pub struct TrainFusedOut {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub loss: Vec<f32>,
 }
 
 /// Output of the pseudo-trajectory extractor.
@@ -73,17 +89,175 @@ pub fn prefill(eng: &Engine, exec: &str, params: &[f32], tokens: &[i32],
     })
 }
 
+// ------------------------------------------------------------ page tables
+
+/// Packed page-table argument image for a paged executable: the host-side
+/// form of [`crate::runtime::manifest::PagedAbi`]. Entries hold live
+/// pages in arbitrary order; `page_index[j] >= 0` marks entry `j` live
+/// and `page_valid[j]` counts its attendable rows, packed to the front of
+/// the entry. The executable masks row `r` of entry `j` attendable iff
+/// `page_index[j] >= 0 && r < page_valid[j]`.
+pub struct PageTableArgs {
+    /// `[L, max_pages, page_rows, d_kv]` packed key rows.
+    pub k_pages: Vec<f32>,
+    /// `[L, max_pages, page_rows, d_kv]` packed value rows.
+    pub v_pages: Vec<f32>,
+    /// `[max_pages]` slot index of each live entry, `-1` = dead.
+    pub page_index: Vec<i32>,
+    /// `[max_pages]` packed valid-row count per entry.
+    pub page_valid: Vec<i32>,
+    /// Total rows packed (== the view's `valid_count`).
+    pub rows_packed: usize,
+}
+
+/// Build the packed page-table arguments for `cache` against a
+/// `page_rows x max_pages` ABI.
+///
+/// Valid rows are **compacted to the front of each entry**: pool pages
+/// can hold scattered valid rows (decode strategies commit individual
+/// unmasked positions mid-block), while the lowered kernel expects
+/// prefix-valid entries. Compaction is exact — positional information is
+/// baked into the cached K/V vectors when they are produced, and
+/// attention is permutation-invariant over its key rows, so only *which*
+/// rows are attendable matters, never where they sit in the entry.
+///
+/// Paged views are read in place through [`KvView::for_each_page`]
+/// (bytes copied scale with *valid rows*, not capacity — the dense
+/// `[L, S_max, d_kv]` gather and the [`crate::model::kv_cache::KvStaging`]
+/// scratch are both off this path); dense caches are sliced into
+/// `page_rows`-row chunks with identity slot mapping, so one paged
+/// executable serves both storage backends.
+pub fn pack_page_table(cache: &dyn KvView, page_rows: usize,
+                       max_pages: usize) -> Result<PageTableArgs> {
+    let (l, d) = (cache.layers(), cache.d_kv());
+    let (pr, mp) = (page_rows, max_pages);
+    let mut t = PageTableArgs {
+        k_pages: vec![0.0; l * mp * pr * d],
+        v_pages: vec![0.0; l * mp * pr * d],
+        page_index: vec![-1; mp],
+        page_valid: vec![0; mp],
+        rows_packed: 0,
+    };
+    if let Some(view_pr) = cache.page_rows() {
+        if view_pr != pr {
+            bail!("page table: view page_rows {view_pr} != executable \
+                   page_rows {pr}");
+        }
+        let mut next = 0usize;
+        let mut overflow = false;
+        cache.for_each_page(&mut |pg| {
+            if next >= mp {
+                overflow = true;
+                return;
+            }
+            let j = next;
+            next += 1;
+            t.page_index[j] = pg.slot as i32;
+            let mut packed = 0usize;
+            for r_idx in 0..pg.rows.min(pr) {
+                if pg.valid[r_idx] > 0.0 {
+                    for layer in 0..l {
+                        let src = (layer * pr + r_idx) * d;
+                        let dst = ((layer * mp + j) * pr + packed) * d;
+                        t.k_pages[dst..dst + d]
+                            .copy_from_slice(&pg.k[src..src + d]);
+                        t.v_pages[dst..dst + d]
+                            .copy_from_slice(&pg.v[src..src + d]);
+                    }
+                    packed += 1;
+                }
+            }
+            t.page_valid[j] = packed as i32;
+            t.rows_packed += packed;
+        });
+        if overflow {
+            bail!("page table: view holds more than {mp} live pages");
+        }
+    } else {
+        // dense storage: identity slot mapping, same per-slice compaction
+        let (ck, cv, cvalid) =
+            (cache.k_dense(), cache.v_dense(), cache.valid_dense());
+        let (ck, cv, cvalid) = (ck.as_ref(), cv.as_ref(), cvalid.as_ref());
+        let s = cache.capacity();
+        for j in 0..mp {
+            let base = j * pr;
+            if base >= s {
+                break;
+            }
+            let rows = pr.min(s - base);
+            let mut packed = 0usize;
+            for r_idx in 0..rows {
+                if cvalid[base + r_idx] > 0.0 {
+                    for layer in 0..l {
+                        let src = (layer * s + base + r_idx) * d;
+                        let dst = ((layer * mp + j) * pr + packed) * d;
+                        t.k_pages[dst..dst + d]
+                            .copy_from_slice(&ck[src..src + d]);
+                        t.v_pages[dst..dst + d]
+                            .copy_from_slice(&cv[src..src + d]);
+                    }
+                    packed += 1;
+                }
+            }
+            if packed > 0 {
+                t.page_index[j] = j as i32;
+                t.page_valid[j] = packed as i32;
+                t.rows_packed += packed;
+            }
+        }
+    }
+    debug_assert_eq!(t.rows_packed, cache.valid_count());
+    Ok(t)
+}
+
+/// Resolve the paged lowering that can serve a `decode_{variant}` call
+/// against `cache`, or `None` when the staged/dense fallback must run:
+/// v1 manifests (no paged executable), a window-length or cache-geometry
+/// mismatch, or a paged view whose page size differs from the lowered
+/// ABI. Every gate failing is a *fallback*, not an error — the pinned
+/// behavior for old artifact dirs.
+fn paged_decode_spec(eng: &Engine, exec: &str, cache: &dyn KvView,
+                     w: usize) -> Option<ExecSpec> {
+    let variant = exec.strip_prefix("decode_")?;
+    if variant.starts_with("paged") {
+        return None;
+    }
+    let spec = eng.manifest.executables.get(&format!("decode_paged_{variant}"))?;
+    let abi = spec.paged?;
+    if abi.page_rows * abi.max_pages != cache.capacity() {
+        return None;
+    }
+    if let Some(view_pr) = cache.page_rows() {
+        if view_pr != abi.page_rows {
+            return None;
+        }
+    }
+    if spec.inputs.len() != 8 || spec.inputs[1].shape != [w] {
+        return None;
+    }
+    let want = [cache.layers(), abi.max_pages, abi.page_rows, cache.d_kv()];
+    if spec.inputs[4].shape != want {
+        return None;
+    }
+    Some(spec.clone())
+}
+
 /// Windowed forward against the KV cache (`decode_{variant}`, `ar_step`,
 /// `ar_verify`, `draft_ar_step`): the serving hot path. Accepts any
-/// [`KvView`]: the dense cache hands over its buffers borrow-only; a
-/// paged view is read through its page table (`KvView::page_rows` /
-/// `for_each_page`, allocation-free) into
-/// the engine's reusable staging scratch, which copies only pages that
-/// changed since the scratch last held them (`Engine::kv_stage`) — the
-/// old per-call full-cache `k_dense()` gather is gone from this path.
-/// The HLO exec interface is unchanged: the executable still consumes
-/// dense `[L, S_max, d_kv]` buffers until a true paged-attention
-/// executable lands in the AOT layer (python/compile).
+/// [`KvView`].
+///
+/// When the artifact set ships a paged lowering
+/// (`decode_paged_{variant}`, manifest format_version >= 2) whose ABI
+/// matches the cache geometry, the forward consumes the page table
+/// directly ([`pack_page_table`]): pages are read in place via
+/// `for_each_page`, bytes copied scale with valid rows, and the
+/// [`crate::model::kv_cache::KvStaging`] dense-gather scratch is never
+/// touched. Otherwise — v1 artifacts, ABI mismatch, or the AR/draft
+/// executables which have no paged lowering — the pinned fallback runs:
+/// a paged view is staged into the engine's reusable scratch
+/// (`Engine::kv_stage`, copying only pages that changed since the
+/// scratch last held them) and a dense cache hands its buffers over
+/// borrow-only, exactly the pre-v2 behavior.
 pub fn decode_window(eng: &Engine, exec: &str, params: &[f32],
                      win_tokens: &[i32], win_pos: &[i32], win_valid: &[f32],
                      cache: &dyn KvView) -> Result<DecodeOut> {
@@ -91,6 +265,10 @@ pub fn decode_window(eng: &Engine, exec: &str, params: &[f32],
     let w = spec.inputs[1].shape[0];
     if win_tokens.len() != w || win_pos.len() != w || win_valid.len() != w {
         bail!("decode: window inputs must be length {w}");
+    }
+    if let Some(pspec) = paged_decode_spec(eng, exec, cache, w) {
+        return decode_window_paged(eng, &pspec, params, win_tokens,
+                                   win_pos, win_valid, cache);
     }
     // Every cache argument is validated against the manifest shape on
     // BOTH call paths (buffered and literal); a view whose capacity
@@ -104,7 +282,8 @@ pub fn decode_window(eng: &Engine, exec: &str, params: &[f32],
               cache.capacity(), spec.inputs[6].shape);
     }
     let out = if cache.page_rows().is_some() {
-        // paged-native read: stage only the pages that changed since the
+        // staged fallback: bring the reusable scratch to this view's
+        // dense image, copying only the pages that changed since the
         // scratch last held them (allocation-free steady state)
         let mut stage = eng.kv_stage();
         stage.stage(cache)?;
@@ -115,6 +294,46 @@ pub fn decode_window(eng: &Engine, exec: &str, params: &[f32],
             (cache.k_dense(), cache.v_dense(), cache.valid_dense());
         run_decode(eng, exec, &spec, params, win_tokens, win_pos,
                    win_valid, ck.as_ref(), cv.as_ref(), cvalid.as_ref())?
+    };
+    Ok(DecodeOut {
+        argmax: to_vec_i32(&out[0], &spec.outputs[0])?,
+        conf: to_vec_f32(&out[1], &spec.outputs[1])?,
+        entropy: to_vec_f32(&out[2], &spec.outputs[2])?,
+        k_win: to_vec_f32(&out[3], &spec.outputs[3])?,
+        v_win: to_vec_f32(&out[4], &spec.outputs[4])?,
+    })
+}
+
+/// Paged-native windowed forward: feed the packed page table straight to
+/// a `decode_paged_{variant}` executable. No staging scratch, no dense
+/// gather — the 0-staged-bytes hot path pinned in `benches/hotpath.rs`.
+fn decode_window_paged(eng: &Engine, spec: &ExecSpec, params: &[f32],
+                       win_tokens: &[i32], win_pos: &[i32],
+                       win_valid: &[f32], cache: &dyn KvView)
+                       -> Result<DecodeOut> {
+    let abi = spec.paged.expect("paged_decode_spec checked");
+    let t = pack_page_table(cache, abi.page_rows, abi.max_pages)?;
+    let out = if eng.buffered() {
+        eng.run_buffered(&spec.name, params, &[
+            ArgData::I32(win_tokens, &spec.inputs[1].shape),
+            ArgData::I32(win_pos, &spec.inputs[2].shape),
+            ArgData::F32(win_valid, &spec.inputs[3].shape),
+            ArgData::F32(&t.k_pages, &spec.inputs[4].shape),
+            ArgData::F32(&t.v_pages, &spec.inputs[5].shape),
+            ArgData::I32(&t.page_index, &spec.inputs[6].shape),
+            ArgData::I32(&t.page_valid, &spec.inputs[7].shape),
+        ])?
+    } else {
+        let args = TypedArgs::new()
+            .f32(params, &spec.inputs[0].shape)?
+            .i32(win_tokens, &spec.inputs[1].shape)?
+            .i32(win_pos, &spec.inputs[2].shape)?
+            .f32(win_valid, &spec.inputs[3].shape)?
+            .f32(&t.k_pages, &spec.inputs[4].shape)?
+            .f32(&t.v_pages, &spec.inputs[5].shape)?
+            .i32(&t.page_index, &spec.inputs[6].shape)?
+            .i32(&t.page_valid, &spec.inputs[7].shape)?;
+        eng.run(&spec.name, args)?
     };
     Ok(DecodeOut {
         argmax: to_vec_i32(&out[0], &spec.outputs[0])?,
@@ -155,6 +374,209 @@ fn run_decode(eng: &Engine, exec: &str, spec: &ExecSpec, params: &[f32],
     }
 }
 
+// --------------------------------------------------------- batched calls
+
+/// One sequence of a batched full forward (exec-name-agnostic form the
+/// `exec` layer consumes; `decode::backend` adapts its item type).
+pub struct PrefillBatchItem<'a> {
+    pub tokens: &'a [i32],
+    pub valid: &'a [f32],
+}
+
+/// One windowed forward of a batched paged decode call.
+pub struct WindowBatchItem<'a> {
+    pub tokens: &'a [i32],
+    pub pos: &'a [i32],
+    pub valid: &'a [f32],
+    pub cache: &'a dyn KvView,
+}
+
+/// B same-shape full forwards through the `prefill_batch` executable.
+/// Returns `Ok(None)` when the batched lowering cannot serve this group
+/// (v1 manifest, different model family, or a sequence-length mismatch) —
+/// the caller then loops over [`prefill`]. Groups larger than the
+/// lowered batch are chunked; a partial last chunk pads its unused lanes
+/// with lane 0's arguments and discards the padded outputs.
+pub fn prefill_batch(eng: &Engine, exec: &str, params: &[f32],
+                     items: &[PrefillBatchItem<'_>])
+                     -> Result<Option<Vec<PrefillOut>>> {
+    // only the bidirectional main-family prefills have a batched
+    // lowering; ar_prefill (causal) and draft_* (different model) do not
+    if !exec.starts_with("prefill_") {
+        return Ok(None);
+    }
+    let Some(bspec) = eng.manifest.executables.get("prefill_batch") else {
+        return Ok(None);
+    };
+    let bspec = bspec.clone();
+    let Some(b) = bspec.batch else { return Ok(None) };
+    if eng.manifest.exec(exec)?.model != bspec.model {
+        return Ok(None);
+    }
+    if bspec.inputs[1].shape.len() != 2 || bspec.inputs[1].shape[0] != b {
+        return Ok(None);
+    }
+    let s = bspec.inputs[1].shape[1];
+    if items.iter().any(|it| it.tokens.len() != s || it.valid.len() != s) {
+        return Ok(None);
+    }
+    let mut outs = Vec::with_capacity(items.len());
+    for chunk in items.chunks(b) {
+        let mut tok = Vec::with_capacity(b * s);
+        let mut vld = Vec::with_capacity(b * s);
+        for lane in 0..b {
+            let it = chunk.get(lane).unwrap_or(&chunk[0]);
+            tok.extend_from_slice(it.tokens);
+            vld.extend_from_slice(it.valid);
+        }
+        let out = if eng.buffered() {
+            eng.run_buffered(&bspec.name, params, &[
+                ArgData::I32(&tok, &bspec.inputs[1].shape),
+                ArgData::F32(&vld, &bspec.inputs[2].shape),
+            ])?
+        } else {
+            let args = TypedArgs::new()
+                .f32(params, &bspec.inputs[0].shape)?
+                .i32(&tok, &bspec.inputs[1].shape)?
+                .f32(&vld, &bspec.inputs[2].shape)?;
+            eng.run(&bspec.name, args)?
+        };
+        let kc = to_vec_f32(&out[0], &bspec.outputs[0])?;
+        let vc = to_vec_f32(&out[1], &bspec.outputs[1])?;
+        let am = to_vec_i32(&out[2], &bspec.outputs[2])?;
+        let cf = to_vec_f32(&out[3], &bspec.outputs[3])?;
+        let en = to_vec_f32(&out[4], &bspec.outputs[4])?;
+        let (nc, nw) = (kc.len() / b, am.len() / b);
+        for lane in 0..chunk.len() {
+            outs.push(PrefillOut {
+                kcache: kc[lane * nc..(lane + 1) * nc].to_vec(),
+                vcache: vc[lane * nc..(lane + 1) * nc].to_vec(),
+                argmax: am[lane * nw..(lane + 1) * nw].to_vec(),
+                conf: cf[lane * nw..(lane + 1) * nw].to_vec(),
+                entropy: en[lane * nw..(lane + 1) * nw].to_vec(),
+            });
+        }
+    }
+    Ok(Some(outs))
+}
+
+/// B same-shape windowed forwards (each against its own cache view)
+/// through the `decode_paged_batch` executable. Returns `Ok(None)` when
+/// the batched paged lowering cannot serve this group — v1 manifests,
+/// the AR/draft window executables, or any item whose cache geometry
+/// disagrees with the lowered page-table ABI — and the caller loops over
+/// [`decode_window`] (which may still take the B=1 paged lowering per
+/// item).
+pub fn decode_window_batch(eng: &Engine, exec: &str, params: &[f32],
+                           items: &[WindowBatchItem<'_>])
+                           -> Result<Option<Vec<DecodeOut>>> {
+    let Some(variant) = exec.strip_prefix("decode_") else {
+        return Ok(None);
+    };
+    if variant.starts_with("paged") {
+        return Ok(None);
+    }
+    let Some(bspec) = eng.manifest.executables.get("decode_paged_batch")
+    else {
+        return Ok(None);
+    };
+    let bspec = bspec.clone();
+    let (Some(b), Some(abi)) = (bspec.batch, bspec.paged) else {
+        return Ok(None);
+    };
+    if eng.manifest.exec(exec)?.model != bspec.model {
+        return Ok(None);
+    }
+    if bspec.inputs[1].shape.len() != 2 || bspec.inputs[1].shape[0] != b {
+        return Ok(None);
+    }
+    let w = bspec.inputs[1].shape[1];
+    let cap = abi.page_rows * abi.max_pages;
+    for it in items {
+        if it.tokens.len() != w || it.pos.len() != w || it.valid.len() != w {
+            return Ok(None);
+        }
+        if it.cache.capacity() != cap
+            || it.cache.page_rows().is_some_and(|pr| pr != abi.page_rows)
+        {
+            return Ok(None);
+        }
+        let want = [b, it.cache.layers(), abi.max_pages, abi.page_rows,
+                    it.cache.d_kv()];
+        if bspec.inputs[4].shape != want {
+            return Ok(None);
+        }
+    }
+    let mut outs = Vec::with_capacity(items.len());
+    for chunk in items.chunks(b) {
+        let tables = chunk
+            .iter()
+            .map(|it| pack_page_table(it.cache, abi.page_rows,
+                                      abi.max_pages))
+            .collect::<Result<Vec<_>>>()?;
+        let per_kv = tables[0].k_pages.len();
+        let mut tok = Vec::with_capacity(b * w);
+        let mut pos = Vec::with_capacity(b * w);
+        let mut vld = Vec::with_capacity(b * w);
+        let mut kp = Vec::with_capacity(b * per_kv);
+        let mut vp = Vec::with_capacity(b * per_kv);
+        let mut pidx = Vec::with_capacity(b * abi.max_pages);
+        let mut pval = Vec::with_capacity(b * abi.max_pages);
+        for lane in 0..b {
+            // pad unused lanes with lane 0 and discard their outputs
+            let (it, t) = match chunk.get(lane) {
+                Some(it) => (it, &tables[lane]),
+                None => (&chunk[0], &tables[0]),
+            };
+            tok.extend_from_slice(it.tokens);
+            pos.extend_from_slice(it.pos);
+            vld.extend_from_slice(it.valid);
+            kp.extend_from_slice(&t.k_pages);
+            vp.extend_from_slice(&t.v_pages);
+            pidx.extend_from_slice(&t.page_index);
+            pval.extend_from_slice(&t.page_valid);
+        }
+        let out = if eng.buffered() {
+            eng.run_buffered(&bspec.name, params, &[
+                ArgData::I32(&tok, &bspec.inputs[1].shape),
+                ArgData::I32(&pos, &bspec.inputs[2].shape),
+                ArgData::F32(&vld, &bspec.inputs[3].shape),
+                ArgData::F32(&kp, &bspec.inputs[4].shape),
+                ArgData::F32(&vp, &bspec.inputs[5].shape),
+                ArgData::I32(&pidx, &bspec.inputs[6].shape),
+                ArgData::I32(&pval, &bspec.inputs[7].shape),
+            ])?
+        } else {
+            let args = TypedArgs::new()
+                .f32(params, &bspec.inputs[0].shape)?
+                .i32(&tok, &bspec.inputs[1].shape)?
+                .i32(&pos, &bspec.inputs[2].shape)?
+                .f32(&vld, &bspec.inputs[3].shape)?
+                .f32(&kp, &bspec.inputs[4].shape)?
+                .f32(&vp, &bspec.inputs[5].shape)?
+                .i32(&pidx, &bspec.inputs[6].shape)?
+                .i32(&pval, &bspec.inputs[7].shape)?;
+            eng.run(&bspec.name, args)?
+        };
+        let am = to_vec_i32(&out[0], &bspec.outputs[0])?;
+        let cf = to_vec_f32(&out[1], &bspec.outputs[1])?;
+        let en = to_vec_f32(&out[2], &bspec.outputs[2])?;
+        let kw = to_vec_f32(&out[3], &bspec.outputs[3])?;
+        let vw = to_vec_f32(&out[4], &bspec.outputs[4])?;
+        let (nw, nkw) = (am.len() / b, kw.len() / b);
+        for lane in 0..chunk.len() {
+            outs.push(DecodeOut {
+                argmax: am[lane * nw..(lane + 1) * nw].to_vec(),
+                conf: cf[lane * nw..(lane + 1) * nw].to_vec(),
+                entropy: en[lane * nw..(lane + 1) * nw].to_vec(),
+                k_win: kw[lane * nkw..(lane + 1) * nkw].to_vec(),
+                v_win: vw[lane * nkw..(lane + 1) * nkw].to_vec(),
+            });
+        }
+    }
+    Ok(Some(outs))
+}
+
 /// Fused fwd+bwd+AdamW step (`train_diff` / `train_ar` / `draft_train_ar`).
 #[allow(clippy::too_many_arguments)]
 pub fn train_step(eng: &Engine, exec: &str, params: &[f32], m: &[f32],
@@ -183,18 +605,71 @@ pub fn train_step(eng: &Engine, exec: &str, params: &[f32], m: &[f32],
     })
 }
 
+/// Chunked fused train step (`train_diff_fused`): K sequential
+/// fwd+bwd+AdamW steps scanned on device in one call, batches stacked as
+/// `[K, B, s_train]`. The inner step counter advances `step0 .. step0+K`,
+/// so K fused steps are arithmetically the K per-step calls they replace.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_fused(eng: &Engine, params: &[f32], m: &[f32], v: &[f32],
+                        step0: i32, tokens: &[i32], labels: &[i32],
+                        loss_mask: &[f32], attn_valid: &[f32], lr: f32,
+                        ent_weight: f32) -> Result<TrainFusedOut> {
+    let spec = eng.manifest.exec("train_diff_fused")?.clone();
+    let kbs = &spec.inputs[4].shape; // [K, B, S]
+    let n: usize = kbs.iter().product();
+    if tokens.len() != n || labels.len() != n || loss_mask.len() != n
+        || attn_valid.len() != n
+    {
+        bail!("train_step_fused: batch inputs must be {kbs:?} = {n}");
+    }
+    let args = TypedArgs::new()
+        .f32(params, &spec.inputs[0].shape)?
+        .f32(m, &spec.inputs[1].shape)?
+        .f32(v, &spec.inputs[2].shape)?
+        .scalar_i32(step0)
+        .i32(tokens, kbs)?
+        .i32(labels, kbs)?
+        .f32(loss_mask, kbs)?
+        .f32(attn_valid, kbs)?
+        .scalar_f32(lr)
+        .scalar_f32(ent_weight);
+    let out = eng.run("train_diff_fused", args)?;
+    Ok(TrainFusedOut {
+        params: to_vec_f32(&out[0], &spec.outputs[0])?,
+        m: to_vec_f32(&out[1], &spec.outputs[1])?,
+        v: to_vec_f32(&out[2], &spec.outputs[2])?,
+        loss: to_vec_f32(&out[3], &spec.outputs[3])?,
+    })
+}
+
 /// Pseudo-trajectory extraction (`trajectory`): batched on-device scan.
 pub fn trajectory(eng: &Engine, params: &[f32], tokens: &[i32],
                   attn_valid: &[f32], gen_mask: &[f32])
                   -> Result<TrajectoryOut> {
-    let spec = eng.manifest.exec("trajectory")?.clone();
+    trajectory_named(eng, "trajectory", params, tokens, attn_valid, gen_mask)
+}
+
+/// Paged variant of the trajectory scan (`trajectory_paged`): identical
+/// signature and outputs, lowered over the paged window forward. Opt-in —
+/// callers probe `Engine::has_executable("trajectory_paged")` first.
+pub fn trajectory_paged(eng: &Engine, params: &[f32], tokens: &[i32],
+                        attn_valid: &[f32], gen_mask: &[f32])
+                        -> Result<TrajectoryOut> {
+    trajectory_named(eng, "trajectory_paged", params, tokens, attn_valid,
+                     gen_mask)
+}
+
+fn trajectory_named(eng: &Engine, exec: &str, params: &[f32],
+                    tokens: &[i32], attn_valid: &[f32], gen_mask: &[f32])
+                    -> Result<TrajectoryOut> {
+    let spec = eng.manifest.exec(exec)?.clone();
     let bs = &spec.inputs[1].shape; // [B, S]
     let args = TypedArgs::new()
         .f32(params, &spec.inputs[0].shape)?
         .i32(tokens, bs)?
         .f32(attn_valid, bs)?
         .f32(gen_mask, bs)?;
-    let out = eng.run("trajectory", args)?;
+    let out = eng.run(exec, args)?;
     Ok(TrajectoryOut {
         rank: to_vec_i32(&out[0], &spec.outputs[0])?,
         final_tokens: to_vec_i32(&out[1], &spec.outputs[1])?,

@@ -118,6 +118,14 @@ impl Engine {
         self.client.platform_name()
     }
 
+    /// Whether the loaded artifact set ships an executable by this name.
+    /// Wrappers probe this to pick the paged/batched lowering when the
+    /// manifest has one and fall back to the staged/per-item path for
+    /// older (v1) artifact dirs.
+    pub fn has_executable(&self, name: &str) -> bool {
+        self.manifest.executables.contains_key(name)
+    }
+
     /// Compile (or fetch memoised) executable by manifest name.
     fn ensure_compiled(&self, name: &str) -> Result<()> {
         if self.executables.borrow().contains_key(name) {

@@ -73,6 +73,17 @@ impl ArgSpec {
     }
 }
 
+/// Page-table geometry a paged executable was lowered with (manifest
+/// format_version >= 2). The runtime refuses to feed a page table whose
+/// layout disagrees with this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PagedAbi {
+    /// Rows per packed KV-page entry.
+    pub page_rows: usize,
+    /// Page-table length (packed entries per sequence).
+    pub max_pages: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct ExecSpec {
     pub name: String,
@@ -80,6 +91,12 @@ pub struct ExecSpec {
     pub model: String,
     pub inputs: Vec<ArgSpec>,
     pub outputs: Vec<ArgSpec>,
+    /// Lowered batch size of a B>1 executable (format_version >= 2);
+    /// `None` = unbatched.
+    pub batch: Option<usize>,
+    /// Page-table ABI of a paged executable (format_version >= 2);
+    /// `None` = consumes dense cache buffers.
+    pub paged: Option<PagedAbi>,
 }
 
 #[derive(Debug, Clone)]
@@ -139,8 +156,12 @@ impl Manifest {
 
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        // v1: dense/per-item executables only. v2 adds optional per-
+        // executable `batch` / `paged` ABI fields; their *absence* (or a
+        // v1 manifest) means the runtime keeps its per-item and staged
+        // fallback paths, so old artifact dirs keep loading unchanged.
         let version = get_usize(&j, "format_version")?;
-        if version != 1 {
+        if !(1..=2).contains(&version) {
             bail!("unsupported manifest format_version {version}");
         }
 
@@ -221,6 +242,20 @@ impl Manifest {
             .as_arr()
             .ok_or_else(|| anyhow!("executables not array"))?
         {
+            let batch = match e.get("batch") {
+                Some(b) => Some(
+                    b.as_usize()
+                        .ok_or_else(|| anyhow!("`batch` is not a number"))?,
+                ),
+                None => None,
+            };
+            let paged = match e.get("paged") {
+                Some(p) => Some(PagedAbi {
+                    page_rows: get_usize(p, "page_rows")?,
+                    max_pages: get_usize(p, "max_pages")?,
+                }),
+                None => None,
+            };
             let spec = ExecSpec {
                 name: get_str(e, "name")?,
                 file: get_str(e, "file")?,
@@ -239,9 +274,24 @@ impl Manifest {
                     .iter()
                     .map(parse_arg)
                     .collect::<Result<_>>()?,
+                batch,
+                paged,
             };
             if !models.contains_key(&spec.model) {
                 bail!("executable `{}` references unknown model", spec.name);
+            }
+            if version < 2 && (spec.batch.is_some() || spec.paged.is_some()) {
+                bail!("executable `{}`: batch/paged ABI fields require \
+                       manifest format_version 2", spec.name);
+            }
+            if spec.batch == Some(0) {
+                bail!("executable `{}`: batch size 0", spec.name);
+            }
+            if let Some(p) = spec.paged {
+                if p.page_rows == 0 || p.max_pages == 0 {
+                    bail!("executable `{}`: degenerate paged geometry \
+                           {}x{}", spec.name, p.max_pages, p.page_rows);
+                }
             }
             executables.insert(spec.name.clone(), spec);
         }
@@ -307,6 +357,57 @@ mod tests {
     #[test]
     fn rejects_unknown_model_ref() {
         let bad = MINI.replace("\"model\":\"main\"", "\"model\":\"nope\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn v1_specs_default_to_unbatched_dense() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.executables["x"].batch, None);
+        assert_eq!(m.executables["x"].paged, None);
+    }
+
+    /// MINI upgraded to v2 with batch/paged ABI fields on the executable.
+    fn mini_v2() -> String {
+        MINI.replace("\"format_version\": 1", "\"format_version\": 2")
+            .replace(
+                "\"model\":\"main\",",
+                "\"model\":\"main\",\"batch\":4,\
+                 \"paged\":{\"page_rows\":32,\"max_pages\":12},",
+            )
+    }
+
+    #[test]
+    fn parses_v2_batch_and_paged_fields() {
+        let m = Manifest::parse(&mini_v2()).unwrap();
+        let x = &m.executables["x"];
+        assert_eq!(x.batch, Some(4));
+        assert_eq!(x.paged, Some(PagedAbi { page_rows: 32, max_pages: 12 }));
+    }
+
+    #[test]
+    fn rejects_v2_fields_on_v1_manifest() {
+        let bad = mini_v2().replace("\"format_version\": 2", "\"format_version\": 1");
+        let err = Manifest::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("format_version 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_degenerate_paged_geometry() {
+        let bad = mini_v2().replace("\"page_rows\":32", "\"page_rows\":0");
+        assert!(Manifest::parse(&bad).is_err());
+        let bad = mini_v2().replace("\"max_pages\":12", "\"max_pages\":0");
+        assert!(Manifest::parse(&bad).is_err());
+        let bad = mini_v2().replace("\"batch\":4", "\"batch\":0");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_paged_object() {
+        let bad = mini_v2().replace("\"max_pages\":12", "\"max_pages\":\"twelve\"");
+        assert!(Manifest::parse(&bad).is_err());
+        // paged object missing a required key
+        let bad = mini_v2().replace(",\"max_pages\":12", "");
         assert!(Manifest::parse(&bad).is_err());
     }
 }

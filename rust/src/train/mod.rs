@@ -121,57 +121,93 @@ pub fn train(backend: &dyn Backend, cfg: &TrainCfg, ckpt_dir: &Path)
     let mut log = Vec::with_capacity(cfg.steps);
     let t0 = std::time::Instant::now();
 
-    for step in 1..=cfg.steps {
-        let progress = (step - 1) as f64 / (cfg.steps.max(2) - 1) as f64;
-        let t = cfg.curriculum.t_at(progress);
-        let k = cfg.curriculum.k_at(progress);
+    // Fused chunking: when the backend has a K-step fused lowering for
+    // this objective, K batches are staged up front as `[K, B, s_train]`
+    // and one call applies K sequential optimizer steps — batch
+    // construction depends only on the rng/curriculum stream, never on
+    // updated weights, so the schedule is arithmetically the per-step
+    // loop it replaces. A tail shorter than K (and every backend without
+    // the lowering) runs per-step.
+    let fused_k = backend.fused_train_chunk(exec_name).filter(|&k| k >= 2);
+    let mut step = 1usize;
+    while step <= cfg.steps {
+        let remaining = cfg.steps - step + 1;
+        let nsteps = fused_k.filter(|&k| k <= remaining).unwrap_or(1);
 
-        let mut tokens = Vec::with_capacity(b * s);
-        let mut labels = Vec::with_capacity(b * s);
-        let mut loss_mask = Vec::with_capacity(b * s);
-        let mut attn_valid = Vec::with_capacity(b * s);
-        for _ in 0..b {
-            if cursor >= order.len() {
-                rng.shuffle(&mut order);
-                cursor = 0;
+        let mut tks = Vec::with_capacity(nsteps);
+        let mut tokens = Vec::with_capacity(nsteps * b * s);
+        let mut labels = Vec::with_capacity(nsteps * b * s);
+        let mut loss_mask = Vec::with_capacity(nsteps * b * s);
+        let mut attn_valid = Vec::with_capacity(nsteps * b * s);
+        for i in 0..nsteps {
+            let progress =
+                (step + i - 1) as f64 / (cfg.steps.max(2) - 1) as f64;
+            let t = cfg.curriculum.t_at(progress);
+            let k = cfg.curriculum.k_at(progress);
+            tks.push((t, k));
+            for _ in 0..b {
+                if cursor >= order.len() {
+                    rng.shuffle(&mut order);
+                    cursor = 0;
+                }
+                let idx = order[cursor];
+                cursor += 1;
+                let ex = build_noisy(
+                    &corpus[idx],
+                    cfg.recipe,
+                    ranks.as_ref().map(|r| &r[idx]),
+                    t,
+                    k,
+                    &c,
+                    &mut rng,
+                );
+                tokens.extend(ex.tokens);
+                labels.extend(ex.labels);
+                loss_mask.extend(ex.loss_mask);
+                attn_valid.extend(ex.attn_valid);
             }
-            let idx = order[cursor];
-            cursor += 1;
-            let ex = build_noisy(
-                &corpus[idx],
-                cfg.recipe,
-                ranks.as_ref().map(|r| &r[idx]),
-                t,
-                k,
-                &c,
-                &mut rng,
-            );
-            tokens.extend(ex.tokens);
-            labels.extend(ex.labels);
-            loss_mask.extend(ex.loss_mask);
-            attn_valid.extend(ex.attn_valid);
         }
 
-        let out = backend.train_step(
-            exec_name, &params.data, &opt.m, &opt.v, step as i32, &tokens,
-            &labels, &loss_mask, &attn_valid, cfg.lr, cfg.ent_weight,
-        )?;
-        params.data = out.params;
-        opt.m = out.m;
-        opt.v = out.v;
-        opt.step = step as i32;
+        let losses = if nsteps > 1 {
+            let out = backend.train_step_fused(
+                exec_name, nsteps, &params.data, &opt.m, &opt.v,
+                step as i32, &tokens, &labels, &loss_mask, &attn_valid,
+                cfg.lr, cfg.ent_weight,
+            )?;
+            params.data = out.params;
+            opt.m = out.m;
+            opt.v = out.v;
+            out.loss
+        } else {
+            let out = backend.train_step(
+                exec_name, &params.data, &opt.m, &opt.v, step as i32,
+                &tokens, &labels, &loss_mask, &attn_valid, cfg.lr,
+                cfg.ent_weight,
+            )?;
+            params.data = out.params;
+            opt.m = out.m;
+            opt.v = out.v;
+            vec![out.loss]
+        };
+        opt.step = (step + nsteps - 1) as i32;
 
-        log.push(StepLog { step, loss: out.loss, t, k });
-        if cfg.log_every > 0 && step % cfg.log_every == 0 {
-            eprintln!(
-                "[train:{}] step {step}/{} loss {:.4} t={:.2} k={k} ({:.1}s)",
-                cfg.name,
-                cfg.steps,
-                out.loss,
-                t,
-                t0.elapsed().as_secs_f64()
-            );
+        for (i, &loss) in losses.iter().enumerate() {
+            let (t, k) = tks[i];
+            let s_i = step + i;
+            log.push(StepLog { step: s_i, loss, t, k });
+            if cfg.log_every > 0 && s_i % cfg.log_every == 0 {
+                eprintln!(
+                    "[train:{}] step {s_i}/{} loss {:.4} t={:.2} k={k} \
+                     ({:.1}s)",
+                    cfg.name,
+                    cfg.steps,
+                    loss,
+                    t,
+                    t0.elapsed().as_secs_f64()
+                );
+            }
         }
+        step += nsteps;
     }
 
     let path = TrainCfg::ckpt_path(ckpt_dir, &cfg.name);

@@ -77,6 +77,7 @@ fn off_mode_is_bit_identical_to_static_for_every_strategy() {
             queue_depth: 17, // any backlog: off mode must ignore it
             active_sessions: pool.len(),
             est_wait_ms: 123.0,
+            round_ms: 0.0,
         });
         pool.set_budgets(|dcfg, res| {
             ctrl.budget_for(dcfg.metric, res.mean_commit_entropy())
@@ -171,6 +172,7 @@ fn run_load_trace(seed: u64, trace: &[usize])
             queue_depth: q,
             active_sessions: pool.len(),
             est_wait_ms: 0.0,
+            round_ms: 0.0,
         });
         pool.set_budgets(|dcfg, res| {
             let b = ctrl.budget_for(dcfg.metric, res.mean_commit_entropy());
@@ -231,6 +233,7 @@ fn accuracy_floor_survives_adversarial_load_swings() {
             backlog_full: 1 + rng.usize(8),
             pool_full: rng.usize(9), // 0 disables the occupancy term
             wait_full_ms: if rng.bool(0.5) { 200.0 } else { 0.0 },
+            round_full_ms: if rng.bool(0.5) { 100.0 } else { 0.0 },
             alpha: 0.05 + 0.9 * rng.f64(),
         };
         let mut c = AdaptiveController::new(cfg.clone());
@@ -241,6 +244,7 @@ fn accuracy_floor_survives_adversarial_load_swings() {
                 queue_depth: rng.usize(32),
                 active_sessions: rng.usize(8),
                 est_wait_ms: rng.f64() * 1000.0,
+                round_ms: rng.f64() * 100.0,
             });
             assert!((0.0..=1.0).contains(&c.pressure()),
                     "case {case} step {step}: pressure left [0,1]");
