@@ -12,6 +12,7 @@ layout of each model, and every compile-time constant. Rust refuses to run
 against a manifest whose constants disagree with its own config.
 
 Usage: python -m compile.aot --out-dir ../artifacts [--only name,...]
+       python -m compile.aot --dump-specs   # entry-point JSON, no lowering
 """
 
 import argparse
@@ -43,6 +44,12 @@ def _sig(name, shape, dtype):
 
 
 F32, I32 = jnp.float32, jnp.int32
+
+# Manifest ABI version. v2: executables may carry "batch" / "paged"
+# fields and the constants include page/batch geometry. Bump this (and
+# the accepted range in rust/src/runtime/manifest.rs) together — d3lint's
+# abi-drift rule cross-checks the two.
+FORMAT_VERSION = 2
 
 # Paged executable ABI: page geometry baked into the paged specs and
 # recorded per-executable in the manifest (format_version 2) so the Rust
@@ -287,7 +294,23 @@ def main() -> None:
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--only", default="",
                     help="comma-separated executable names to (re)build")
+    ap.add_argument("--dump-specs", action="store_true",
+                    help="print entry-point names + format_version as "
+                         "JSON (for d3lint --abi-spec) and exit")
     args = ap.parse_args()
+    if args.dump_specs:
+        # One entry per line: d3lint's reader is line-oriented, not a
+        # general JSON parser.
+        names = [name for name, *_ in build_specs()]
+        print("{")
+        print(f'  "format_version": {FORMAT_VERSION},')
+        print('  "entry_points": [')
+        for i, name in enumerate(names):
+            comma = "," if i + 1 < len(names) else ""
+            print(f'    {{"name": {json.dumps(name)}}}{comma}')
+        print("  ]")
+        print("}")
+        return
     os.makedirs(args.out_dir, exist_ok=True)
     only = set(filter(None, args.only.split(",")))
 
@@ -310,11 +333,9 @@ def main() -> None:
         executables.append(entry)
 
     manifest = {
-        # v2: executables may carry "batch" / "paged" ABI fields and the
-        # constants include the page/batch geometry. The Rust loader
-        # accepts v1 manifests (no batched/paged entries -> per-item and
-        # staged fallback paths).
-        "format_version": 2,
+        # The Rust loader accepts v1 manifests too (no batched/paged
+        # entries -> per-item and staged fallback paths).
+        "format_version": FORMAT_VERSION,
         "constants": {
             "vocab": C.VOCAB, "pad_id": C.PAD_ID, "mask_id": C.MASK_ID,
             "eos_id": C.EOS_ID, "bos_id": C.BOS_ID, "sep_id": C.SEP_ID,

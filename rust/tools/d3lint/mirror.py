@@ -1,0 +1,735 @@
+#!/usr/bin/env python3
+"""Python mirror of d3lint (rust/tools/d3lint/src).
+
+The Rust implementation is authoritative — CI runs `cargo run -p d3lint
+-- --check-baseline` and the crate's own test suite asserts the committed
+`lint-baseline.toml` matches the tree. This mirror exists because some
+authoring containers for this repo ship no Rust toolchain at all (see
+.claude/skills/verify/SKILL.md): it ports the exact same scan algorithm
+so the baseline can be regenerated and rule changes validated without
+cargo. Keep the two in lockstep token-for-token; the baseline test in
+rust/tools/d3lint/tests/lint_rules.rs is the drift alarm.
+
+Usage:
+  python3 rust/tools/d3lint/mirror.py                # list findings
+  python3 rust/tools/d3lint/mirror.py --write-baseline
+  python3 rust/tools/d3lint/mirror.py --check-baseline
+"""
+
+import os
+import sys
+
+# ---------------------------------------------------------------- scopes
+# (keep identical to rust/tools/d3lint/src/rules.rs)
+
+DET_SCOPES = [
+    "rust/src/decode/",
+    "rust/src/coordinator/scheduler.rs",
+    "rust/src/coordinator/batcher.rs",
+    "rust/src/model/kv_pool.rs",
+]
+PANIC_SCOPES = ["rust/src/coordinator/", "rust/src/decode/session.rs"]
+ORDERING_SCOPES = ["rust/src/coordinator/"]
+
+DET_TOKENS = ["HashMap", "HashSet", "Instant::now()", "SystemTime"]
+PANIC_TOKENS = [".unwrap()", ".expect(", "panic!(", "unreachable!("]
+ORDERING_TOKENS = [
+    "Ordering::SeqCst", "Ordering::Acquire", "Ordering::Release",
+    "Ordering::AcqRel",
+]
+
+ABI_RUST_FILES = ["rust/src/model/exec.rs", "rust/src/runtime/manifest.rs"]
+EXEC_NAME_PREFIXES = ["prefill", "decode", "train", "trajectory", "ar_",
+                      "draft_"]
+
+IDENT = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_")
+
+
+class Finding:
+    def __init__(self, file, line, rule, message):
+        self.file, self.line, self.rule, self.message = file, line, rule, message
+
+    def render(self):
+        return f"{self.file}:{self.line} {self.rule} {self.message}"
+
+
+# ------------------------------------------------------- rust line model
+
+class Line:
+    """One source line after comment/string stripping.
+
+    code:     source text with comment text removed and string/char
+              literal *contents* removed (delimiters kept).
+    comment:  concatenated text of all comments on the line.
+    strings:  contents of string literals that *start* on this line.
+    in_test:  line is inside a #[cfg(test)]-gated item.
+    """
+
+    def __init__(self):
+        self.code = ""
+        self.comment = ""
+        self.strings = []
+        self.in_test = False
+
+
+def close_string(lines, current, buf):
+    start, chars = buf
+    target = current if start == len(lines) else lines[start]
+    target.strings.append("".join(chars))
+
+
+def strip_rust(text):
+    """Split each line into code / comment / string-literal parts and mark
+    #[cfg(test)] regions by brace counting. Mirrors scan.rs exactly."""
+    lines = []
+    block_depth = 0        # /* */ nesting
+    raw_hashes = None      # inside r#".."# string: number of hashes
+    in_str = False         # inside a normal "..." string
+    str_buf = None         # (start_line_index, [chars]) of the open string
+    depth = 0              # brace depth over code
+    test_depth = None      # brace depth at which a cfg(test) region opened
+    pending_test = False   # saw #[cfg(test)], waiting for its '{'
+
+    for raw in text.split("\n"):
+        ln = Line()
+        was_in_test = test_depth is not None
+        i, n = 0, len(raw)
+        while i < n:
+            c = raw[i]
+            if in_str:
+                if c == "\\" and i + 1 < n:
+                    str_buf[1].append(raw[i:i + 2])
+                    i += 2
+                    continue
+                if c == '"':
+                    in_str = False
+                    ln.code += '"'
+                    close_string(lines, ln, str_buf)
+                    str_buf = None
+                else:
+                    str_buf[1].append(c)
+                i += 1
+                continue
+            if raw_hashes is not None:
+                term = '"' + "#" * raw_hashes
+                if raw.startswith(term, i):
+                    ln.code += '"' + "#" * raw_hashes
+                    close_string(lines, ln, str_buf)
+                    str_buf = None
+                    i += len(term)
+                    raw_hashes = None
+                else:
+                    str_buf[1].append(c)
+                    i += 1
+                continue
+            if block_depth > 0:
+                if raw.startswith("*/", i):
+                    block_depth -= 1
+                    i += 2
+                elif raw.startswith("/*", i):
+                    block_depth += 1
+                    i += 2
+                else:
+                    ln.comment += c
+                    i += 1
+                continue
+            # ---- code context
+            if raw.startswith("//", i):
+                ln.comment += raw[i + 2:]
+                break
+            if raw.startswith("/*", i):
+                block_depth += 1
+                i += 2
+                continue
+            if c == "r":
+                j = i + 1
+                while j < n and raw[j] == "#":
+                    j += 1
+                if j < n and raw[j] == '"':
+                    raw_hashes = j - i - 1
+                    ln.code += 'r' + "#" * raw_hashes + '"'
+                    str_buf = (len(lines), [])
+                    i = j + 1
+                    continue
+            if c == '"':
+                in_str = True
+                ln.code += '"'
+                str_buf = (len(lines), [])
+                i += 1
+                continue
+            if c == "'":
+                # char literal vs lifetime: '\x..' or 'x' is a literal
+                if i + 1 < n and raw[i + 1] == "\\":
+                    j = raw.find("'", i + 2)
+                    ln.code += "''"
+                    i = (j + 1) if j != -1 else n
+                    continue
+                if i + 2 < n and raw[i + 2] == "'":
+                    ln.code += "''"
+                    i += 3
+                    continue
+                ln.code += c    # lifetime
+                i += 1
+                continue
+            ln.code += c
+            i += 1
+        # cfg(test) tracking (before brace effects of this line landed we
+        # may set pending; the region starts at its opening brace)
+        if test_depth is None and "cfg(test)" in ln.code:
+            pending_test = True
+        for ch in ln.code:
+            if ch == "{":
+                if pending_test and test_depth is None:
+                    test_depth = depth
+                    pending_test = False
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+                if test_depth is not None and depth == test_depth:
+                    test_depth = None
+        ln.in_test = was_in_test or test_depth is not None
+        lines.append(ln)
+    return lines
+
+
+def in_scope(rel, scopes):
+    return any(rel == s or rel.startswith(s) for s in scopes)
+
+
+def count_occurrences(hay, needle):
+    c = start = 0
+    while True:
+        k = hay.find(needle, start)
+        if k == -1:
+            return c
+        c += 1
+        start = k + len(needle)
+
+
+def is_index_bracket(code, i):
+    return i > 0 and (code[i - 1] in IDENT or code[i - 1] in ")]")
+
+
+def allowed(rule, comment, prev_comment):
+    marker = f"lint: allow({rule})"
+    return marker in comment or marker in prev_comment
+
+
+# ---------------------------------------------------------------- rules
+
+def scan_rust_file(rel, text):
+    findings = []
+    lines = strip_rust(text)
+    # `prev_comment` carries the whole comment block directly above the
+    # line: consecutive code-less lines accumulate, any code line resets
+    prev_comment = ""
+
+    def carry(prev, ln):
+        return prev + ln.comment if not ln.code.strip() else ln.comment
+
+    for idx, ln in enumerate(lines):
+        lineno = idx + 1
+        if ln.in_test:
+            prev_comment = carry(prev_comment, ln)
+            continue
+        if in_scope(rel, DET_SCOPES) and \
+                not allowed("determinism", ln.comment, prev_comment):
+            for tok in DET_TOKENS:
+                for _ in range(count_occurrences(ln.code, tok)):
+                    findings.append(Finding(
+                        rel, lineno, "determinism",
+                        f"'{tok}' in a determinism-scoped path "
+                        "(virtual clock / ordered maps only)"))
+        if in_scope(rel, PANIC_SCOPES) and \
+                not allowed("panic-path", ln.comment, prev_comment):
+            for tok in PANIC_TOKENS:
+                for _ in range(count_occurrences(ln.code, tok)):
+                    findings.append(Finding(
+                        rel, lineno, "panic-path",
+                        f"'{tok}' in a serving path (degrade to an error "
+                        "reply instead)"))
+            for i, ch in enumerate(ln.code):
+                if ch == "[" and is_index_bracket(ln.code, i):
+                    findings.append(Finding(
+                        rel, lineno, "panic-path",
+                        "direct indexing in a serving path (use .get())"))
+        if in_scope(rel, ORDERING_SCOPES):
+            justified = ("ordering:" in ln.comment
+                         or "ordering:" in prev_comment)
+            if not justified:
+                for tok in ORDERING_TOKENS:
+                    for _ in range(count_occurrences(ln.code, tok)):
+                        findings.append(Finding(
+                            rel, lineno, "atomic-ordering",
+                            f"'{tok}' without an '// ordering:' "
+                            "justification comment"))
+        prev_comment = carry(prev_comment, ln)
+    return findings
+
+
+# ---------------------------------------------------------- ABI analysis
+
+def exec_name_ref(s):
+    """Classify a string literal as an exec-name reference.
+    Returns ('exact', name) | ('prefix', p) | None."""
+    if not s or any(ch not in "abcdefghijklmnopqrstuvwxyz0123456789_{}"
+                    for ch in s):
+        return None
+    if not any(s.startswith(p) for p in EXEC_NAME_PREFIXES):
+        return None
+    if "{" in s:
+        p = s.split("{", 1)[0]
+        return ("prefix", p) if p else None
+    if s.endswith("_"):
+        return ("prefix", s)
+    if "_" in s or s == "trajectory":
+        return ("exact", s)
+    return None
+
+
+def balanced_call(lines, start_idx, open_pos):
+    """Collect text of a call from its '(' to the matching ')'."""
+    depth = 0
+    out = []
+    idx, pos = start_idx, open_pos
+    while idx < len(lines):
+        line = lines[idx]
+        while pos < len(line):
+            ch = line[pos]
+            out.append(ch)
+            if ch in "([":
+                depth += 1
+            elif ch in ")]":
+                depth -= 1
+                if depth == 0:
+                    return "".join(out)
+            pos += 1
+        out.append(" ")
+        idx += 1
+        pos = 0
+    return "".join(out)
+
+
+NAME_CHARS = set("abcdefghijklmnopqrstuvwxyz0123456789_")
+
+
+def quoted_strings(line):
+    """Sequentially paired "..." contents (values never contain quotes in
+    the files this parses)."""
+    out = []
+    i = 0
+    while True:
+        a = line.find('"', i)
+        if a == -1:
+            return out
+        b = line.find('"', a + 1)
+        if b == -1:
+            return out
+        out.append((line[a + 1:b], b + 1))
+        i = b + 1
+
+
+def lowercase_names(line):
+    return [s for s, _ in quoted_strings(line)
+            if all(ch in NAME_CHARS for ch in s)]
+
+
+def quoted_keys(line):
+    """Quoted strings immediately followed by ':' (dict keys)."""
+    return [s for s, end in quoted_strings(line)
+            if end < len(line) and line[end] == ":"
+            and s and all(ch in NAME_CHARS for ch in s)]
+
+
+def has_assignment(line, var):
+    """`var = ...` at a token boundary."""
+    i = 0
+    while True:
+        k = line.find(var, i)
+        if k == -1:
+            return False
+        before_ok = k == 0 or line[k - 1] not in IDENT
+        j = k + len(var)
+        while j < len(line) and line[j] == " ":
+            j += 1
+        if before_ok and j < len(line) and line[j] == "=" \
+                and (j + 1 >= len(line) or line[j + 1] != "="):
+            return True
+        i = k + len(var)
+
+
+def int_after(line, marker):
+    k = line.find(marker)
+    if k == -1:
+        return None
+    j = k + len(marker)
+    while j < len(line) and line[j] == " ":
+        j += 1
+    d = ""
+    while j < len(line) and line[j].isdigit():
+        d += line[j]
+        j += 1
+    return int(d) if d else None
+
+
+class PySpecs:
+    def __init__(self):
+        self.names = {}          # name -> (line, arity_ok)
+        self.exec_meta = []      # (key, line)
+        self.constants = []      # key names
+        self.format_version = None
+        self.fv_line = 0
+        self.errors = []         # Finding
+
+
+def parse_aot(rel, text):
+    out = PySpecs()
+    lines = text.split("\n")
+    variants, prefixes, wnames, tnames = [], [], [], []
+    for idx, line in enumerate(lines):
+        if "for variant in" in line:
+            variants = lowercase_names(line) or variants
+        if has_assignment(line, "prefix"):
+            # model-name prefixes are "" or end in '_' ("draft_"); drop
+            # the condition's other literals ("main")
+            got = [s for s in lowercase_names(line)
+                   if s == "" or s.endswith("_")]
+            if got:
+                prefixes = got
+        if "for wname" in line:
+            wnames = lowercase_names(line) or wnames
+        if "for tname" in line:
+            block, j = line, idx
+            while not block.rstrip().endswith(":") and j + 1 < len(lines):
+                j += 1
+                block += lines[j]
+            tnames = [s for s in lowercase_names(block)
+                      if exec_name_ref(s) == ("exact", s)]
+        v = int_after(line, "FORMAT_VERSION =")
+        if v is not None:
+            out.format_version = v
+            out.fv_line = idx + 1
+        if out.format_version is None:
+            v = int_after(line, '"format_version":')
+            if v is not None:
+                out.format_version = v
+                out.fv_line = idx + 1
+
+    subst = {"variant": variants, "prefix": prefixes, "wname": wnames}
+
+    def expand(template, lineno):
+        names = [""]
+        pos = 0
+        while pos < len(template):
+            b = template.find("{", pos)
+            if b == -1:
+                names = [n + template[pos:] for n in names]
+                break
+            e = template.find("}", b)
+            var = template[b + 1:e]
+            vals = subst.get(var)
+            if not vals:
+                out.errors.append(Finding(
+                    rel, lineno, "abi-drift",
+                    f"cannot resolve placeholder '{{{var}}}' in an AOT "
+                    "entry-point name"))
+                return []
+            names = [n + template[pos:b] + v for n in names for v in vals]
+            pos = e + 1
+        return names
+
+    for idx, line in enumerate(lines):
+        stripped = line.lstrip()
+        if not stripped.startswith("add("):
+            continue
+        lineno = idx + 1
+        call = balanced_call(lines, idx, line.index("add(") + 3)
+        inner = call[1:-1]
+        first = inner.split(",", 1)[0].strip()
+        if first.startswith('f"') and first.endswith('"'):
+            names = expand(first[2:-1], lineno)
+        elif first.startswith('"') and first.endswith('"'):
+            names = [first[1:-1]]
+        elif first == "tname":
+            names = list(tnames)
+            if not names:
+                out.errors.append(Finding(
+                    rel, lineno, "abi-drift",
+                    "cannot resolve 'tname' entry-point names"))
+        else:
+            out.errors.append(Finding(
+                rel, lineno, "abi-drift",
+                f"cannot resolve entry-point name expression '{first}'"))
+            names = []
+        # arity: count of _spec() lowering args vs declared input _sig()s
+        groups = []
+        depth = 0
+        gstart = None
+        for p, ch in enumerate(inner):
+            if ch == "[" and depth == 0:
+                gstart = p
+            if ch in "([":
+                depth += 1
+            elif ch in ")]":
+                depth -= 1
+                if ch == "]" and depth == 0:
+                    groups.append(inner[gstart:p + 1])
+        arity_ok = True
+        if len(groups) >= 2:
+            n_spec = count_occurrences(groups[0], "_spec(")
+            n_sig = count_occurrences(groups[1], "_sig(")
+            arity_ok = n_spec == n_sig
+            if not arity_ok:
+                out.errors.append(Finding(
+                    rel, lineno, "abi-drift",
+                    f"entry point declares {n_spec} lowering args but "
+                    f"{n_sig} input signatures"))
+        for nm in names:
+            out.names.setdefault(nm, (lineno, arity_ok))
+
+    in_meta = in_const = False
+    for idx, line in enumerate(lines):
+        if line.lstrip().startswith("EXEC_META") and "{" in line:
+            in_meta = True
+            continue
+        if in_meta:
+            if line.strip() == "}":
+                in_meta = False
+                continue
+            keys = quoted_keys(line)
+            if keys and line.lstrip().startswith('"'):
+                out.exec_meta.append((keys[0], idx + 1))
+        if '"constants": {' in line:
+            in_const = True
+            continue
+        if in_const:
+            if line.strip().startswith("}"):
+                in_const = False
+                continue
+            out.constants.extend(quoted_keys(line))
+    return out
+
+
+def parse_manifest_rs(text):
+    """(version_range, [(constants_key, line)]) from manifest.rs, skipping
+    cfg(test) code."""
+    lines = strip_rust(text)
+    vrange = None
+    vline = 0
+    keys = []
+    for idx, ln in enumerate(lines):
+        if ln.in_test:
+            continue
+        k = ln.code.find(").contains(&version)")
+        if k != -1:
+            a = ln.code.rfind("(", 0, k)
+            if a != -1:
+                lo_hi = ln.code[a + 1:k].split("..=")
+                if len(lo_hi) == 2 and lo_hi[0].isdigit() \
+                        and lo_hi[1].isdigit():
+                    vrange = (int(lo_hi[0]), int(lo_hi[1]))
+                    vline = idx + 1
+        # string contents are stripped out of code; pair get_usize/get_i32
+        # calls on `c` with the string literals that start on the line
+        ncalls = count_occurrences(ln.code, 'get_usize(c, "') \
+            + count_occurrences(ln.code, 'get_i32(c, "')
+        for s in ln.strings[:ncalls]:
+            keys.append((s, idx + 1))
+    return vrange, vline, keys
+
+
+def rust_name_refs(rel, text):
+    """Exec-name-shaped string literals in non-test code."""
+    refs = []
+    for idx, ln in enumerate(strip_rust(text)):
+        if ln.in_test:
+            continue
+        for s in ln.strings:
+            r = exec_name_ref(s)
+            if r:
+                refs.append((r, rel, idx + 1, s))
+    return refs
+
+
+def abi_check(root, spec_names=None, spec_fv=None):
+    findings = []
+    aot_rel = "python/compile/aot.py"
+    aot_path = os.path.join(root, aot_rel)
+    if not os.path.exists(aot_path):
+        return findings
+    specs = parse_aot(aot_rel, open(aot_path).read())
+    findings.extend(specs.errors)
+    built = set(spec_names) if spec_names is not None else set(specs.names)
+    fv = spec_fv if spec_fv is not None else specs.format_version
+
+    for key, lineno in specs.exec_meta:
+        if key not in built:
+            findings.append(Finding(
+                aot_rel, lineno, "abi-drift",
+                f"EXEC_META key '{key}' does not match any built entry "
+                "point"))
+
+    man_rel = "rust/src/runtime/manifest.rs"
+    man_path = os.path.join(root, man_rel)
+    if os.path.exists(man_path):
+        man_text = open(man_path).read()
+        vrange, vline, keys = parse_manifest_rs(man_text)
+        if vrange and fv is not None and \
+                not (vrange[0] <= fv <= vrange[1]):
+            findings.append(Finding(
+                man_rel, vline, "abi-drift",
+                f"manifest.rs accepts format_version {vrange[0]}..="
+                f"{vrange[1]} but python/compile emits {fv}"))
+        cset = set(specs.constants)
+        for key, lineno in keys:
+            if cset and key not in cset:
+                findings.append(Finding(
+                    man_rel, lineno, "abi-drift",
+                    f"manifest.rs reads constant '{key}' that "
+                    "python/compile does not emit"))
+
+    for rf in ABI_RUST_FILES:
+        path = os.path.join(root, rf)
+        if not os.path.exists(path):
+            continue
+        for (kind, val), frel, lineno, lit in rust_name_refs(
+                rf, open(path).read()):
+            if kind == "exact" and val not in built:
+                findings.append(Finding(
+                    frel, lineno, "abi-drift",
+                    f"exec name '{val}' is not built by "
+                    "python/compile/aot.py"))
+            elif kind == "prefix" and \
+                    not any(n.startswith(val) for n in built):
+                findings.append(Finding(
+                    frel, lineno, "abi-drift",
+                    f"no built entry point matches exec-name prefix "
+                    f"'{val}'"))
+    return findings
+
+
+# ----------------------------------------------------------- tree walk
+
+def walk(root):
+    files = []
+    for sub in ("rust/src", "rust/benches", "rust/tests"):
+        base = os.path.join(root, sub)
+        for dirpath, _dirs, names in sorted(os.walk(base)):
+            for nm in sorted(names):
+                if nm.endswith(".rs"):
+                    files.append(os.path.relpath(
+                        os.path.join(dirpath, nm), root).replace(os.sep, "/"))
+    return sorted(files)
+
+
+def read_spec_json(text):
+    """Minimal reader for `aot.py --dump-specs` output (one entry per
+    line, not a general JSON parser). Returns (names, format_version)."""
+    names = []
+    fv = None
+    for line in text.split("\n"):
+        if fv is None:
+            fv = int_after(line, '"format_version":')
+        i = 0
+        while True:
+            k = line.find('"name":', i)
+            if k == -1:
+                break
+            rest = line[k + 7:]
+            vals = quoted_strings(rest)
+            if vals:
+                names.append(vals[0][0])
+            i = k + 7
+    return names, fv
+
+
+def run(root, spec_names=None, spec_fv=None):
+    findings = []
+    for rel in walk(root):
+        findings.extend(scan_rust_file(rel, open(os.path.join(root, rel)).read()))
+    findings.extend(abi_check(root, spec_names, spec_fv))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule, f.message))
+    return findings
+
+
+# ----------------------------------------------------------- baseline
+
+def counts_of(findings):
+    counts = {}
+    for f in findings:
+        counts[(f.file, f.rule)] = counts.get((f.file, f.rule), 0) + 1
+    return counts
+
+
+def write_baseline(path, counts):
+    with open(path, "w") as fh:
+        fh.write(
+            "# d3lint baseline: accepted pre-existing violations, counted\n"
+            "# per (file, rule). CI ratchets against this file — new\n"
+            "# violations fail, and fixing violations requires shrinking\n"
+            "# the matching count here (a stale baseline also fails).\n"
+            "# Regenerate: cargo run -p d3lint -- --write-baseline\n"
+            "\n[counts]\n")
+        for (file, rule) in sorted(counts):
+            fh.write(f'"{file}:{rule}" = {counts[(file, rule)]}\n')
+
+
+def read_baseline(path):
+    counts = {}
+    for raw in open(path):
+        line = raw.strip()
+        if not line or line.startswith("#") or line == "[counts]":
+            continue
+        if not line.startswith('"'):
+            continue
+        b = line.find('"', 1)
+        if b == -1:
+            continue
+        key = line[1:b]
+        val = int_after(line, '" =')
+        if val is None or ":" not in key:
+            continue
+        file, rule = key.rsplit(":", 1)
+        counts[(file, rule)] = val
+    return counts
+
+
+def main():
+    root = os.path.normpath(os.path.join(os.path.dirname(__file__),
+                                         "..", "..", ".."))
+    args = sys.argv[1:]
+    spec_names = spec_fv = None
+    if "--abi-spec" in args:
+        spec_path = args[args.index("--abi-spec") + 1]
+        spec_names, spec_fv = read_spec_json(open(spec_path).read())
+    findings = run(root, spec_names, spec_fv)
+    baseline_path = os.path.join(root, "lint-baseline.toml")
+    if "--write-baseline" in args:
+        write_baseline(baseline_path, counts_of(findings))
+        print(f"wrote {baseline_path} ({len(findings)} findings)")
+        return 0
+    if "--check-baseline" in args:
+        base = read_baseline(baseline_path)
+        cur = counts_of(findings)
+        bad = 0
+        for key in sorted(set(base) | set(cur)):
+            b, c = base.get(key, 0), cur.get(key, 0)
+            if c > b:
+                print(f"{key[0]}: {c - b} new '{key[1]}' violation(s) "
+                      f"(baseline {b}, current {c})")
+                bad += 1
+            elif c < b:
+                print(f"{key[0]}: stale baseline for '{key[1]}' "
+                      f"(baseline {b}, current {c}) — shrink it")
+                bad += 1
+        print(f"{len(findings)} findings, {len(base)} baseline keys, "
+              f"{bad} drift(s)")
+        return 1 if bad else 0
+    for f in findings:
+        print(f.render())
+    print(f"{len(findings)} findings")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,628 @@
+//! Cross-layer ABI check: entry-point names/arities built by
+//! python/compile/aot.py vs their consumption in runtime/manifest.rs and
+//! model/exec.rs. Pure source-token scraping — no Python interpreter
+//! needed. Mirrored by mirror.py; keep in lockstep.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::rules::Finding;
+use crate::scan::{count_occurrences, strip_rust};
+
+/// Rust files whose exec-name string literals are checked against the
+/// Python-built set. Deliberately narrow: elsewhere names like
+/// "decode_ms" are metric labels, not exec references.
+pub const ABI_RUST_FILES: &[&str] =
+    &["rust/src/model/exec.rs", "rust/src/runtime/manifest.rs"];
+pub const EXEC_NAME_PREFIXES: &[&str] =
+    &["prefill", "decode", "train", "trajectory", "ar_", "draft_"];
+
+fn is_name_char(c: char) -> bool {
+    c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'
+}
+
+/// Classify a string literal as an exec-name reference:
+/// `Some(("exact", name))`, `Some(("prefix", p))`, or `None`.
+pub fn exec_name_ref(s: &str) -> Option<(&'static str, String)> {
+    if s.is_empty() || !s.chars().all(|c| is_name_char(c) || c == '{' || c == '}') {
+        return None;
+    }
+    if !EXEC_NAME_PREFIXES.iter().any(|p| s.starts_with(p)) {
+        return None;
+    }
+    if let Some(b) = s.find('{') {
+        let p = &s[..b];
+        return if p.is_empty() {
+            None
+        } else {
+            Some(("prefix", p.to_string()))
+        };
+    }
+    if s.ends_with('_') {
+        return Some(("prefix", s.to_string()));
+    }
+    if s.contains('_') || s == "trajectory" {
+        return Some(("exact", s.to_string()));
+    }
+    None
+}
+
+/// Collect the text of a call from its '(' to the matching ')'.
+fn balanced_call(lines: &[&str], start_idx: usize, open_pos: usize) -> String {
+    let mut depth = 0i64;
+    let mut out = String::new();
+    let mut idx = start_idx;
+    let mut pos = open_pos;
+    while idx < lines.len() {
+        let line: Vec<char> = lines[idx].chars().collect();
+        while pos < line.len() {
+            let ch = line[pos];
+            out.push(ch);
+            if ch == '(' || ch == '[' {
+                depth += 1;
+            } else if ch == ')' || ch == ']' {
+                depth -= 1;
+                if depth == 0 {
+                    return out;
+                }
+            }
+            pos += 1;
+        }
+        out.push(' ');
+        idx += 1;
+        pos = 0;
+    }
+    out
+}
+
+/// Sequentially paired "..." contents with the index just past the
+/// closing quote (values never contain quotes in the files this parses).
+fn quoted_strings(line: &str) -> Vec<(String, usize)> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    loop {
+        let a = match chars[i..].iter().position(|&c| c == '"') {
+            Some(k) => i + k,
+            None => return out,
+        };
+        let b = match chars[a + 1..].iter().position(|&c| c == '"') {
+            Some(k) => a + 1 + k,
+            None => return out,
+        };
+        out.push((chars[a + 1..b].iter().collect(), b + 1));
+        i = b + 1;
+    }
+}
+
+fn lowercase_names(line: &str) -> Vec<String> {
+    quoted_strings(line)
+        .into_iter()
+        .filter(|(s, _)| s.chars().all(is_name_char))
+        .map(|(s, _)| s)
+        .collect()
+}
+
+/// Quoted strings immediately followed by ':' (dict keys).
+fn quoted_keys(line: &str) -> Vec<String> {
+    let chars: Vec<char> = line.chars().collect();
+    quoted_strings(line)
+        .into_iter()
+        .filter(|(s, end)| {
+            *end < chars.len()
+                && chars[*end] == ':'
+                && !s.is_empty()
+                && s.chars().all(is_name_char)
+        })
+        .map(|(s, _)| s)
+        .collect()
+}
+
+fn is_ident_byte(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// `var = ...` at a token boundary.
+fn has_assignment(line: &str, var: &str) -> bool {
+    let chars: Vec<char> = line.chars().collect();
+    let vlen = var.chars().count();
+    let mut i = 0usize;
+    loop {
+        let k = match find_from(&chars, var, i) {
+            Some(k) => k,
+            None => return false,
+        };
+        let before_ok = k == 0 || !is_ident_byte(chars[k - 1]);
+        let mut j = k + vlen;
+        while j < chars.len() && chars[j] == ' ' {
+            j += 1;
+        }
+        if before_ok
+            && j < chars.len()
+            && chars[j] == '='
+            && (j + 1 >= chars.len() || chars[j + 1] != '=')
+        {
+            return true;
+        }
+        i = k + vlen;
+    }
+}
+
+fn find_from(chars: &[char], needle: &str, start: usize) -> Option<usize> {
+    let nd: Vec<char> = needle.chars().collect();
+    if nd.is_empty() || start > chars.len() {
+        return None;
+    }
+    (start..chars.len().saturating_sub(nd.len() - 1))
+        .find(|&k| chars[k..k + nd.len()] == nd[..])
+}
+
+pub fn int_after(line: &str, marker: &str) -> Option<u64> {
+    let chars: Vec<char> = line.chars().collect();
+    let k = find_from(&chars, marker, 0)?;
+    let mut j = k + marker.chars().count();
+    while j < chars.len() && chars[j] == ' ' {
+        j += 1;
+    }
+    let mut d = String::new();
+    while j < chars.len() && chars[j].is_ascii_digit() {
+        d.push(chars[j]);
+        j += 1;
+    }
+    d.parse().ok()
+}
+
+#[derive(Default)]
+pub struct PySpecs {
+    /// name -> (line, arity_ok)
+    pub names: Vec<(String, usize, bool)>,
+    pub exec_meta: Vec<(String, usize)>,
+    pub constants: Vec<String>,
+    pub format_version: Option<u64>,
+    pub fv_line: usize,
+    pub errors: Vec<Finding>,
+}
+
+pub fn parse_aot(rel: &str, text: &str) -> PySpecs {
+    let mut out = PySpecs::default();
+    let lines: Vec<&str> = text.split('\n').collect();
+    let mut variants: Vec<String> = Vec::new();
+    let mut prefixes: Vec<String> = Vec::new();
+    let mut wnames: Vec<String> = Vec::new();
+    let mut tnames: Vec<String> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if line.contains("for variant in") {
+            let got = lowercase_names(line);
+            if !got.is_empty() {
+                variants = got;
+            }
+        }
+        if has_assignment(line, "prefix") {
+            // model-name prefixes are "" or end in '_' ("draft_"); drop
+            // the condition's other literals ("main")
+            let got: Vec<String> = lowercase_names(line)
+                .into_iter()
+                .filter(|s| s.is_empty() || s.ends_with('_'))
+                .collect();
+            if !got.is_empty() {
+                prefixes = got;
+            }
+        }
+        if line.contains("for wname") {
+            let got = lowercase_names(line);
+            if !got.is_empty() {
+                wnames = got;
+            }
+        }
+        if line.contains("for tname") {
+            let mut block = line.to_string();
+            let mut j = idx;
+            while !block.trim_end().ends_with(':') && j + 1 < lines.len() {
+                j += 1;
+                block.push_str(lines[j]);
+            }
+            tnames = lowercase_names(&block)
+                .into_iter()
+                .filter(|s| {
+                    exec_name_ref(s) == Some(("exact", s.clone()))
+                })
+                .collect();
+        }
+        if let Some(v) = int_after(line, "FORMAT_VERSION =") {
+            out.format_version = Some(v);
+            out.fv_line = idx + 1;
+        }
+        if out.format_version.is_none() {
+            if let Some(v) = int_after(line, "\"format_version\":") {
+                out.format_version = Some(v);
+                out.fv_line = idx + 1;
+            }
+        }
+    }
+
+    fn subst<'a>(
+        var: &str,
+        variants: &'a [String],
+        prefixes: &'a [String],
+        wnames: &'a [String],
+    ) -> &'a [String] {
+        match var {
+            "variant" => variants,
+            "prefix" => prefixes,
+            "wname" => wnames,
+            _ => &[],
+        }
+    }
+
+    for (idx, line) in lines.iter().enumerate() {
+        let stripped = line.trim_start();
+        if !stripped.starts_with("add(") {
+            continue;
+        }
+        let lineno = idx + 1;
+        let chars: Vec<char> = line.chars().collect();
+        let open_pos = find_from(&chars, "add(", 0).unwrap() + 3;
+        let call = balanced_call(&lines, idx, open_pos);
+        let call_chars: Vec<char> = call.chars().collect();
+        let inner: String = call_chars
+            .get(1..call_chars.len().saturating_sub(1))
+            .unwrap_or(&[])
+            .iter()
+            .collect();
+        let first = inner.split(',').next().unwrap_or("").trim().to_string();
+        let f_template = first
+            .strip_prefix("f\"")
+            .and_then(|s| s.strip_suffix('"'))
+            .map(str::to_string);
+        let plain = first
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+            .map(str::to_string);
+        let names: Vec<String> = if let Some(template) = &f_template {
+            // expand f-string placeholders against the loop variables
+            let template = template.as_str();
+            let mut names = vec![String::new()];
+            let mut pos = 0usize;
+            let mut failed = false;
+            while pos < template.len() {
+                match template[pos..].find('{') {
+                    None => {
+                        for n in names.iter_mut() {
+                            n.push_str(&template[pos..]);
+                        }
+                        break;
+                    }
+                    Some(boff) => {
+                        let b = pos + boff;
+                        let e = match template[b..].find('}') {
+                            Some(eoff) => b + eoff,
+                            None => template.len(),
+                        };
+                        let var = &template[b + 1..e];
+                        let vals = subst(var, &variants, &prefixes, &wnames);
+                        if vals.is_empty() {
+                            out.errors.push(Finding {
+                                file: rel.to_string(),
+                                line: lineno,
+                                rule: "abi-drift",
+                                message: format!(
+                                    "cannot resolve placeholder '{{{var}}}' \
+                                     in an AOT entry-point name"
+                                ),
+                            });
+                            failed = true;
+                            break;
+                        }
+                        let mut next = Vec::new();
+                        for n in &names {
+                            for v in vals {
+                                next.push(format!("{n}{}{v}", &template[pos..b]));
+                            }
+                        }
+                        names = next;
+                        pos = e + 1;
+                    }
+                }
+            }
+            if failed { Vec::new() } else { names }
+        } else if let Some(lit) = plain {
+            vec![lit]
+        } else if first == "tname" {
+            if tnames.is_empty() {
+                out.errors.push(Finding {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: "abi-drift",
+                    message: "cannot resolve 'tname' entry-point names"
+                        .to_string(),
+                });
+            }
+            tnames.clone()
+        } else {
+            out.errors.push(Finding {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "abi-drift",
+                message: format!(
+                    "cannot resolve entry-point name expression '{first}'"
+                ),
+            });
+            Vec::new()
+        };
+        // arity: count of _spec() lowering args vs declared input _sig()s
+        let mut groups: Vec<String> = Vec::new();
+        let mut depth = 0i64;
+        let mut gstart: Option<usize> = None;
+        let inner_chars: Vec<char> = inner.chars().collect();
+        for (p, &ch) in inner_chars.iter().enumerate() {
+            if ch == '[' && depth == 0 {
+                gstart = Some(p);
+            }
+            if ch == '(' || ch == '[' {
+                depth += 1;
+            } else if ch == ')' || ch == ']' {
+                depth -= 1;
+                if ch == ']' && depth == 0 {
+                    if let Some(g) = gstart {
+                        groups.push(inner_chars[g..=p].iter().collect());
+                    }
+                }
+            }
+        }
+        let mut arity_ok = true;
+        if groups.len() >= 2 {
+            let n_spec = count_occurrences(&groups[0], "_spec(");
+            let n_sig = count_occurrences(&groups[1], "_sig(");
+            arity_ok = n_spec == n_sig;
+            if !arity_ok {
+                out.errors.push(Finding {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: "abi-drift",
+                    message: format!(
+                        "entry point declares {n_spec} lowering args but \
+                         {n_sig} input signatures"
+                    ),
+                });
+            }
+        }
+        for nm in names {
+            if !out.names.iter().any(|(n, _, _)| *n == nm) {
+                out.names.push((nm, lineno, arity_ok));
+            }
+        }
+    }
+
+    let mut in_meta = false;
+    let mut in_const = false;
+    for (idx, line) in lines.iter().enumerate() {
+        if line.trim_start().starts_with("EXEC_META") && line.contains('{') {
+            in_meta = true;
+            continue;
+        }
+        if in_meta {
+            if line.trim() == "}" {
+                in_meta = false;
+                continue;
+            }
+            let keys = quoted_keys(line);
+            if !keys.is_empty() && line.trim_start().starts_with('"') {
+                out.exec_meta.push((keys[0].clone(), idx + 1));
+            }
+        }
+        if line.contains("\"constants\": {") {
+            in_const = true;
+            continue;
+        }
+        if in_const {
+            if line.trim().starts_with('}') {
+                in_const = false;
+                continue;
+            }
+            out.constants.extend(quoted_keys(line));
+        }
+    }
+    out
+}
+
+/// What the manifest loader consumes: the accepted format_version range
+/// and the constants keys read on the `c` object.
+pub struct ManifestReads {
+    pub vrange: Option<(u64, u64)>,
+    pub vline: usize,
+    pub keys: Vec<(String, usize)>,
+}
+
+/// Parse manifest.rs consumption, skipping cfg(test) code.
+pub fn parse_manifest_rs(text: &str) -> ManifestReads {
+    let lines = strip_rust(text);
+    let mut out = ManifestReads {
+        vrange: None,
+        vline: 0,
+        keys: Vec::new(),
+    };
+    for (idx, ln) in lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        if let Some(k) = ln.code.find(").contains(&version)") {
+            if let Some(a) = ln.code[..k].rfind('(') {
+                let lo_hi: Vec<&str> = ln.code[a + 1..k].split("..=").collect();
+                if lo_hi.len() == 2 {
+                    if let (Ok(lo), Ok(hi)) =
+                        (lo_hi[0].parse::<u64>(), lo_hi[1].parse::<u64>())
+                    {
+                        out.vrange = Some((lo, hi));
+                        out.vline = idx + 1;
+                    }
+                }
+            }
+        }
+        // string contents are stripped out of code; pair get_usize/get_i32
+        // calls on `c` with the string literals that start on the line
+        let ncalls = count_occurrences(&ln.code, "get_usize(c, \"")
+            + count_occurrences(&ln.code, "get_i32(c, \"");
+        for s in ln.strings.iter().take(ncalls) {
+            out.keys.push((s.clone(), idx + 1));
+        }
+    }
+    out
+}
+
+/// One exec-name-shaped string literal found in non-test Rust code.
+pub struct NameRef {
+    /// "exact" or "prefix" per [`exec_name_ref`]
+    pub kind: &'static str,
+    pub val: String,
+    pub line: usize,
+}
+
+/// Exec-name-shaped string literals in non-test code.
+pub fn rust_name_refs(text: &str) -> Vec<NameRef> {
+    let mut refs = Vec::new();
+    for (idx, ln) in strip_rust(text).iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        for s in &ln.strings {
+            if let Some((kind, val)) = exec_name_ref(s) {
+                refs.push(NameRef {
+                    kind,
+                    val,
+                    line: idx + 1,
+                });
+            }
+        }
+    }
+    refs
+}
+
+/// Run the full ABI drift check rooted at `root`. When `spec_names` /
+/// `spec_fv` are given (from `aot.py --dump-specs` via --abi-spec), they
+/// replace the source-scraped name set and format version.
+pub fn abi_check(
+    root: &Path,
+    spec_names: Option<&[String]>,
+    spec_fv: Option<u64>,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let aot_rel = "python/compile/aot.py";
+    let aot_path = root.join(aot_rel);
+    let aot_text = match std::fs::read_to_string(&aot_path) {
+        Ok(t) => t,
+        Err(_) => return findings,
+    };
+    let specs = parse_aot(aot_rel, &aot_text);
+    findings.extend(specs.errors.iter().cloned());
+    let built: BTreeSet<String> = match spec_names {
+        Some(ns) => ns.iter().cloned().collect(),
+        None => specs.names.iter().map(|(n, _, _)| n.clone()).collect(),
+    };
+    let fv = spec_fv.or(specs.format_version);
+
+    for (key, lineno) in &specs.exec_meta {
+        if !built.contains(key) {
+            findings.push(Finding {
+                file: aot_rel.to_string(),
+                line: *lineno,
+                rule: "abi-drift",
+                message: format!(
+                    "EXEC_META key '{key}' does not match any built entry \
+                     point"
+                ),
+            });
+        }
+    }
+
+    let man_rel = "rust/src/runtime/manifest.rs";
+    let man_path = root.join(man_rel);
+    if let Ok(man_text) = std::fs::read_to_string(&man_path) {
+        let reads = parse_manifest_rs(&man_text);
+        if let (Some((lo, hi)), Some(v)) = (reads.vrange, fv) {
+            if !(lo..=hi).contains(&v) {
+                findings.push(Finding {
+                    file: man_rel.to_string(),
+                    line: reads.vline,
+                    rule: "abi-drift",
+                    message: format!(
+                        "manifest.rs accepts format_version {lo}..={hi} \
+                         but python/compile emits {v}"
+                    ),
+                });
+            }
+        }
+        let cset: BTreeSet<&String> = specs.constants.iter().collect();
+        for (key, lineno) in &reads.keys {
+            if !cset.is_empty() && !cset.contains(key) {
+                findings.push(Finding {
+                    file: man_rel.to_string(),
+                    line: *lineno,
+                    rule: "abi-drift",
+                    message: format!(
+                        "manifest.rs reads constant '{key}' that \
+                         python/compile does not emit"
+                    ),
+                });
+            }
+        }
+    }
+
+    for rf in ABI_RUST_FILES {
+        let path = root.join(rf);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => continue,
+        };
+        for r in rust_name_refs(&text) {
+            if r.kind == "exact" && !built.contains(&r.val) {
+                findings.push(Finding {
+                    file: rf.to_string(),
+                    line: r.line,
+                    rule: "abi-drift",
+                    message: format!(
+                        "exec name '{}' is not built by \
+                         python/compile/aot.py",
+                        r.val
+                    ),
+                });
+            } else if r.kind == "prefix"
+                && !built.iter().any(|n| n.starts_with(&r.val))
+            {
+                findings.push(Finding {
+                    file: rf.to_string(),
+                    line: r.line,
+                    rule: "abi-drift",
+                    message: format!(
+                        "no built entry point matches exec-name prefix \
+                         '{}'",
+                        r.val
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}
+
+///// Minimal reader for the JSON emitted by `aot.py --dump-specs`:
+/// `{"format_version": N, "entry_points": [{"name": "...", ...}, ...]}`.
+/// Not a general JSON parser — the emitter writes one entry per line.
+pub fn read_spec_json(text: &str) -> (Vec<String>, Option<u64>) {
+    let mut names = Vec::new();
+    let mut fv = None;
+    for line in text.split('\n') {
+        if fv.is_none() {
+            fv = int_after(line, "\"format_version\":");
+        }
+        let chars: Vec<char> = line.chars().collect();
+        let mut i = 0usize;
+        while let Some(k) = find_from(&chars, "\"name\":", i) {
+            let rest: String = chars[k + 7..].iter().collect();
+            for (s, _) in quoted_strings(&rest).into_iter().take(1) {
+                names.push(s);
+            }
+            i = k + 7;
+        }
+    }
+    (names, fv)
+}

@@ -1,0 +1,118 @@
+//! The CI ratchet: per-(file, rule) finding counts against a committed
+//! `lint-baseline.toml`. New violations fail; so does a stale baseline
+//! (current < baseline), which forces fixes to shrink it in the same PR.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::abi::int_after;
+use crate::rules::Finding;
+
+pub type Counts = BTreeMap<(String, String), usize>;
+
+pub fn counts_of(findings: &[Finding]) -> Counts {
+    let mut counts = Counts::new();
+    for f in findings {
+        *counts
+            .entry((f.file.clone(), f.rule.to_string()))
+            .or_insert(0) += 1;
+    }
+    counts
+}
+
+pub fn write_baseline(path: &Path, counts: &Counts) -> std::io::Result<()> {
+    let mut out = String::from(
+        "# d3lint baseline: accepted pre-existing violations, counted\n\
+         # per (file, rule). CI ratchets against this file — new\n\
+         # violations fail, and fixing violations requires shrinking\n\
+         # the matching count here (a stale baseline also fails).\n\
+         # Regenerate: cargo run -p d3lint -- --write-baseline\n\
+         \n[counts]\n",
+    );
+    for ((file, rule), n) in counts {
+        out.push_str(&format!("\"{file}:{rule}\" = {n}\n"));
+    }
+    std::fs::write(path, out)
+}
+
+pub fn read_baseline(path: &Path) -> std::io::Result<Counts> {
+    let text = std::fs::read_to_string(path)?;
+    let mut counts = Counts::new();
+    for raw in text.split('\n') {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') || line == "[counts]" {
+            continue;
+        }
+        if !line.starts_with('"') {
+            continue;
+        }
+        let b = match line[1..].find('"') {
+            Some(k) => 1 + k,
+            None => continue,
+        };
+        let key = &line[1..b];
+        let val = match int_after(line, "\" =") {
+            Some(v) => v as usize,
+            None => continue,
+        };
+        let (file, rule) = match key.rfind(':') {
+            Some(k) => (&key[..k], &key[k + 1..]),
+            None => continue,
+        };
+        counts.insert((file.to_string(), rule.to_string()), val);
+    }
+    Ok(counts)
+}
+
+/// One drift line for the report; `new_violation` distinguishes "count
+/// went up" from "stale baseline" (count went down).
+pub struct Drift {
+    pub file: String,
+    pub rule: String,
+    pub baseline: usize,
+    pub current: usize,
+    pub new_violation: bool,
+}
+
+impl Drift {
+    pub fn render(&self) -> String {
+        if self.new_violation {
+            format!(
+                "{}: {} new '{}' violation(s) (baseline {}, current {})",
+                self.file,
+                self.current - self.baseline,
+                self.rule,
+                self.baseline,
+                self.current
+            )
+        } else {
+            format!(
+                "{}: stale baseline for '{}' (baseline {}, current {}) \
+                 — shrink it",
+                self.file, self.rule, self.baseline, self.current
+            )
+        }
+    }
+}
+
+pub fn check(baseline: &Counts, current: &Counts) -> Vec<Drift> {
+    let mut keys: Vec<&(String, String)> =
+        baseline.keys().chain(current.keys()).collect();
+    keys.sort();
+    keys.dedup();
+    let mut drifts = Vec::new();
+    for key in keys {
+        let b = *baseline.get(key).unwrap_or(&0);
+        let c = *current.get(key).unwrap_or(&0);
+        if b != c {
+            drifts.push(Drift {
+                file: key.0.clone(),
+                rule: key.1.clone(),
+                baseline: b,
+                current: c,
+                new_violation: c > b,
+            });
+        }
+    }
+    drifts
+}

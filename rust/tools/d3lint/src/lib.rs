@@ -1,0 +1,87 @@
+//! d3lint: repo-invariant static analysis for the d3llm tree.
+//!
+//! Four rules, all at the source-token level (no rustc plugin, zero
+//! dependencies):
+//!
+//! - `determinism`    — no `HashMap`/`HashSet`/`Instant::now()`/
+//!   `SystemTime` in the replay-deterministic paths (decode/, the
+//!   scheduler, the batcher, the KV pool) except via
+//!   `// lint: allow(determinism)`.
+//! - `panic-path`     — no `.unwrap()`/`.expect(`/`panic!`/
+//!   `unreachable!`/direct indexing in serving paths (coordinator/,
+//!   decode/session.rs): a panic there kills a replica mid-request.
+//! - `atomic-ordering` — any non-Relaxed `Ordering::` use in
+//!   coordinator/ needs an `// ordering:` justification comment.
+//! - `abi-drift`      — AOT entry points built by python/compile/aot.py
+//!   (names, arity, format_version) must match their consumption in
+//!   runtime/manifest.rs and model/exec.rs.
+//!
+//! Findings print as `file:line rule message`. The committed
+//! `lint-baseline.toml` accepts pre-existing violations and ratchets in
+//! CI: counts only go down. `mirror.py` in this directory is a
+//! byte-for-byte Python port for containers without cargo.
+
+pub mod abi;
+pub mod baseline;
+pub mod rules;
+pub mod scan;
+
+use std::path::{Path, PathBuf};
+
+use rules::Finding;
+
+/// All `.rs` files under the linted roots, as sorted repo-relative
+/// forward-slash paths.
+pub fn walk(root: &Path) -> Vec<String> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "rust/benches", "rust/tests"] {
+        collect_rs(&root.join(sub), root, &mut files);
+    }
+    files.sort();
+    files
+}
+
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<String>) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    let mut paths: Vec<PathBuf> =
+        entries.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(&p, root, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            if let Ok(rel) = p.strip_prefix(root) {
+                out.push(
+                    rel.components()
+                        .map(|c| c.as_os_str().to_string_lossy())
+                        .collect::<Vec<_>>()
+                        .join("/"),
+                );
+            }
+        }
+    }
+}
+
+/// Full lint run: rule scan over the tree plus the ABI cross-check,
+/// sorted by (file, line, rule, message).
+pub fn run(
+    root: &Path,
+    spec_names: Option<&[String]>,
+    spec_fv: Option<u64>,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for rel in walk(root) {
+        if let Ok(text) = std::fs::read_to_string(root.join(&rel)) {
+            findings.extend(rules::scan_rust_file(&rel, &text));
+        }
+    }
+    findings.extend(abi::abi_check(root, spec_names, spec_fv));
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message)
+            .cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    findings
+}

@@ -1,0 +1,140 @@
+//! CLI: `cargo run -p d3lint [-- FLAGS]`
+//!
+//!   (no flags)            list findings, exit 1 if any
+//!   --check-baseline      ratchet against lint-baseline.toml, exit 1 on
+//!                         drift in either direction
+//!   --write-baseline      regenerate lint-baseline.toml from the tree
+//!   --abi-spec FILE.json  use entry points from `aot.py --dump-specs`
+//!                         output instead of scraping aot.py source
+//!   --root DIR            repo root (default: relative to this crate)
+//!
+//! Exit codes: 0 clean, 1 findings/drift, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut abi_spec: Option<PathBuf> = None;
+    let mut write_baseline = false;
+    let mut check_baseline = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--write-baseline" => write_baseline = true,
+            "--check-baseline" => check_baseline = true,
+            "--root" => match it.next() {
+                Some(d) => root = Some(PathBuf::from(d)),
+                None => return usage("--root needs a directory"),
+            },
+            "--abi-spec" => match it.next() {
+                Some(f) => abi_spec = Some(PathBuf::from(f)),
+                None => return usage("--abi-spec needs a file"),
+            },
+            other => return usage(&format!("unknown flag '{other}'")),
+        }
+    }
+
+    // default root: rust/tools/d3lint/ -> repo root, so the binary works
+    // both via `cargo run -p d3lint` (cwd = workspace root) and from a
+    // checkout subdirectory via CARGO_MANIFEST_DIR.
+    let root = root.unwrap_or_else(|| {
+        let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        manifest
+            .ancestors()
+            .nth(3)
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| PathBuf::from("."))
+    });
+
+    let (spec_names, spec_fv) = match &abi_spec {
+        Some(p) => match std::fs::read_to_string(p) {
+            Ok(text) => {
+                let (names, fv) = d3lint::abi::read_spec_json(&text);
+                if names.is_empty() {
+                    eprintln!(
+                        "d3lint: no entry points in {}",
+                        p.display()
+                    );
+                    return ExitCode::from(2);
+                }
+                (Some(names), fv)
+            }
+            Err(e) => {
+                eprintln!("d3lint: cannot read {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        },
+        None => (None, None),
+    };
+
+    let findings = d3lint::run(&root, spec_names.as_deref(), spec_fv);
+    let baseline_path = root.join("lint-baseline.toml");
+
+    if write_baseline {
+        let counts = d3lint::baseline::counts_of(&findings);
+        if let Err(e) =
+            d3lint::baseline::write_baseline(&baseline_path, &counts)
+        {
+            eprintln!(
+                "d3lint: cannot write {}: {e}",
+                baseline_path.display()
+            );
+            return ExitCode::from(2);
+        }
+        println!(
+            "wrote {} ({} findings)",
+            baseline_path.display(),
+            findings.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    if check_baseline {
+        let base = match d3lint::baseline::read_baseline(&baseline_path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!(
+                    "d3lint: cannot read {}: {e}",
+                    baseline_path.display()
+                );
+                return ExitCode::from(2);
+            }
+        };
+        let cur = d3lint::baseline::counts_of(&findings);
+        let drifts = d3lint::baseline::check(&base, &cur);
+        for d in &drifts {
+            println!("{}", d.render());
+        }
+        println!(
+            "{} findings, {} baseline keys, {} drift(s)",
+            findings.len(),
+            base.len(),
+            drifts.len()
+        );
+        return if drifts.is_empty() {
+            ExitCode::SUCCESS
+        } else {
+            ExitCode::FAILURE
+        };
+    }
+
+    for f in &findings {
+        println!("{}", f.render());
+    }
+    println!("{} findings", findings.len());
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!(
+        "d3lint: {msg}\nusage: d3lint [--check-baseline | \
+         --write-baseline] [--abi-spec FILE.json] [--root DIR]"
+    );
+    ExitCode::from(2)
+}

@@ -1,0 +1,144 @@
+//! The repo-invariant rules, applied per stripped line. Scopes and token
+//! lists are the contract — keep them identical to mirror.py.
+
+use crate::scan::{allowed, count_occurrences, is_index_bracket, strip_rust};
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{} {} {}", self.file, self.line, self.rule,
+                self.message)
+    }
+}
+
+/// Determinism scope: every bit-identity / virtual-clock pin lives here.
+pub const DET_SCOPES: &[&str] = &[
+    "rust/src/decode/",
+    "rust/src/coordinator/scheduler.rs",
+    "rust/src/coordinator/batcher.rs",
+    "rust/src/model/kv_pool.rs",
+];
+/// Panic scope: request-handling code where a panic kills a replica.
+pub const PANIC_SCOPES: &[&str] =
+    &["rust/src/coordinator/", "rust/src/decode/session.rs"];
+/// Ordering scope: the cross-thread handshake atomics (router alive
+/// flags, drain, replica gauges) live under coordinator/.
+pub const ORDERING_SCOPES: &[&str] = &["rust/src/coordinator/"];
+
+pub const DET_TOKENS: &[&str] =
+    &["HashMap", "HashSet", "Instant::now()", "SystemTime"];
+pub const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!("];
+/// `Ordering::Relaxed` is the documented default for advisory counters
+/// and gauges; any *stronger* ordering marks a handshake and must carry
+/// an `// ordering:` justification (same line or the comment block
+/// directly above).
+pub const ORDERING_TOKENS: &[&str] = &[
+    "Ordering::SeqCst",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+];
+
+pub fn in_scope(rel: &str, scopes: &[&str]) -> bool {
+    scopes.iter().any(|s| rel == *s || rel.starts_with(s))
+}
+
+/// Run the determinism / panic-path / atomic-ordering rules over one
+/// Rust file. `rel` is the repo-relative path (forward slashes).
+pub fn scan_rust_file(rel: &str, text: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let lines = strip_rust(text);
+    // `prev_comment` carries the whole comment block directly above the
+    // line: consecutive code-less lines accumulate, any code line resets
+    let mut prev_comment = String::new();
+    fn carry(prev: &mut String, ln: &crate::scan::Line) {
+        if ln.code.trim().is_empty() {
+            prev.push_str(&ln.comment);
+        } else {
+            *prev = ln.comment.clone();
+        }
+    }
+    for (idx, ln) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        if ln.in_test {
+            carry(&mut prev_comment, ln);
+            continue;
+        }
+        if in_scope(rel, DET_SCOPES)
+            && !allowed("determinism", &ln.comment, &prev_comment)
+        {
+            for tok in DET_TOKENS {
+                for _ in 0..count_occurrences(&ln.code, tok) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: "determinism",
+                        message: format!(
+                            "'{tok}' in a determinism-scoped path \
+                             (virtual clock / ordered maps only)"
+                        ),
+                    });
+                }
+            }
+        }
+        if in_scope(rel, PANIC_SCOPES)
+            && !allowed("panic-path", &ln.comment, &prev_comment)
+        {
+            for tok in PANIC_TOKENS {
+                for _ in 0..count_occurrences(&ln.code, tok) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: "panic-path",
+                        message: format!(
+                            "'{tok}' in a serving path (degrade to an \
+                             error reply instead)"
+                        ),
+                    });
+                }
+            }
+            let code: Vec<char> = ln.code.chars().collect();
+            for (i, &ch) in code.iter().enumerate() {
+                if ch == '[' && is_index_bracket(&code, i) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: "panic-path",
+                        message: "direct indexing in a serving path \
+                                  (use .get())"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+        if in_scope(rel, ORDERING_SCOPES) {
+            let justified = ln.comment.contains("ordering:")
+                || prev_comment.contains("ordering:");
+            if !justified {
+                for tok in ORDERING_TOKENS {
+                    for _ in 0..count_occurrences(&ln.code, tok) {
+                        findings.push(Finding {
+                            file: rel.to_string(),
+                            line: lineno,
+                            rule: "atomic-ordering",
+                            message: format!(
+                                "'{tok}' without an '// ordering:' \
+                                 justification comment"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        carry(&mut prev_comment, ln);
+    }
+    findings
+}

@@ -1,0 +1,220 @@
+//! Rust source line model: comment/string stripping and `#[cfg(test)]`
+//! region tracking, at the source-token level (no rustc plugin).
+//!
+//! Every heuristic here is mirrored byte-for-byte by
+//! `rust/tools/d3lint/mirror.py` (used to regenerate the baseline in
+//! containers without a Rust toolchain) — change both together; the
+//! baseline test in tests/lint_rules.rs is the drift alarm.
+
+/// One source line after stripping.
+pub struct Line {
+    /// Source text with comment text removed and string/char literal
+    /// *contents* removed (delimiters kept), so token rules never match
+    /// inside a string or a comment.
+    pub code: String,
+    /// Concatenated text of all comments on the line (`//` and `/* */`),
+    /// where `lint: allow(...)` / `ordering:` markers live.
+    pub comment: String,
+    /// Contents of string literals that *start* on this line (the ABI
+    /// check reads exec-name literals from these).
+    pub strings: Vec<String>,
+    /// Line is inside a `#[cfg(test)]`-gated item (rules skip it).
+    pub in_test: bool,
+}
+
+fn close_string(lines: &mut [Line], current: &mut Line, start: usize,
+                buf: String) {
+    if start == lines.len() {
+        current.strings.push(buf);
+    } else {
+        lines[start].strings.push(buf);
+    }
+}
+
+/// Split `text` into stripped [`Line`]s. State (block comments, raw and
+/// normal strings, brace depth, cfg(test) regions) carries across lines.
+pub fn strip_rust(text: &str) -> Vec<Line> {
+    let mut lines: Vec<Line> = Vec::new();
+    let mut block_depth = 0usize; // /* */ nesting
+    let mut raw_hashes: Option<usize> = None; // inside r#".."#
+    let mut in_str = false; // inside a normal "..." string
+    let mut str_start = 0usize; // line index the open string started on
+    let mut str_buf = String::new();
+    let mut depth = 0i64; // brace depth over code
+    let mut test_depth: Option<i64> = None; // depth a cfg(test) opened at
+    let mut pending_test = false; // saw #[cfg(test)], awaiting its '{'
+
+    for raw_line in text.split('\n') {
+        let raw: Vec<char> = raw_line.chars().collect();
+        let mut ln = Line {
+            code: String::new(),
+            comment: String::new(),
+            strings: Vec::new(),
+            in_test: false,
+        };
+        let was_in_test = test_depth.is_some();
+        let n = raw.len();
+        let mut i = 0usize;
+        while i < n {
+            let c = raw[i];
+            if in_str {
+                if c == '\\' && i + 1 < n {
+                    str_buf.push(raw[i]);
+                    str_buf.push(raw[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    in_str = false;
+                    ln.code.push('"');
+                    let buf = std::mem::take(&mut str_buf);
+                    close_string(&mut lines, &mut ln, str_start, buf);
+                } else {
+                    str_buf.push(c);
+                }
+                i += 1;
+                continue;
+            }
+            if let Some(h) = raw_hashes {
+                let terminated = c == '"'
+                    && raw[i + 1..].iter().take(h).filter(|&&x| x == '#')
+                        .count() == h
+                    && i + 1 + h <= n;
+                if terminated {
+                    ln.code.push('"');
+                    for _ in 0..h {
+                        ln.code.push('#');
+                    }
+                    let buf = std::mem::take(&mut str_buf);
+                    close_string(&mut lines, &mut ln, str_start, buf);
+                    i += 1 + h;
+                    raw_hashes = None;
+                } else {
+                    str_buf.push(c);
+                    i += 1;
+                }
+                continue;
+            }
+            if block_depth > 0 {
+                if c == '*' && i + 1 < n && raw[i + 1] == '/' {
+                    block_depth -= 1;
+                    i += 2;
+                } else if c == '/' && i + 1 < n && raw[i + 1] == '*' {
+                    block_depth += 1;
+                    i += 2;
+                } else {
+                    ln.comment.push(c);
+                    i += 1;
+                }
+                continue;
+            }
+            // ---- code context
+            if c == '/' && i + 1 < n && raw[i + 1] == '/' {
+                ln.comment.extend(&raw[i + 2..]);
+                break;
+            }
+            if c == '/' && i + 1 < n && raw[i + 1] == '*' {
+                block_depth += 1;
+                i += 2;
+                continue;
+            }
+            if c == 'r' {
+                let mut j = i + 1;
+                while j < n && raw[j] == '#' {
+                    j += 1;
+                }
+                if j < n && raw[j] == '"' {
+                    let h = j - i - 1;
+                    raw_hashes = Some(h);
+                    ln.code.push('r');
+                    for _ in 0..h {
+                        ln.code.push('#');
+                    }
+                    ln.code.push('"');
+                    str_start = lines.len();
+                    str_buf.clear();
+                    i = j + 1;
+                    continue;
+                }
+            }
+            if c == '"' {
+                in_str = true;
+                ln.code.push('"');
+                str_start = lines.len();
+                str_buf.clear();
+                i += 1;
+                continue;
+            }
+            if c == '\'' {
+                // char literal vs lifetime: '\x..' or 'x' is a literal
+                if i + 1 < n && raw[i + 1] == '\\' {
+                    let close = raw[i + 2..].iter().position(|&x| x == '\'');
+                    ln.code.push_str("''");
+                    i = match close {
+                        Some(k) => i + 2 + k + 1,
+                        None => n,
+                    };
+                    continue;
+                }
+                if i + 2 < n && raw[i + 2] == '\'' {
+                    ln.code.push_str("''");
+                    i += 3;
+                    continue;
+                }
+                ln.code.push(c); // lifetime
+                i += 1;
+                continue;
+            }
+            ln.code.push(c);
+            i += 1;
+        }
+        // cfg(test) tracking: the region starts at its opening brace
+        if test_depth.is_none() && ln.code.contains("cfg(test)") {
+            pending_test = true;
+        }
+        for ch in ln.code.chars() {
+            if ch == '{' {
+                if pending_test && test_depth.is_none() {
+                    test_depth = Some(depth);
+                    pending_test = false;
+                }
+                depth += 1;
+            } else if ch == '}' {
+                depth -= 1;
+                if test_depth == Some(depth) {
+                    test_depth = None;
+                }
+            }
+        }
+        ln.in_test = was_in_test || test_depth.is_some();
+        lines.push(ln);
+    }
+    lines
+}
+
+pub fn count_occurrences(hay: &str, needle: &str) -> usize {
+    let mut c = 0usize;
+    let mut start = 0usize;
+    while let Some(k) = hay[start..].find(needle) {
+        c += 1;
+        start += k + needle.len();
+    }
+    c
+}
+
+pub fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// `[` counts as direct indexing when glued to an identifier tail, `)` or
+/// `]` — `x[i]`, `f()[0]`, `m[a][b]` — but not attributes (`#[..]`),
+/// macros (`vec![..]`), slice types (`&[f32]`) or array literals.
+pub fn is_index_bracket(code: &[char], i: usize) -> bool {
+    i > 0 && (is_ident_char(code[i - 1]) || code[i - 1] == ')'
+              || code[i - 1] == ']')
+}
+
+pub fn allowed(rule: &str, comment: &str, prev_comment: &str) -> bool {
+    let marker = format!("lint: allow({rule})");
+    comment.contains(&marker) || prev_comment.contains(&marker)
+}

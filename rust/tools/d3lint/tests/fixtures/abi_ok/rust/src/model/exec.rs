@@ -1,0 +1,7 @@
+pub fn prefill_name(variant: &str) -> String {
+    format!("prefill_{variant}")
+}
+
+pub const DECODE_EXEC: &str = "decode_step";
+pub const TRAJ_EXEC: &str = "trajectory";
+pub const TRAJ_PAGED_EXEC: &str = "trajectory_paged";

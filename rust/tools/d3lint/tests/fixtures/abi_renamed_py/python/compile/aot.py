@@ -1,0 +1,39 @@
+"""Mini AOT fixture with the decode entry point renamed on the Python
+side only — EXEC_META and the Rust consumers still say decode_step."""
+
+FORMAT_VERSION = 2
+
+EXEC_META = {
+    "prefill_pallas": {"kind": "prefill"},
+    "decode_step": {"kind": "decode"},
+}
+
+
+def build_specs():
+    specs = []
+
+    def add(name, fn, args, insig):
+        specs.append((name, fn, args, insig))
+
+    for variant in ("pallas", "xla"):
+        add(f"prefill_{variant}", prefill,
+            [tok_spec(), len_spec()],
+            [tok_sig(), len_sig()])
+    add("decode_step_v3", decode,
+        [tok_spec()],
+        [tok_sig()])
+    for tname in ("trajectory", "trajectory_paged"):
+        add(tname, traj,
+            [tok_spec()],
+            [tok_sig()])
+    return specs
+
+
+def manifest():
+    return {
+        "format_version": FORMAT_VERSION,
+        "constants": {
+            "vocab": 32,
+            "block": 4,
+        },
+    }

@@ -1,0 +1,10 @@
+pub fn load(j: &Json) -> Result<Manifest, String> {
+    let version = get_usize(&j, "format_version")?;
+    if !(1..=2).contains(&version) {
+        return Err("unsupported manifest version".to_string());
+    }
+    let c = json_obj(&j, "constants")?;
+    let vocab = get_usize(c, "vocab")?;
+    let block = get_usize(c, "block")?;
+    Ok(Manifest { vocab, block })
+}

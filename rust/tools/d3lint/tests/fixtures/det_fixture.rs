@@ -1,0 +1,29 @@
+use std::collections::HashMap;
+use std::time::SystemTime;
+
+pub fn stamp() -> u64 {
+    let _t = Instant::now();
+    let _m: HashMap<u8, u8> = HashMap::new();
+    0
+}
+
+pub fn pinned() {
+    let _m: HashMap<u8, u8> = HashMap::new(); // lint: allow(determinism) pinned order
+}
+
+// lint: allow(determinism) wall-clock is display-only here
+pub fn display_time() -> SystemTime {
+    let s = "HashMap inside a string literal is fine";
+    let _ = s;
+    SystemTime::now()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn test_gated_map_is_fine() {
+        let _m: HashMap<u8, u8> = HashMap::new();
+    }
+}

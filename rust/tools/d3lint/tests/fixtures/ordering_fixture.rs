@@ -1,0 +1,15 @@
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub fn flip(b: &AtomicBool) {
+    b.store(true, Ordering::SeqCst);
+    let _ = b.load(Ordering::Relaxed);
+    // ordering: SeqCst pairs with the drain handshake under the senders lock
+    b.swap(false, Ordering::SeqCst);
+    let _ = b.load(Ordering::Acquire); // ordering: pairs with the Release store
+    let _ = b.load(Ordering::Relaxed);
+    let _ = b.load(Ordering::Acquire);
+    // ordering: a justification block may span several comment lines —
+    // the whole contiguous block above the operation counts, not just
+    // the line immediately adjacent to it.
+    b.store(true, Ordering::Release);
+}

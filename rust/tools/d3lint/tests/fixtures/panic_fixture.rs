@@ -1,0 +1,28 @@
+pub fn reply(v: Option<u32>, xs: &[u32]) -> u32 {
+    let a = v.unwrap();
+    let b = v.expect("value");
+    let c = xs[0];
+    if a + b + c == 0 {
+        panic!("zero");
+    }
+    unreachable!()
+}
+
+pub fn tolerated(v: Option<u32>) -> u32 {
+    // lint: allow(panic-path) invariant: v is Some by construction
+    v.unwrap()
+}
+
+pub fn not_indexing(slice: &[f32]) -> Vec<f32> {
+    let v = vec![1.0f32];
+    let _attr: &[f32] = slice;
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_unwrap_is_fine_here() {
+        super::reply(Some(0), &[0]).to_string().pop().unwrap();
+    }
+}

@@ -1,0 +1,274 @@
+//! d3lint's own tests: every rule has a positive and an
+//! allowlisted-negative fixture, the ABI check has ok / renamed-python /
+//! renamed-rust fixture trees, and `repo_baseline_matches_tree` asserts
+//! the committed lint-baseline.toml matches the real tree exactly (a
+//! stale baseline fails CI here even before the ratchet job runs).
+
+use std::path::{Path, PathBuf};
+
+use d3lint::abi;
+use d3lint::baseline;
+use d3lint::rules::scan_rust_file;
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn fixture_text(name: &str) -> String {
+    std::fs::read_to_string(fixtures().join(name)).unwrap()
+}
+
+fn renders(findings: &[d3lint::rules::Finding]) -> Vec<String> {
+    findings.iter().map(|f| f.render()).collect()
+}
+
+// ----------------------------------------------------------- rule scans
+
+#[test]
+fn determinism_rule_fixture() {
+    let text = fixture_text("det_fixture.rs");
+    let got = renders(&scan_rust_file("rust/src/model/kv_pool.rs", &text));
+    let want = vec![
+        "rust/src/model/kv_pool.rs:1 determinism 'HashMap' in a \
+         determinism-scoped path (virtual clock / ordered maps only)",
+        "rust/src/model/kv_pool.rs:2 determinism 'SystemTime' in a \
+         determinism-scoped path (virtual clock / ordered maps only)",
+        "rust/src/model/kv_pool.rs:5 determinism 'Instant::now()' in a \
+         determinism-scoped path (virtual clock / ordered maps only)",
+        "rust/src/model/kv_pool.rs:6 determinism 'HashMap' in a \
+         determinism-scoped path (virtual clock / ordered maps only)",
+        "rust/src/model/kv_pool.rs:6 determinism 'HashMap' in a \
+         determinism-scoped path (virtual clock / ordered maps only)",
+        // the allow marker is line-scoped: line 14's comment covers line
+        // 15, not the SystemTime::now() three lines later
+        "rust/src/model/kv_pool.rs:18 determinism 'SystemTime' in a \
+         determinism-scoped path (virtual clock / ordered maps only)",
+    ];
+    assert_eq!(got, want);
+}
+
+#[test]
+fn panic_rule_fixture() {
+    let text = fixture_text("panic_fixture.rs");
+    let got =
+        renders(&scan_rust_file("rust/src/coordinator/protocol.rs", &text));
+    let want = vec![
+        "rust/src/coordinator/protocol.rs:2 panic-path '.unwrap()' in a \
+         serving path (degrade to an error reply instead)",
+        "rust/src/coordinator/protocol.rs:3 panic-path '.expect(' in a \
+         serving path (degrade to an error reply instead)",
+        "rust/src/coordinator/protocol.rs:4 panic-path direct indexing \
+         in a serving path (use .get())",
+        "rust/src/coordinator/protocol.rs:6 panic-path 'panic!(' in a \
+         serving path (degrade to an error reply instead)",
+        "rust/src/coordinator/protocol.rs:8 panic-path 'unreachable!(' \
+         in a serving path (degrade to an error reply instead)",
+    ];
+    assert_eq!(got, want);
+}
+
+#[test]
+fn ordering_rule_fixture() {
+    // Lines 7/8 are justified by same-line / previous-line comments and
+    // line 14's Release by a multi-line comment block; only the bare
+    // SeqCst (line 4) and Acquire (line 10) fire.
+    let text = fixture_text("ordering_fixture.rs");
+    let got =
+        renders(&scan_rust_file("rust/src/coordinator/router.rs", &text));
+    let want = vec![
+        "rust/src/coordinator/router.rs:4 atomic-ordering \
+         'Ordering::SeqCst' without an '// ordering:' justification \
+         comment",
+        "rust/src/coordinator/router.rs:10 atomic-ordering \
+         'Ordering::Acquire' without an '// ordering:' justification \
+         comment",
+    ];
+    assert_eq!(got, want);
+}
+
+#[test]
+fn rules_only_fire_in_scope() {
+    for name in
+        ["det_fixture.rs", "panic_fixture.rs", "ordering_fixture.rs"]
+    {
+        let text = fixture_text(name);
+        let got = scan_rust_file("rust/src/runtime/manifest.rs", &text);
+        assert!(
+            got.is_empty(),
+            "{name} produced {} findings out of scope",
+            got.len()
+        );
+    }
+}
+
+// ------------------------------------------------------------ ABI drift
+
+#[test]
+fn abi_ok_tree_is_clean() {
+    let findings = d3lint::run(&fixtures().join("abi_ok"), None, None);
+    assert_eq!(renders(&findings), Vec::<String>::new());
+}
+
+#[test]
+fn renaming_a_python_entry_point_fails_with_file_line() {
+    let findings =
+        d3lint::run(&fixtures().join("abi_renamed_py"), None, None);
+    let want = vec![
+        "python/compile/aot.py:8 abi-drift EXEC_META key 'decode_step' \
+         does not match any built entry point",
+        "rust/src/model/exec.rs:5 abi-drift exec name 'decode_step' is \
+         not built by python/compile/aot.py",
+    ];
+    assert_eq!(renders(&findings), want);
+}
+
+#[test]
+fn renaming_a_rust_exec_ref_fails_with_file_line() {
+    let findings =
+        d3lint::run(&fixtures().join("abi_renamed_rs"), None, None);
+    let want = vec![
+        "rust/src/model/exec.rs:5 abi-drift exec name 'decode_stepx' is \
+         not built by python/compile/aot.py",
+    ];
+    assert_eq!(renders(&findings), want);
+}
+
+#[test]
+fn spec_json_overrides_scraped_names_and_version() {
+    let json = "{\n  \"format_version\": 3,\n  \"entry_points\": [\n    \
+                {\"name\": \"prefill_pallas\", \"model\": \"main\"},\n    \
+                {\"name\": \"prefill_xla\"},\n    \
+                {\"name\": \"trajectory\"},\n    \
+                {\"name\": \"trajectory_paged\"}\n  ]\n}\n";
+    let (names, fv) = abi::read_spec_json(json);
+    assert_eq!(
+        names,
+        vec!["prefill_pallas", "prefill_xla", "trajectory",
+             "trajectory_paged"]
+    );
+    assert_eq!(fv, Some(3));
+
+    // against the ok tree the freshly-dumped specs are missing
+    // decode_step and bump the format version: both must be reported
+    let mut findings =
+        abi::abi_check(&fixtures().join("abi_ok"), Some(names.as_slice()), fv);
+    findings.sort();
+    let got = renders(&findings);
+    assert_eq!(
+        got,
+        vec![
+            "python/compile/aot.py:7 abi-drift EXEC_META key \
+             'decode_step' does not match any built entry point",
+            "rust/src/model/exec.rs:5 abi-drift exec name 'decode_step' \
+             is not built by python/compile/aot.py",
+            "rust/src/runtime/manifest.rs:3 abi-drift manifest.rs \
+             accepts format_version 1..=2 but python/compile emits 3",
+        ]
+    );
+}
+
+#[test]
+fn exec_name_ref_grammar() {
+    assert_eq!(
+        abi::exec_name_ref("decode_step"),
+        Some(("exact", "decode_step".to_string()))
+    );
+    assert_eq!(
+        abi::exec_name_ref("trajectory"),
+        Some(("exact", "trajectory".to_string()))
+    );
+    assert_eq!(
+        abi::exec_name_ref("decode_paged_{variant}"),
+        Some(("prefix", "decode_paged_".to_string()))
+    );
+    assert_eq!(
+        abi::exec_name_ref("prefill_"),
+        Some(("prefix", "prefill_".to_string()))
+    );
+    // not exec names: wrong charset, wrong prefix, bare single word
+    assert_eq!(abi::exec_name_ref("decode_MS"), None);
+    assert_eq!(abi::exec_name_ref("latency_ms"), None);
+    assert_eq!(abi::exec_name_ref("decode"), None);
+    assert_eq!(abi::exec_name_ref(""), None);
+}
+
+// ------------------------------------------------------------- baseline
+
+#[test]
+fn baseline_roundtrip_and_ratchet() {
+    let text = fixture_text("panic_fixture.rs");
+    let findings =
+        scan_rust_file("rust/src/coordinator/protocol.rs", &text);
+    let counts = baseline::counts_of(&findings);
+    assert_eq!(
+        counts.get(&(
+            "rust/src/coordinator/protocol.rs".to_string(),
+            "panic-path".to_string()
+        )),
+        Some(&5)
+    );
+
+    let tmp = std::env::temp_dir()
+        .join(format!("d3lint-baseline-{}.toml", std::process::id()));
+    baseline::write_baseline(&tmp, &counts).unwrap();
+    let read = baseline::read_baseline(&tmp).unwrap();
+    std::fs::remove_file(&tmp).unwrap();
+    assert_eq!(read, counts);
+
+    // identical counts: no drift
+    assert!(baseline::check(&counts, &counts).is_empty());
+
+    // one more finding than the baseline: a new violation
+    let mut grown = counts.clone();
+    for v in grown.values_mut() {
+        *v += 1;
+    }
+    let drifts = baseline::check(&counts, &grown);
+    assert_eq!(drifts.len(), 1);
+    assert!(drifts[0].new_violation);
+    assert_eq!(
+        drifts[0].render(),
+        "rust/src/coordinator/protocol.rs: 1 new 'panic-path' \
+         violation(s) (baseline 5, current 6)"
+    );
+
+    // fewer findings than the baseline: stale baseline also drifts
+    let drifts = baseline::check(&grown, &counts);
+    assert_eq!(drifts.len(), 1);
+    assert!(!drifts[0].new_violation);
+    assert_eq!(
+        drifts[0].render(),
+        "rust/src/coordinator/protocol.rs: stale baseline for \
+         'panic-path' (baseline 6, current 5) — shrink it"
+    );
+
+    // a fully fixed (file, rule) key must be deleted from the baseline
+    let drifts = baseline::check(&counts, &baseline::Counts::new());
+    assert_eq!(drifts.len(), 1);
+    assert!(!drifts[0].new_violation);
+}
+
+/// The committed baseline must match the tree exactly — new violations
+/// AND stale entries both fail, so every fix shrinks the baseline in the
+/// same PR that lands it.
+#[test]
+fn repo_baseline_matches_tree() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(3)
+        .unwrap()
+        .to_path_buf();
+    let findings = d3lint::run(&root, None, None);
+    let current = baseline::counts_of(&findings);
+    let committed =
+        baseline::read_baseline(&root.join("lint-baseline.toml"))
+            .expect("lint-baseline.toml is committed at the repo root");
+    let drifts = baseline::check(&committed, &current);
+    let report: Vec<String> =
+        drifts.iter().map(|d| d.render()).collect();
+    assert!(
+        drifts.is_empty(),
+        "lint-baseline.toml does not match the tree:\n{}",
+        report.join("\n")
+    );
+}
