@@ -273,16 +273,34 @@ impl<T> Batcher<T> {
         let evicted = if self.heap.peek().map(|j| j.seq) == Some(v_seq) {
             // least-urgent job is the heap top (e.g. capacity-1 queues):
             // pop directly instead of rebuilding the heap
-            self.heap.pop().expect("peeked top")
+            match self.heap.pop() {
+                Some(j) => j,
+                // peek just said the top exists; if the heap somehow
+                // raced empty, shed the newcomer instead of dying
+                None => {
+                    self.shed_total += 1;
+                    let retry_after_ms = self.retry_after_ms();
+                    return Admission::Shed { payload, retry_after_ms };
+                }
+            }
         } else {
             let mut v = std::mem::take(&mut self.heap).into_vec();
-            let pos = v
-                .iter()
-                .position(|j| j.seq == v_seq)
-                .expect("victim vanished");
-            let evicted = v.swap_remove(pos);
-            self.heap = std::collections::BinaryHeap::from(v);
-            evicted
+            match v.iter().position(|j| j.seq == v_seq) {
+                Some(pos) => {
+                    let evicted = v.swap_remove(pos);
+                    self.heap = std::collections::BinaryHeap::from(v);
+                    evicted
+                }
+                // the victim scan found v_seq in this same heap moments
+                // ago; if it vanished, restore the heap untouched and
+                // shed the newcomer — never panic mid-admission
+                None => {
+                    self.heap = std::collections::BinaryHeap::from(v);
+                    self.shed_total += 1;
+                    let retry_after_ms = self.retry_after_ms();
+                    return Admission::Shed { payload, retry_after_ms };
+                }
+            }
         };
         self.evicted_total += 1;
         self.push_job(payload, priority, deadline_at_ms);

@@ -270,6 +270,9 @@ pub fn serve(cfg: ServerCfg) -> Result<()> {
     // ---- accept loop
     listener.set_nonblocking(true)?;
     loop {
+        // ordering: SeqCst load pairs with the Shutdown request's store —
+        // a single flag with no dependent data, so any ordering is
+        // correct; SeqCst documents "not a perf-sensitive gauge"
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
@@ -318,6 +321,9 @@ fn handle_conn(stream: TcpStream, cfg: ServerCfg,
         }
         match protocol::parse_request(&line) {
             Ok(Request::Shutdown) => {
+                // ordering: SeqCst store publishes the shutdown flag to
+                // the accept loop and every replica loop (see the paired
+                // loads); plain flag, correctness not ordering-sensitive
                 shutdown.store(true, Ordering::SeqCst);
                 writeln!(writer, "{}", protocol::err_response("", "shutting down"))?;
                 break;
@@ -414,6 +420,8 @@ fn engine_worker(replica: usize, cfg: ServerCfg, jobs: mpsc::Receiver<Job>,
         Ok(()) => {
             // clean exit (shutdown or intake drained): queue and pool are
             // empty by contract, nothing to salvage
+            // ordering: SeqCst matches RouterCore::alive/mark_dead, so a
+            // drained replica is never re-elected by a racing placement
             gauge.alive.store(false, Ordering::SeqCst);
         }
         Err(e) => {
@@ -553,6 +561,8 @@ fn run_replica(replica: usize, cfg: &ServerCfg, jobs: &mpsc::Receiver<Job>,
     // tests/benches drive a virtual clock instead
 
     loop {
+        // ordering: SeqCst load pairs with the Shutdown request's store
+        // (see handle_conn); plain flag, once per scheduling round
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
@@ -648,7 +658,9 @@ fn run_replica(replica: usize, cfg: &ServerCfg, jobs: &mpsc::Receiver<Job>,
                 // queue-time intact) until sessions retire
                 Verdict::Wait => break,
                 Verdict::Reject(e) => {
-                    let queued = batcher.pop().expect("peeked head");
+                    // the head we just peeked; if the queue somehow raced
+                    // empty, stop admitting this cycle instead of dying
+                    let Some(queued) = batcher.pop() else { break };
                     reply_err(stats, &queued.payload, &e);
                 }
                 Verdict::Admit(dcfg, prompt, gen_len) => {
@@ -672,8 +684,11 @@ fn run_replica(replica: usize, cfg: &ServerCfg, jobs: &mpsc::Receiver<Job>,
                     };
                     match admitted {
                         Ok(session) => {
-                            let queued =
-                                batcher.pop().expect("peeked head");
+                            // the peeked head; dropping the just-built
+                            // session releases its pages if this races
+                            let Some(queued) = batcher.pop() else {
+                                break;
+                            };
                             let queue_ms = queued.queue_ms();
                             let deadline_at_ms = queued.deadline_at_ms;
                             let job = queued.payload;
@@ -696,8 +711,9 @@ fn run_replica(replica: usize, cfg: &ServerCfg, jobs: &mpsc::Receiver<Job>,
                             break;
                         }
                         Err(e) => {
-                            let queued =
-                                batcher.pop().expect("peeked head");
+                            let Some(queued) = batcher.pop() else {
+                                break;
+                            };
                             reply_err(stats, &queued.payload, &e);
                         }
                     }
@@ -846,6 +862,15 @@ fn reply_err(stats: &ServerStats, job: &Job, e: &anyhow::Error) {
         .send(protocol::err_response(&job.req.id, &format!("{e:#}")));
 }
 
+/// Bounds-checked per-class counter bump: the `*_by_class` arrays are
+/// indexed by `SloClass::idx()`, in range by construction, but the
+/// serving path must stay panic-free — an out-of-range bump is dropped.
+fn bump_class(arr: &[std::sync::atomic::AtomicU64], i: usize, v: u64) {
+    if let Some(a) = arr.get(i) {
+        a.fetch_add(v, Ordering::Relaxed);
+    }
+}
+
 /// Run one incoming job through deadline-aware queue admission. Displaced
 /// and shed work is answered immediately with a `retry_after_ms` hint (the
 /// estimated queue drain time) and counted against its SLO class.
@@ -858,8 +883,7 @@ fn admit_to_queue(batcher: &mut Batcher<Job>, stats: &ServerStats, job: Job,
         Admission::Admitted(Some(evicted)) => {
             let retry = batcher.estimated_wait_ms().max(1.0).ceil() as u64;
             let j = evicted.payload;
-            stats.shed_by_class[j.req.slo.idx()]
-                .fetch_add(1, Ordering::Relaxed);
+            bump_class(&stats.shed_by_class, j.req.slo.idx(), 1);
             let _ = j.reply.send(protocol::shed_response(
                 &j.req.id,
                 "displaced by higher-priority load",
@@ -867,8 +891,7 @@ fn admit_to_queue(batcher: &mut Batcher<Job>, stats: &ServerStats, job: Job,
             ));
         }
         Admission::Shed { payload: j, retry_after_ms } => {
-            stats.shed_by_class[j.req.slo.idx()]
-                .fetch_add(1, Ordering::Relaxed);
+            bump_class(&stats.shed_by_class, j.req.slo.idx(), 1);
             let _ = j.reply.send(protocol::shed_response(
                 &j.req.id,
                 "queue overloaded",
@@ -901,15 +924,11 @@ fn record_served(stats: &ServerStats, r: &GenResponse, class: SloClass) {
         .decode_ms_total
         .fetch_add(r.decode_ms as u64, Ordering::Relaxed);
     let i = class.idx();
-    stats.served_by_class[i].fetch_add(1, Ordering::Relaxed);
-    stats
-        .queue_ms_by_class[i]
-        .fetch_add(r.queue_ms as u64, Ordering::Relaxed);
-    stats
-        .decode_ms_by_class[i]
-        .fetch_add(r.decode_ms as u64, Ordering::Relaxed);
+    bump_class(&stats.served_by_class, i, 1);
+    bump_class(&stats.queue_ms_by_class, i, r.queue_ms as u64);
+    bump_class(&stats.decode_ms_by_class, i, r.decode_ms as u64);
     if r.deadline_missed {
-        stats.deadline_miss_by_class[i].fetch_add(1, Ordering::Relaxed);
+        bump_class(&stats.deadline_miss_by_class, i, 1);
     }
 }
 

@@ -212,6 +212,15 @@ pub fn stats_response(s: &super::ServerStats) -> String {
     Json::obj(fields).to_string()
 }
 
+/// Bounds-checked counter read for the fixed-size stats arrays (per-SLO
+/// class, width histogram). The index is in range by construction
+/// (`SloClass::idx()` / histogram bucket loops), but the stats path must
+/// stay panic-free, so an out-of-range slot reads as zero.
+fn counter_at(arr: &[std::sync::atomic::AtomicU64], i: usize) -> u64 {
+    arr.get(i)
+        .map_or(0, |a| a.load(std::sync::atomic::Ordering::Relaxed))
+}
+
 /// The shared field set of one `ServerStats` snapshot — used verbatim by
 /// the single-stats response and per-replica objects of the fleet
 /// response, and (name-for-name) by the fleet aggregates, so the wire
@@ -250,14 +259,16 @@ fn stats_fields(s: &super::ServerStats, replica: Option<usize>)
             let i = c.idx();
             Json::obj(vec![
                 ("class", Json::str(c.name())),
-                ("served", Json::num(s.served_by_class[i].load(Relaxed) as f64)),
-                ("shed", Json::num(s.shed_by_class[i].load(Relaxed) as f64)),
+                ("served",
+                 Json::num(counter_at(&s.served_by_class, i) as f64)),
+                ("shed",
+                 Json::num(counter_at(&s.shed_by_class, i) as f64)),
                 ("deadline_miss",
-                 Json::num(s.deadline_miss_by_class[i].load(Relaxed) as f64)),
+                 Json::num(counter_at(&s.deadline_miss_by_class, i) as f64)),
                 ("queue_ms",
-                 Json::num(s.queue_ms_by_class[i].load(Relaxed) as f64)),
+                 Json::num(counter_at(&s.queue_ms_by_class, i) as f64)),
                 ("decode_ms",
-                 Json::num(s.decode_ms_by_class[i].load(Relaxed) as f64)),
+                 Json::num(counter_at(&s.decode_ms_by_class, i) as f64)),
             ])
         })
         .collect();
@@ -335,16 +346,16 @@ pub fn fleet_stats_response(replicas: &[std::sync::Arc<super::ServerStats>],
             Json::obj(vec![
                 ("class", Json::str(c.name())),
                 ("served",
-                 Json::num(sum(&|s| s.served_by_class[i].load(Relaxed)))),
+                 Json::num(sum(&|s| counter_at(&s.served_by_class, i)))),
                 ("shed",
-                 Json::num(sum(&|s| s.shed_by_class[i].load(Relaxed)))),
+                 Json::num(sum(&|s| counter_at(&s.shed_by_class, i)))),
                 ("deadline_miss",
                  Json::num(sum(
-                     &|s| s.deadline_miss_by_class[i].load(Relaxed)))),
+                     &|s| counter_at(&s.deadline_miss_by_class, i)))),
                 ("queue_ms",
-                 Json::num(sum(&|s| s.queue_ms_by_class[i].load(Relaxed)))),
+                 Json::num(sum(&|s| counter_at(&s.queue_ms_by_class, i)))),
                 ("decode_ms",
-                 Json::num(sum(&|s| s.decode_ms_by_class[i].load(Relaxed)))),
+                 Json::num(sum(&|s| counter_at(&s.decode_ms_by_class, i)))),
             ])
         })
         .collect();
@@ -448,7 +459,7 @@ pub fn fleet_stats_response(replicas: &[std::sync::Arc<super::ServerStats>],
         ("adaptive_width_hist",
          Json::arr((0..crate::decode::WIDTH_HIST_BUCKETS).map(|i| {
              Json::num(sum(&|s: &super::ServerStats| {
-                 s.adaptive_width_hist[i].load(Relaxed)
+                 counter_at(&s.adaptive_width_hist, i)
              }))
          }))),
         ("sessions", Json::Arr(sessions)),

@@ -135,6 +135,10 @@ impl RouterCore {
     }
 
     pub fn alive(&self, r: usize) -> bool {
+        // ordering: SeqCst pairs with mark_dead's swap (and the clean-exit
+        // store in engine_worker) so a replica marked dead before queue
+        // salvage is never elected by a racing placement; the sender-slot
+        // teardown itself is serialized by Router's senders mutex
         self.gauges[r].alive.load(Ordering::SeqCst)
     }
 
@@ -144,6 +148,8 @@ impl RouterCore {
 
     /// Idempotent: only the alive -> dead transition counts a death.
     pub fn mark_dead(&self, r: usize) {
+        // ordering: SeqCst swap is the publish side of `alive` (above);
+        // the swap also makes the death count exactly-once under races
         if self.gauges[r].alive.swap(false, Ordering::SeqCst) {
             self.replica_deaths.fetch_add(1, Ordering::Relaxed);
         }
@@ -251,18 +257,21 @@ impl Router {
     /// between placement and send) the job is handed back and the replica
     /// marked dead so the next placement skips it.
     fn try_send(&self, r: usize, job: Job) -> std::result::Result<(), Job> {
-        let mut senders = self.senders.lock().expect("router senders");
-        match senders[r].as_ref() {
-            Some(tx) => match tx.send(job) {
-                Ok(()) => Ok(()),
-                Err(mpsc::SendError(job)) => {
-                    senders[r] = None;
-                    drop(senders);
-                    self.core.mark_dead(r);
-                    Err(job)
+        // a thread that panicked holding this lock can only have been
+        // mutating one Option slot; the Vec itself stays structurally
+        // sound, so recover the poisoned state instead of dying
+        let mut senders =
+            self.senders.lock().unwrap_or_else(|p| p.into_inner());
+        let sent = match senders.get(r).and_then(|s| s.as_ref()) {
+            Some(tx) => tx.send(job).map_err(|mpsc::SendError(j)| j),
+            None => Err(job),
+        };
+        match sent {
+            Ok(()) => Ok(()),
+            Err(job) => {
+                if let Some(slot) = senders.get_mut(r) {
+                    *slot = None;
                 }
-            },
-            None => {
                 drop(senders);
                 self.core.mark_dead(r);
                 Err(job)
@@ -309,13 +318,18 @@ impl Router {
     /// re-routes cannot bounce back to it.
     pub fn drop_replica(&self, r: usize) {
         self.core.mark_dead(r);
-        self.senders.lock().expect("router senders")[r] = None;
+        let mut senders =
+            self.senders.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(slot) = senders.get_mut(r) {
+            *slot = None;
+        }
     }
 
     /// Shutdown: drop every sender so each worker sees `Disconnected`
     /// once its queue drains, finishes its live sessions, and exits.
     pub fn close_intake(&self) {
-        let mut senders = self.senders.lock().expect("router senders");
+        let mut senders =
+            self.senders.lock().unwrap_or_else(|p| p.into_inner());
         for s in senders.iter_mut() {
             *s = None;
         }

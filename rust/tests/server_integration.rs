@@ -100,6 +100,41 @@ fn server_serves_generates_and_shuts_down() {
     let j = json::parse(&resp).unwrap();
     assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
 
+    // ---- malformed-request regression battery: every line must come
+    //      back as a structured `ok:false` reply (never a dropped
+    //      connection or a dead replica). Covers the serving-path panic
+    //      burn-down in coordinator/{mod,router,protocol}.rs.
+    for bad in [
+        // unknown per-request strategy -> "bad strategy" error reply
+        r#"{"id":"bs","prompt":"Q EVAL 1 + 1","strategy":"warp-drive"}"#,
+        // unknown command verb
+        r#"{"cmd":"bogus"}"#,
+        // generate line missing required fields
+        r#"{"id":"noprompt"}"#,
+        r#"{"prompt":"Q EVAL 1 + 1"}"#,
+        // unknown SLO class
+        r#"{"id":"bslo","prompt":"Q EVAL 1 + 1","slo":"hyperspeed"}"#,
+        // truncated JSON
+        r#"{"id":"trunc","prompt":"Q EVAL"#,
+    ] {
+        let resp = request(&addr, bad);
+        let j = json::parse(&resp)
+            .unwrap_or_else(|e| panic!("unparseable reply to {bad}: {e}"));
+        assert_eq!(
+            j.get("ok").and_then(|v| v.as_bool()),
+            Some(false),
+            "expected error reply for {bad}, got {resp}"
+        );
+    }
+    // the replica survived the battery: a well-formed request still works
+    let resp = request(
+        &addr,
+        r#"{"id":"after-bad","prompt":"Q EVAL 2 + 2","gen_len":32}"#,
+    );
+    let j = json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp}");
+    assert_eq!(j.get("id").and_then(|v| v.as_str()), Some("after-bad"));
+
     // ---- concurrent requests from multiple clients
     let mut handles = Vec::new();
     for i in 0..4 {
